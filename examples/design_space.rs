@@ -1,0 +1,80 @@
+//! Design-space exploration: the hw-codesign workflow the simulator
+//! enables — sweep the EnGN micro-architecture (PE array geometry, DAVC
+//! capacity, tile scheduling, stage ordering, buffer size) on a target
+//! workload and print the latency / energy / area trade-off frontier.
+//!
+//!     cargo run --release --offline --example design_space [dataset]
+
+use engn::config::{AcceleratorConfig, StageOrder, TileOrder};
+use engn::graph::datasets::{self, ScalePolicy};
+use engn::model::{GnnKind, GnnModel};
+use engn::sim::Simulator;
+use engn::util::fmt_time;
+
+fn main() {
+    let code = std::env::args().nth(1).unwrap_or_else(|| "PB".to_string());
+    let Some(spec) = datasets::by_code(&code) else {
+        eprintln!("unknown dataset {code:?} — see `engn datasets`");
+        std::process::exit(2);
+    };
+    let graph = spec.instantiate(ScalePolicy::Capped, 99);
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    println!(
+        "design space for GCN on {} ({} vertices, {} edges)\n",
+        spec.name,
+        graph.num_vertices,
+        graph.num_edges()
+    );
+
+    let mut variants: Vec<AcceleratorConfig> = Vec::new();
+    // PE-array geometry (Fig 17).
+    for (r, c) in [(32, 16), (64, 16), (128, 16), (32, 32), (128, 32)] {
+        variants.push(AcceleratorConfig::with_array(r, c));
+    }
+    // DAVC capacity (Fig 16b).
+    for kb in [16usize, 64, 256] {
+        let mut v = AcceleratorConfig::engn().named(&format!("EnGN_davc{kb}K"));
+        v.davc_bytes = kb * 1024;
+        variants.push(v);
+    }
+    // Scheduling ablations (Fig 14 / Fig 15 / Fig 12).
+    let mut v = AcceleratorConfig::engn().named("EnGN_FAU");
+    v.stage_order = StageOrder::Fau;
+    variants.push(v);
+    let mut v = AcceleratorConfig::engn().named("EnGN_AFU");
+    v.stage_order = StageOrder::Afu;
+    variants.push(v);
+    let mut v = AcceleratorConfig::engn().named("EnGN_rowtiles");
+    v.tile_order = TileOrder::Row;
+    variants.push(v);
+    let mut v = AcceleratorConfig::engn().named("EnGN_noreorg");
+    v.edge_reorganization = false;
+    variants.push(v);
+    // Buffer scaling (Table 4's EnGN_22MB).
+    variants.push(AcceleratorConfig::engn_22mb());
+
+    println!(
+        "{:<16} {:>10} {:>10} {:>11} {:>9} {:>9} {:>10}",
+        "config", "latency", "GOP/s", "energy (J)", "power W", "area mm2", "EDP (J*s)"
+    );
+    let baseline = Simulator::new(AcceleratorConfig::engn()).run(&model, &graph, spec.code);
+    for cfg in variants {
+        let area = cfg.area.total_mm2(cfg.num_pes(), cfg.vpu_pes, cfg.on_chip_bytes());
+        let r = Simulator::new(cfg.clone()).run(&model, &graph, spec.code);
+        println!(
+            "{:<16} {:>10} {:>10.0} {:>11.2e} {:>9.2} {:>9.2} {:>10.2e}",
+            cfg.name,
+            fmt_time(r.seconds()),
+            r.gops(),
+            r.energy_j(),
+            r.power_w,
+            area,
+            r.energy_j() * r.seconds(),
+        );
+    }
+    println!(
+        "\nreference EnGN: {} / {:.2e} J  (the paper's chosen design point)",
+        fmt_time(baseline.seconds()),
+        baseline.energy_j()
+    );
+}

@@ -1,0 +1,68 @@
+//! Quickstart: simulate one GCN inference pass on Cora under the paper's
+//! EnGN configuration and print the full report.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use engn::config::AcceleratorConfig;
+use engn::graph::datasets::{self, ScalePolicy};
+use engn::graph::stats::GraphStats;
+use engn::model::{GnnKind, GnnModel};
+use engn::sim::Simulator;
+use engn::util::{fmt_bytes, fmt_time, si};
+
+fn main() {
+    // 1. Pick a Table-5 dataset and synthesize it (Cora is small enough
+    //    to build at its exact published size).
+    let spec = datasets::by_code("CA").expect("Cora is in the suite");
+    let graph = spec.instantiate(ScalePolicy::Full, 42);
+    let stats = GraphStats::compute(&graph);
+    println!(
+        "graph: {} — {} vertices, {} edges, top-20% degree share {:.0}%",
+        spec.name,
+        graph.num_vertices,
+        graph.num_edges(),
+        stats.top20_edge_share * 100.0
+    );
+
+    // 2. Bind a GNN architecture to the dataset's dimensions
+    //    (F=1433 -> hidden 16 -> 7 classes, as in the paper).
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    for (i, l) in model.layers.iter().enumerate() {
+        println!("layer {i}: {} -> {}", l.f_in, l.f_out);
+    }
+
+    // 3. Simulate on the paper's EnGN configuration (128x16 RER array,
+    //    64 KB DAVC, HBM 2.0).
+    let cfg = AcceleratorConfig::engn();
+    let report = Simulator::new(cfg.clone()).run(&model, &graph, spec.code);
+
+    println!("\n=== EnGN simulation ===");
+    println!("latency      {}", fmt_time(report.seconds()));
+    println!("cycles       {}", si(report.total_cycles()));
+    println!("throughput   {} GOP/s ({:.1}% of peak)",
+        si(report.gops() * 1e9 / 1e9),
+        report.peak_fraction(&cfg) * 100.0);
+    println!("chip power   {:.2} W", report.power_w);
+    println!("energy       {:.2e} J", report.energy_j());
+    println!("efficiency   {:.0} GOPS/W", report.gops_per_watt());
+    println!("HBM traffic  {}", fmt_bytes(report.traffic().hbm_total()));
+    println!("DAVC hits    {:.1}%", report.davc().hit_rate() * 100.0);
+    let bd = report.stage_breakdown();
+    println!(
+        "stage shares FE {:.0}% / AGG {:.0}% / UPD {:.0}%",
+        bd[0] * 100.0,
+        bd[1] * 100.0,
+        bd[2] * 100.0
+    );
+
+    // 4. Compare against the paper's baselines on the same workload.
+    use engn::baselines::{cpu::CpuModel, cpu::Framework, gpu::GpuModel, hygcn::HygcnModel, Workload};
+    let w = Workload::from_graph(&graph);
+    let cpu = CpuModel::new(Framework::Dgl).run(&model, &w);
+    let gpu = GpuModel::new(Framework::Dgl).run(&model, &w);
+    let hygcn = HygcnModel::paper().run(&model, &w);
+    println!("\n=== speedups (this workload) ===");
+    println!("vs CPU-DGL   {:.1}x", cpu.seconds() / report.seconds());
+    println!("vs GPU-DGL   {:.1}x", gpu.seconds() / report.seconds());
+    println!("vs HyGCN     {:.1}x", hygcn.seconds() / report.seconds());
+}

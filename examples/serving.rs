@@ -1,0 +1,133 @@
+//! Multi-model GNN serving scenario (the e-commerce recommendation
+//! motivation from the paper's introduction): a mixed stream of GCN,
+//! GRN and R-GCN inference requests flows through the coordinator's
+//! router + batcher onto the PJRT runtime, while the EnGN simulator
+//! projects what the same request mix would cost on the accelerator.
+//!
+//!     make artifacts && cargo run --release --offline --example serving
+
+use engn::config::AcceleratorConfig;
+use engn::coordinator::{BatchConfig, Executor, InferenceService};
+use engn::graph::datasets::{DatasetGroup, DatasetSpec};
+use engn::graph::rmat::{self, RmatParams};
+use engn::model::{GnnKind, GnnModel};
+use engn::runtime::{HostTensor, Manifest, Runtime};
+use engn::sim::Simulator;
+use engn::util::fmt_time;
+use engn::util::rng::Xoshiro256StarStar;
+use std::time::Duration;
+
+const MODELS: [&str; 3] = ["gcn_forward", "grn_forward", "rgcn_forward"];
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+
+    let dir2 = dir.clone();
+    let svc = InferenceService::start(
+        move || Runtime::load_only(&dir2, &MODELS).map(|rt| Box::new(rt) as Box<dyn Executor>),
+        BatchConfig {
+            max_batch: 6,
+            max_wait: Duration::from_millis(3),
+        },
+    );
+
+    println!("submitting {requests} mixed requests ({MODELS:?}) ...");
+    let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+    let mut rxs = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        // Zipf-ish popularity: GCN most requested (a recommender's
+        // default path), GRN and R-GCN less so.
+        let name = MODELS[[0, 0, 0, 1, 1, 2][i % 6]];
+        let spec = manifest.get(name).unwrap();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|shape| {
+                let n: usize = shape.iter().product();
+                HostTensor::new(
+                    shape.clone(),
+                    (0..n).map(|_| rng.next_f32() * 0.1).collect(),
+                )
+            })
+            .collect();
+        rxs.push((name, svc.submit(name, inputs).1));
+    }
+    let mut ok = 0usize;
+    for (name, rx) in rxs {
+        match rx.recv() {
+            Ok(resp) if resp.result.is_ok() => ok += 1,
+            Ok(resp) => eprintln!("{name} failed: {:?}", resp.result.err()),
+            Err(_) => eprintln!("{name}: worker gone"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{requests} in {} ({:.1} req/s)\n",
+        fmt_time(wall),
+        requests as f64 / wall
+    );
+    println!("per-model serving stats (host CPU via PJRT):");
+    let metrics = svc.metrics();
+    let mut names: Vec<_> = metrics.per_artifact.keys().cloned().collect();
+    names.sort();
+    for name in &names {
+        let s = &metrics.per_artifact[name];
+        println!(
+            "  {:<16} n={:<3} mean={} p95={} wait={} batch={:.2}",
+            name,
+            s.count,
+            fmt_time(s.mean_exec_s),
+            fmt_time(s.p95_exec_s),
+            fmt_time(s.mean_wait_s),
+            s.mean_batch
+        );
+    }
+    svc.shutdown();
+
+    // Project the same mix onto EnGN: per-request simulated latency for a
+    // quickstart-shaped graph under each model.
+    println!("\nsimulated EnGN latency for the same request shapes:");
+    let n = manifest.quickstart_param("n").unwrap_or(512);
+    let f = manifest.quickstart_param("f").unwrap_or(64);
+    let hidden = manifest.quickstart_param("hidden").unwrap_or(16);
+    let classes = manifest.quickstart_param("classes").unwrap_or(8);
+    let relations = manifest.quickstart_param("relations").unwrap_or(4);
+    let graph = rmat::generate(n, 6 * n, RmatParams::mild(), 7);
+    for (artifact, kind) in [
+        ("gcn_forward", GnnKind::Gcn),
+        ("grn_forward", GnnKind::Grn),
+        ("rgcn_forward", GnnKind::Rgcn),
+    ] {
+        let spec = DatasetSpec {
+            code: "QS",
+            name: "quickstart",
+            vertices: n,
+            edges: graph.num_edges(),
+            feature_dim: if kind == GnnKind::Grn { hidden } else { f },
+            labels: classes,
+            num_relations: if kind == GnnKind::Rgcn { relations } else { 1 },
+            group: DatasetGroup::Synthetic,
+        };
+        let model = GnnModel::with_hidden(kind, &spec, hidden);
+        let r = Simulator::new(AcceleratorConfig::engn()).run(&model, &graph, "QS");
+        println!(
+            "  {:<16} {} per inference, {:.0} GOPS/W",
+            artifact,
+            fmt_time(r.seconds()),
+            r.gops_per_watt()
+        );
+    }
+    println!("\nserving OK");
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX models + Pallas kernels + AOT lowering.
+
+Never imported at runtime; `make artifacts` runs `python -m compile.aot`
+once and the Rust binary consumes the resulting HLO text files.
+"""

@@ -1,0 +1,157 @@
+"""AOT lowering: JAX/Pallas models -> HLO *text* artifacts + manifest.
+
+Run once at build time (`make artifacts`); the Rust runtime
+(`rust/src/runtime/`) loads the text with `HloModuleProto::from_text_file`,
+compiles on the PJRT CPU client and executes — Python never touches the
+request path.
+
+HLO text (not `.serialize()`) is mandatory here: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (quickstart shapes, see QUICKSTART below):
+    gcn_forward, gs_pool_forward, gated_gcn_forward, grn_forward,
+    rgcn_forward             — full 2-layer forwards;
+    gcn_layer                — a single layer (the serving coordinator's
+                               per-layer scheduling demo);
+    gcn_tiny                 — 8-vertex GCN used by Rust integration
+                               tests to check numerics exactly.
+
+Weights are *runtime inputs*, so one artifact serves any parameter set
+with the same shapes.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Quickstart shapes: Cora-like but sized so the dense-Â functional path
+# stays fast on the CPU PJRT backend. The simulator handles full Table-5
+# sizes; this functional path proves the math end to end.
+QUICKSTART = dict(n=512, f=64, hidden=16, classes=8, relations=4, grn_steps=2)
+TINY = dict(n=8, f=4, hidden=3, classes=2)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts():
+    """Yield (name, fn, [input ShapeDtypeStructs], description)."""
+    q = QUICKSTART
+    n, f, h, c, r = q["n"], q["f"], q["hidden"], q["classes"], q["relations"]
+
+    yield (
+        "gcn_forward",
+        model.gcn_forward,
+        [_spec(n, n), _spec(n, f), _spec(f, h), _spec(h, c)],
+        f"2-layer GCN: A_hat[{n},{n}], X[{n},{f}], W1[{f},{h}], W2[{h},{c}] -> logits[{n},{c}]",
+    )
+    yield (
+        "gcn_layer",
+        model.gcn_layer,
+        [_spec(n, n), _spec(n, f), _spec(f, h)],
+        f"single GCN layer: A_hat[{n},{n}], X[{n},{f}], W[{f},{h}] -> H[{n},{h}]",
+    )
+    yield (
+        "gs_pool_forward",
+        model.gs_pool_forward,
+        [
+            _spec(n, n), _spec(n, f),
+            _spec(f, h), _spec(h), _spec(h + f, h),
+            _spec(h, h), _spec(h), _spec(h + h, c),
+        ],
+        "2-layer GraphSage-Pool (max aggregator, concat update)",
+    )
+    yield (
+        "gated_gcn_forward",
+        model.gated_gcn_forward,
+        [
+            _spec(n, n), _spec(n, f),
+            _spec(f, f), _spec(f, f), _spec(f, h),
+            _spec(h, h), _spec(h, h), _spec(h, c),
+        ],
+        "2-layer Gated-GCN (edge gating eta = sigmoid(W_H h_v + W_C h_u))",
+    )
+    yield (
+        "grn_forward",
+        functools.partial(model.grn_forward, steps=q["grn_steps"]),
+        [_spec(n, n), _spec(n, h), _spec(h, h), _spec(h, 3 * h), _spec(h, 3 * h)],
+        f"GRN: {q['grn_steps']} GRU propagation steps over [{n},{h}] state",
+    )
+    yield (
+        "rgcn_forward",
+        model.rgcn_forward,
+        [
+            _spec(r, n, n), _spec(n, f),
+            _spec(f, h), _spec(r, f, h),
+            _spec(h, c), _spec(r, h, c),
+        ],
+        f"2-layer R-GCN with {r} relations",
+    )
+    t = TINY
+    yield (
+        "gcn_tiny",
+        model.gcn_forward,
+        [
+            _spec(t["n"], t["n"]), _spec(t["n"], t["f"]),
+            _spec(t["f"], t["hidden"]), _spec(t["hidden"], t["classes"]),
+        ],
+        "tiny GCN for Rust-side numeric integration tests",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"version": 1, "quickstart": QUICKSTART, "tiny": TINY, "artifacts": []}
+    for name, fn, specs, desc in build_artifacts():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as fh:
+            fh.write(text)
+        out_shapes = [list(s.shape) for s in jax.tree_util.tree_leaves(lowered.out_info)]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "path": path,
+                "description": desc,
+                "inputs": [list(s.shape) for s in specs],
+                "outputs": out_shapes,
+                "dtype": "f32",
+            }
+        )
+        print(f"wrote {path} ({len(text) / 1e3:.1f} KB)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

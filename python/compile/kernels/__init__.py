@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT artifacts).
+
+* `rer_matmul` -- feature-extraction / update matmul with RER blocking;
+* `aggregate`  -- dense A.X aggregation + edge-centric scatter-reduce;
+* `xpe`        -- bias + activation (the per-PE XPE unit);
+* `gru`        -- the GRN update GRU cell;
+* `ref`        -- pure-jnp oracles for all of the above.
+"""

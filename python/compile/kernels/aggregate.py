@@ -1,0 +1,65 @@
+"""L1 Pallas kernels for the aggregate stage.
+
+Two forms:
+
+* `rer_spmm_dense` — the aggregation EnGN actually computes for GCN-like
+  models, `Â · X` with the normalized adjacency, expressed as a tiled
+  matmul (the ring-all-reduce data movement collapses to a VMEM-resident
+  reduction on a TPU-class target; see DESIGN.md §Hardware-Adaptation).
+  This is the form the AOT path lowers, so the Rust runtime can execute
+  it on any PJRT backend.
+
+* `edge_aggregate` — the literal edge-centric Algorithm-1 semantics
+  (for each edge: reduce src property into dst accumulator, sum or max),
+  used as a correctness mirror of the simulator's processing model and
+  exercised by pytest only (dynamic scatter lowers poorly outside TPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import rer_matmul as rm
+
+
+def rer_spmm_dense(a, x, *, bn=rm.PE_ROWS, bh=rm.PE_COLS, bk=rm.BK):
+    """[N, N] (dense Â) @ [N, D]: aggregation as a tiled matmul."""
+    return rm.rer_matmul(a, x, bn=bn, bh=bh, bk=bk)
+
+
+def _edge_agg_kernel(src_ref, dst_ref, feat_ref, init_ref, o_ref, *, op):
+    """Single-block kernel: scatter-reduce every edge into o_ref."""
+    o_ref[...] = init_ref[...]
+    num_edges = src_ref.shape[0]
+
+    def body(i, _):
+        s = src_ref[i]
+        d = dst_ref[i]
+        row = pl.load(feat_ref, (pl.dslice(s, 1), slice(None)))
+        cur = pl.load(o_ref, (pl.dslice(d, 1), slice(None)))
+        new = jnp.maximum(cur, row) if op == "max" else cur + row
+        pl.store(o_ref, (pl.dslice(d, 1), slice(None)), new)
+        return 0
+
+    jax.lax.fori_loop(0, num_edges, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "op"))
+def edge_aggregate(src, dst, feats, *, num_vertices, op="sum"):
+    """Edge-centric aggregate: out[d] = reduce_{(s,d) in E} feats[s].
+
+    `sum` starts from zeros; `max` starts from zeros as well (matching
+    GS-Pool's ReLU-positive inputs, where max(0, .) is the identity on
+    the aggregated range and vertices with no in-edges keep 0).
+    """
+    assert op in ("sum", "max")
+    d = feats.shape[1]
+    init = jnp.zeros((num_vertices, d), jnp.float32)
+    kernel = functools.partial(_edge_agg_kernel, op=op)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((num_vertices, d), jnp.float32),
+        interpret=True,
+    )(src.astype(jnp.int32), dst.astype(jnp.int32), feats, init)

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: the GRU cell used by GRN's update stage
+(paper Table 1, Eq. 5: h' = GRU(h, W·V_temp)).
+
+Gate math (Cho et al. 2014):
+    r = sigmoid(x·W_r + h·U_r)
+    z = sigmoid(x·W_z + h·U_z)
+    n = tanh(x·W_n + (r ⊙ h)·U_n)
+    h' = (1 - z) ⊙ n + z ⊙ h
+
+The three input and three hidden projections are packed as [H, 3H]
+matrices so the kernel runs two MXU-shaped matmuls per block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import rer_matmul as rm
+
+
+def _gru_kernel(x_ref, h_ref, wi_ref, wh_ref, o_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    hd = h.shape[1]
+    gi = jnp.dot(x, wi_ref[...], preferred_element_type=jnp.float32)
+    gh = jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+    r = jax.nn.sigmoid(gi[:, :hd] + gh[:, :hd])
+    z = jax.nn.sigmoid(gi[:, hd : 2 * hd] + gh[:, hd : 2 * hd])
+    n = jnp.tanh(gi[:, 2 * hd :] + r * gh[:, 2 * hd :])
+    o_ref[...] = (1.0 - z) * n + z * h
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def gru_cell(x, h, w_i, w_h, *, bn=rm.PE_ROWS):
+    """GRU over a batch of vertices.
+
+    x: [N, H] aggregated message (already through W), h: [N, H] state,
+    w_i/w_h: [H, 3H] packed gate weights (r | z | n).
+    """
+    n, hd = x.shape
+    assert h.shape == (n, hd)
+    assert w_i.shape == (hd, 3 * hd) and w_h.shape == (hd, 3 * hd)
+    pr = (-n) % bn
+    xp = jnp.pad(x, ((0, pr), (0, 0)))
+    hp = jnp.pad(h, ((0, pr), (0, 0)))
+    np_ = xp.shape[0]
+    out = pl.pallas_call(
+        _gru_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, hd), lambda i: (i, 0)),
+            pl.BlockSpec((bn, hd), lambda i: (i, 0)),
+            pl.BlockSpec((hd, 3 * hd), lambda i: (0, 0)),
+            pl.BlockSpec((hd, 3 * hd), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, hd), jnp.float32),
+        interpret=True,
+    )(xp, hp, w_i, w_h)
+    return out[:n]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth
+pytest checks the Pallas kernels against (and the reference the L1 perf
+target is measured relative to).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def spmm_dense(a, x):
+    return jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+def edge_aggregate(src, dst, feats, num_vertices, op="sum"):
+    if op == "sum":
+        return jax.ops.segment_sum(feats[src], dst, num_segments=num_vertices)
+    # max with zero-init (matches the kernel's GS-Pool convention).
+    out = jnp.zeros((num_vertices, feats.shape[1]), jnp.float32)
+    return out.at[dst].max(feats[src])
+
+
+def xpe(x, b, act="relu"):
+    v = x + b[None, :]
+    if act == "relu":
+        return jnp.maximum(v, 0.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(v)
+    return v
+
+
+def gru_cell(x, h, w_i, w_h):
+    hd = h.shape[1]
+    gi = x @ w_i
+    gh = h @ w_h
+    r = jax.nn.sigmoid(gi[:, :hd] + gh[:, :hd])
+    z = jax.nn.sigmoid(gi[:, hd : 2 * hd] + gh[:, hd : 2 * hd])
+    n = jnp.tanh(gi[:, 2 * hd :] + r * gh[:, 2 * hd :])
+    return (1.0 - z) * n + z * h

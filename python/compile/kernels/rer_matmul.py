@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: the feature-extraction / update matmul with
+RER-array blocking.
+
+EnGN's NGPU processes a batch of `PE_ROWS` (128) vertices against
+`PE_COLS` (16) output dimensions per wavefront, streaming the input
+property dimension through the array (the graph-property-aware dataflow,
+paper §4.1.1). On a TPU-class target the same schedule is expressed as a
+Pallas grid over `(N / BN, H / BH, F / BK)` with an accumulating output
+block: the `(BN, BK) @ (BK, BH)` inner product is the MXU-shaped tile and
+the K-loop is the streamed contraction (see DESIGN.md
+§Hardware-Adaptation).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs under the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's array geometry: 128 vertex rows x 16 dimension columns.
+PE_ROWS = 128
+PE_COLS = 16
+# Contraction stream chunk (VMEM-friendly).
+BK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (BN, BK) x (BK, BH) tile; accumulates over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a, rows, cols):
+    pr = (-a.shape[0]) % rows
+    pc = (-a.shape[1]) % cols
+    if pr or pc:
+        a = jnp.pad(a, ((0, pr), (0, pc)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bh", "bk"))
+def rer_matmul(x, w, *, bn=PE_ROWS, bh=PE_COLS, bk=BK):
+    """[N, F] @ [F, H] with RER blocking. Pads ragged dims internally.
+
+    VMEM footprint per grid step: bn*bk + bk*bh + bn*bh words
+    (128*128 + 128*16 + 128*16 = 20.5 K words = 82 KB at fp32), well
+    under a TPU core's ~16 MB VMEM; the BlockSpec schedule is the
+    HBM<->VMEM streaming plan.
+    """
+    n, f = x.shape
+    f2, h = w.shape
+    assert f == f2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    xp = _pad_to(x, bn, bk)
+    wp = _pad_to(w, bk, bh)
+    np_, fp = xp.shape
+    _, hp = wp.shape
+    grid = (np_ // bn, hp // bh, fp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bh), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bh), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, hp), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:n, :h]
+
+
+def vmem_footprint_words(bn=PE_ROWS, bh=PE_COLS, bk=BK):
+    """Words resident in VMEM per grid step (for the L1 perf report)."""
+    return bn * bk + bk * bh + bn * bh

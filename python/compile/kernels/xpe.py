@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: the XPE unit (paper Fig 4) — the small ALU attached
+to every PE that applies bias, activation and rounding in the update
+stage. Expressed as a blocked elementwise kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import rer_matmul as rm
+
+
+def _xpe_kernel(x_ref, b_ref, o_ref, *, act):
+    v = x_ref[...] + b_ref[...]
+    if act == "relu":
+        v = jnp.maximum(v, 0.0)
+    elif act == "sigmoid":
+        v = jax.nn.sigmoid(v)
+    o_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bn", "bh"))
+def xpe(x, b, *, act="relu", bn=rm.PE_ROWS, bh=rm.PE_COLS):
+    """Elementwise bias + activation over [N, H] with RER blocking.
+
+    `b` is a per-dimension bias [H] (pass zeros for a pure activation).
+    """
+    n, h = x.shape
+    xp = rm._pad_to(x, bn, bh)
+    bp = jnp.pad(b, (0, xp.shape[1] - h))
+    np_, hp = xp.shape
+    kernel = functools.partial(_xpe_kernel, act=act)
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_ // bn, hp // bh),
+        in_specs=[
+            pl.BlockSpec((bn, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn, bh), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, hp), jnp.float32),
+        interpret=True,
+    )(xp, bp)
+    return out[:n, :h]

@@ -1,0 +1,172 @@
+"""L2: the five GNN architectures of the paper's Table 1 as JAX forward
+functions, written against the L1 Pallas kernels.
+
+All functions take a *dense normalized adjacency* Â = D^-1/2 (A+I) D^-1/2
+(or the plain masks the model calls for) because the accelerator's math
+is data-independent and the AOT path needs static shapes. Sizes are the
+quickstart shapes chosen in `aot.py`; anything larger runs through the
+Rust simulator, not PJRT.
+
+Each `*_forward` has a `ref_*` twin in pure jnp (no Pallas) used as the
+pytest oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate as agg
+from .kernels import gru as gru_k
+from .kernels import ref as ref_k
+from .kernels import rer_matmul as rm
+from .kernels import xpe as xpe_k
+
+
+# --------------------------------------------------------------------------
+# Graph preprocessing (build-time; the Rust side ships raw COO edges).
+# --------------------------------------------------------------------------
+
+def normalized_adjacency(edges_src, edges_dst, num_vertices, add_self_loops=True):
+    """Dense Â = D^-1/2 (A + I) D^-1/2 (Kipf & Welling GCN normalization)."""
+    a = jnp.zeros((num_vertices, num_vertices), jnp.float32)
+    a = a.at[edges_dst, edges_src].add(1.0)
+    a = jnp.minimum(a, 1.0)  # collapse multi-edges
+    if add_self_loops:
+        a = jnp.maximum(a, jnp.eye(num_vertices, dtype=jnp.float32))
+    deg = a.sum(axis=1)
+    d_inv_sqrt = jnp.where(deg > 0, jax.lax.rsqrt(deg), 0.0)
+    return a * d_inv_sqrt[:, None] * d_inv_sqrt[None, :]
+
+
+def adjacency_mask(edges_src, edges_dst, num_vertices):
+    """Plain 0/1 in-neighbor mask A[v, u] (no self loops)."""
+    a = jnp.zeros((num_vertices, num_vertices), jnp.float32)
+    a = a.at[edges_dst, edges_src].add(1.0)
+    return jnp.minimum(a, 1.0)
+
+
+# --------------------------------------------------------------------------
+# GCN (Eq. 1): h' = ReLU(Â h W)
+# --------------------------------------------------------------------------
+
+def gcn_layer(a_hat, x, w):
+    xw = rm.rer_matmul(x, w)  # feature extraction (DASR: F > H)
+    ax = agg.rer_spmm_dense(a_hat, xw)  # aggregate
+    return xpe_k.xpe(ax, jnp.zeros(w.shape[1]), act="relu")  # update
+
+
+def gcn_forward(a_hat, x, w1, w2):
+    h = gcn_layer(a_hat, x, w1)
+    return gcn_layer(a_hat, h, w2)
+
+
+def ref_gcn_forward(a_hat, x, w1, w2):
+    h = jnp.maximum(a_hat @ (x @ w1), 0.0)
+    return jnp.maximum(a_hat @ (h @ w2), 0.0)
+
+
+# --------------------------------------------------------------------------
+# GS-Pool (Eq. 2): h' = ReLU(W · concat(maxpool_u ReLU(W_pool h_u + b), h_v))
+# --------------------------------------------------------------------------
+
+def gs_pool_layer(a_mask, x, w_pool, b_pool, w):
+    pooled = xpe_k.xpe(rm.rer_matmul(x, w_pool), b_pool, act="relu")
+    # Masked max over in-neighbors; vertices without neighbors keep 0
+    # (pooled is ReLU-positive, so 0 is the max identity here).
+    neigh = jnp.where(a_mask[:, :, None] > 0, pooled[None, :, :], 0.0)
+    aggregated = neigh.max(axis=1)
+    cat = jnp.concatenate([aggregated, x], axis=1)
+    return xpe_k.xpe(rm.rer_matmul(cat, w), jnp.zeros(w.shape[1]), act="relu")
+
+
+def gs_pool_forward(a_mask, x, w_pool1, b1, w1, w_pool2, b2, w2):
+    h = gs_pool_layer(a_mask, x, w_pool1, b1, w1)
+    return gs_pool_layer(a_mask, h, w_pool2, b2, w2)
+
+
+def ref_gs_pool_forward(a_mask, x, w_pool1, b1, w1, w_pool2, b2, w2):
+    def layer(x, w_pool, b, w):
+        pooled = jnp.maximum(x @ w_pool + b[None, :], 0.0)
+        neigh = jnp.where(a_mask[:, :, None] > 0, pooled[None, :, :], 0.0)
+        aggregated = neigh.max(axis=1)
+        cat = jnp.concatenate([aggregated, x], axis=1)
+        return jnp.maximum(cat @ w, 0.0)
+
+    return layer(layer(x, w_pool1, b1, w1), w_pool2, b2, w2)
+
+
+# --------------------------------------------------------------------------
+# Gated-GCN (Eq. 4): h' = ReLU(W Σ_u η_uv ⊙ h_u), η = σ(W_H h_v + W_C h_u)
+# --------------------------------------------------------------------------
+
+def gated_gcn_layer(a_mask, x, w_h, w_c, w):
+    p = rm.rer_matmul(x, w_h)  # per-destination term
+    q = rm.rer_matmul(x, w_c)  # per-source term
+    # eta[v, u, f] over edges only; masked elsewhere.
+    eta = jax.nn.sigmoid(p[:, None, :] + q[None, :, :])
+    msgs = jnp.where(a_mask[:, :, None] > 0, eta * x[None, :, :], 0.0)
+    aggregated = msgs.sum(axis=1)
+    return xpe_k.xpe(rm.rer_matmul(aggregated, w), jnp.zeros(w.shape[1]), act="relu")
+
+
+def gated_gcn_forward(a_mask, x, w_h1, w_c1, w1, w_h2, w_c2, w2):
+    h = gated_gcn_layer(a_mask, x, w_h1, w_c1, w1)
+    return gated_gcn_layer(a_mask, h, w_h2, w_c2, w2)
+
+
+def ref_gated_gcn_forward(a_mask, x, w_h1, w_c1, w1, w_h2, w_c2, w2):
+    def layer(x, w_h, w_c, w):
+        eta = jax.nn.sigmoid((x @ w_h)[:, None, :] + (x @ w_c)[None, :, :])
+        msgs = jnp.where(a_mask[:, :, None] > 0, eta * x[None, :, :], 0.0)
+        return jnp.maximum(msgs.sum(axis=1) @ w, 0.0)
+
+    return layer(layer(x, w_h1, w_c1, w1), w_h2, w_c2, w2)
+
+
+# --------------------------------------------------------------------------
+# GRN (Eq. 5): h' = GRU(h, Σ_u W h_u)
+# --------------------------------------------------------------------------
+
+def grn_forward(a_mask, h0, w, w_i, w_h, steps=2):
+    # GRN iterates a GRU over a fixed-dim state (input already embedded).
+    h = h0
+    for _ in range(steps):
+        m = agg.rer_spmm_dense(a_mask, rm.rer_matmul(h, w))
+        h = gru_k.gru_cell(m, h, w_i, w_h)
+    return h
+
+
+def ref_grn_forward(a_mask, h0, w, w_i, w_h, steps=2):
+    h = h0
+    for _ in range(steps):
+        m = a_mask @ (h @ w)
+        h = ref_k.gru_cell(m, h, w_i, w_h)
+    return h
+
+
+# --------------------------------------------------------------------------
+# R-GCN (Eq. 3): h' = ReLU(W_0 h + Σ_r (1/c) Â_r h W_r)
+# --------------------------------------------------------------------------
+
+def rgcn_layer(a_rel, x, w0, w_rel):
+    """a_rel: [R, N, N] row-normalized per-relation adjacencies;
+    w_rel: [R, F, H]."""
+    out = rm.rer_matmul(x, w0)
+    r = a_rel.shape[0]
+    for i in range(r):
+        out = out + agg.rer_spmm_dense(a_rel[i], rm.rer_matmul(x, w_rel[i]))
+    return xpe_k.xpe(out, jnp.zeros(out.shape[1]), act="relu")
+
+
+def rgcn_forward(a_rel, x, w0_1, wr_1, w0_2, wr_2):
+    h = rgcn_layer(a_rel, x, w0_1, wr_1)
+    return rgcn_layer(a_rel, h, w0_2, wr_2)
+
+
+def ref_rgcn_forward(a_rel, x, w0_1, wr_1, w0_2, wr_2):
+    def layer(x, w0, wr):
+        out = x @ w0
+        for i in range(a_rel.shape[0]):
+            out = out + a_rel[i] @ (x @ wr[i])
+        return jnp.maximum(out, 0.0)
+
+    return layer(layer(x, w0_1, wr_1), w0_2, wr_2)

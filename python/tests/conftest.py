@@ -1,0 +1,7 @@
+"""Make `compile` importable when pytest runs from the repo root
+(`pytest python/tests/`) as well as from python/ (`make test`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

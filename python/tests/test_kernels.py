@@ -1,0 +1,175 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including ragged, non-tile-aligned ones) and
+value distributions; every kernel must match `ref.py` to fp32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate as agg
+from compile.kernels import gru as gru_k
+from compile.kernels import ref
+from compile.kernels import rer_matmul as rm
+from compile.kernels import xpe as xpe_k
+
+ATOL, RTOL = 1e-4, 1e-4
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def keys(seed, k):
+    return jax.random.split(jax.random.PRNGKey(seed), k)
+
+
+# --------------------------------------------------------------------------
+# rer_matmul
+# --------------------------------------------------------------------------
+
+class TestRerMatmul:
+    def test_exact_tile_shapes(self):
+        k1, k2 = keys(0, 2)
+        x, w = rand(k1, 256, 128), rand(k2, 128, 32)
+        np.testing.assert_allclose(
+            rm.rer_matmul(x, w), ref.matmul(x, w), atol=ATOL, rtol=RTOL
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 300),
+        f=st.integers(1, 200),
+        h=st.integers(1, 48),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_ragged_shapes(self, n, f, h, seed):
+        k1, k2 = keys(seed, 2)
+        x, w = rand(k1, n, f), rand(k2, f, h)
+        got = rm.rer_matmul(x, w)
+        assert got.shape == (n, h)
+        np.testing.assert_allclose(got, ref.matmul(x, w), atol=ATOL, rtol=RTOL)
+
+    def test_alternate_block_shapes(self):
+        k1, k2 = keys(3, 2)
+        x, w = rand(k1, 100, 70), rand(k2, 70, 20)
+        expect = ref.matmul(x, w)
+        for bn, bh, bk in [(32, 8, 16), (64, 16, 64), (128, 16, 128)]:
+            got = rm.rer_matmul(x, w, bn=bn, bh=bh, bk=bk)
+            np.testing.assert_allclose(got, expect, atol=ATOL, rtol=RTOL)
+
+    def test_zero_and_identity(self):
+        x = jnp.eye(64, dtype=jnp.float32)
+        w = rand(keys(4, 1)[0], 64, 16)
+        np.testing.assert_allclose(rm.rer_matmul(x, w), w, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(
+            rm.rer_matmul(jnp.zeros((32, 8)), jnp.zeros((8, 4))), jnp.zeros((32, 4))
+        )
+
+    def test_vmem_footprint_within_tpu_budget(self):
+        # 16 MB VMEM budget, fp32: default blocking must be far under it.
+        words = rm.vmem_footprint_words()
+        assert words * 4 < 1 * 1024 * 1024, f"{words * 4} B"
+
+
+# --------------------------------------------------------------------------
+# aggregate
+# --------------------------------------------------------------------------
+
+class TestAggregate:
+    def test_spmm_dense_matches_ref(self):
+        k1, k2 = keys(5, 2)
+        a, x = rand(k1, 200, 200), rand(k2, 200, 24)
+        np.testing.assert_allclose(
+            agg.rer_spmm_dense(a, x), ref.spmm_dense(a, x), atol=1e-3, rtol=1e-3
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(2, 60),
+        e=st.integers(1, 300),
+        d=st.integers(1, 24),
+        op=st.sampled_from(["sum", "max"]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_edge_aggregate_hypothesis(self, n, e, d, op, seed):
+        rng = np.random.default_rng(seed)
+        src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+        # Non-negative feats so max-with-zero-init matches the oracle.
+        feats = jnp.abs(rand(keys(seed % 1000, 1)[0], n, d))
+        got = agg.edge_aggregate(src, dst, feats, num_vertices=n, op=op)
+        want = ref.edge_aggregate(src, dst, feats, n, op=op)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-3)
+
+    def test_edge_aggregate_sum_duplicates(self):
+        # Multi-edges accumulate.
+        src = jnp.array([0, 0, 1], jnp.int32)
+        dst = jnp.array([2, 2, 2], jnp.int32)
+        feats = jnp.array([[1.0], [10.0], [100.0]])
+        out = agg.edge_aggregate(src, dst, feats, num_vertices=3, op="sum")
+        np.testing.assert_allclose(out[2], [1.0 + 1.0 + 10.0])
+
+    def test_isolated_vertices_stay_zero(self):
+        src = jnp.array([0], jnp.int32)
+        dst = jnp.array([1], jnp.int32)
+        feats = jnp.ones((3, 2))
+        out = agg.edge_aggregate(src, dst, feats, num_vertices=3, op="sum")
+        np.testing.assert_allclose(out[0], 0.0)
+        np.testing.assert_allclose(out[2], 0.0)
+
+
+# --------------------------------------------------------------------------
+# xpe
+# --------------------------------------------------------------------------
+
+class TestXpe:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 200),
+        h=st.integers(1, 40),
+        act=st.sampled_from(["relu", "sigmoid", "none"]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis(self, n, h, act, seed):
+        k1, k2 = keys(seed, 2)
+        x, b = rand(k1, n, h), rand(k2, h)
+        got = xpe_k.xpe(x, b, act=act)
+        np.testing.assert_allclose(got, ref.xpe(x, b, act), atol=ATOL, rtol=RTOL)
+
+    def test_relu_clamps(self):
+        x = jnp.array([[-1.0, 2.0]])
+        out = xpe_k.xpe(x, jnp.zeros(2), act="relu")
+        np.testing.assert_allclose(out, [[0.0, 2.0]])
+
+
+# --------------------------------------------------------------------------
+# gru
+# --------------------------------------------------------------------------
+
+class TestGru:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(1, 300), h=st.integers(1, 32), seed=st.integers(0, 2**31))
+    def test_hypothesis(self, n, h, seed):
+        k = keys(seed, 4)
+        x, hs = rand(k[0], n, h), rand(k[1], n, h)
+        w_i, w_h = rand(k[2], h, 3 * h, scale=0.5), rand(k[3], h, 3 * h, scale=0.5)
+        got = gru_k.gru_cell(x, hs, w_i, w_h)
+        np.testing.assert_allclose(
+            got, ref.gru_cell(x, hs, w_i, w_h), atol=1e-4, rtol=1e-3
+        )
+
+    def test_state_bounded(self):
+        # GRU output is a convex combination of tanh(-1..1) and h.
+        k = keys(9, 4)
+        x, h = rand(k[0], 64, 16), jnp.clip(rand(k[1], 64, 16), -1, 1)
+        w_i, w_h = rand(k[2], 16, 48), rand(k[3], 16, 48)
+        out = gru_k.gru_cell(x, h, w_i, w_h)
+        assert jnp.all(jnp.abs(out) <= 1.0 + 1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,66 @@
+//! Minimal benchmarking harness (offline stand-in for criterion):
+//! warmup, fixed-duration sampling, mean/median/p95 reporting, and a
+//! trivial black_box. Used by both bench binaries via `#[path]` include.
+
+use std::hint::black_box as hint_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    hint_black_box(x)
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12?}  median {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.p95
+        );
+    }
+
+    /// Throughput helper: items per second given items per iteration.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (after one warmup call), recording
+/// per-iteration wall time.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup (also primes allocators / caches).
+    f();
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let iters = samples.len() as u64;
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let median = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 - 1.0) * 0.95) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        median,
+        p95,
+    }
+}
+
+/// Standard section header so bench output is easy to grep.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}

@@ -1,0 +1,92 @@
+//! Hot-path micro-benches: the components the §Perf optimization pass
+//! profiles and iterates on (see EXPERIMENTS.md §Perf).
+//!
+//! * `ring.schedule_tile` — the per-edge scheduler (Cycle fidelity's
+//!   inner loop) on dense / sparse / disordered tiles;
+//! * `davc.access` — cache replay rate;
+//! * `KeyedEdges`-equivalent tile grouping — the per-layer sort;
+//! * `rmat.generate` — dataset synthesis;
+//! * whole-simulator edges/s.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, black_box, section};
+use engn::config::AcceleratorConfig;
+use engn::graph::datasets::{self, ScalePolicy};
+use engn::graph::rmat::{self, RmatParams};
+use engn::model::{GnnKind, GnnModel};
+use engn::sim::davc::Davc;
+use engn::sim::ring;
+use engn::sim::Simulator;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(1200);
+
+    section("ring scheduler");
+    let dense = rmat::generate(2_048, 262_144, RmatParams::default(), 1);
+    let sparse = rmat::generate(65_536, 131_072, RmatParams::default(), 2);
+    for (name, g, reorg) in [
+        ("ring:dense:reorg", &dense, true),
+        ("ring:dense:orig", &dense, false),
+        ("ring:sparse:reorg", &sparse, true),
+        ("ring:sparse:orig", &sparse, false),
+    ] {
+        let r = bench(name, budget, || {
+            black_box(ring::schedule_tile(&g.edges, 0, 0, 128, reorg));
+        });
+        r.print();
+        println!("    -> {:.1} M edges/s", r.per_second(g.num_edges() as f64) / 1e6);
+    }
+
+    section("DAVC replay");
+    let g = rmat::generate(65_536, 1_000_000, RmatParams::default(), 3);
+    let ranked = g.vertices_by_in_degree_desc();
+    let r = bench("davc:access:1M", budget, || {
+        let mut davc = Davc::new(1024, 1.0, &ranked);
+        for e in &g.edges {
+            black_box(davc.access(e.dst));
+        }
+    });
+    r.print();
+    println!("    -> {:.1} M accesses/s", r.per_second(1e6) / 1e6);
+
+    section("graph synthesis + tile grouping");
+    let r = bench("rmat:1M-edges", budget, || {
+        black_box(rmat::generate(65_536, 1_000_000, RmatParams::default(), 4));
+    });
+    r.print();
+    println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
+
+    let r = bench("tile-sort:1M-edges", budget, || {
+        // The engine's per-layer grouping: key + sort.
+        let span = 4096usize;
+        let q = 16u64;
+        let mut pairs: Vec<(u64, engn::graph::Edge)> = g
+            .edges
+            .iter()
+            .map(|&e| {
+                let row = (e.src as usize / span) as u64;
+                let col = (e.dst as usize / span) as u64;
+                (row * q + col, e)
+            })
+            .collect();
+        pairs.sort_unstable_by_key(|&(k, _)| k);
+        black_box(pairs.len());
+    });
+    r.print();
+    println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
+
+    section("whole simulator (GCN on PubMed)");
+    let spec = datasets::by_code("PB").unwrap();
+    let pb = spec.instantiate(ScalePolicy::Capped, 7);
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let edges = pb.num_edges() as f64 * model.layers.len() as f64;
+    let r = bench("sim:gcn:PB", budget, || {
+        let sim = Simulator::new(AcceleratorConfig::engn());
+        black_box(sim.run(&model, &pb, "PB"));
+    });
+    r.print();
+    println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
+}

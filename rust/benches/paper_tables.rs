@@ -1,0 +1,57 @@
+//! End-to-end benches: one timed entry per paper table/figure — how long
+//! the harness takes to regenerate each experiment (at bench scaling),
+//! plus the simulator's end-to-end rate on each Table-5 workload class.
+//!
+//! Run with `cargo bench --offline` (or `make bench`). The *contents* of
+//! the tables are produced by `engn bench --exp all`; this binary times
+//! the machinery.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, black_box, section};
+use engn::config::AcceleratorConfig;
+use engn::graph::datasets::{self, ScalePolicy};
+use engn::model::{GnnKind, GnnModel};
+use engn::report::experiments::{self, Eval};
+use engn::sim::Simulator;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(1500);
+
+    section("experiment regeneration (ScalePolicy::Factor(256))");
+    for id in experiments::ALL_IDS {
+        let r = bench(&format!("bench:{id}"), budget, || {
+            // Fresh Eval per iteration: measure the full regeneration
+            // (graph synthesis + all platform models), not cache hits.
+            let eval = Eval::new(ScalePolicy::Factor(256), 7);
+            black_box(experiments::by_id(&eval, id).unwrap());
+        });
+        r.print();
+    }
+
+    section("simulator end-to-end per workload class (Factor(64))");
+    for (kind, code) in [
+        (GnnKind::Gcn, "CA"),
+        (GnnKind::Gcn, "NE"),
+        (GnnKind::GsPool, "RD"),
+        (GnnKind::GatedGcn, "SA"),
+        (GnnKind::Grn, "SC"),
+        (GnnKind::Rgcn, "AM"),
+    ] {
+        let spec = datasets::by_code(code).unwrap();
+        let g = spec.instantiate(ScalePolicy::Factor(64), 7);
+        let model = GnnModel::for_dataset(kind, &spec);
+        let edges = g.num_edges() as f64;
+        let r = bench(&format!("sim:{}:{}", kind.short(), code), budget, || {
+            let sim = Simulator::new(AcceleratorConfig::engn());
+            black_box(sim.run(&model, &g, code));
+        });
+        r.print();
+        println!(
+            "    -> {:.1} M simulated edges/s",
+            r.per_second(edges * model.layers.len() as f64) / 1e6
+        );
+    }
+}

@@ -1,0 +1,201 @@
+//! Accelerator configuration: the micro-architectural parameters of EnGN
+//! (Table 4), its variants, and the energy/area model constants.
+
+pub mod energy;
+
+pub use energy::{AreaModel, EnergyModel};
+
+/// Tile-scheduling policy (paper §5.3, Fig 15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileOrder {
+    /// Column-major S-shape: destination interval resident, stream sources.
+    Column,
+    /// Row-major S-shape: source interval resident, stream destinations.
+    Row,
+    /// Pick Column or Row per layer from the Table-3 I/O cost model.
+    Adaptive,
+}
+
+/// Stage-ordering policy (paper §5.2, Fig 14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageOrder {
+    /// feature_extraction -> aggregate -> update (Eq. 6).
+    Fau,
+    /// aggregate -> feature_extraction -> update (Eq. 7).
+    Afu,
+    /// Dimension-aware re-ordering: FAU if F > H else AFU.
+    Dasr,
+}
+
+/// Simulator fidelity (see DESIGN.md §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Replay the RER ring schedule cycle-by-cycle per batch.
+    Cycle,
+    /// Analytic per-phase model with ring utilization sampled from a
+    /// bounded number of batches (validated against `Cycle`).
+    Phase,
+}
+
+/// Full accelerator configuration. `Default` is the paper's EnGN config.
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    pub name: String,
+    /// PE array rows (vertices processed in parallel). Paper: 128.
+    pub pe_rows: usize,
+    /// PE array columns (property dimensions in parallel). Paper: 16.
+    pub pe_cols: usize,
+    /// Vector processing unit lanes (handles agg ops / activations).
+    pub vpu_pes: usize,
+    /// Clock, GHz. Paper: 1.0.
+    pub freq_ghz: f64,
+    /// Degree-aware vertex cache capacity, bytes. Paper: 64 KB.
+    pub davc_bytes: usize,
+    /// Fraction of DAVC reserved for high-degree vertices (Fig 16a
+    /// concludes 1.0 — all entries reserved).
+    pub davc_reserved_frac: f64,
+    /// Result-bank (last-level on-chip) capacity, bytes.
+    /// EnGN: 1600 KB total on-chip; EnGN_22MB: 22 MB.
+    pub result_bank_bytes: usize,
+    /// Edge-bank bytes per PE row (streams the COO edge list).
+    pub edge_bank_bytes: usize,
+    /// Off-chip bandwidth, GB/s. Paper: HBM 2.0, 256 GB/s.
+    pub hbm_gbps: f64,
+    /// Off-chip access latency, ns (prefetcher hides it when streaming).
+    pub hbm_latency_ns: f64,
+    /// Datapath width, bytes (32-bit fixed point).
+    pub word_bytes: usize,
+    /// Reorganize edge banks by source arrival order (Fig 6 / Fig 12).
+    pub edge_reorganization: bool,
+    /// Model an ideal fully-connected PE column instead of the ring —
+    /// the normalization baseline of Fig 12 (not a real design point).
+    pub ideal_ring: bool,
+    pub tile_order: TileOrder,
+    pub stage_order: StageOrder,
+    pub fidelity: Fidelity,
+    pub energy: EnergyModel,
+    pub area: AreaModel,
+}
+
+impl AcceleratorConfig {
+    /// The paper's primary EnGN configuration (Table 4, last column):
+    /// 128×16 PE array @ 1 GHz, 32-PE VPU, 1600 KB on-chip, 64 KB DAVC,
+    /// HBM 2.0 @ 256 GB/s.
+    pub fn engn() -> Self {
+        Self {
+            name: "EnGN".to_string(),
+            pe_rows: 128,
+            pe_cols: 16,
+            vpu_pes: 32,
+            freq_ghz: 1.0,
+            davc_bytes: 64 * 1024,
+            davc_reserved_frac: 1.0,
+            result_bank_bytes: 1600 * 1024 - 64 * 1024,
+            edge_bank_bytes: 2 * 1024,
+            hbm_gbps: 256.0,
+            hbm_latency_ns: 120.0,
+            word_bytes: 4,
+            edge_reorganization: true,
+            ideal_ring: false,
+            tile_order: TileOrder::Adaptive,
+            stage_order: StageOrder::Dasr,
+            fidelity: Fidelity::Phase,
+            energy: EnergyModel::tsmc14(),
+            area: AreaModel::tsmc14(),
+        }
+    }
+
+    /// EnGN_22MB: same NGPU, HyGCN-sized 22 MB on-chip buffer (Table 4).
+    pub fn engn_22mb() -> Self {
+        Self {
+            name: "EnGN_22MB".to_string(),
+            result_bank_bytes: 22 * 1024 * 1024,
+            ..Self::engn()
+        }
+    }
+
+    /// PE-array sweep variant for the Fig 17 scalability study.
+    pub fn with_array(rows: usize, cols: usize) -> Self {
+        Self {
+            name: format!("EnGN_{rows}x{cols}"),
+            pe_rows: rows,
+            pe_cols: cols,
+            ..Self::engn()
+        }
+    }
+
+    /// Ablation helper.
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Peak MAC throughput in GOP/s (1 MAC = 2 ops). 128×16 @ 1 GHz =
+    /// 4096 GOP/s — the "peak" Fig 10's 79.7% figure is quoted against.
+    pub fn peak_gops(&self) -> f64 {
+        (self.pe_rows * self.pe_cols) as f64 * 2.0 * self.freq_ghz
+    }
+
+    /// Total PEs in the NGPU array.
+    pub fn num_pes(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+
+    /// Total on-chip SRAM (result banks + DAVC + edge banks).
+    pub fn on_chip_bytes(&self) -> usize {
+        self.result_bank_bytes + self.davc_bytes + self.edge_bank_bytes * self.pe_rows
+    }
+
+    /// Cycles per second.
+    pub fn hz(&self) -> f64 {
+        self.freq_ghz * 1e9
+    }
+
+    /// Bytes the HBM moves per cycle at full bandwidth.
+    pub fn hbm_bytes_per_cycle(&self) -> f64 {
+        self.hbm_gbps * 1e9 / self.hz()
+    }
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        Self::engn()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engn_matches_table4() {
+        let c = AcceleratorConfig::engn();
+        assert_eq!(c.pe_rows, 128);
+        assert_eq!(c.pe_cols, 16);
+        assert_eq!(c.num_pes(), 2048);
+        assert_eq!(c.peak_gops(), 4096.0);
+        // ~1600 KB on-chip total.
+        let total_kb = c.on_chip_bytes() / 1024;
+        assert!((1500..=2700).contains(&total_kb), "on-chip {total_kb} KB");
+    }
+
+    #[test]
+    fn engn_22mb_has_hygcn_sized_buffer() {
+        let c = AcceleratorConfig::engn_22mb();
+        assert_eq!(c.result_bank_bytes, 22 * 1024 * 1024);
+        assert_eq!(c.pe_rows, 128);
+    }
+
+    #[test]
+    fn array_sweep_variants() {
+        let c = AcceleratorConfig::with_array(32, 16);
+        assert_eq!(c.peak_gops(), 1024.0);
+        assert_eq!(c.name, "EnGN_32x16");
+    }
+
+    #[test]
+    fn hbm_bytes_per_cycle() {
+        let c = AcceleratorConfig::engn();
+        assert!((c.hbm_bytes_per_cycle() - 256.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,103 @@
+//! Dynamic batching: group same-artifact requests within a bounded wait
+//! window, oldest-first, without starving other artifacts.
+
+use super::service::Request;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// How long the batcher waits for co-batchable requests once it has
+    /// at least one.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Pull-based batch former over a pending queue.
+///
+/// The worker owns a `VecDeque<Request>`; `form_batch` removes and
+/// returns the next batch: the artifact of the *oldest* pending request
+/// determines the batch key (FIFO fairness across models), and up to
+/// `max_batch` requests with that artifact are drained in arrival order.
+pub fn form_batch(pending: &mut VecDeque<Request>, cfg: &BatchConfig) -> Vec<Request> {
+    let Some(front) = pending.front() else {
+        return Vec::new();
+    };
+    let key = front.artifact.clone();
+    let mut batch = Vec::new();
+    let mut i = 0;
+    while i < pending.len() && batch.len() < cfg.max_batch {
+        if pending[i].artifact == key {
+            // O(n) removal is fine at serving queue depths.
+            batch.push(pending.remove(i).unwrap());
+        } else {
+            i += 1;
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::Request;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64, artifact: &str) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            artifact: artifact.to_string(),
+            inputs: Vec::new(),
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn batches_by_oldest_artifact_fifo() {
+        let mut q: VecDeque<Request> =
+            [req(1, "gcn"), req(2, "grn"), req(3, "gcn"), req(4, "gcn")]
+                .into_iter()
+                .collect();
+        let cfg = BatchConfig {
+            max_batch: 2,
+            ..Default::default()
+        };
+        let b1 = form_batch(&mut q, &cfg);
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let b2 = form_batch(&mut q, &cfg);
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        let b3 = form_batch(&mut q, &cfg);
+        assert_eq!(b3.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert!(form_batch(&mut q, &cfg).is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut q: VecDeque<Request> = (0..10).map(|i| req(i, "gcn")).collect();
+        let cfg = BatchConfig {
+            max_batch: 4,
+            ..Default::default()
+        };
+        assert_eq!(form_batch(&mut q, &cfg).len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn empty_queue_yields_empty_batch() {
+        let mut q = VecDeque::new();
+        assert!(form_batch(&mut q, &BatchConfig::default()).is_empty());
+    }
+}

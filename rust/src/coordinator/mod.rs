@@ -1,0 +1,16 @@
+//! L3 coordinator: an inference-serving layer over the PJRT runtime and
+//! the EnGN simulator.
+//!
+//! EnGN is an accelerator paper, so the coordination contribution is a
+//! *driver*: a request router + dynamic batcher in the style of a model
+//! server. Requests name an artifact (a compiled GNN forward); the
+//! batcher groups same-model requests to amortize dispatch, a worker
+//! executes them on the PJRT runtime, and per-request metrics
+//! (queue wait, execution time, batch size) are recorded — the numbers
+//! the serving example reports next to the simulated EnGN latency.
+
+pub mod batcher;
+pub mod service;
+
+pub use batcher::BatchConfig;
+pub use service::{Executor, InferenceService, MetricsSnapshot, Request, Response};

@@ -1,0 +1,408 @@
+//! The inference service: request intake, the batching worker thread,
+//! execution on an [`Executor`] (the PJRT runtime in production, a mock
+//! in tests), and latency metrics.
+
+use super::batcher::{form_batch, BatchConfig};
+use crate::runtime::HostTensor;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Anything that can execute a named artifact. Implemented by
+/// [`crate::runtime::Runtime`]; tests use mocks.
+///
+/// PJRT handles are not `Send` (the `xla` crate wraps `Rc` + raw
+/// pointers), so the service *constructs the executor inside its worker
+/// thread* via a loader closure and the trait itself needs no thread
+/// bounds.
+pub trait Executor: 'static {
+    fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String>;
+}
+
+impl Executor for crate::runtime::Runtime {
+    fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
+        crate::runtime::Runtime::execute(self, artifact, inputs)
+    }
+}
+
+/// An enqueued inference request.
+pub struct Request {
+    pub id: u64,
+    pub artifact: String,
+    pub inputs: Vec<HostTensor>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The reply delivered to the submitter.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<HostTensor, String>,
+    pub queue_wait: Duration,
+    pub exec_time: Duration,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+struct ArtifactMetrics {
+    count: u64,
+    errors: u64,
+    exec_s: Vec<f64>,
+    wait_s: Vec<f64>,
+    batch_sizes: Vec<usize>,
+}
+
+/// Aggregated service metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub per_artifact: HashMap<String, ArtifactStats>,
+    pub total_requests: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactStats {
+    pub count: u64,
+    pub errors: u64,
+    pub mean_exec_s: f64,
+    pub p95_exec_s: f64,
+    pub mean_wait_s: f64,
+    pub mean_batch: f64,
+    /// Requests per second of execution time (batching efficiency).
+    pub throughput_rps: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+/// The running service. Dropping it (or calling [`shutdown`]) stops the
+/// worker after the queue drains.
+///
+/// [`shutdown`]: InferenceService::shutdown
+pub struct InferenceService {
+    tx: mpsc::Sender<Request>,
+    worker: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<HashMap<String, ArtifactMetrics>>>,
+}
+
+impl InferenceService {
+    /// Start the service. `make_executor` runs once on the worker thread
+    /// (PJRT compilation happens there); if it fails, every request is
+    /// answered with the load error.
+    pub fn start<F>(make_executor: F, cfg: BatchConfig) -> Self
+    where
+        F: FnOnce() -> Result<Box<dyn Executor>, String> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics: Arc<Mutex<HashMap<String, ArtifactMetrics>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let worker = {
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || match make_executor() {
+                Ok(executor) => worker_loop(rx, executor, cfg, stop, metrics),
+                Err(e) => {
+                    // Answer everything with the load failure until stop.
+                    while !stop.load(Ordering::SeqCst) {
+                        match rx.recv_timeout(Duration::from_millis(10)) {
+                            Ok(req) => {
+                                let _ = req.reply.send(Response {
+                                    id: req.id,
+                                    result: Err(format!("executor failed to load: {e}")),
+                                    queue_wait: Duration::ZERO,
+                                    exec_time: Duration::ZERO,
+                                    batch_size: 0,
+                                });
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                        }
+                    }
+                }
+            })
+        };
+        Self {
+            tx,
+            worker: Some(worker),
+            next_id: AtomicU64::new(1),
+            stop,
+            metrics,
+        }
+    }
+
+    /// Submit a request; returns (request id, response receiver).
+    pub fn submit(
+        &self,
+        artifact: &str,
+        inputs: Vec<HostTensor>,
+    ) -> (u64, mpsc::Receiver<Response>) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            id,
+            artifact: artifact.to_string(),
+            inputs,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        // A send failure means the worker is gone; the caller sees it as
+        // a disconnected reply channel.
+        let _ = self.tx.send(req);
+        (id, reply_rx)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer(&self, artifact: &str, inputs: Vec<HostTensor>) -> Response {
+        let (id, rx) = self.submit(artifact, inputs);
+        rx.recv().unwrap_or(Response {
+            id,
+            result: Err("service stopped".to_string()),
+            queue_wait: Duration::ZERO,
+            exec_time: Duration::ZERO,
+            batch_size: 0,
+        })
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let m = self.metrics.lock().unwrap();
+        let mut per_artifact = HashMap::new();
+        let mut total = 0;
+        for (name, am) in m.iter() {
+            total += am.count;
+            let mut exec_sorted = am.exec_s.clone();
+            exec_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let exec_total: f64 = am.exec_s.iter().sum();
+            per_artifact.insert(
+                name.clone(),
+                ArtifactStats {
+                    count: am.count,
+                    errors: am.errors,
+                    mean_exec_s: exec_total / am.count.max(1) as f64,
+                    p95_exec_s: percentile(&exec_sorted, 0.95),
+                    mean_wait_s: am.wait_s.iter().sum::<f64>() / am.count.max(1) as f64,
+                    mean_batch: am.batch_sizes.iter().sum::<usize>() as f64
+                        / am.batch_sizes.len().max(1) as f64,
+                    throughput_rps: if exec_total > 0.0 {
+                        am.count as f64 / exec_total
+                    } else {
+                        0.0
+                    },
+                },
+            );
+        }
+        MetricsSnapshot {
+            per_artifact,
+            total_requests: total,
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: mpsc::Receiver<Request>,
+    executor: Box<dyn Executor>,
+    cfg: BatchConfig,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<HashMap<String, ArtifactMetrics>>>,
+) {
+    let mut pending: VecDeque<Request> = VecDeque::new();
+    loop {
+        // Intake: block briefly for the first request, then drain the
+        // channel inside the batching window.
+        if pending.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(r) => pending.push_back(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        let window_end = Instant::now() + cfg.max_wait;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= window_end {
+                break;
+            }
+            match rx.recv_timeout(window_end - now) {
+                Ok(r) => pending.push_back(r),
+                Err(_) => break,
+            }
+        }
+
+        let batch = form_batch(&mut pending, &cfg);
+        if batch.is_empty() {
+            continue;
+        }
+        let batch_size = batch.len();
+        let artifact = batch[0].artifact.clone();
+        for req in batch {
+            let started = Instant::now();
+            let result = executor.execute(&req.artifact, &req.inputs);
+            let exec_time = started.elapsed();
+            let queue_wait = started.duration_since(req.enqueued);
+            {
+                let mut m = metrics.lock().unwrap();
+                let am = m.entry(artifact.clone()).or_default();
+                am.count += 1;
+                if result.is_err() {
+                    am.errors += 1;
+                }
+                am.exec_s.push(exec_time.as_secs_f64());
+                am.wait_s.push(queue_wait.as_secs_f64());
+                am.batch_sizes.push(batch_size);
+            }
+            let _ = req.reply.send(Response {
+                id: req.id,
+                result,
+                queue_wait,
+                exec_time,
+                batch_size,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock executor: returns a 1-element tensor with the input count.
+    struct Mock {
+        delay: Duration,
+        fail_on: Option<&'static str>,
+    }
+
+    impl Executor for Mock {
+        fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
+            std::thread::sleep(self.delay);
+            if self.fail_on == Some(artifact) {
+                return Err(format!("mock failure for {artifact}"));
+            }
+            Ok(HostTensor::new(vec![1], vec![inputs.len() as f32]))
+        }
+    }
+
+    fn service(delay_ms: u64, fail_on: Option<&'static str>) -> InferenceService {
+        InferenceService::start(
+            move || {
+                Ok(Box::new(Mock {
+                    delay: Duration::from_millis(delay_ms),
+                    fail_on,
+                }) as Box<dyn Executor>)
+            },
+            BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(5),
+            },
+        )
+    }
+
+    #[test]
+    fn round_trip_single_request() {
+        let svc = service(0, None);
+        let resp = svc.infer("gcn", vec![HostTensor::zeros(vec![2]), HostTensor::zeros(vec![2])]);
+        let out = resp.result.unwrap();
+        assert_eq!(out.data, vec![2.0]);
+        assert!(resp.batch_size >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answered() {
+        let svc = Arc::new(service(1, None));
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            let artifact = if i % 2 == 0 { "gcn" } else { "grn" };
+            let (_, rx) = svc.submit(artifact, vec![HostTensor::zeros(vec![1])]);
+            rxs.push(rx);
+        }
+        let mut ids = std::collections::HashSet::new();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok());
+            assert!(ids.insert(resp.id), "duplicate response id");
+        }
+        let m = svc.metrics();
+        assert_eq!(m.total_requests, 20);
+        assert!(m.per_artifact.contains_key("gcn"));
+        assert!(m.per_artifact.contains_key("grn"));
+    }
+
+    #[test]
+    fn batching_groups_same_artifact() {
+        let svc = service(2, None);
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            let (_, rx) = svc.submit("gcn", vec![HostTensor::zeros(vec![1])]);
+            rxs.push(rx);
+        }
+        let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
+        // At least one response should have been co-batched.
+        assert!(sizes.iter().any(|&s| s > 1), "batch sizes {sizes:?}");
+        let m = svc.metrics();
+        assert!(m.per_artifact["gcn"].mean_batch > 1.0);
+    }
+
+    #[test]
+    fn failures_reported_not_swallowed() {
+        let svc = service(0, Some("bad"));
+        let resp = svc.infer("bad", vec![]);
+        assert!(resp.result.is_err());
+        let m = svc.metrics();
+        assert_eq!(m.per_artifact["bad"].errors, 1);
+    }
+
+    #[test]
+    fn loader_failure_answers_requests_with_error() {
+        let svc = InferenceService::start(
+            || Err("no artifacts".to_string()),
+            BatchConfig::default(),
+        );
+        let resp = svc.infer("gcn", vec![]);
+        let err = resp.result.unwrap_err();
+        assert!(err.contains("no artifacts"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_percentiles_monotone() {
+        let svc = service(1, None);
+        for _ in 0..10 {
+            let _ = svc.infer("gcn", vec![]);
+        }
+        let m = svc.metrics();
+        let s = &m.per_artifact["gcn"];
+        assert!(s.p95_exec_s >= s.mean_exec_s * 0.5);
+        assert!(s.count == 10);
+        assert!(s.throughput_rps > 0.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Edge-list file I/O: load real graphs into the simulator instead of
+//! synthetic stand-ins.
+//!
+//! Format: whitespace-separated `src dst [relation]` per line, `#` or
+//! `%` comment lines ignored (the common SNAP / KONECT / OGB-export
+//! convention). Vertex ids need not be contiguous — they are densely
+//! re-mapped, and the mapping is returned so callers can translate
+//! results back.
+
+use super::{Edge, Graph};
+use crate::util::fxhash::IntMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// A loaded graph plus the original-id → dense-id mapping.
+pub struct LoadedGraph {
+    pub graph: Graph,
+    /// `dense_of[original]` — only ids seen in the file.
+    pub dense_of: IntMap<u64, u32>,
+    /// `original_of[dense]`.
+    pub original_of: Vec<u64>,
+}
+
+/// Parse an edge list from a reader.
+pub fn read_edge_list(r: impl std::io::Read) -> Result<LoadedGraph, String> {
+    let mut dense_of: IntMap<u64, u32> = IntMap::default();
+    let mut original_of: Vec<u64> = Vec::new();
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut relations: Vec<u16> = Vec::new();
+    let mut max_rel = 0u16;
+    let intern = |id: u64, original_of: &mut Vec<u64>, dense_of: &mut IntMap<u64, u32>| {
+        *dense_of.entry(id).or_insert_with(|| {
+            original_of.push(id);
+            (original_of.len() - 1) as u32
+        })
+    };
+    for (lineno, line) in BufReader::new(r).lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let src: u64 = it
+            .next()
+            .ok_or_else(|| format!("line {}: missing src", lineno + 1))?
+            .parse()
+            .map_err(|e| format!("line {}: bad src: {e}", lineno + 1))?;
+        let dst: u64 = it
+            .next()
+            .ok_or_else(|| format!("line {}: missing dst", lineno + 1))?
+            .parse()
+            .map_err(|e| format!("line {}: bad dst: {e}", lineno + 1))?;
+        let s = intern(src, &mut original_of, &mut dense_of);
+        let d = intern(dst, &mut original_of, &mut dense_of);
+        edges.push(Edge::new(s, d));
+        if let Some(rel_txt) = it.next() {
+            let rel: u16 = rel_txt
+                .parse()
+                .map_err(|e| format!("line {}: bad relation: {e}", lineno + 1))?;
+            max_rel = max_rel.max(rel);
+            relations.push(rel);
+        } else if !relations.is_empty() {
+            return Err(format!(
+                "line {}: mixed 2- and 3-column rows",
+                lineno + 1
+            ));
+        }
+    }
+    if !relations.is_empty() && relations.len() != edges.len() {
+        return Err("mixed 2- and 3-column rows".to_string());
+    }
+    let n = original_of.len();
+    let num_relations = if relations.is_empty() {
+        1
+    } else {
+        max_rel as usize + 1
+    };
+    Ok(LoadedGraph {
+        graph: Graph::from_edges_with_relations(n, edges, relations, num_relations),
+        dense_of,
+        original_of,
+    })
+}
+
+/// Load from a path.
+pub fn load_edge_list(path: impl AsRef<Path>) -> Result<LoadedGraph, String> {
+    let f = std::fs::File::open(&path)
+        .map_err(|e| format!("opening {}: {e}", path.as_ref().display()))?;
+    read_edge_list(f)
+}
+
+/// Write a graph back out (dense ids, one edge per line).
+pub fn save_edge_list(g: &Graph, path: impl AsRef<Path>) -> Result<(), String> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(&path)
+            .map_err(|e| format!("creating {}: {e}", path.as_ref().display()))?,
+    );
+    writeln!(f, "# {} vertices, {} edges", g.num_vertices, g.num_edges())
+        .map_err(|e| e.to_string())?;
+    for (i, e) in g.edges.iter().enumerate() {
+        if g.relations.is_empty() {
+            writeln!(f, "{} {}", e.src, e.dst).map_err(|e| e.to_string())?;
+        } else {
+            writeln!(f, "{} {} {}", e.src, e.dst, g.relations[i]).map_err(|e| e.to_string())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{self, RmatParams};
+
+    #[test]
+    fn parses_comments_and_noncontiguous_ids() {
+        let txt = "# a comment\n% another\n10 20\n20 30\n\n10 30\n";
+        let lg = read_edge_list(txt.as_bytes()).unwrap();
+        assert_eq!(lg.graph.num_vertices, 3);
+        assert_eq!(lg.graph.num_edges(), 3);
+        // Dense remapping preserves structure: 10->0, 20->1, 30->2.
+        assert_eq!(lg.original_of, vec![10, 20, 30]);
+        assert_eq!(lg.dense_of[&20], 1);
+        assert_eq!(lg.graph.out_degree(0), 2);
+        assert_eq!(lg.graph.in_degree(2), 2);
+    }
+
+    #[test]
+    fn parses_relations() {
+        let txt = "0 1 2\n1 2 0\n2 0 2\n";
+        let lg = read_edge_list(txt.as_bytes()).unwrap();
+        assert_eq!(lg.graph.num_relations, 3);
+        assert_eq!(lg.graph.relations, vec![2, 0, 2]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read_edge_list("0\n".as_bytes()).is_err());
+        assert!(read_edge_list("a b\n".as_bytes()).is_err());
+        assert!(read_edge_list("0 1 2\n0 1\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn round_trips_through_a_file() {
+        let g = rmat::generate(128, 1024, RmatParams::default(), 5);
+        let dir = std::env::temp_dir().join("engn_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        save_edge_list(&g, &path).unwrap();
+        let lg = load_edge_list(&path).unwrap();
+        // Dense ids may be renumbered by first-seen order; structure is
+        // preserved: same edge count and same degree multiset.
+        assert_eq!(lg.graph.num_edges(), g.num_edges());
+        let mut a: Vec<u32> = g.in_degrees().to_vec();
+        let mut b: Vec<u32> = lg.graph.in_degrees().to_vec();
+        // Vertices with degree 0 on both sides may differ in count only
+        // if isolated; rmat keeps all endpoints, so compare non-zero.
+        a.retain(|&d| d > 0);
+        b.retain(|&d| d > 0);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

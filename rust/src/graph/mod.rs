@@ -1,0 +1,234 @@
+//! Graph substrate: COO/CSR/CSC storage, degree statistics, R-MAT
+//! synthesis, the Table-5 dataset suite, and the GridGraph-style 2-D
+//! partitioner EnGN's tiling builds on.
+
+pub mod datasets;
+pub mod io;
+pub mod rmat;
+pub mod stats;
+pub mod tiling;
+
+/// A directed edge `(src -> dst)`. EnGN stores the input graph as a
+/// coordinate list (COO), exactly as the paper's processing model assumes
+/// (Algorithm 1: "each edge in the graph is a tuple (src, dst, val)").
+/// The optional `val` (edge property) is carried separately when a model
+/// needs it (R-GCN relation ids) to keep this struct 8 bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Edge {
+    pub src: u32,
+    pub dst: u32,
+}
+
+impl Edge {
+    pub fn new(src: u32, dst: u32) -> Self {
+        Self { src, dst }
+    }
+}
+
+/// An in-memory graph: COO edge list plus degree arrays and on-demand
+/// CSR (out-edges) / CSC (in-edges) index structures.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub num_vertices: usize,
+    pub edges: Vec<Edge>,
+    /// Per-edge relation id (R-GCN); empty for single-relation graphs.
+    pub relations: Vec<u16>,
+    pub num_relations: usize,
+    in_degree: Vec<u32>,
+    out_degree: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an edge list. Panics if an endpoint is out of range —
+    /// graph construction bugs should fail loudly, not corrupt the sim.
+    pub fn from_edges(num_vertices: usize, edges: Vec<Edge>) -> Self {
+        Self::from_edges_with_relations(num_vertices, edges, Vec::new(), 1)
+    }
+
+    pub fn from_edges_with_relations(
+        num_vertices: usize,
+        edges: Vec<Edge>,
+        relations: Vec<u16>,
+        num_relations: usize,
+    ) -> Self {
+        assert!(
+            relations.is_empty() || relations.len() == edges.len(),
+            "relations must be empty or per-edge"
+        );
+        let mut in_degree = vec![0u32; num_vertices];
+        let mut out_degree = vec![0u32; num_vertices];
+        for e in &edges {
+            assert!(
+                (e.src as usize) < num_vertices && (e.dst as usize) < num_vertices,
+                "edge ({}, {}) out of range for {} vertices",
+                e.src,
+                e.dst,
+                num_vertices
+            );
+            out_degree[e.src as usize] += 1;
+            in_degree[e.dst as usize] += 1;
+        }
+        Self {
+            num_vertices,
+            edges,
+            relations,
+            num_relations,
+            in_degree,
+            out_degree,
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn in_degree(&self, v: u32) -> u32 {
+        self.in_degree[v as usize]
+    }
+
+    pub fn out_degree(&self, v: u32) -> u32 {
+        self.out_degree[v as usize]
+    }
+
+    pub fn in_degrees(&self) -> &[u32] {
+        &self.in_degree
+    }
+
+    pub fn out_degrees(&self) -> &[u32] {
+        &self.out_degree
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices == 0 {
+            0.0
+        } else {
+            self.edges.len() as f64 / self.num_vertices as f64
+        }
+    }
+
+    /// CSC view: edges grouped by destination. In-neighbors of `v` are
+    /// `neighbors[offsets[v]..offsets[v+1]]`.
+    pub fn build_csc(&self) -> Csx {
+        Csx::build(self.num_vertices, &self.edges, |e| (e.dst, e.src))
+    }
+
+    /// CSR view: edges grouped by source.
+    pub fn build_csr(&self) -> Csx {
+        Csx::build(self.num_vertices, &self.edges, |e| (e.src, e.dst))
+    }
+
+    /// Vertex ids sorted by descending in-degree (the "high-radix" ranking
+    /// the degree-aware vertex cache reserves entries for).
+    pub fn vertices_by_in_degree_desc(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = (0..self.num_vertices as u32).collect();
+        ids.sort_by_key(|&v| std::cmp::Reverse(self.in_degree[v as usize]));
+        ids
+    }
+}
+
+/// Compressed sparse row/column index (direction determined by builder).
+#[derive(Debug, Clone)]
+pub struct Csx {
+    pub offsets: Vec<u32>,
+    pub neighbors: Vec<u32>,
+}
+
+impl Csx {
+    fn build(n: usize, edges: &[Edge], proj: impl Fn(&Edge) -> (u32, u32)) -> Self {
+        let mut counts = vec![0u32; n + 1];
+        for e in edges {
+            let (key, _) = proj(e);
+            counts[key as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut neighbors = vec![0u32; offsets[n] as usize];
+        for e in edges {
+            let (key, val) = proj(e);
+            let slot = cursor[key as usize];
+            neighbors[slot as usize] = val;
+            cursor[key as usize] += 1;
+        }
+        Self { offsets, neighbors }
+    }
+
+    pub fn neighbors_of(&self, v: u32) -> &[u32] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.neighbors[lo..hi]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3, 3 -> 0
+        Graph::from_edges(
+            4,
+            vec![
+                Edge::new(0, 1),
+                Edge::new(0, 2),
+                Edge::new(1, 3),
+                Edge::new(2, 3),
+                Edge::new(3, 0),
+            ],
+        )
+    }
+
+    #[test]
+    fn degrees() {
+        let g = diamond();
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(3), 2);
+        assert_eq!(g.in_degree(0), 1);
+        assert_eq!(g.num_edges(), 5);
+        assert!((g.avg_degree() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csc_groups_by_destination() {
+        let g = diamond();
+        let csc = g.build_csc();
+        let mut in3: Vec<u32> = csc.neighbors_of(3).to_vec();
+        in3.sort_unstable();
+        assert_eq!(in3, vec![1, 2]);
+        assert_eq!(csc.neighbors_of(0), &[3]);
+    }
+
+    #[test]
+    fn csr_groups_by_source() {
+        let g = diamond();
+        let csr = g.build_csr();
+        let mut out0: Vec<u32> = csr.neighbors_of(0).to_vec();
+        out0.sort_unstable();
+        assert_eq!(out0, vec![1, 2]);
+        assert_eq!(csr.neighbors_of(3), &[0]);
+    }
+
+    #[test]
+    fn csx_total_size_matches_edges() {
+        let g = diamond();
+        let csr = g.build_csr();
+        assert_eq!(csr.neighbors.len(), g.num_edges());
+        assert_eq!(*csr.offsets.last().unwrap() as usize, g.num_edges());
+    }
+
+    #[test]
+    fn degree_ranking_desc() {
+        let g = diamond();
+        let ranked = g.vertices_by_in_degree_desc();
+        assert_eq!(ranked[0], 3); // in-degree 2
+        assert_eq!(g.in_degree(ranked[1]), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range_edges() {
+        Graph::from_edges(2, vec![Edge::new(0, 5)]);
+    }
+}

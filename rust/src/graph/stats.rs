@@ -1,0 +1,131 @@
+//! Degree-distribution statistics: the skew measurements the paper leans
+//! on ("the top 20% vertices with higher degree are connected to the
+//! 50-85% edges of the whole graph", §3.2) and the access-imbalance ratio
+//! motivating the degree-aware vertex cache ("the access frequency of a
+//! high-degree vertex is 100x times that of a low-degree vertex", §1).
+
+use super::Graph;
+
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub avg_degree: f64,
+    pub max_in_degree: u32,
+    pub max_out_degree: u32,
+    /// Fraction of edges covered by the top-20%-by-in-degree vertices.
+    pub top20_edge_share: f64,
+    /// Ratio between the 99th-percentile and median (>=1) in-degree — the
+    /// "100x" access-imbalance figure from the paper's intro.
+    pub p99_to_median_in_degree: f64,
+    /// Gini coefficient of the in-degree distribution (0 = uniform).
+    pub in_degree_gini: f64,
+}
+
+impl GraphStats {
+    pub fn compute(g: &Graph) -> Self {
+        let mut in_sorted: Vec<u32> = g.in_degrees().to_vec();
+        in_sorted.sort_unstable();
+        let n = in_sorted.len().max(1);
+        let total_edges: u64 = in_sorted.iter().map(|&d| d as u64).sum();
+
+        // Top 20% by degree = the top fifth of the ascending-sorted array.
+        let top20_start = n - n / 5;
+        let top20_edges: u64 = in_sorted[top20_start..].iter().map(|&d| d as u64).sum();
+        let top20_edge_share = if total_edges == 0 {
+            0.0
+        } else {
+            top20_edges as f64 / total_edges as f64
+        };
+
+        let median = in_sorted[n / 2].max(1) as f64;
+        let p99 = in_sorted[(n as f64 * 0.99) as usize % n].max(1) as f64;
+
+        // Gini via the sorted-array formula.
+        let mut cum = 0.0f64;
+        let mut weighted = 0.0f64;
+        for (i, &d) in in_sorted.iter().enumerate() {
+            cum += d as f64;
+            weighted += (i as f64 + 1.0) * d as f64;
+        }
+        let gini = if cum > 0.0 {
+            (2.0 * weighted) / (n as f64 * cum) - (n as f64 + 1.0) / n as f64
+        } else {
+            0.0
+        };
+
+        Self {
+            num_vertices: g.num_vertices,
+            num_edges: g.num_edges(),
+            avg_degree: g.avg_degree(),
+            max_in_degree: *g.in_degrees().iter().max().unwrap_or(&0),
+            max_out_degree: *g.out_degrees().iter().max().unwrap_or(&0),
+            top20_edge_share,
+            p99_to_median_in_degree: p99 / median,
+            in_degree_gini: gini,
+        }
+    }
+
+    /// Log-binned in-degree histogram `(degree_bin_lo, count)` — the raw
+    /// material for a power-law plot.
+    pub fn degree_histogram(g: &Graph) -> Vec<(u32, usize)> {
+        let mut bins: Vec<(u32, usize)> = Vec::new();
+        let mut lo = 1u32;
+        let max = *g.in_degrees().iter().max().unwrap_or(&0);
+        while lo <= max.max(1) {
+            let hi = lo.saturating_mul(2);
+            let count = g
+                .in_degrees()
+                .iter()
+                .filter(|&&d| d >= lo && d < hi)
+                .count();
+            bins.push((lo, count));
+            lo = hi;
+        }
+        bins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, Edge, Graph};
+
+    #[test]
+    fn star_graph_is_maximally_skewed() {
+        // All edges point at vertex 0.
+        let edges = (1..100).map(|i| Edge::new(i, 0)).collect();
+        let g = Graph::from_edges(100, edges);
+        let s = GraphStats::compute(&g);
+        assert!((s.top20_edge_share - 1.0).abs() < 1e-12);
+        assert!(s.in_degree_gini > 0.9);
+        assert_eq!(s.max_in_degree, 99);
+    }
+
+    #[test]
+    fn ring_graph_is_uniform() {
+        let edges = (0..64u32).map(|i| Edge::new(i, (i + 1) % 64)).collect();
+        let g = Graph::from_edges(64, edges);
+        let s = GraphStats::compute(&g);
+        assert!(s.in_degree_gini.abs() < 1e-9, "gini {}", s.in_degree_gini);
+        // Top 20% of a uniform distribution holds ~20% of edges.
+        assert!((s.top20_edge_share - 0.20).abs() < 0.05);
+    }
+
+    #[test]
+    fn histogram_covers_all_vertices_with_degree_ge_1() {
+        let g = rmat::generate(1024, 8192, rmat::RmatParams::default(), 11);
+        let hist = GraphStats::degree_histogram(&g);
+        let total: usize = hist.iter().map(|&(_, c)| c).sum();
+        let nonzero = g.in_degrees().iter().filter(|&&d| d > 0).count();
+        assert_eq!(total, nonzero);
+    }
+
+    #[test]
+    fn empty_graph_degenerate_stats() {
+        let g = Graph::from_edges(4, vec![]);
+        let s = GraphStats::compute(&g);
+        assert_eq!(s.num_edges, 0);
+        assert_eq!(s.top20_edge_share, 0.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Grid partitioning (GridGraph-style, the paper's §5.3): all vertices are
+//! divided into `Q` disjoint intervals; edges whose (src, dst) both fall in
+//! a given (interval_i, interval_j) pair form shard `(i, j)` — a `Q × Q`
+//! 2-D array of tiles. Tiles in one *row* share source vertices; tiles in
+//! one *column* share destination vertices.
+//!
+//! The tile *scheduler* (row / column / S-shape adaptive order and its I/O
+//! cost model, Table 3) lives in `sim::tiles`; this module owns the
+//! partition itself.
+
+use super::{Edge, Graph};
+use crate::util::ceil_div;
+
+/// A half-open vertex interval `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub start: u32,
+    pub end: u32,
+}
+
+impl Interval {
+    pub fn len(&self) -> usize {
+        (self.end - self.start) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn contains(&self, v: u32) -> bool {
+        v >= self.start && v < self.end
+    }
+}
+
+/// One shard of the grid: the edges from source interval `row` to
+/// destination interval `col`.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    /// Source-interval index (grid row).
+    pub row: usize,
+    /// Destination-interval index (grid column).
+    pub col: usize,
+    pub edges: Vec<Edge>,
+}
+
+/// The `Q × Q` grid partition of a graph.
+#[derive(Debug)]
+pub struct GridPartition {
+    pub q: usize,
+    pub intervals: Vec<Interval>,
+    /// Row-major `q*q` tiles: `tiles[row * q + col]`.
+    pub tiles: Vec<Tile>,
+}
+
+impl GridPartition {
+    /// Partition into `q` equal intervals (last one ragged).
+    pub fn new(graph: &Graph, q: usize) -> Self {
+        assert!(q > 0, "q must be positive");
+        let n = graph.num_vertices;
+        let span = ceil_div(n.max(1), q);
+        let intervals: Vec<Interval> = (0..q)
+            .map(|i| Interval {
+                start: (i * span).min(n) as u32,
+                end: ((i + 1) * span).min(n) as u32,
+            })
+            .collect();
+
+        let mut tiles: Vec<Tile> = (0..q * q)
+            .map(|idx| Tile {
+                row: idx / q,
+                col: idx % q,
+                edges: Vec::new(),
+            })
+            .collect();
+        for &e in &graph.edges {
+            let r = (e.src as usize / span).min(q - 1);
+            let c = (e.dst as usize / span).min(q - 1);
+            tiles[r * q + c].edges.push(e);
+        }
+        Self { q, intervals, tiles }
+    }
+
+    /// Choose `Q` so one interval's destination properties fit the result
+    /// banks: `interval_vertices * max(F, H) * 4B <= bank_bytes`, as the
+    /// paper requires ("each shard must be fitted to the on-chip memory").
+    pub fn q_for_buffer(
+        num_vertices: usize,
+        property_dim: usize,
+        bank_bytes: usize,
+    ) -> usize {
+        let bytes_per_vertex = property_dim.max(1) * 4;
+        let vertices_per_interval = (bank_bytes / bytes_per_vertex).max(1);
+        ceil_div(num_vertices.max(1), vertices_per_interval).max(1)
+    }
+
+    pub fn tile(&self, row: usize, col: usize) -> &Tile {
+        &self.tiles[row * self.q + col]
+    }
+
+    pub fn total_edges(&self) -> usize {
+        self.tiles.iter().map(|t| t.edges.len()).sum()
+    }
+
+    /// Edges in a whole grid row (same source interval).
+    pub fn row_edges(&self, row: usize) -> usize {
+        (0..self.q).map(|c| self.tile(row, c).edges.len()).sum()
+    }
+
+    /// Edges in a whole grid column (same destination interval).
+    pub fn col_edges(&self, col: usize) -> usize {
+        (0..self.q).map(|r| self.tile(r, col).edges.len()).sum()
+    }
+
+    /// Number of non-empty tiles (sparse grids skip empty shards).
+    pub fn occupied_tiles(&self) -> usize {
+        self.tiles.iter().filter(|t| !t.edges.is_empty()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat;
+    use crate::util::prop::prop_check;
+
+    fn sample_graph() -> Graph {
+        rmat::generate(1000, 8000, rmat::RmatParams::default(), 21)
+    }
+
+    #[test]
+    fn partition_covers_every_edge_exactly_once() {
+        let g = sample_graph();
+        let p = GridPartition::new(&g, 7);
+        assert_eq!(p.total_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn tiles_respect_interval_bounds() {
+        let g = sample_graph();
+        let p = GridPartition::new(&g, 5);
+        for t in &p.tiles {
+            let src_iv = p.intervals[t.row];
+            let dst_iv = p.intervals[t.col];
+            for e in &t.edges {
+                assert!(src_iv.contains(e.src), "src {} not in {:?}", e.src, src_iv);
+                assert!(dst_iv.contains(e.dst), "dst {} not in {:?}", e.dst, dst_iv);
+            }
+        }
+    }
+
+    #[test]
+    fn intervals_tile_the_vertex_range() {
+        let g = sample_graph();
+        for q in [1, 2, 3, 9, 16] {
+            let p = GridPartition::new(&g, q);
+            assert_eq!(p.intervals.len(), q);
+            assert_eq!(p.intervals[0].start, 0);
+            assert_eq!(p.intervals.last().unwrap().end as usize, g.num_vertices);
+            for w in p.intervals.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn q_for_buffer_sizing() {
+        // 1M vertices, 64-dim f32 properties = 256 B/vertex.
+        // 2 MB banks hold 8192 vertices per interval -> Q = 123.
+        let q = GridPartition::q_for_buffer(1_000_000, 64, 2 * 1024 * 1024);
+        assert_eq!(q, ceil_div(1_000_000, 8192));
+        // Everything fits -> Q = 1.
+        assert_eq!(GridPartition::q_for_buffer(100, 16, 1 << 20), 1);
+    }
+
+    #[test]
+    fn row_col_edge_sums_are_consistent() {
+        let g = sample_graph();
+        let p = GridPartition::new(&g, 4);
+        let by_rows: usize = (0..4).map(|r| p.row_edges(r)).sum();
+        let by_cols: usize = (0..4).map(|c| p.col_edges(c)).sum();
+        assert_eq!(by_rows, g.num_edges());
+        assert_eq!(by_cols, g.num_edges());
+    }
+
+    #[test]
+    fn prop_partition_is_a_bijection_on_edges() {
+        // Property: for random graphs and random Q, every edge appears in
+        // exactly the tile its endpoints dictate, and nowhere else.
+        prop_check(25, 0x7117_0001, |rng| {
+            let n = rng.gen_usize(8, 400);
+            let e = rng.gen_usize(1, 4 * n);
+            let q = rng.gen_usize(1, 12);
+            let g = rmat::generate(n, e, rmat::RmatParams::default(), rng.next_u64());
+            let p = GridPartition::new(&g, q);
+            if p.total_edges() != g.num_edges() {
+                return Err(format!(
+                    "edge count mismatch: {} vs {}",
+                    p.total_edges(),
+                    g.num_edges()
+                ));
+            }
+            let span = ceil_div(n, q);
+            for t in &p.tiles {
+                for edge in &t.edges {
+                    let expect_r = (edge.src as usize / span).min(q - 1);
+                    let expect_c = (edge.dst as usize / span).min(q - 1);
+                    if expect_r != t.row || expect_c != t.col {
+                        return Err(format!("edge {edge:?} in wrong tile ({}, {})", t.row, t.col));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

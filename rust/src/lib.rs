@@ -1,0 +1,32 @@
+//! # EnGN — accelerator-level reproduction
+//!
+//! A full-system reproduction of *EnGN: A High-Throughput and
+//! Energy-Efficient Accelerator for Large Graph Neural Networks*
+//! (Liang et al., 2019).
+//!
+//! The crate contains:
+//! * [`graph`] — COO/CSR graph substrate, R-MAT synthesis, the Table-5
+//!   dataset suite and GridGraph-style 2-D partitioning;
+//! * [`model`] — the five GNN architectures of Table 1 as stage-level
+//!   descriptors with operation accounting;
+//! * [`config`] — EnGN micro-architecture parameters and the 14 nm
+//!   energy/area model;
+//! * [`sim`] — the cycle-level EnGN simulator (RER PE array, ring-edge-
+//!   reduce dataflow, edge reorganization, DAVC, tiling, DASR);
+//! * [`baselines`] — CPU (DGL/PyG), GPU (DGL/PyG) and HyGCN cost models;
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas golden
+//!   models (functional correctness of the math the accelerator runs);
+//! * [`coordinator`] — an inference-serving layer (request router +
+//!   batcher) driving runtime and simulator together;
+//! * [`report`] — the harness that regenerates every table and figure of
+//!   the paper's evaluation section.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

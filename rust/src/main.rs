@@ -1,0 +1,341 @@
+//! `engn` — the EnGN reproduction CLI.
+//!
+//! Subcommands:
+//!   datasets                         list the Table-5 dataset suite
+//!   run    --model M --dataset D     simulate one inference pass
+//!   bench  --exp <id|all> [--out D]  regenerate paper tables/figures
+//!   infer  --artifacts DIR [--name N]  functional inference via PJRT
+//!   serve  --artifacts DIR [--requests N]  serving demo (router+batcher)
+
+use engn::config::{AcceleratorConfig, Fidelity};
+use engn::coordinator::{BatchConfig, Executor, InferenceService};
+use engn::graph::datasets::{self, ScalePolicy};
+use engn::model::{GnnKind, GnnModel};
+use engn::report::experiments::{self, Eval};
+use engn::runtime::{HostTensor, Runtime};
+use engn::sim::Simulator;
+use engn::util::rng::Xoshiro256StarStar;
+use engn::util::{fmt_bytes, fmt_time, si};
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("datasets") => cmd_datasets(),
+        Some("run") => cmd_run(&parse_flags(&args[1..])),
+        Some("bench") => cmd_bench(&parse_flags(&args[1..])),
+        Some("infer") => cmd_infer(&parse_flags(&args[1..])),
+        Some("serve") => cmd_serve(&parse_flags(&args[1..])),
+        _ => {
+            eprintln!(
+                "usage: engn <datasets|run|bench|infer|serve> [flags]\n\
+                 examples:\n\
+                 \u{20}  engn run --model gcn --dataset CA\n\
+                 \u{20}  engn bench --exp fig9 --out reports\n\
+                 \u{20}  engn bench --exp all --out reports [--full]\n\
+                 \u{20}  engn infer --artifacts artifacts --name gcn_forward\n\
+                 \u{20}  engn serve --artifacts artifacts --requests 32"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn cmd_datasets() -> i32 {
+    println!(
+        "{:<4} {:<12} {:>10} {:>12} {:>9} {:>7} {:>5}  group",
+        "code", "name", "vertices", "edges", "feat/rel", "labels", "size"
+    );
+    for d in datasets::all() {
+        println!(
+            "{:<4} {:<12} {:>10} {:>12} {:>9} {:>7} {:>5}  {:?}",
+            d.code,
+            d.name,
+            d.vertices,
+            d.edges,
+            if d.num_relations > 1 { d.num_relations } else { d.feature_dim },
+            d.labels,
+            if d.is_large() { "large" } else { "small" },
+            d.group,
+        );
+    }
+    0
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> i32 {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("gcn");
+    let code = flags.get("dataset").map(String::as_str).unwrap_or("CA");
+    let Some(kind) = GnnKind::by_name(model_name) else {
+        eprintln!("unknown model {model_name:?} (gcn|gspool|rgcn|gatedgcn|grn)");
+        return 2;
+    };
+    // Real edge-list input: `--edges FILE [--feature-dim F] [--labels L]`.
+    if let Some(path) = flags.get("edges") {
+        let loaded = match engn::graph::io::load_edge_list(path) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let g = loaded.graph;
+        let spec = engn::graph::datasets::DatasetSpec {
+            code: "FILE",
+            name: "edge-list",
+            vertices: g.num_vertices,
+            edges: g.num_edges(),
+            feature_dim: flags
+                .get("feature-dim")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(64),
+            labels: flags.get("labels").and_then(|s| s.parse().ok()).unwrap_or(16),
+            num_relations: g.num_relations,
+            group: engn::graph::datasets::DatasetGroup::Synthetic,
+        };
+        let model = GnnModel::for_dataset(kind, &spec);
+        let r = Simulator::new(AcceleratorConfig::engn()).run(&model, &g, "FILE");
+        println!(
+            "{} on {} ({} vertices, {} edges): {} | {} GOP/s | {:.2e} J",
+            kind.name(),
+            path,
+            g.num_vertices,
+            g.num_edges(),
+            fmt_time(r.seconds()),
+            si(r.gops() * 1e9 / 1e9),
+            r.energy_j()
+        );
+        return 0;
+    }
+    let Some(spec) = datasets::by_code(code) else {
+        eprintln!("unknown dataset {code:?} — see `engn datasets`");
+        return 2;
+    };
+    if !kind.runs_on(&spec) {
+        eprintln!("{} does not run on {} in the paper's suite", kind.name(), spec.code);
+        return 2;
+    }
+    let policy = if flags.contains_key("full") {
+        ScalePolicy::Full
+    } else {
+        ScalePolicy::Capped
+    };
+    let mut cfg = AcceleratorConfig::engn();
+    if flags.contains_key("cycle") {
+        cfg.fidelity = Fidelity::Cycle;
+    }
+    let (v, e, factor) = spec.scaled_sizes(policy);
+    println!(
+        "synthesizing {} ({} vertices, {} edges{}) ...",
+        spec.name,
+        v,
+        e,
+        if factor > 1 { format!(", scaled 1/{factor}") } else { String::new() }
+    );
+    let g = spec.instantiate(policy, 0xE16A);
+    let model = GnnModel::for_dataset(kind, &spec);
+    let r = Simulator::new(cfg.clone()).run(&model, &g, spec.code);
+    println!(
+        "\n{} on {} under {} ({:?} fidelity)",
+        kind.name(),
+        spec.name,
+        cfg.name,
+        cfg.fidelity
+    );
+    println!("  cycles       : {}", si(r.total_cycles()));
+    println!("  latency      : {}", fmt_time(r.seconds()));
+    println!("  ops          : {}op", si(r.total_ops()));
+    println!(
+        "  throughput   : {}OP/s ({:.1}% of peak)",
+        si(r.gops() * 1e9),
+        100.0 * r.peak_fraction(&cfg)
+    );
+    println!("  chip power   : {:.2} W", r.power_w);
+    println!(
+        "  energy       : {:.2e} J (chip {:.2e} + HBM {:.2e})",
+        r.energy_j(),
+        r.chip_energy_j,
+        r.hbm_energy_j
+    );
+    println!("  GOPS/W       : {:.1}", r.gops_per_watt());
+    println!("  HBM traffic  : {}", fmt_bytes(r.traffic().hbm_total()));
+    println!("  DAVC hit rate: {:.1}%", 100.0 * r.davc().hit_rate());
+    let bd = r.stage_breakdown();
+    println!(
+        "  stage cycles : FE {:.1}%  AGG {:.1}%  UPD {:.1}%",
+        bd[0] * 100.0,
+        bd[1] * 100.0,
+        bd[2] * 100.0
+    );
+    for l in &r.layers {
+        println!(
+            "  layer {}: {}x{} -> Q={} ring_util={:.2} cycles={}",
+            l.layer_idx,
+            l.f_in,
+            l.f_out,
+            l.q,
+            l.ring_utilization,
+            si(l.total_cycles)
+        );
+    }
+    0
+}
+
+fn cmd_bench(flags: &HashMap<String, String>) -> i32 {
+    let exp = flags.get("exp").map(String::as_str).unwrap_or("all");
+    let policy = if flags.contains_key("full") {
+        ScalePolicy::Full
+    } else if let Some(fstr) = flags.get("factor") {
+        ScalePolicy::Factor(fstr.parse().unwrap_or(1))
+    } else {
+        ScalePolicy::Capped
+    };
+    let eval = Eval::new(policy, 0xE16A);
+    let ids: Vec<&str> = if exp == "all" {
+        experiments::ALL_IDS.to_vec()
+    } else {
+        exp.split(',').collect()
+    };
+    let out_dir = flags.get("out").map(std::path::PathBuf::from);
+    for id in ids {
+        let Some(table) = experiments::by_id(&eval, id) else {
+            eprintln!("unknown experiment {id:?}; known: {:?}", experiments::ALL_IDS);
+            return 2;
+        };
+        println!("{}", table.render());
+        if let Some(dir) = &out_dir {
+            match table.save_csv(dir) {
+                Ok(p) => println!("  -> {}", p.display()),
+                Err(e) => eprintln!("  csv write failed: {e}"),
+            }
+        }
+    }
+    0
+}
+
+fn rand_inputs(spec: &engn::runtime::ArtifactSpec, seed: u64) -> Vec<HostTensor> {
+    let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+    spec.inputs
+        .iter()
+        .map(|shape| {
+            let n: usize = shape.iter().product();
+            HostTensor::new(
+                shape.clone(),
+                (0..n).map(|_| rng.next_f32() * 0.2).collect(),
+            )
+        })
+        .collect()
+}
+
+fn cmd_infer(flags: &HashMap<String, String>) -> i32 {
+    let dir = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let name = flags.get("name").map(String::as_str).unwrap_or("gcn_forward");
+    let rt = match Runtime::load_only(dir, &[name]) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("loading {name} from {dir}: {e}\n(run `make artifacts` first)");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let spec = rt.spec(name).unwrap().clone();
+    println!("artifact: {} — {}", spec.name, spec.description);
+    let inputs = rand_inputs(&spec, 1);
+    let t0 = std::time::Instant::now();
+    match rt.execute(name, &inputs) {
+        Ok(out) => {
+            let dt = t0.elapsed();
+            let head: Vec<String> = out.data.iter().take(8).map(|v| format!("{v:.4}")).collect();
+            println!("output shape {:?} in {}", out.shape, fmt_time(dt.as_secs_f64()));
+            println!("output[..8] = [{}]", head.join(", "));
+            0
+        }
+        Err(e) => {
+            eprintln!("execute failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    let dir = flags
+        .get("artifacts")
+        .map(String::as_str)
+        .unwrap_or("artifacts")
+        .to_string();
+    let n_requests: usize = flags
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let names = ["gcn_forward", "grn_forward"];
+    let dir2 = dir.clone();
+    let svc = InferenceService::start(
+        move || Runtime::load_only(&dir2, &names).map(|rt| Box::new(rt) as Box<dyn Executor>),
+        BatchConfig::default(),
+    );
+    // Shapes come from the manifest directly (cheap to parse).
+    let manifest = match engn::runtime::Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("submitting {n_requests} mixed gcn/grn requests ...");
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let name = names[i % names.len()];
+        let spec = manifest.get(name).unwrap();
+        let (_, rx) = svc.submit(name, rand_inputs(spec, i as u64));
+        rxs.push((name, rx));
+    }
+    let mut ok = 0;
+    for (name, rx) in rxs {
+        match rx.recv() {
+            Ok(resp) if resp.result.is_ok() => ok += 1,
+            Ok(resp) => eprintln!("{name}: {:?}", resp.result.err()),
+            Err(_) => eprintln!("{name}: worker gone"),
+        }
+    }
+    let m = svc.metrics();
+    println!("{ok}/{n_requests} ok; per-artifact stats:");
+    let mut names_sorted: Vec<_> = m.per_artifact.keys().collect();
+    names_sorted.sort();
+    for name in names_sorted {
+        let s = &m.per_artifact[name];
+        println!(
+            "  {:<16} n={:<4} mean={} p95={} wait={} batch={:.2} ({:.1} req/s exec)",
+            name,
+            s.count,
+            fmt_time(s.mean_exec_s),
+            fmt_time(s.p95_exec_s),
+            fmt_time(s.mean_wait_s),
+            s.mean_batch,
+            s.throughput_rps
+        );
+    }
+    svc.shutdown();
+    if ok == n_requests {
+        0
+    } else {
+        1
+    }
+}

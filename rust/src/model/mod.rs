@@ -1,0 +1,204 @@
+//! GNN model descriptors — Table 1 of the paper, expressed as the EnGN
+//! processing model's three stages (feature extraction / aggregate /
+//! update) with per-stage operation counts.
+//!
+//! These descriptors drive both the simulator (op + traffic accounting)
+//! and the baseline cost models, and mirror the functional JAX models in
+//! `python/compile/model.py` (same stage decomposition, same dims).
+
+pub mod ops;
+
+use crate::graph::datasets::DatasetSpec;
+
+/// The five GNN architectures evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GnnKind {
+    Gcn,
+    GsPool,
+    Rgcn,
+    GatedGcn,
+    Grn,
+}
+
+impl GnnKind {
+    pub fn all() -> [GnnKind; 5] {
+        [
+            GnnKind::Gcn,
+            GnnKind::GsPool,
+            GnnKind::Rgcn,
+            GnnKind::GatedGcn,
+            GnnKind::Grn,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GnnKind::Gcn => "GCN",
+            GnnKind::GsPool => "GS-Pool",
+            GnnKind::Rgcn => "R-GCN",
+            GnnKind::GatedGcn => "Gated-GCN",
+            GnnKind::Grn => "GRN",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<GnnKind> {
+        GnnKind::all()
+            .into_iter()
+            .find(|k| k.name().eq_ignore_ascii_case(s) || k.short().eq_ignore_ascii_case(s))
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            GnnKind::Gcn => "gcn",
+            GnnKind::GsPool => "gspool",
+            GnnKind::Rgcn => "rgcn",
+            GnnKind::GatedGcn => "gatedgcn",
+            GnnKind::Grn => "grn",
+        }
+    }
+
+    /// Which datasets this model runs on in the paper (Table 5 blocks +
+    /// the Fig 2 pairing). R-GCN runs the knowledge graphs; the other four
+    /// run the citation/social/synthetic graphs.
+    pub fn runs_on(&self, d: &DatasetSpec) -> bool {
+        use crate::graph::datasets::DatasetGroup::*;
+        match self {
+            GnnKind::Rgcn => d.group == Knowledge,
+            _ => d.group != Knowledge,
+        }
+    }
+}
+
+/// Aggregation operator (Table 1 "Aggregate" column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggOp {
+    Sum,
+    Max,
+    Mean,
+}
+
+/// Per-layer dimensions: input property F, output property H.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerDims {
+    pub f_in: usize,
+    pub f_out: usize,
+}
+
+/// A fully-specified model instance: a GNN architecture bound to a
+/// dataset's dimensions.
+#[derive(Debug, Clone)]
+pub struct GnnModel {
+    pub kind: GnnKind,
+    pub layers: Vec<LayerDims>,
+    pub agg_op: AggOp,
+    /// Number of edge relation types (R-GCN > 1).
+    pub num_relations: usize,
+    /// Hidden dimension used between layers.
+    pub hidden_dim: usize,
+}
+
+/// Hidden dimension used throughout the paper's evaluation ("the output
+/// property dimensions of the first layer (16) on all models", §6.4).
+pub const HIDDEN_DIM: usize = 16;
+
+impl GnnModel {
+    /// Standard 2-layer instantiation for a dataset: F -> 16 -> #labels.
+    pub fn for_dataset(kind: GnnKind, d: &DatasetSpec) -> Self {
+        Self::with_hidden(kind, d, HIDDEN_DIM)
+    }
+
+    pub fn with_hidden(kind: GnnKind, d: &DatasetSpec, hidden: usize) -> Self {
+        let layers = vec![
+            LayerDims { f_in: d.feature_dim, f_out: hidden },
+            LayerDims { f_in: hidden, f_out: d.labels },
+        ];
+        let agg_op = match kind {
+            GnnKind::GsPool => AggOp::Max,
+            _ => AggOp::Sum,
+        };
+        Self {
+            kind,
+            layers,
+            agg_op,
+            num_relations: if kind == GnnKind::Rgcn { d.num_relations } else { 1 },
+            hidden_dim: hidden,
+        }
+    }
+
+    /// Whether feature-extraction and aggregation may be re-ordered
+    /// (paper Observation 1: legal iff the aggregate operator is `sum` —
+    /// GS-Pool's max/mean pooling pins the order).
+    pub fn reorder_legal(&self) -> bool {
+        self.agg_op == AggOp::Sum
+    }
+
+    /// Does the update stage concatenate the self property (GS-Pool)?
+    pub fn update_concats_self(&self) -> bool {
+        self.kind == GnnKind::GsPool
+    }
+
+    /// Does the update stage run a GRU (GRN)?
+    pub fn update_is_gru(&self) -> bool {
+        self.kind == GnnKind::Grn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    #[test]
+    fn model_names_round_trip() {
+        for k in GnnKind::all() {
+            assert_eq!(GnnKind::by_name(k.name()), Some(k));
+            assert_eq!(GnnKind::by_name(k.short()), Some(k));
+        }
+        assert_eq!(GnnKind::by_name("nope"), None);
+    }
+
+    #[test]
+    fn gcn_on_cora_dims() {
+        let ca = datasets::by_code("CA").unwrap();
+        let m = GnnModel::for_dataset(GnnKind::Gcn, &ca);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0], LayerDims { f_in: 1433, f_out: 16 });
+        assert_eq!(m.layers[1], LayerDims { f_in: 16, f_out: 7 });
+        assert!(m.reorder_legal());
+    }
+
+    #[test]
+    fn gs_pool_uses_max_and_cannot_reorder() {
+        let rd = datasets::by_code("RD").unwrap();
+        let m = GnnModel::for_dataset(GnnKind::GsPool, &rd);
+        assert_eq!(m.agg_op, AggOp::Max);
+        assert!(!m.reorder_legal());
+        assert!(m.update_concats_self());
+    }
+
+    #[test]
+    fn rgcn_carries_relations() {
+        let af = datasets::by_code("AF").unwrap();
+        let m = GnnModel::for_dataset(GnnKind::Rgcn, &af);
+        assert_eq!(m.num_relations, 91);
+        assert!(m.reorder_legal());
+    }
+
+    #[test]
+    fn model_dataset_pairing_matches_paper() {
+        let af = datasets::by_code("AF").unwrap();
+        let ca = datasets::by_code("CA").unwrap();
+        assert!(GnnKind::Rgcn.runs_on(&af));
+        assert!(!GnnKind::Rgcn.runs_on(&ca));
+        assert!(GnnKind::Gcn.runs_on(&ca));
+        assert!(!GnnKind::Gcn.runs_on(&af));
+    }
+
+    #[test]
+    fn grn_update_is_gru() {
+        let sc = datasets::by_code("SC").unwrap();
+        let m = GnnModel::for_dataset(GnnKind::Grn, &sc);
+        assert!(m.update_is_gru());
+        assert!(m.reorder_legal());
+    }
+}

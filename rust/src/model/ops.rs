@@ -1,0 +1,507 @@
+//! Per-stage operation counting for each GNN architecture.
+//!
+//! Conventions:
+//! * 1 multiply-accumulate = 2 ops (the GOP/s convention the paper uses).
+//! * `matmul(n, f, h)` = dense [n×f]·[f×h] = `2·n·f·h` ops.
+//! * The paper's §5.2 analysis: the FE matmul cost is order-invariant
+//!   (`N·F·H` MACs either way); the *aggregate* cost is `E·F` when
+//!   aggregation runs first (Eq. 7 / AFU) and `E·H` when feature
+//!   extraction runs first (Eq. 6 / FAU).
+
+use super::{AggOp, GnnKind, GnnModel, LayerDims};
+
+/// Execution order of the linear stages within one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecOrder {
+    /// Feature extraction → aggregate → update (Eq. 6 / "FAU").
+    FeatureFirst,
+    /// Aggregate → feature extraction → update (Eq. 7 / "AFU").
+    AggregateFirst,
+}
+
+/// Operation counts for one GNN layer, split by EnGN stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerOps {
+    pub feature_extraction: f64,
+    pub aggregate: f64,
+    pub update: f64,
+}
+
+impl LayerOps {
+    pub fn total(&self) -> f64 {
+        self.feature_extraction + self.aggregate + self.update
+    }
+}
+
+#[inline]
+fn matmul(n: f64, f: f64, h: f64) -> f64 {
+    2.0 * n * f * h
+}
+
+/// Histogram of edges per relation (R-GCN); single-relation graphs pass
+/// `&[num_edges]`.
+pub fn relation_histogram(relations: &[u16], num_relations: usize, num_edges: usize) -> Vec<usize> {
+    if relations.is_empty() {
+        return vec![num_edges];
+    }
+    let mut hist = vec![0usize; num_relations];
+    for &r in relations {
+        hist[r as usize] += 1;
+    }
+    hist
+}
+
+/// Dimension-aware stage re-ordering (paper §5.2): FE first iff it
+/// *shrinks* the property the aggregate stage has to reduce (F > H), and
+/// only when the aggregation operator commutes with the matmul (sum).
+pub fn dasr_order(model: &GnnModel, layer: LayerDims) -> ExecOrder {
+    if !model.reorder_legal() {
+        return ExecOrder::FeatureFirst;
+    }
+    if layer.f_in > layer.f_out {
+        ExecOrder::FeatureFirst
+    } else {
+        ExecOrder::AggregateFirst
+    }
+}
+
+/// Op counts for one layer under the EnGN processing model.
+///
+/// `n` = vertices, `e` = edges, `rel_hist` = edges per relation.
+pub fn layer_ops(
+    model: &GnnModel,
+    n: usize,
+    e: usize,
+    rel_hist: &[usize],
+    layer: LayerDims,
+    order: ExecOrder,
+) -> LayerOps {
+    let (nf, ef) = (n as f64, e as f64);
+    let (f, h) = (layer.f_in as f64, layer.f_out as f64);
+    // Dimension of the property the aggregate stage reduces over.
+    let agg_dim = match order {
+        ExecOrder::FeatureFirst => h,
+        ExecOrder::AggregateFirst => f,
+    };
+    match model.kind {
+        GnnKind::Gcn => LayerOps {
+            // Degree normalization (h · D^-1/2) + the W matmul.
+            feature_extraction: nf * f + matmul(nf, f, h),
+            aggregate: ef * agg_dim,
+            update: nf * h, // ReLU
+        },
+        GnnKind::GsPool => LayerOps {
+            // ReLU(W_pool·V + b): pool matmul + bias + ReLU. Max-pooling
+            // forbids re-ordering, so aggregate always runs on the pooled
+            // dimension h.
+            feature_extraction: matmul(nf, f, h) + 2.0 * nf * h,
+            aggregate: ef * h,
+            // W·concat(V_temp, h_v): the concatenated (h + f)-dim input.
+            update: matmul(nf, f + h, h) + nf * h,
+        },
+        GnnKind::Rgcn => {
+            // Per-relation: either compress sources first (W_r·h_j per
+            // *distinct* source, then aggregate h dims) or aggregate raw
+            // F-dim properties per relation then one W_r per distinct
+            // destination. `active_r ≈ min(n, e_r)` bounds distinct
+            // endpoints per relation.
+            let mut fe = nf * f; // degree normalization
+            let mut agg = 0.0;
+            for &er in rel_hist {
+                let er_f = er as f64;
+                let active = er_f.min(nf);
+                match order {
+                    ExecOrder::FeatureFirst => {
+                        fe += matmul(active, f, h);
+                        agg += er_f * h;
+                    }
+                    ExecOrder::AggregateFirst => {
+                        agg += er_f * f;
+                        fe += matmul(active, f, h);
+                    }
+                }
+            }
+            LayerOps {
+                feature_extraction: fe,
+                aggregate: agg,
+                // Self-loop W_0·h_i + ReLU.
+                update: matmul(nf, f, h) + nf * h,
+            }
+        }
+        GnnKind::GatedGcn => LayerOps {
+            // η = σ(W_H·h_v + W_C·h_u): two F→F matmuls per vertex, a
+            // sigmoid per vertex, and the per-edge gating product η ⊙ h_u.
+            feature_extraction: 2.0 * matmul(nf, f, f) + nf * f + ef * f,
+            // Gated messages are F-dim; the main W matmul can still be
+            // hoisted before aggregation by linearity of the sum.
+            aggregate: ef * agg_dim + matmul(nf, f, h),
+            update: nf * h, // ReLU
+        },
+        GnnKind::Grn => LayerOps {
+            // FE is the identity (Table 1) — the W matmul belongs to the
+            // update term W·V_temp but is hoisted per-source under FAU.
+            feature_extraction: match order {
+                ExecOrder::FeatureFirst => matmul(nf, f, h),
+                ExecOrder::AggregateFirst => 0.0,
+            },
+            aggregate: ef * agg_dim,
+            // GRU(h_v, W·V_temp): the W matmul (if not hoisted) + 3 gates
+            // of 2 h×h matvecs each + elementwise updates.
+            update: match order {
+                ExecOrder::FeatureFirst => 0.0,
+                ExecOrder::AggregateFirst => matmul(nf, f, h),
+            } + nf * (6.0 * 2.0 * h * h + 10.0 * h),
+        },
+    }
+}
+
+/// Op counts for a full model pass (all layers), with per-layer orders.
+pub fn model_ops(
+    model: &GnnModel,
+    n: usize,
+    e: usize,
+    rel_hist: &[usize],
+    order_of: impl Fn(LayerDims) -> ExecOrder,
+) -> Vec<LayerOps> {
+    model
+        .layers
+        .iter()
+        .map(|&l| layer_ops(model, n, e, rel_hist, l, order_of(l)))
+        .collect()
+}
+
+/// Total ops for a full pass under DASR.
+pub fn total_ops_dasr(model: &GnnModel, n: usize, e: usize, rel_hist: &[usize]) -> f64 {
+    model_ops(model, n, e, rel_hist, |l| dasr_order(model, l))
+        .iter()
+        .map(|o| o.total())
+        .sum()
+}
+
+/// A schedulable unit of work within a stage — the engine turns these
+/// into PE-array cycles (`Matmul`, `Elementwise`) or ring-schedule cycles
+/// (`EdgeReduce`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Work {
+    /// Dense [n×f]·[f×h] on the PE array (2·n·f·h ops).
+    Matmul { n: usize, f: usize, h: usize },
+    /// Elementwise pass over n vertices × d dims on XPE/VPU (n·d ops).
+    Elementwise { n: usize, d: usize },
+    /// Per-edge elementwise work overlapped with edge streaming (e·d ops).
+    EdgeWise { e: usize, d: usize },
+    /// Ring-edge-reduce aggregation over all edges at dimension d
+    /// (e·d ops); cycles come from the ring schedule, not a formula.
+    EdgeReduce { d: usize },
+}
+
+impl Work {
+    pub fn ops(&self, num_edges: usize) -> f64 {
+        match *self {
+            Work::Matmul { n, f, h } => 2.0 * n as f64 * f as f64 * h as f64,
+            Work::Elementwise { n, d } => n as f64 * d as f64,
+            Work::EdgeWise { e, d } => e as f64 * d as f64,
+            Work::EdgeReduce { d } => num_edges as f64 * d as f64,
+        }
+    }
+}
+
+/// Work items per stage for one layer.
+#[derive(Debug, Clone, Default)]
+pub struct StageWork {
+    pub feature_extraction: Vec<Work>,
+    pub aggregate: Vec<Work>,
+    pub update: Vec<Work>,
+}
+
+impl StageWork {
+    /// The dimension the aggregate stage reduces over.
+    pub fn agg_dim(&self) -> usize {
+        self.aggregate
+            .iter()
+            .find_map(|w| match w {
+                Work::EdgeReduce { d } => Some(*d),
+                _ => None,
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Decompose one layer into work items. Kept in lockstep with
+/// [`layer_ops`]; `tests::work_matches_ops` enforces the invariant.
+pub fn layer_work(
+    model: &GnnModel,
+    n: usize,
+    e: usize,
+    rel_hist: &[usize],
+    layer: LayerDims,
+    order: ExecOrder,
+) -> StageWork {
+    let (f, h) = (layer.f_in, layer.f_out);
+    let agg_dim = match order {
+        ExecOrder::FeatureFirst => h,
+        ExecOrder::AggregateFirst => f,
+    };
+    match model.kind {
+        GnnKind::Gcn => StageWork {
+            feature_extraction: vec![
+                Work::Elementwise { n, d: f },
+                Work::Matmul { n, f, h },
+            ],
+            aggregate: vec![Work::EdgeReduce { d: agg_dim }],
+            update: vec![Work::Elementwise { n, d: h }],
+        },
+        GnnKind::GsPool => StageWork {
+            feature_extraction: vec![
+                Work::Matmul { n, f, h },
+                Work::Elementwise { n, d: 2 * h },
+            ],
+            aggregate: vec![Work::EdgeReduce { d: h }],
+            update: vec![
+                Work::Matmul { n, f: f + h, h },
+                Work::Elementwise { n, d: h },
+            ],
+        },
+        GnnKind::Rgcn => {
+            let mut fe = vec![Work::Elementwise { n, d: f }];
+            for &er in rel_hist {
+                let active = er.min(n);
+                fe.push(Work::Matmul { n: active, f, h });
+            }
+            StageWork {
+                feature_extraction: fe,
+                aggregate: vec![Work::EdgeReduce { d: agg_dim }],
+                update: vec![Work::Matmul { n, f, h }, Work::Elementwise { n, d: h }],
+            }
+        }
+        GnnKind::GatedGcn => StageWork {
+            feature_extraction: vec![
+                Work::Matmul { n, f, h: f },
+                Work::Matmul { n, f, h: f },
+                Work::Elementwise { n, d: f },
+                Work::EdgeWise { e, d: f },
+            ],
+            aggregate: vec![Work::EdgeReduce { d: agg_dim }, Work::Matmul { n, f, h }],
+            update: vec![Work::Elementwise { n, d: h }],
+        },
+        GnnKind::Grn => {
+            let w_matmul = Work::Matmul { n, f, h };
+            let gru = vec![
+                Work::Matmul { n, f: 2 * h, h: 3 * h },
+                Work::Elementwise { n, d: 10 * h },
+            ];
+            match order {
+                ExecOrder::FeatureFirst => StageWork {
+                    feature_extraction: vec![w_matmul],
+                    aggregate: vec![Work::EdgeReduce { d: agg_dim }],
+                    update: gru,
+                },
+                ExecOrder::AggregateFirst => StageWork {
+                    feature_extraction: vec![],
+                    aggregate: vec![Work::EdgeReduce { d: agg_dim }],
+                    update: {
+                        let mut u = vec![w_matmul];
+                        u.extend(gru);
+                        u
+                    },
+                },
+            }
+        }
+    }
+}
+
+/// Framework-style (DGL/PyG) op counts: FE-first scheduling, but R-GCN
+/// materializes a per-edge message `W_r·h_j` the way DGL's message
+/// passing does — this is what makes its aggregate stage dominate Fig 2.
+pub fn framework_layer_ops(
+    model: &GnnModel,
+    n: usize,
+    e: usize,
+    rel_hist: &[usize],
+    layer: LayerDims,
+) -> LayerOps {
+    let (nf, ef) = (n as f64, e as f64);
+    let (f, h) = (layer.f_in as f64, layer.f_out as f64);
+    match model.kind {
+        GnnKind::Rgcn => LayerOps {
+            feature_extraction: nf * f,
+            // Per-edge message matmul + reduction.
+            aggregate: matmul(ef, f, h) + ef * h,
+            update: matmul(nf, f, h) + nf * h,
+        },
+        _ => {
+            // DGL's GraphConv applies the weight before aggregation iff
+            // it shrinks the property (in_feats > out_feats), so the
+            // framework aggregates over min(F, H) dims; max-pooling
+            // models are pinned to the pooled dimension.
+            let order = if model.agg_op == AggOp::Sum && layer.f_in < layer.f_out {
+                ExecOrder::AggregateFirst
+            } else {
+                ExecOrder::FeatureFirst
+            };
+            layer_ops(model, n, e, rel_hist, layer, order)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::model::GnnModel;
+
+    fn gcn_cora() -> (GnnModel, usize, usize) {
+        let ca = datasets::by_code("CA").unwrap();
+        (GnnModel::for_dataset(GnnKind::Gcn, &ca), ca.vertices, ca.edges)
+    }
+
+    #[test]
+    fn gcn_layer1_matches_closed_form() {
+        let (m, n, e) = gcn_cora();
+        let l = m.layers[0]; // 1433 -> 16
+        let ops = layer_ops(&m, n, e, &[e], l, ExecOrder::FeatureFirst);
+        let expect_fe = n as f64 * 1433.0 + 2.0 * n as f64 * 1433.0 * 16.0;
+        assert_eq!(ops.feature_extraction, expect_fe);
+        assert_eq!(ops.aggregate, e as f64 * 16.0);
+        assert_eq!(ops.update, n as f64 * 16.0);
+    }
+
+    #[test]
+    fn aggregate_cost_depends_on_order() {
+        let (m, n, e) = gcn_cora();
+        let l = m.layers[0];
+        let fau = layer_ops(&m, n, e, &[e], l, ExecOrder::FeatureFirst);
+        let afu = layer_ops(&m, n, e, &[e], l, ExecOrder::AggregateFirst);
+        // F=1433 >> H=16: aggregating first costs E·F instead of E·H.
+        assert_eq!(afu.aggregate / fau.aggregate, 1433.0 / 16.0);
+        // FE matmul cost is order-invariant (paper Observation 1).
+        assert_eq!(fau.feature_extraction, afu.feature_extraction);
+    }
+
+    #[test]
+    fn dasr_picks_the_cheaper_order() {
+        let (m, _, _) = gcn_cora();
+        // Layer 1: F=1433 > H=16 -> compress first.
+        assert_eq!(dasr_order(&m, m.layers[0]), ExecOrder::FeatureFirst);
+        // Inverted dims -> aggregate first.
+        let inverted = LayerDims { f_in: 16, f_out: 210 };
+        assert_eq!(dasr_order(&m, inverted), ExecOrder::AggregateFirst);
+    }
+
+    #[test]
+    fn dasr_never_reorders_max_pooling() {
+        let rd = datasets::by_code("RD").unwrap();
+        let m = GnnModel::for_dataset(GnnKind::GsPool, &rd);
+        let inverted = LayerDims { f_in: 16, f_out: 210 };
+        assert_eq!(dasr_order(&m, inverted), ExecOrder::FeatureFirst);
+    }
+
+    #[test]
+    fn dasr_total_is_minimal_for_gcn() {
+        let (m, n, e) = gcn_cora();
+        let total =
+            |ord: ExecOrder| -> f64 {
+                m.layers
+                    .iter()
+                    .map(|&l| layer_ops(&m, n, e, &[e], l, ord).total())
+                    .sum()
+            };
+        let dasr = total_ops_dasr(&m, n, e, &[e]);
+        assert!(dasr <= total(ExecOrder::FeatureFirst) + 1e-6);
+        assert!(dasr <= total(ExecOrder::AggregateFirst) + 1e-6);
+    }
+
+    #[test]
+    fn rgcn_framework_aggregate_dominates() {
+        // Fig 2: R-GCN's aggregate stage is the most time-consuming on all
+        // knowledge graphs because DGL materializes per-edge messages.
+        let af = datasets::by_code("AF").unwrap();
+        let m = GnnModel::for_dataset(GnnKind::Rgcn, &af);
+        let hist = vec![af.edges / af.num_relations; af.num_relations];
+        let ops = framework_layer_ops(&m, af.vertices, af.edges, &hist, m.layers[0]);
+        assert!(ops.aggregate > ops.feature_extraction);
+        assert!(ops.aggregate > ops.update);
+    }
+
+    #[test]
+    fn rgcn_engn_cheaper_than_framework() {
+        let af = datasets::by_code("AF").unwrap();
+        let m = GnnModel::for_dataset(GnnKind::Rgcn, &af);
+        let hist = vec![af.edges / af.num_relations; af.num_relations];
+        let engn = layer_ops(&m, af.vertices, af.edges, &hist, m.layers[0], ExecOrder::FeatureFirst);
+        let fw = framework_layer_ops(&m, af.vertices, af.edges, &hist, m.layers[0]);
+        assert!(engn.total() < fw.total());
+    }
+
+    #[test]
+    fn work_matches_ops() {
+        // The work-item decomposition must account for exactly the ops
+        // that layer_ops reports, stage by stage, for every model/order.
+        for code in ["CA", "RD", "AF", "SC"] {
+            let d = datasets::by_code(code).unwrap();
+            for kind in GnnKind::all() {
+                if !kind.runs_on(&d) {
+                    continue;
+                }
+                let m = GnnModel::for_dataset(kind, &d);
+                let hist = if m.num_relations > 1 {
+                    vec![d.edges / m.num_relations; m.num_relations]
+                } else {
+                    vec![d.edges]
+                };
+                let e: usize = hist.iter().sum();
+                for &l in &m.layers {
+                    for order in [ExecOrder::FeatureFirst, ExecOrder::AggregateFirst] {
+                        let ops = layer_ops(&m, d.vertices, e, &hist, l, order);
+                        let work = layer_work(&m, d.vertices, e, &hist, l, order);
+                        let sum = |ws: &[Work]| ws.iter().map(|w| w.ops(e)).sum::<f64>();
+                        let fe = sum(&work.feature_extraction);
+                        let ag = sum(&work.aggregate);
+                        let up = sum(&work.update);
+                        let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * (a.abs() + b.abs() + 1.0);
+                        assert!(
+                            close(fe, ops.feature_extraction),
+                            "{} {code} layer {l:?} {order:?} FE: work {fe} vs ops {}",
+                            kind.name(),
+                            ops.feature_extraction
+                        );
+                        assert!(
+                            close(ag, ops.aggregate),
+                            "{} {code} layer {l:?} {order:?} AGG: work {ag} vs ops {}",
+                            kind.name(),
+                            ops.aggregate
+                        );
+                        assert!(
+                            close(up, ops.update),
+                            "{} {code} layer {l:?} {order:?} UPD: work {up} vs ops {}",
+                            kind.name(),
+                            ops.update
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn agg_dim_reflects_order() {
+        let (m, n, e) = gcn_cora();
+        let l = m.layers[0];
+        let fau = layer_work(&m, n, e, &[e], l, ExecOrder::FeatureFirst);
+        let afu = layer_work(&m, n, e, &[e], l, ExecOrder::AggregateFirst);
+        assert_eq!(fau.agg_dim(), 16);
+        assert_eq!(afu.agg_dim(), 1433);
+    }
+
+    #[test]
+    fn grn_gru_cost_counted_once() {
+        let sc = datasets::by_code("SC").unwrap();
+        let m = GnnModel::for_dataset(GnnKind::Grn, &sc);
+        let l = m.layers[1]; // 16 -> 16
+        let fau = layer_ops(&m, 100, 1000, &[1000], l, ExecOrder::FeatureFirst);
+        let afu = layer_ops(&m, 100, 1000, &[1000], l, ExecOrder::AggregateFirst);
+        // Same W matmul total, placed in different stages.
+        assert!((fau.total() - afu.total()).abs() < 1e-6);
+        assert!(fau.feature_extraction > 0.0);
+        assert_eq!(afu.feature_extraction, 0.0);
+    }
+}

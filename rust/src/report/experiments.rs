@@ -1,0 +1,818 @@
+//! One function per paper table/figure. Each returns a [`Table`] whose
+//! rows are the same series the paper plots; notes record the paper's
+//! headline numbers next to ours.
+//!
+//! Scaling: by default every graph is synthesized under
+//! `ScalePolicy::Capped` (≤4 M edges, degree-preserving; see
+//! `graph::datasets`). **All platforms are evaluated on the same scaled
+//! workload**, so the speedup/efficiency *ratios* are scale-consistent;
+//! pass `--full` to the CLI to regenerate at exact Table-5 sizes.
+
+use crate::baselines::cpu::{CpuModel, Framework};
+use crate::baselines::gpu::GpuModel;
+use crate::baselines::hygcn::HygcnModel;
+use crate::baselines::{BaselineReport, Workload};
+use crate::config::{AcceleratorConfig, StageOrder, TileOrder};
+use crate::graph::datasets::{self, DatasetSpec, ScalePolicy};
+use crate::graph::Graph;
+use crate::model::{GnnKind, GnnModel, LayerDims};
+use crate::report::{f, pct, x, Table};
+use crate::sim::{SimReport, Simulator};
+use crate::util::geomean;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Evaluation context: scaling policy, seed, and caches.
+pub struct Eval {
+    pub policy: ScalePolicy,
+    pub seed: u64,
+    graphs: RefCell<HashMap<String, Rc<Graph>>>,
+    pairs: RefCell<HashMap<String, Rc<PairEval>>>,
+}
+
+/// All platforms on one (model, dataset) workload.
+pub struct PairEval {
+    pub kind: GnnKind,
+    pub spec: DatasetSpec,
+    pub engn: SimReport,
+    pub cpu_dgl: BaselineReport,
+    pub cpu_pyg: BaselineReport,
+    pub gpu_dgl: BaselineReport,
+    pub gpu_pyg: BaselineReport,
+    pub hygcn: BaselineReport,
+}
+
+impl PairEval {
+    /// Speedup of EnGN over a baseline (None when the baseline OOMs).
+    pub fn speedup(&self, b: &BaselineReport) -> Option<f64> {
+        if b.oom {
+            None
+        } else {
+            Some(b.seconds() / self.engn.seconds())
+        }
+    }
+}
+
+impl Eval {
+    pub fn new(policy: ScalePolicy, seed: u64) -> Self {
+        Self {
+            policy,
+            seed,
+            graphs: RefCell::new(HashMap::new()),
+            pairs: RefCell::new(HashMap::new()),
+        }
+    }
+
+    pub fn quick() -> Self {
+        Self::new(ScalePolicy::Capped, 0xE16A)
+    }
+
+    pub fn graph(&self, spec: &DatasetSpec) -> Rc<Graph> {
+        if let Some(g) = self.graphs.borrow().get(spec.code) {
+            return g.clone();
+        }
+        let g = Rc::new(spec.instantiate(self.policy, self.seed));
+        self.graphs.borrow_mut().insert(spec.code.to_string(), g.clone());
+        g
+    }
+
+    /// Run EnGN (simulated) on one model/dataset with a given config.
+    pub fn engn_with(&self, cfg: AcceleratorConfig, kind: GnnKind, spec: &DatasetSpec) -> SimReport {
+        let g = self.graph(spec);
+        let model = GnnModel::for_dataset(kind, spec);
+        Simulator::new(cfg).run(&model, &g, spec.code)
+    }
+
+    /// All platforms on one pair (cached).
+    pub fn pair(&self, kind: GnnKind, spec: &DatasetSpec) -> Rc<PairEval> {
+        let key = format!("{}:{}", kind.short(), spec.code);
+        if let Some(p) = self.pairs.borrow().get(&key) {
+            return p.clone();
+        }
+        let g = self.graph(spec);
+        let model = GnnModel::for_dataset(kind, spec);
+        let w = Workload::from_graph(&g);
+        let p = Rc::new(PairEval {
+            kind,
+            spec: spec.clone(),
+            engn: Simulator::new(AcceleratorConfig::engn()).run(&model, &g, spec.code),
+            cpu_dgl: CpuModel::new(Framework::Dgl).run(&model, &w),
+            cpu_pyg: CpuModel::new(Framework::Pyg).run(&model, &w),
+            gpu_dgl: GpuModel::new(Framework::Dgl).run(&model, &w),
+            gpu_pyg: GpuModel::new(Framework::Pyg).run(&model, &w),
+            hygcn: HygcnModel::paper().run(&model, &w),
+        });
+        self.pairs.borrow_mut().insert(key, p.clone());
+        p
+    }
+
+    /// The paper's (model, dataset) benchmark suite (Table 5 pairing).
+    pub fn suite(&self) -> Vec<(GnnKind, DatasetSpec)> {
+        let mut v = Vec::new();
+        for (kind, codes) in [
+            (GnnKind::Gcn, vec!["CA", "PB", "NE", "CF"]),
+            (GnnKind::GsPool, vec!["RD", "EN", "AN"]),
+            (GnnKind::GatedGcn, vec!["SA", "SB"]),
+            (GnnKind::Grn, vec!["SC", "SD"]),
+            (GnnKind::Rgcn, vec!["AF", "MG", "BG", "AM"]),
+        ] {
+            for c in codes {
+                v.push((kind, datasets::by_code(c).unwrap()));
+            }
+        }
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2 — CPU execution-time breakdown per stage
+// ---------------------------------------------------------------------------
+
+pub fn fig2(_eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig2",
+        "Execution time breakdown of GNN models on CPU-DGL (per stage)",
+        &["model", "dataset", "feature_extraction", "aggregate", "update"],
+    );
+    let cpu = CpuModel::new(Framework::Dgl);
+    let pairs: Vec<(GnnKind, &str)> = [GnnKind::Gcn, GnnKind::GsPool, GnnKind::GatedGcn, GnnKind::Grn]
+        .iter()
+        .flat_map(|&k| ["CA", "PB", "CF", "RD"].into_iter().map(move |d| (k, d)))
+        .chain(
+            ["AF", "MG", "BG", "AM"]
+                .into_iter()
+                .map(|d| (GnnKind::Rgcn, d)),
+        )
+        .collect();
+    for (kind, code) in pairs {
+        let spec = datasets::by_code(code).unwrap();
+        let m = GnnModel::for_dataset(kind, &spec);
+        let r = cpu.run(&m, &Workload::from_spec(&spec));
+        let bd = r.stages.breakdown();
+        t.row(vec![
+            kind.name().into(),
+            code.into(),
+            pct(bd[0]),
+            pct(bd[1]),
+            pct(bd[2]),
+        ]);
+    }
+    t.note("paper: all three stages take distinct, workload-dependent shares; \
+            aggregate dominates on CA/PB/RD; R-GCN aggregate dominates everywhere");
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — execution pattern of GCN on Cora (CPU)
+// ---------------------------------------------------------------------------
+
+pub fn table2(_eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "table2",
+        "Execution pattern of GCN on Cora (CPU model parameters + outcome)",
+        &["metric", "feature_extraction", "aggregate", "update"],
+    );
+    let cpu = CpuModel::new(Framework::Dgl);
+    t.row(vec![
+        "sustained fraction of peak (IPC proxy)".into(),
+        f(cpu.eff_fe),
+        f(cpu.eff_agg),
+        f(cpu.eff_upd),
+    ]);
+    t.row(vec![
+        "DRAM bytes per op (paper Table 2)".into(),
+        f(cpu.bpo_fe),
+        f(cpu.bpo_agg),
+        f(cpu.bpo_upd),
+    ]);
+    let spec = datasets::by_code("CA").unwrap();
+    let m = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let r = cpu.run(&m, &Workload::from_spec(&spec));
+    t.row(vec![
+        "modelled stage seconds".into(),
+        format!("{:.2e}", r.stages.feature_extraction),
+        format!("{:.2e}", r.stages.aggregate),
+        format!("{:.2e}", r.stages.update),
+    ]);
+    t.note("paper Table 2: IPC 1.73 / 0.77 / 1.01 (of 4-wide), DRAM B/op 0.24 / 11.1 / 0.41 — \
+            bytes/op are used verbatim; IPC maps to the sustained fractions above");
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3 — GCN execution time vs input/output feature length (CPU)
+// ---------------------------------------------------------------------------
+
+pub fn fig3(_eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig3",
+        "GCN time on 0.25M-vertex / 0.96M-edge graph vs feature dims (CPU-DGL)",
+        &["input F", "output H", "seconds", "vs (64,64)"],
+    );
+    let cpu = CpuModel::new(Framework::Dgl);
+    let w = Workload::new(250_000, 960_000);
+    let run = |f_in: usize, h_out: usize| -> f64 {
+        let model = GnnModel {
+            kind: GnnKind::Gcn,
+            layers: vec![LayerDims { f_in, f_out: h_out }],
+            agg_op: crate::model::AggOp::Sum,
+            num_relations: 1,
+            hidden_dim: 16,
+        };
+        cpu.run(&model, &w).seconds()
+    };
+    let base = run(64, 64);
+    let mut f_ratio = 0.0;
+    let mut h_ratio = 0.0;
+    for dim in [64usize, 128, 256, 512, 1024] {
+        let tf = run(dim, 64);
+        t.row(vec![dim.to_string(), "64".into(), format!("{tf:.4}"), x(tf / base)]);
+        f_ratio = tf / base;
+    }
+    for dim in [128usize, 256, 512, 1024] {
+        let th = run(64, dim);
+        t.row(vec!["64".into(), dim.to_string(), format!("{th:.4}"), x(th / base)]);
+        h_ratio = th / base;
+    }
+    t.note(format!(
+        "paper: F 64->1024 increases time 2.21x, H 64->1024 only 1.32x; ours: {} / {}. \
+         Both dims scale the FE GEMM linearly in our roofline; the paper's F/H asymmetry \
+         stems from DGL internals the model does not capture (documented deviation)",
+        x(f_ratio),
+        x(h_ratio)
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — tiling I/O cost model (formula vs replay)
+// ---------------------------------------------------------------------------
+
+pub fn table3(_eval: &Eval) -> Table {
+    use crate::sim::tiles::{io_cost_words, replay_io, ScheduleChoice};
+    let mut t = Table::new(
+        "table3",
+        "Tile-scheduling I/O cost (interval-words): closed form vs schedule replay",
+        &["Q", "F", "H", "order", "read (formula)", "write (formula)", "read (replay)", "write (replay)"],
+    );
+    for (q, f_dim, h_dim) in [(4usize, 128usize, 16usize), (8, 1433, 16), (8, 16, 210)] {
+        for choice in [ScheduleChoice::Column, ScheduleChoice::Row] {
+            let (r, w) = io_cost_words(q, f_dim, h_dim, choice);
+            let (src, dl, ds) = replay_io(q, choice);
+            let replay_read = (src * f_dim + dl * h_dim) as f64;
+            let replay_write = (ds * h_dim) as f64;
+            t.row(vec![
+                q.to_string(),
+                f_dim.to_string(),
+                h_dim.to_string(),
+                format!("{choice:?}"),
+                f(r),
+                f(w),
+                f(replay_read),
+                f(replay_write),
+            ]);
+        }
+    }
+    t.note("column: read (Q^2-Q+1)F + QH, write QH; row: read QF + (Q^2-Q+1)H, write Q^2 H (paper Table 3)");
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — system configurations / power / area / efficiency
+// ---------------------------------------------------------------------------
+
+pub fn table4(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "table4",
+        "System configurations (measured analogues of paper Table 4)",
+        &["metric", "HyGCN", "EnGN_22MB", "EnGN"],
+    );
+    let engn = AcceleratorConfig::engn();
+    let engn22 = AcceleratorConfig::engn_22mb();
+    let hygcn = HygcnModel::paper();
+
+    // Geomean power and speedups over the benchmark suite.
+    let mut engn_power = Vec::new();
+    let mut speed22 = Vec::new();
+    let mut speed = Vec::new();
+    for (kind, spec) in eval.suite() {
+        let p = eval.pair(kind, &spec);
+        engn_power.push(p.engn.power_w);
+        let r22 = eval.engn_with(engn22.clone(), kind, &spec);
+        speed22.push(p.hygcn.seconds() / r22.seconds());
+        speed.push(p.hygcn.seconds() / p.engn.seconds());
+    }
+    let engn_area = engn.area.total_mm2(engn.num_pes(), engn.vpu_pes, engn.on_chip_bytes());
+    let engn22_area = engn22
+        .area
+        .total_mm2(engn22.num_pes(), engn22.vpu_pes, engn22.on_chip_bytes());
+    let engn_p = geomean(&engn_power);
+    let engn22_p = engn_p - engn.energy.static_power_w(engn.on_chip_bytes())
+        + engn22.energy.static_power_w(engn22.on_chip_bytes());
+
+    t.row(vec!["compute".into(), "1GHz 32x128 systolic + 32xSIMD16".into(), "1GHz 128x16 RER".into(), "1GHz 128x16 RER".into()]);
+    t.row(vec![
+        "on-chip memory".into(),
+        "22MB + 128KB".into(),
+        format!("{} MB + 64KB", engn22.result_bank_bytes / (1024 * 1024)),
+        format!("{} KB total", engn.on_chip_bytes() / 1024),
+    ]);
+    t.row(vec![
+        "peak GOP/s".into(),
+        f(hygcn.peak_gops()),
+        f(engn22.peak_gops()),
+        f(engn.peak_gops()),
+    ]);
+    t.row(vec![
+        "area (mm2, 14nm)".into(),
+        "7.8 (12nm, paper)".into(),
+        f(engn22_area),
+        f(engn_area),
+    ]);
+    t.row(vec![
+        "power (W)".into(),
+        f(hygcn.power_w),
+        f(engn22_p),
+        f(engn_p),
+    ]);
+    t.row(vec![
+        "GNN speedup vs HyGCN (geomean)".into(),
+        "1x".into(),
+        x(geomean(&speed22)),
+        x(geomean(&speed)),
+    ]);
+    t.note("paper: EnGN_22MB area 31.2 mm2 / 10.2 W / 5.44x; EnGN 4.54 mm2 / 2.56 W / 2.97x");
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 9 — performance speedup over CPU / GPU / HyGCN
+// ---------------------------------------------------------------------------
+
+pub fn fig9(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig9",
+        "EnGN speedup over CPU-DGL / CPU-PyG / GPU-DGL / GPU-PyG / HyGCN",
+        &["model", "dataset", "size", "vs CPU-DGL", "vs CPU-PyG", "vs GPU-DGL", "vs GPU-PyG", "vs HyGCN"],
+    );
+    let cell = |s: Option<f64>| s.map(x).unwrap_or_else(|| "OOM".into());
+    let mut acc: HashMap<&str, Vec<f64>> = HashMap::new();
+    let mut small_acc: HashMap<&str, Vec<f64>> = HashMap::new();
+    for (kind, spec) in eval.suite() {
+        let p = eval.pair(kind, &spec);
+        let cols = [
+            ("cpu_dgl", p.speedup(&p.cpu_dgl)),
+            ("cpu_pyg", p.speedup(&p.cpu_pyg)),
+            ("gpu_dgl", p.speedup(&p.gpu_dgl)),
+            ("gpu_pyg", p.speedup(&p.gpu_pyg)),
+            ("hygcn", p.speedup(&p.hygcn)),
+        ];
+        for (k, v) in cols {
+            if let Some(v) = v {
+                acc.entry(k).or_default().push(v);
+                if !spec.is_large() {
+                    small_acc.entry(k).or_default().push(v);
+                }
+            }
+        }
+        t.row(vec![
+            kind.name().into(),
+            spec.code.into(),
+            if spec.is_large() { "large".into() } else { "small".into() },
+            cell(cols[0].1),
+            cell(cols[1].1),
+            cell(cols[2].1),
+            cell(cols[3].1),
+            cell(cols[4].1),
+        ]);
+    }
+    let avg = |m: &HashMap<&str, Vec<f64>>, k: &str| geomean(m.get(k).map(|v| v.as_slice()).unwrap_or(&[]));
+    t.row(vec![
+        "AVG (geomean)".into(),
+        "all".into(),
+        "".into(),
+        x(avg(&acc, "cpu_dgl")),
+        x(avg(&acc, "cpu_pyg")),
+        x(avg(&acc, "gpu_dgl")),
+        x(avg(&small_acc, "gpu_pyg")),
+        x(avg(&acc, "hygcn")),
+    ]);
+    t.note("paper averages: 1802.9x CPU-DGL, 5108.4x CPU-PyG; small graphs 14.41x GPU-DGL, \
+            8.35x GPU-PyG, 3.33x HyGCN; large graphs 19.75x GPU-DGL, 2.61x HyGCN");
+    t.note("GPU-PyG average over small datasets only (OOM on large, as in the paper)");
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10 — throughput (GOP/s)
+// ---------------------------------------------------------------------------
+
+pub fn fig10(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig10",
+        "Throughput (GOP/s) of EnGN, CPU, GPU and HyGCN",
+        &["model", "dataset", "EnGN", "CPU-DGL", "CPU-PyG", "GPU-DGL", "GPU-PyG", "HyGCN"],
+    );
+    let mut engn_tp = Vec::new();
+    let mut frac = Vec::new();
+    let cfg = AcceleratorConfig::engn();
+    for (kind, spec) in eval.suite() {
+        let p = eval.pair(kind, &spec);
+        engn_tp.push(p.engn.gops());
+        frac.push(p.engn.peak_fraction(&cfg));
+        let g = |b: &BaselineReport| if b.oom { "OOM".into() } else { f(b.gops()) };
+        t.row(vec![
+            kind.name().into(),
+            spec.code.into(),
+            f(p.engn.gops()),
+            g(&p.cpu_dgl),
+            g(&p.cpu_pyg),
+            g(&p.gpu_dgl),
+            g(&p.gpu_pyg),
+            g(&p.hygcn),
+        ]);
+    }
+    t.note(format!(
+        "EnGN mean throughput {} GOP/s = {} of 4096 GOP/s peak (paper: 3265.87 GOP/s = 79.7%)",
+        f(crate::util::mean(&engn_tp)),
+        pct(crate::util::mean(&frac)),
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11 — energy efficiency (GOPS/W)
+// ---------------------------------------------------------------------------
+
+pub fn fig11(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig11",
+        "Energy efficiency (GOPS/W) of EnGN, CPU, GPU and HyGCN",
+        &["model", "dataset", "EnGN", "CPU-DGL", "GPU-DGL", "HyGCN", "EnGN/CPU", "EnGN/GPU", "EnGN/HyGCN"],
+    );
+    let mut r_cpu = Vec::new();
+    let mut r_gpu = Vec::new();
+    let mut r_hygcn = Vec::new();
+    for (kind, spec) in eval.suite() {
+        let p = eval.pair(kind, &spec);
+        let e = p.engn.gops_per_watt();
+        let c = p.cpu_dgl.gops_per_watt();
+        let g = p.gpu_dgl.gops_per_watt();
+        let h = p.hygcn.gops_per_watt();
+        r_cpu.push(e / c);
+        r_gpu.push(e / g);
+        r_hygcn.push(e / h);
+        t.row(vec![
+            kind.name().into(),
+            spec.code.into(),
+            f(e),
+            format!("{c:.3}"),
+            f(g),
+            f(h),
+            x(e / c),
+            x(e / g),
+            x(e / h),
+        ]);
+    }
+    t.note(format!(
+        "geomean ratios: {} vs CPU-DGL (paper 1326.35x), {} vs GPU-DGL (paper 304.43x avg), {} vs HyGCN (paper 6.2x)",
+        x(geomean(&r_cpu)),
+        x(geomean(&r_gpu)),
+        x(geomean(&r_hygcn))
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 12 — edge reorganization vs original layout (normalized to ideal)
+// ---------------------------------------------------------------------------
+
+pub fn fig12(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig12",
+        "RER with original vs reorganized edges, normalized to ideal topology",
+        &["model", "dataset", "original/ideal", "reorganized/ideal", "reorg speedup"],
+    );
+    let mut speedups = Vec::new();
+    for (kind, spec) in eval.suite() {
+        let mut orig_cfg = AcceleratorConfig::engn();
+        orig_cfg.edge_reorganization = false;
+        let mut ideal_cfg = AcceleratorConfig::engn();
+        ideal_cfg.ideal_ring = true;
+        let orig = eval.engn_with(orig_cfg, kind, &spec);
+        let reorg = eval.pair(kind, &spec).engn.clone();
+        let ideal = eval.engn_with(ideal_cfg, kind, &spec);
+        // Normalize on the aggregate stage (where the topology matters).
+        let agg = |r: &SimReport| r.layers.iter().map(|l| l.aggregate.cycles).sum::<f64>().max(1.0);
+        let s = agg(&orig) / agg(&reorg);
+        speedups.push(s);
+        t.row(vec![
+            kind.name().into(),
+            spec.code.into(),
+            format!("{:.3}", agg(&ideal) / agg(&orig)),
+            format!("{:.3}", agg(&ideal) / agg(&reorg)),
+            x(s),
+        ]);
+    }
+    t.note(format!(
+        "reorganization speedup: {} arithmetic mean / {} geomean (paper: 5.4x average, \
+         larger on big graphs; reorganized is near-ideal on dense tiles — Reddit above)",
+        x(crate::util::mean(&speedups)),
+        x(geomean(&speedups))
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 13 — PE/SM utilization vs vertex property dimension
+// ---------------------------------------------------------------------------
+
+pub fn fig13(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig13",
+        "Utilization vs input feature dimension: GPU SMs vs EnGN PEs (65K vertices, 2.5M edges)",
+        &["feature dim", "GPU utilization", "EnGN PE utilization"],
+    );
+    let gpu = GpuModel::new(Framework::Dgl);
+    for f_dim in [64usize, 100, 256, 512, 1000, 1024, 2048, 4096] {
+        let spec = DatasetSpec {
+            code: "SY",
+            name: "synthetic-65k",
+            vertices: 65_000,
+            edges: 2_500_000,
+            feature_dim: f_dim,
+            labels: 16,
+            num_relations: 1,
+            group: crate::graph::datasets::DatasetGroup::Synthetic,
+        };
+        let r = eval.engn_with(AcceleratorConfig::engn(), GnnKind::Gcn, &spec);
+        t.row(vec![
+            f_dim.to_string(),
+            pct(gpu.dense_utilization(f_dim)),
+            pct(r.layers[0].feature_extraction.utilization),
+        ]);
+    }
+    t.note("paper: GPU under 50% below 512 dims with dips at odd dims; EnGN flat (GPA dataflow)");
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 14 — DASR vs fixed stage orders
+// ---------------------------------------------------------------------------
+
+pub fn fig14(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig14",
+        "Dimension-aware stage re-ordering vs FAU / AFU",
+        &["model", "dataset", "DASR vs FAU", "DASR vs AFU"],
+    );
+    let mut vs_fau = Vec::new();
+    let mut vs_afu = Vec::new();
+    for (kind, spec) in eval.suite() {
+        if kind == GnnKind::GsPool {
+            continue; // max aggregation pins the order (paper excludes it)
+        }
+        let run = |order: StageOrder| {
+            let mut cfg = AcceleratorConfig::engn();
+            cfg.stage_order = order;
+            eval.engn_with(cfg, kind, &spec).total_cycles()
+        };
+        let dasr = run(StageOrder::Dasr);
+        let fau = run(StageOrder::Fau) / dasr;
+        let afu = run(StageOrder::Afu) / dasr;
+        vs_fau.push(fau);
+        vs_afu.push(afu);
+        t.row(vec![kind.name().into(), spec.code.into(), x(fau), x(afu)]);
+    }
+    t.note(format!(
+        "geomean: {} vs FAU (paper 1.047x), {} vs AFU (paper 2.297x); the FAU gap opens only \
+         when output dims exceed input dims (paper's Nell/Reddit discussion)",
+        x(geomean(&vs_fau)),
+        x(geomean(&vs_afu))
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 15 — graph tiling scheduling (adaptive vs Column / Row)
+// ---------------------------------------------------------------------------
+
+pub fn fig15(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig15",
+        "Total off-chip I/O: EnGN scheduling (adaptive tiles + DASR) vs fixed Column / Row (GCN)",
+        &["dataset", "EnGN (MB)", "column (MB)", "row (MB)", "col/EnGN", "row/EnGN"],
+    );
+    let mut col_r = Vec::new();
+    let mut row_r = Vec::new();
+    for code in ["CA", "PB", "NE", "CF", "RD", "SA", "SC"] {
+        let spec = datasets::by_code(code).unwrap();
+        // The fixed baselines "stick to the fixed policy to update the
+        // graph" (paper §6.3): fixed traversal *and* fixed FAU stage
+        // order; EnGN's scheduler adapts both to the dimension changes.
+        // Compare the schedule-dependent traffic (vertex re-streaming and
+        // partial spills); the one-time input read / output write / edge
+        // stream are identical under every schedule.
+        let io = |order: TileOrder, stage: StageOrder| {
+            let mut cfg = AcceleratorConfig::engn();
+            cfg.tile_order = order;
+            cfg.stage_order = stage;
+            // 1 MB floor keeps ratios meaningful when a configuration's
+            // working set fits entirely on chip (schedule traffic -> 0).
+            (eval.engn_with(cfg, GnnKind::Gcn, &spec).traffic().schedule_bytes / 1e6)
+                .max(1.0)
+        };
+        let a = io(TileOrder::Adaptive, StageOrder::Dasr);
+        let c = io(TileOrder::Column, StageOrder::Fau);
+        let r = io(TileOrder::Row, StageOrder::Fau);
+        col_r.push(c / a);
+        row_r.push(r / a);
+        t.row(vec![code.into(), f(a), f(c), f(r), x(c / a), x(r / a)]);
+    }
+    t.note(format!(
+        "geomean reduction: {} vs Column, {} vs Row (paper: up to 29.62x vs Column and 3.02x \
+         vs Row on Nell/CoraFull/Reddit; 3.26x / 1.90x on PubMed and the large graphs)",
+        x(geomean(&col_r)),
+        x(geomean(&row_r))
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 16 — DAVC hit rate vs reserved fraction and cache size
+// ---------------------------------------------------------------------------
+
+pub fn fig16(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig16",
+        "DAVC hit rate vs reserved fraction (64KB) and vs capacity (fully reserved)",
+        &["dataset", "sweep", "setting", "hit rate"],
+    );
+    for code in ["CA", "PB", "NE", "RD"] {
+        let spec = datasets::by_code(code).unwrap();
+        for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let mut cfg = AcceleratorConfig::engn();
+            cfg.davc_reserved_frac = frac;
+            let r = eval.engn_with(cfg, GnnKind::Gcn, &spec);
+            t.row(vec![
+                code.into(),
+                "reserved frac".into(),
+                format!("{frac}"),
+                pct(r.davc().hit_rate()),
+            ]);
+        }
+        for kb in [16usize, 64, 256, 512] {
+            let mut cfg = AcceleratorConfig::engn();
+            cfg.davc_bytes = kb * 1024;
+            let r = eval.engn_with(cfg, GnnKind::Gcn, &spec);
+            t.row(vec![
+                code.into(),
+                "capacity".into(),
+                format!("{kb}KB"),
+                pct(r.davc().hit_rate()),
+            ]);
+        }
+    }
+    t.note("paper Fig 16: hit rate increases monotonically with the reserved proportion \
+            (hence DAVC reserves everything) and with capacity; large graphs stay low, \
+            motivating the compact 64KB choice");
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 17 — scalability over PE-array size
+// ---------------------------------------------------------------------------
+
+pub fn fig17(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "fig17",
+        "Throughput vs PE-array size (normalized to 32x16)",
+        &["model", "dataset", "32x16", "64x16", "128x16", "32x32", "128x32"],
+    );
+    for (kind, code) in [
+        (GnnKind::Gcn, "CA"),
+        (GnnKind::Gcn, "NE"),
+        (GnnKind::GsPool, "RD"),
+        (GnnKind::GatedGcn, "SA"),
+        (GnnKind::Grn, "SC"),
+        (GnnKind::Rgcn, "AM"),
+    ] {
+        let spec = datasets::by_code(code).unwrap();
+        let tp = |rows: usize, cols: usize| {
+            eval.engn_with(AcceleratorConfig::with_array(rows, cols), kind, &spec)
+                .gops()
+        };
+        let base = tp(32, 16);
+        t.row(vec![
+            kind.name().into(),
+            code.into(),
+            "1.00x".into(),
+            x(tp(64, 16) / base),
+            x(tp(128, 16) / base),
+            x(tp(32, 32) / base),
+            x(tp(128, 32) / base),
+        ]);
+    }
+    t.note("paper: row scaling helps; 32x32 shows no improvement over 32x16 because layer-1 \
+            output dims (16) underfill 32 columns; large graphs scale worse (aggregate-bound)");
+    t
+}
+
+/// Every experiment in paper order.
+pub fn all(eval: &Eval) -> Vec<Table> {
+    vec![
+        fig2(eval),
+        table2(eval),
+        fig3(eval),
+        table3(eval),
+        table4(eval),
+        fig9(eval),
+        fig10(eval),
+        fig11(eval),
+        fig12(eval),
+        fig13(eval),
+        fig14(eval),
+        fig15(eval),
+        fig16(eval),
+        fig17(eval),
+    ]
+}
+
+/// Look an experiment up by id.
+pub fn by_id(eval: &Eval, id: &str) -> Option<Table> {
+    match id {
+        "fig2" => Some(fig2(eval)),
+        "table2" => Some(table2(eval)),
+        "fig3" => Some(fig3(eval)),
+        "table3" => Some(table3(eval)),
+        "table4" => Some(table4(eval)),
+        "fig9" => Some(fig9(eval)),
+        "fig10" => Some(fig10(eval)),
+        "fig11" => Some(fig11(eval)),
+        "fig12" => Some(fig12(eval)),
+        "fig13" => Some(fig13(eval)),
+        "fig14" => Some(fig14(eval)),
+        "fig15" => Some(fig15(eval)),
+        "fig16" => Some(fig16(eval)),
+        "fig17" => Some(fig17(eval)),
+        _ => None,
+    }
+}
+
+pub const ALL_IDS: [&str; 14] = [
+    "fig2", "table2", "fig3", "table3", "table4", "fig9", "fig10", "fig11",
+    "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fast Eval: heavy datasets scaled hard.
+    fn tiny_eval() -> Eval {
+        Eval::new(ScalePolicy::Factor(64), 7)
+    }
+
+    #[test]
+    fn fig13_utilization_flat_for_engn() {
+        let t = fig13(&tiny_eval());
+        let engn: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[2].trim_end_matches('%').parse::<f64>().unwrap())
+            .collect();
+        let spread = engn.iter().cloned().fold(0.0f64, f64::max)
+            - engn.iter().cloned().fold(100.0f64, f64::min);
+        assert!(spread < 3.0, "EnGN utilization spread {spread} ({engn:?})");
+        // GPU column is NOT flat.
+        let gpu: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[1].trim_end_matches('%').parse::<f64>().unwrap())
+            .collect();
+        assert!(gpu.last().unwrap() - gpu.first().unwrap() > 30.0);
+    }
+
+    #[test]
+    fn table3_formula_matches_replay() {
+        let t = table3(&tiny_eval());
+        for row in &t.rows {
+            assert_eq!(row[4], row[6], "read mismatch in {row:?}");
+            assert_eq!(row[5], row[7], "write mismatch in {row:?}");
+        }
+    }
+
+    #[test]
+    fn by_id_covers_all() {
+        let eval = tiny_eval();
+        for id in ALL_IDS {
+            // Only check the cheap ones here; expensive ones run in the
+            // integration suite / bench harness.
+            if ["table2", "table3", "fig3"].contains(&id) {
+                assert!(by_id(&eval, id).is_some(), "{id}");
+            }
+        }
+        assert!(by_id(&eval, "fig99").is_none());
+    }
+}

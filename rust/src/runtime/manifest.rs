@@ -1,0 +1,149 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust runtime (which loads and
+//! executes the HLO text files it lists).
+
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Path of the HLO text file, relative to the manifest.
+    pub path: PathBuf,
+    pub description: String,
+    /// Input tensor shapes, in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shapes.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    pub fn input_elements(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Quickstart shape parameters recorded by aot.py (n, f, hidden, ...).
+    pub quickstart: Vec<(String, usize)>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("reading manifest in {}: {e}", dir.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, String> {
+        let root = json::parse(text)?;
+        let shapes = |v: &Json| -> Result<Vec<Vec<usize>>, String> {
+            v.as_arr()
+                .ok_or("shape list must be an array")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .ok_or_else(|| "shape must be an array".to_string())
+                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                })
+                .collect()
+        };
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("manifest missing artifacts")?
+        {
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or("artifact missing name")?
+                    .to_string(),
+                path: dir.join(
+                    a.get("path")
+                        .and_then(|v| v.as_str())
+                        .ok_or("artifact missing path")?,
+                ),
+                description: a
+                    .get("description")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                inputs: shapes(a.get("inputs").ok_or("artifact missing inputs")?)?,
+                outputs: shapes(a.get("outputs").ok_or("artifact missing outputs")?)?,
+            });
+        }
+        let quickstart = root
+            .get("quickstart")
+            .and_then(|q| q.as_obj())
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Self {
+            dir,
+            artifacts,
+            quickstart,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn quickstart_param(&self, key: &str) -> Option<usize> {
+        self.quickstart
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "quickstart": {"n": 512, "f": 64, "hidden": 16, "classes": 8},
+      "artifacts": [
+        {
+          "name": "gcn_forward",
+          "path": "gcn_forward.hlo.txt",
+          "description": "2-layer GCN",
+          "inputs": [[512, 512], [512, 64], [64, 16], [16, 8]],
+          "outputs": [[512, 8]],
+          "dtype": "f32"
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("gcn_forward").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[1], vec![512, 64]);
+        assert_eq!(a.input_elements(0), 512 * 512);
+        assert_eq!(a.outputs, vec![vec![512, 8]]);
+        assert_eq!(a.path, PathBuf::from("/tmp/a/gcn_forward.hlo.txt"));
+        assert_eq!(m.quickstart_param("hidden"), Some(16));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"path": "x"}]}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Compilation happens once per artifact at load time; execution is
+//! synchronous on the caller thread (the coordinator provides queuing).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest};
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A host-side tensor (row-major f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+}
+
+/// One compiled artifact.
+struct LoadedArtifact {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: a PJRT CPU client plus all compiled executables.
+///
+/// `execute` takes `&self` (the underlying PJRT executable is re-entrant
+/// for our synchronous use); a mutex serializes executions because the
+/// CPU client is configured single-device.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    exec_lock: Mutex<()>,
+    /// Executions served (for the coordinator's metrics).
+    executions: std::sync::atomic::AtomicU64,
+}
+
+impl Runtime {
+    /// Load every artifact in the manifest directory and compile it.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self, String> {
+        let manifest = Manifest::load(&dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Load a subset (avoids compiling all seven artifacts when a test or
+    /// example needs one).
+    pub fn load_only(
+        dir: impl AsRef<std::path::Path>,
+        names: &[&str],
+    ) -> Result<Self, String> {
+        let mut manifest = Manifest::load(&dir)?;
+        manifest.artifacts.retain(|a| names.contains(&a.name.as_str()));
+        if manifest.artifacts.len() != names.len() {
+            return Err(format!(
+                "missing artifacts: wanted {names:?}, manifest has {:?}",
+                manifest.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()
+            ));
+        }
+        Self::from_manifest(manifest)
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> Result<Self, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for spec in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path.to_str().ok_or("non-utf8 path")?,
+            )
+            .map_err(|e| format!("parsing {}: {e}", spec.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| format!("compiling {}: {e}", spec.name))?;
+            artifacts.insert(
+                spec.name.clone(),
+                LoadedArtifact {
+                    spec: spec.clone(),
+                    exe,
+                },
+            );
+        }
+        Ok(Self {
+            client,
+            artifacts,
+            exec_lock: Mutex::new(()),
+            executions: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.artifacts.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name).map(|a| &a.spec)
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Execute an artifact with host tensors; validates shapes against the
+    /// manifest and returns the (single) output tensor.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
+        let artifact = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| format!("unknown artifact {name:?} (have {:?})", self.artifact_names()))?;
+        let spec = &artifact.spec;
+        if inputs.len() != spec.inputs.len() {
+            return Err(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            if t.shape != spec.inputs[i] {
+                return Err(format!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape, spec.inputs[i]
+                ));
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| format!("{name}: reshaping input {i}: {e}"))?;
+            literals.push(lit);
+        }
+        let _guard = self.exec_lock.lock().unwrap();
+        let result = artifact
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("{name}: execute: {e}"))?;
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("{name}: fetching result: {e}"))?;
+        // aot.py lowers with return_tuple=True; all our models return one
+        // array.
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| format!("{name}: untupling result: {e}"))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| format!("{name}: reading result: {e}"))?;
+        let shape = spec.outputs[0].clone();
+        if data.len() != shape.iter().product::<usize>() {
+            return Err(format!(
+                "{name}: output has {} elements, manifest says {:?}",
+                data.len(),
+                shape
+            ));
+        }
+        Ok(HostTensor::new(shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.at2(1, 2), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn host_tensor_rejects_bad_shape() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn zeros_builder() {
+        let t = HostTensor::zeros(vec![4, 2]);
+        assert_eq!(t.elements(), 8);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,277 @@
+//! Degree-aware vertex cache (DAVC, paper §4.2 and Fig 16).
+//!
+//! The L2 level of EnGN's on-chip hierarchy, sitting between the PE
+//! register files and the result banks. A configurable fraction of its
+//! entries is *reserved* for the highest-in-degree vertices (determined
+//! by offline static analysis, never replaced at run time); the rest is a
+//! standard LRU. The paper's Fig 16(a) sweep concludes the hit rate is
+//! monotone in the reserved fraction, so production EnGN reserves all of
+//! it — we keep the knob to regenerate the figure.
+
+use crate::sim::stats::CacheStats;
+use crate::util::fxhash::IntMap;
+
+/// Exact LRU cache over vertex ids (intrusive doubly-linked list on a
+/// slab; O(1) access and eviction).
+#[derive(Debug)]
+struct Lru {
+    capacity: usize,
+    map: IntMap<u32, usize>,
+    // Slab nodes: (vertex, prev, next). usize::MAX = null.
+    nodes: Vec<(u32, usize, usize)>,
+    head: usize, // most recent
+    tail: usize, // least recent
+    free: Vec<usize>,
+}
+
+const NIL: usize = usize::MAX;
+
+impl Lru {
+    fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            map: IntMap::with_capacity_and_hasher(capacity + 1, Default::default()),
+            nodes: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+        }
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (_, prev, next) = self.nodes[idx];
+        if prev != NIL {
+            self.nodes[prev].2 = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next].1 = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.nodes[idx].1 = NIL;
+        self.nodes[idx].2 = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].1 = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Touch `v`; returns true on hit.
+    fn access(&mut self, v: u32) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        if let Some(&idx) = self.map.get(&v) {
+            if self.head != idx {
+                self.unlink(idx);
+                self.push_front(idx);
+            }
+            return true;
+        }
+        // Miss: insert, evicting LRU if full.
+        let idx = if self.map.len() >= self.capacity {
+            let victim = self.tail;
+            let old = self.nodes[victim].0;
+            self.unlink(victim);
+            self.map.remove(&old);
+            self.nodes[victim].0 = v;
+            victim
+        } else if let Some(idx) = self.free.pop() {
+            self.nodes[idx].0 = v;
+            idx
+        } else {
+            self.nodes.push((v, NIL, NIL));
+            self.nodes.len() - 1
+        };
+        self.push_front(idx);
+        self.map.insert(v, idx);
+        false
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// The degree-aware vertex cache.
+#[derive(Debug)]
+pub struct Davc {
+    /// Vertices pinned by static degree analysis. Values are unused; the
+    /// map doubles as a membership set sized to the reserved partition.
+    reserved: IntMap<u32, ()>,
+    lru: Lru,
+    pub stats: CacheStats,
+}
+
+impl Davc {
+    /// `capacity_entries` total lines; `reserved_frac` of them pinned to
+    /// the top of `degree_ranked` (vertex ids, highest in-degree first).
+    pub fn new(capacity_entries: usize, reserved_frac: f64, degree_ranked: &[u32]) -> Self {
+        let reserved_n = ((capacity_entries as f64 * reserved_frac).round() as usize)
+            .min(capacity_entries)
+            .min(degree_ranked.len());
+        let reserved: IntMap<u32, ()> = degree_ranked[..reserved_n]
+            .iter()
+            .map(|&v| (v, ()))
+            .collect();
+        Self {
+            reserved,
+            lru: Lru::new(capacity_entries - reserved_n),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Line capacity for a buffer size and property dimension.
+    pub fn entries_for(davc_bytes: usize, property_dim: usize, word_bytes: usize) -> usize {
+        let line = (property_dim.max(1) * word_bytes).max(1);
+        davc_bytes / line
+    }
+
+    /// Access destination vertex `v`'s partial; true on hit.
+    pub fn access(&mut self, v: u32) -> bool {
+        self.stats.accesses += 1;
+        let hit = self.reserved.contains_key(&v) || self.lru.access(v);
+        if hit {
+            self.stats.hits += 1;
+        }
+        hit
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        self.stats.hit_rate()
+    }
+
+    pub fn resident(&self) -> usize {
+        self.reserved.len() + self.lru.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, Graph};
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn lru_semantics() {
+        let mut l = Lru::new(2);
+        assert!(!l.access(1));
+        assert!(!l.access(2));
+        assert!(l.access(1)); // 1 now MRU
+        assert!(!l.access(3)); // evicts 2
+        assert!(!l.access(2)); // 2 gone, evicts 1
+        assert!(l.access(3));
+        assert!(!l.access(1));
+    }
+
+    #[test]
+    fn zero_capacity_never_hits() {
+        let mut l = Lru::new(0);
+        assert!(!l.access(1));
+        assert!(!l.access(1));
+    }
+
+    #[test]
+    fn reserved_entries_always_hit_after_construction() {
+        let ranked = vec![7, 3, 9];
+        let mut c = Davc::new(2, 1.0, &ranked);
+        // Top-2 (7, 3) pinned.
+        assert!(c.access(7));
+        assert!(c.access(3));
+        assert!(!c.access(9)); // not reserved, no LRU space
+        assert!(!c.access(9));
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_partition() {
+        let ranked = vec![1, 2, 3, 4];
+        // 4 entries, half reserved -> {1, 2} pinned, 2-entry LRU.
+        let mut c = Davc::new(4, 0.5, &ranked);
+        assert!(c.access(1) && c.access(2));
+        assert!(!c.access(10));
+        assert!(!c.access(11));
+        assert!(c.access(10) && c.access(11));
+        assert!(!c.access(12)); // evicts 10
+        assert!(!c.access(10));
+        // Reserved still hit.
+        assert!(c.access(1));
+    }
+
+    #[test]
+    fn entries_for_sizing() {
+        // 64 KB / (16 dims * 4 B) = 1024 lines.
+        assert_eq!(Davc::entries_for(64 * 1024, 16, 4), 1024);
+        assert_eq!(Davc::entries_for(64 * 1024, 602, 4), 27);
+    }
+
+    /// Replays a power-law access stream: reserving for high-degree
+    /// vertices must beat pure LRU when the cache is much smaller than
+    /// the working set (the paper's Fig 16(a) monotonicity claim).
+    #[test]
+    fn degree_reservation_beats_pure_lru_on_power_law() {
+        let g = rmat::generate(4096, 60_000, rmat::RmatParams::default(), 77);
+        let ranked = g.vertices_by_in_degree_desc();
+        let stream: Vec<u32> = g.edges.iter().map(|e| e.dst).collect();
+        let cap = 64;
+        let mut reserved = Davc::new(cap, 1.0, &ranked);
+        let mut pure_lru = Davc::new(cap, 0.0, &ranked);
+        for &v in &stream {
+            reserved.access(v);
+            pure_lru.access(v);
+        }
+        assert!(
+            reserved.hit_rate() > pure_lru.hit_rate(),
+            "reserved {:.3} <= lru {:.3}",
+            reserved.hit_rate(),
+            pure_lru.hit_rate()
+        );
+    }
+
+    #[test]
+    fn prop_hit_rate_monotone_in_capacity_for_reserved_policy() {
+        // Fig 16(b): larger caches can only help when fully reserved
+        // (the pinned set only grows).
+        prop_check(10, 0xDA7C, |rng| {
+            let n = rng.gen_usize(256, 1024);
+            let e = rng.gen_usize(n, 6 * n);
+            let g = rmat::generate(n, e, rmat::RmatParams::default(), rng.next_u64());
+            let ranked = g.vertices_by_in_degree_desc();
+            let stream: Vec<u32> = g.edges.iter().map(|edge| edge.dst).collect();
+            let mut last = -1.0f64;
+            for cap in [8usize, 32, 128, 512] {
+                let mut c = Davc::new(cap, 1.0, &ranked);
+                for &v in &stream {
+                    c.access(v);
+                }
+                let hr = c.hit_rate();
+                if hr + 1e-9 < last {
+                    return Err(format!("hit rate fell from {last:.4} to {hr:.4} at cap {cap}"));
+                }
+                last = hr;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn resident_never_exceeds_capacity() {
+        let ranked: Vec<u32> = (0..100).collect();
+        let mut c = Davc::new(10, 0.3, &ranked);
+        for v in 0..1000u32 {
+            c.access(v % 97);
+        }
+        assert!(c.resident() <= 10);
+    }
+
+    #[allow(dead_code)]
+    fn type_checks(_: &Graph) {}
+}

@@ -1,0 +1,81 @@
+//! Energy tally: turns op and traffic counters into joules using the
+//! `config::energy` constants (see that module for calibration notes).
+
+use crate::config::AcceleratorConfig;
+use crate::sim::stats::TrafficStats;
+
+/// Dynamic energy split for one layer (or a whole pass).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub mac_j: f64,
+    pub alu_j: f64,
+    pub rf_j: f64,
+    pub davc_j: f64,
+    pub bank_j: f64,
+    pub hbm_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn chip_j(&self) -> f64 {
+        self.mac_j + self.alu_j + self.rf_j + self.davc_j + self.bank_j
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.chip_j() + self.hbm_j
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.mac_j += o.mac_j;
+        self.alu_j += o.alu_j;
+        self.rf_j += o.rf_j;
+        self.davc_j += o.davc_j;
+        self.bank_j += o.bank_j;
+        self.hbm_j += o.hbm_j;
+    }
+}
+
+/// Tally dynamic energy.
+///
+/// * `mac_ops` — ops executed as MACs on the PE array (2 ops = 1 MAC);
+/// * `alu_ops` — elementwise / reduce ops on XPE + VPU + ring adders;
+/// * `traffic` — byte counters accumulated by the engine.
+pub fn tally(cfg: &AcceleratorConfig, mac_ops: f64, alu_ops: f64, traffic: &TrafficStats) -> EnergyBreakdown {
+    let e = &cfg.energy;
+    EnergyBreakdown {
+        mac_j: (mac_ops / 2.0) * e.mac_pj * 1e-12,
+        alu_j: alu_ops * e.alu_pj * 1e-12,
+        rf_j: traffic.rf_bytes * e.rf_pj_per_byte * 1e-12,
+        davc_j: traffic.davc_bytes * e.davc_pj_per_byte * 1e-12,
+        bank_j: traffic.bank_bytes * e.bank_pj_per_byte * 1e-12,
+        hbm_j: traffic.hbm_total() * e.hbm_pj_per_byte() * 1e-12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tally_arithmetic() {
+        let cfg = AcceleratorConfig::engn();
+        let traffic = TrafficStats {
+            rf_bytes: 1e9,
+            davc_bytes: 1e6,
+            bank_bytes: 1e6,
+            hbm_read_bytes: 1e9,
+            hbm_write_bytes: 0.0,
+            edge_bytes: 0.0,
+            schedule_bytes: 0.0,
+        };
+        let e = tally(&cfg, 2e9, 1e9, &traffic);
+        // 1e9 MACs at mac_pj.
+        assert!((e.mac_j - 1e9 * cfg.energy.mac_pj * 1e-12).abs() < 1e-18);
+        // HBM dominates chip for equal byte counts (31.2 pJ/B vs <1 pJ/B).
+        assert!(e.hbm_j > e.rf_j);
+        assert!(e.total_j() > e.chip_j());
+        let mut sum = EnergyBreakdown::default();
+        sum.add(&e);
+        sum.add(&e);
+        assert!((sum.total_j() - 2.0 * e.total_j()).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,21 @@
+//! The EnGN cycle-level simulator.
+//!
+//! Structure mirrors the hardware (paper Fig 4/5/7):
+//! * [`pe_array`] — RER PE-array timing for the dense stages;
+//! * [`ring`] — the ring-edge-reduce aggregation schedule and the edge
+//!   reorganization optimization;
+//! * [`davc`] — the degree-aware vertex cache (L2 of the hierarchy);
+//! * [`tiles`] — grid-tile scheduling and the Table-3 I/O model;
+//! * [`energy`] — the dynamic-energy tally;
+//! * [`engine`] — the per-layer orchestrator producing [`stats::SimReport`].
+
+pub mod davc;
+pub mod energy;
+pub mod engine;
+pub mod pe_array;
+pub mod ring;
+pub mod stats;
+pub mod tiles;
+
+pub use engine::Simulator;
+pub use stats::SimReport;

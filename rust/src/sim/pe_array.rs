@@ -1,0 +1,97 @@
+//! RER PE-array timing for the dense stages (feature extraction and
+//! update matmuls) under the graph-property-aware (GPA) dataflow
+//! (paper §4.1.1): each PE row handles one vertex, each PE column one
+//! output dimension, and the input-property dimension streams through the
+//! array. This decouples property dimension from array geometry — the
+//! source of EnGN's flat utilization curve in Fig 13.
+
+use crate::util::ceil_div;
+
+/// Cycles for an [n×f]·[f×h] matmul on an R×C array: vertices are
+/// processed in `ceil(n/R)` batches; each batch streams the f-dim
+/// contraction once per group of C output dims.
+pub fn matmul_cycles(n: usize, f: usize, h: usize, rows: usize, cols: usize) -> f64 {
+    if n == 0 || f == 0 || h == 0 {
+        return 0.0;
+    }
+    (ceil_div(n, rows) as f64) * (f as f64) * (ceil_div(h, cols) as f64)
+}
+
+/// MAC utilization of the array during that matmul: useful MACs over
+/// offered PE-cycles. Independent of `f` (the GPA property): only the
+/// batch remainder (n mod R) and the column remainder (h mod C) cost.
+pub fn matmul_utilization(n: usize, f: usize, h: usize, rows: usize, cols: usize) -> f64 {
+    let cycles = matmul_cycles(n, f, h, rows, cols);
+    if cycles == 0.0 {
+        return 0.0;
+    }
+    (n as f64 * f as f64 * h as f64) / (cycles * rows as f64 * cols as f64)
+}
+
+/// Cycles for an elementwise pass over n vertices × d dims (XPE ranks /
+/// VPU lanes process one R×C block per cycle).
+pub fn elementwise_cycles(n: usize, d: usize, rows: usize, cols: usize) -> f64 {
+    if n == 0 || d == 0 {
+        return 0.0;
+    }
+    (ceil_div(n, rows) as f64) * (ceil_div(d, cols) as f64)
+}
+
+/// Pipeline fill/drain overhead per batch sweep (operands travel the
+/// array once before the first result emerges).
+pub fn pipeline_fill(rows: usize, cols: usize) -> f64 {
+    (rows + cols) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const R: usize = 128;
+    const C: usize = 16;
+
+    #[test]
+    fn exact_fit_is_fully_utilized() {
+        // 256 vertices, f=64, h=32: 2 batches × 64 × 2 col-groups.
+        assert_eq!(matmul_cycles(256, 64, 32, R, C), 2.0 * 64.0 * 2.0);
+        assert!((matmul_utilization(256, 64, 32, R, C) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_is_independent_of_f() {
+        // The GPA claim behind Fig 13: changing the input property
+        // dimension does not change array utilization.
+        let u64d = matmul_utilization(1000, 64, 16, R, C);
+        let u4096d = matmul_utilization(1000, 4096, 16, R, C);
+        assert!((u64d - u4096d).abs() < 1e-12);
+    }
+
+    #[test]
+    fn small_h_underutilizes_wide_arrays() {
+        // Fig 17: a 32-col array is wasted when h = 16.
+        let narrow = matmul_utilization(10_000, 64, 16, 32, 16);
+        let wide = matmul_utilization(10_000, 64, 16, 32, 32);
+        assert!(wide < narrow);
+        assert!((wide / narrow - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn remainder_batches_cost_full_sweeps() {
+        // 129 vertices on 128 rows = 2 batches.
+        assert_eq!(matmul_cycles(129, 10, 16, R, C), 2.0 * 10.0);
+        assert_eq!(matmul_cycles(128, 10, 16, R, C), 10.0);
+    }
+
+    #[test]
+    fn zero_dims_cost_nothing() {
+        assert_eq!(matmul_cycles(0, 5, 5, R, C), 0.0);
+        assert_eq!(matmul_cycles(5, 0, 5, R, C), 0.0);
+        assert_eq!(elementwise_cycles(0, 5, R, C), 0.0);
+    }
+
+    #[test]
+    fn elementwise_quantization() {
+        assert_eq!(elementwise_cycles(128, 16, R, C), 1.0);
+        assert_eq!(elementwise_cycles(129, 17, R, C), 2.0 * 2.0);
+    }
+}

@@ -1,0 +1,399 @@
+//! The ring-edge-reduce (RER) aggregation schedule (paper §4.1.2, Fig 6).
+//!
+//! The GPA dataflow streams a tile's source vertices through the PE
+//! array "continuously ... regardless of the array size and the property
+//! dimension" (§4.1.1): the prefetcher gathers the tile's *distinct*
+//! sources in id order (sequential memory) and injects one per cycle
+//! into the ring; a source entering at cycle `j` reaches ring position
+//! `rr` at cycle `j + rr`. The paper's hashed edge layout balances each
+//! tile's edges across the `R` per-row edge banks; same-destination
+//! partials produced on different rows combine along the ring (the
+//! design's ring-all-reduce ancestry), and destination state spills
+//! through the DST/shadow RFs and the DAVC (charged separately).
+//!
+//! Per-row consumption is at most one edge per cycle:
+//!
+//! * **original order** — without reorganization, one-shot streaming is
+//!   impossible (a missed source is gone), so the array falls back to
+//!   *batch circulation*: each batch of `R` sources circulates the ring
+//!   until its bank entries drain (the Fig 6 execution). The edge
+//!   parser decodes a small window of each bank (it "parses [edges]
+//!   into a bit-stream", which implies lookahead), so an entry is only
+//!   stalled to the next circulation when nothing in the window is
+//!   still upcoming; the SRC shadow RF lets an immediate same-source
+//!   repeat consume on the next cycle;
+//! * **reorganized** — banks sorted by stream order at build time (the
+//!   paper's edge reorganization) make the one-shot stream possible: a
+//!   row finishes at `max(len, j_max + rr + 1)` — one consumption per
+//!   cycle, gated only by the last source it must see;
+//! * **ideal** — a hypothetical fully-connected column (any row reads
+//!   any source any cycle): a row with `k` edges finishes in `k` cycles.
+//!   The paper normalizes Fig 12 against this.
+
+use crate::graph::Edge;
+use crate::util::fxhash::IntMap;
+
+/// Edge-parser lookahead per bank (entries it can pick among while
+/// decoding the control bit-stream).
+pub const PARSER_WINDOW: usize = 2;
+
+/// Outcome of scheduling one tile's aggregation on the ring.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RingOutcome {
+    /// Cycles for one pass over the tile (single property group; the
+    /// engine multiplies by `ceil(d_agg / pe_cols)`).
+    pub cycles: u64,
+    /// Cycles under the ideal fully-connected topology.
+    pub ideal_cycles: u64,
+    /// Edges aggregated.
+    pub edges: u64,
+    /// Distinct sources streamed.
+    pub sources: u64,
+}
+
+impl RingOutcome {
+    /// Consumed / offered row-cycles, 0..=1.
+    pub fn utilization(&self, rows: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.edges as f64 / (self.cycles as f64 * rows as f64)
+    }
+
+    pub fn add(&mut self, o: &RingOutcome) {
+        self.cycles += o.cycles;
+        self.ideal_cycles += o.ideal_cycles;
+        self.edges += o.edges;
+        self.sources += o.sources;
+    }
+}
+
+/// Schedule one tile. `src_start` is the tile's source-interval origin;
+/// `rows` is the PE-array row count.
+pub fn schedule_tile(
+    edges: &[Edge],
+    src_start: u32,
+    _dst_start: u32,
+    rows: usize,
+    reorganize: bool,
+) -> RingOutcome {
+    if edges.is_empty() {
+        return RingOutcome::default();
+    }
+    let r = rows as u64;
+    // Stream order: distinct sources sorted by id (sequential prefetch).
+    let mut srcs: Vec<u32> = edges.iter().map(|e| e.src - src_start).collect();
+    srcs.sort_unstable();
+    srcs.dedup();
+    let s = srcs.len() as u64;
+    // Rank = position in the sorted distinct-source list (the stream
+    // order), via a fast-hash map (§Perf: binary search was tried and
+    // lost ~40% on dense tiles; the IntMap build amortizes).
+    let rank_map: IntMap<u32, u32> = srcs
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v, i as u32))
+        .collect();
+    let rank = |v: u32| -> u64 { rank_map[&v] as u64 };
+
+    // Balanced bank assignment: contiguous chunks of the input-order
+    // edge list (the hashed layout's equal spread).
+    let chunk = edges.len().div_ceil(rows);
+    let mut tile_last = 0u64;
+    let mut tile_ideal = 0u64;
+    for (bank_idx, bank) in edges.chunks(chunk).enumerate() {
+        let rr = (bank_idx as u64) % r;
+        let len = bank.len() as u64;
+        let last = if reorganize {
+            // Sorted banks make both modes available; the compiler picks
+            // the cheaper one per tile. Only per-batch counts are needed
+            // here (no arrival lists — §Perf).
+            let mut counts: IntMap<u64, u64> = IntMap::default();
+            let mut j_max = 0u64;
+            for e in bank {
+                let s_off = (e.src - src_start) as u64;
+                *counts.entry(s_off / r).or_insert(0) += 1;
+                j_max = j_max.max(rank(e.src - src_start));
+            }
+            let stream = len.max(j_max + rr + 1);
+            // Sorted circulation: one pass per batch, extended when the
+            // shadow-RF chain outlasts the circulation.
+            let circ: u64 = counts.values().map(|&c| c.max(r)).sum();
+            stream.min(circ)
+        } else {
+            // Disordered banks cannot stream one-shot: batch circulation
+            // with the edge parser's lookahead window. Bank entries are
+            // grouped by source batch (the circulation unit), in input
+            // order within a batch.
+            let mut by_batch: IntMap<u64, Vec<u64>> = IntMap::default();
+            for e in bank {
+                let s_off = (e.src - src_start) as u64;
+                by_batch.entry(s_off / r).or_default().push(s_off % r);
+            }
+            by_batch
+                .values()
+                .map(|a| circulation_cycles(a, PARSER_WINDOW, r))
+                .sum::<u64>()
+                .max(len)
+        };
+        tile_last = tile_last.max(last);
+        tile_ideal = tile_ideal.max(len);
+    }
+    RingOutcome {
+        cycles: tile_last,
+        ideal_cycles: tile_ideal,
+        edges: edges.len() as u64,
+        sources: s,
+    }
+}
+
+/// Circulations needed to drain one batch's arrival queue with a
+/// `window`-entry greedy parser: each circulation sweeps offsets 0..R;
+/// the parser emits, among the next `window` queue entries, any arrival
+/// at or after the sweep position (duplicates ride the shadow RF); what
+/// remains waits for the next circulation.
+fn circulation_cycles(arrivals: &[u64], window_size: usize, r: u64) -> u64 {
+    let mut pending: Vec<u64> = arrivals.to_vec();
+    let mut cycles = 0u64;
+    while !pending.is_empty() {
+        let mut consumed = 0u64;
+        let mut cursor: i64 = -1;
+        let mut window: Vec<u64> = Vec::with_capacity(window_size);
+        let mut next = 0usize;
+        while window.len() < window_size && next < pending.len() {
+            window.push(pending[next]);
+            next += 1;
+        }
+        loop {
+            // Pick the smallest window entry still upcoming this sweep
+            // (>= cursor; equal rides the shadow RF).
+            let mut best: Option<usize> = None;
+            for (k, &a) in window.iter().enumerate() {
+                if a as i64 >= cursor && best.is_none_or(|b: usize| window[b] > a) {
+                    best = Some(k);
+                }
+            }
+            let Some(k) = best else { break }; // window all passed: stuck
+            cursor = window[k] as i64;
+            window.swap_remove(k);
+            consumed += 1;
+            if next < pending.len() {
+                window.push(pending[next]);
+                next += 1;
+            }
+            if window.is_empty() {
+                break;
+            }
+        }
+        // A circulation costs R cycles, extended when shadow-RF chains
+        // consume more entries than the sweep length.
+        cycles += consumed.max(r);
+        // Whatever is still windowed or queued waits for the next round.
+        window.extend_from_slice(&pending[next..]);
+        pending = window;
+    }
+    cycles
+}
+
+/// Sampled scheduling: schedule at most `max_edges` leading edges and
+/// return (outcome, sampled_fraction). Sampling preserves the stream
+/// structure poorly on sparse tiles, so the engine only samples when a
+/// tile is very large (the default budget keeps full fidelity for the
+/// capped dataset suite).
+pub fn schedule_tile_sampled(
+    edges: &[Edge],
+    src_start: u32,
+    dst_start: u32,
+    rows: usize,
+    reorganize: bool,
+    max_edges: usize,
+) -> (RingOutcome, f64) {
+    if edges.len() <= max_edges {
+        return (
+            schedule_tile(edges, src_start, dst_start, rows, reorganize),
+            1.0,
+        );
+    }
+    let slice = &edges[..max_edges];
+    let frac = slice.len() as f64 / edges.len() as f64;
+    (
+        schedule_tile(slice, src_start, dst_start, rows, reorganize),
+        frac,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat;
+    use crate::util::prop::prop_check;
+
+    fn e(src: u32, dst: u32) -> Edge {
+        Edge::new(src, dst)
+    }
+
+    #[test]
+    fn empty_tile() {
+        let o = schedule_tile(&[], 0, 0, 4, true);
+        assert_eq!(o, RingOutcome::default());
+    }
+
+    #[test]
+    fn single_edge_streams_when_reorganized_circulates_otherwise() {
+        // Reorganized: the one needed source streams straight in
+        // (1 cycle). Original order cannot stream one-shot: it pays a
+        // full batch circulation (R = 4 cycles).
+        let reorg = schedule_tile(&[e(2, 1)], 0, 0, 4, true);
+        assert_eq!(reorg.cycles, 1);
+        assert_eq!(reorg.ideal_cycles, 1);
+        assert_eq!(reorg.sources, 1);
+        let orig = schedule_tile(&[e(2, 1)], 0, 0, 4, false);
+        assert_eq!(orig.cycles, 4);
+    }
+
+    #[test]
+    fn circulation_cycles_behaviour() {
+        // Ascending drains in one sweep.
+        assert_eq!(circulation_cycles(&[0, 1, 2, 3], 8, 4), 4);
+        // Shadow-RF chain extends a sweep past R.
+        assert_eq!(circulation_cycles(&[0; 20], 8, 4), 20);
+        // Any multiset that fits the window sorts for free.
+        assert_eq!(circulation_cycles(&[3, 0, 2, 1], 8, 4), 4);
+        // Long descending sequence beyond the window pays extra rounds.
+        let desc: Vec<u64> = (0..32u64).rev().collect();
+        let c = circulation_cycles(&desc, PARSER_WINDOW, 32);
+        assert!(c > 32, "window should not fully absorb 32-deep disorder: {c}");
+        // The window strictly helps over a 1-entry parser.
+        let narrow = circulation_cycles(&desc, 1, 32);
+        assert!(narrow > c, "narrow {narrow} vs windowed {c}");
+    }
+
+    #[test]
+    fn out_of_order_bank_pays_recirculation() {
+        // 16 distinct sources on a 16-row array, 512 edges -> banks of
+        // 32, written in descending source order so disorder exceeds the
+        // parser window. Reorganization must win strictly.
+        let mut edges = Vec::new();
+        for rep in 0..32 {
+            for s in (0..16u32).rev() {
+                edges.push(e(s, rep % 16));
+            }
+        }
+        let orig = schedule_tile(&edges, 0, 0, 16, false);
+        let reorg = schedule_tile(&edges, 0, 0, 16, true);
+        assert!(
+            reorg.cycles < orig.cycles,
+            "reorg {} !< orig {}",
+            reorg.cycles,
+            orig.cycles
+        );
+        assert_eq!(reorg.ideal_cycles, 32);
+    }
+
+    #[test]
+    fn duplicate_source_consumes_from_shadow_rf() {
+        // R = 2, 4 edges -> banks of 2. Bank 0: two edges from source 1
+        // (rank 1): no descent (equal rank = shadow hit), finishes at
+        // len = 2 under both orders.
+        let edges = [e(1, 0), e(1, 1), e(0, 0), e(0, 1)];
+        let orig = schedule_tile(&edges, 0, 0, 2, false);
+        let reorg = schedule_tile(&edges, 0, 0, 2, true);
+        assert_eq!(orig.cycles, 2);
+        assert_eq!(reorg.cycles, 2);
+    }
+
+    #[test]
+    fn hub_destination_is_load_balanced() {
+        // 64 edges all pointing at one destination: the hashed layout
+        // spreads them across the 8 banks; sorted-source input order
+        // keeps every bank descent-free.
+        let edges: Vec<Edge> = (0..64).map(|i| e(i / 8, 0)).collect();
+        let o = schedule_tile(&edges, 0, 0, 8, true);
+        assert_eq!(o.ideal_cycles, 8);
+        assert!(o.cycles <= 16, "hub serialized: {} cycles", o.cycles);
+        let orig = schedule_tile(&edges, 0, 0, 8, false);
+        assert_eq!(orig.cycles, o.cycles, "sorted input has no descents");
+    }
+
+    #[test]
+    fn dense_tile_is_compute_bound_not_latency_bound() {
+        // 16 sources x 8 dests = 128 edges on an 8-row array: banks of
+        // 16; stream is 16 + 8 cycles; compute needs 16 -> ~stream-bound
+        // but fully pipelined.
+        let mut edges = Vec::new();
+        for s in 0..16 {
+            for d in 0..8 {
+                edges.push(e(s, d));
+            }
+        }
+        let o = schedule_tile(&edges, 0, 0, 8, true);
+        assert_eq!(o.ideal_cycles, 16);
+        assert!(o.cycles <= 16 + 8, "cycles {}", o.cycles);
+        assert!(o.utilization(8) > 0.65, "util {}", o.utilization(8));
+    }
+
+    #[test]
+    fn sparse_stream_pays_injection_latency() {
+        // 4 edges from 4 scattered sources on a 4-row array: the stream
+        // of 4 sources must pass; cycles ~ S + rr, utilization low.
+        let edges = [e(10, 0), e(20, 1), e(30, 2), e(40, 3)];
+        let o = schedule_tile(&edges, 0, 0, 4, true);
+        assert_eq!(o.sources, 4);
+        assert!(o.cycles >= 4 && o.cycles <= 8, "cycles {}", o.cycles);
+        assert_eq!(o.ideal_cycles, 1);
+    }
+
+    #[test]
+    fn prop_reorg_never_slower_and_ideal_never_slower_than_reorg() {
+        prop_check(40, 0x5E11_60, |rng| {
+            let rows = [2usize, 4, 8, 16][rng.gen_usize(0, 4)];
+            let n = rng.gen_usize(rows, 8 * rows);
+            let m = rng.gen_usize(1, 6 * n);
+            let g = rmat::generate(n, m, rmat::RmatParams::default(), rng.next_u64());
+            let orig = schedule_tile(&g.edges, 0, 0, rows, false);
+            let reorg = schedule_tile(&g.edges, 0, 0, rows, true);
+            if reorg.cycles > orig.cycles {
+                return Err(format!(
+                    "reorganized {} > original {} (rows={rows}, n={n}, m={m})",
+                    reorg.cycles, orig.cycles
+                ));
+            }
+            if reorg.ideal_cycles > reorg.cycles {
+                return Err(format!(
+                    "ideal {} > reorganized {}",
+                    reorg.ideal_cycles, reorg.cycles
+                ));
+            }
+            if reorg.edges != m as u64 || orig.edges != m as u64 {
+                return Err("edge count mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_utilization_bounded() {
+        prop_check(30, 0x5E11_61, |rng| {
+            let rows = 8;
+            let n = rng.gen_usize(8, 128);
+            let m = rng.gen_usize(1, 4 * n);
+            let g = rmat::generate(n, m, rmat::RmatParams::default(), rng.next_u64());
+            for reorg in [false, true] {
+                let o = schedule_tile(&g.edges, 0, 0, rows, reorg);
+                let u = o.utilization(rows);
+                if !(0.0..=1.0 + 1e-12).contains(&u) {
+                    return Err(format!("utilization {u} out of range"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sampled_matches_full_when_small() {
+        let g = rmat::generate(64, 256, rmat::RmatParams::default(), 3);
+        let (full, frac) = schedule_tile_sampled(&g.edges, 0, 0, 8, true, 10_000);
+        assert_eq!(frac, 1.0);
+        assert_eq!(full, schedule_tile(&g.edges, 0, 0, 8, true));
+    }
+}

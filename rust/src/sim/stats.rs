@@ -1,0 +1,248 @@
+//! Simulation statistics: cycles, operations, memory traffic and energy,
+//! reported per stage, per layer, and for a whole model pass.
+
+use crate::config::AcceleratorConfig;
+
+/// The three EnGN processing stages (paper §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    FeatureExtraction,
+    Aggregate,
+    Update,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::FeatureExtraction => "feature_extraction",
+            Stage::Aggregate => "aggregate",
+            Stage::Update => "update",
+        }
+    }
+}
+
+/// Counters for one stage of one layer.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    pub cycles: f64,
+    pub ops: f64,
+    /// PE-cycle utilization of the NGPU array during this stage, 0..=1.
+    pub utilization: f64,
+}
+
+/// On-chip / off-chip memory traffic counters (bytes).
+#[derive(Debug, Clone, Default)]
+pub struct TrafficStats {
+    pub rf_bytes: f64,
+    pub davc_bytes: f64,
+    pub bank_bytes: f64,
+    pub hbm_read_bytes: f64,
+    pub hbm_write_bytes: f64,
+    /// Edge-list bytes streamed from HBM (part of hbm_read_bytes).
+    pub edge_bytes: f64,
+    /// Schedule-dependent portion of the HBM traffic (source/destination
+    /// re-streaming + temp spills) — what Fig 15 compares; the one-time
+    /// input read, final output write and edge stream are invariant
+    /// across tile schedules.
+    pub schedule_bytes: f64,
+}
+
+impl TrafficStats {
+    pub fn hbm_total(&self) -> f64 {
+        self.hbm_read_bytes + self.hbm_write_bytes
+    }
+
+    pub fn add(&mut self, other: &TrafficStats) {
+        self.rf_bytes += other.rf_bytes;
+        self.davc_bytes += other.davc_bytes;
+        self.bank_bytes += other.bank_bytes;
+        self.hbm_read_bytes += other.hbm_read_bytes;
+        self.hbm_write_bytes += other.hbm_write_bytes;
+        self.edge_bytes += other.edge_bytes;
+        self.schedule_bytes += other.schedule_bytes;
+    }
+}
+
+/// DAVC behaviour for one layer.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &CacheStats) {
+        self.accesses += other.accesses;
+        self.hits += other.hits;
+    }
+}
+
+/// Per-layer report.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub layer_idx: usize,
+    pub f_in: usize,
+    pub f_out: usize,
+    /// Grid partition factor used for this layer.
+    pub q: usize,
+    pub feature_extraction: StageStats,
+    pub aggregate: StageStats,
+    pub update: StageStats,
+    pub traffic: TrafficStats,
+    pub davc: CacheStats,
+    /// Compute cycles (serialized stages) before memory overlap.
+    pub compute_cycles: f64,
+    /// Cycles the layer actually takes: max(compute, hbm) + serial tail.
+    pub total_cycles: f64,
+    /// Ring utilization during aggregation (consumed / offered PE-cycles).
+    pub ring_utilization: f64,
+}
+
+impl LayerReport {
+    pub fn total_ops(&self) -> f64 {
+        self.feature_extraction.ops + self.aggregate.ops + self.update.ops
+    }
+
+    pub fn stage(&self, s: Stage) -> &StageStats {
+        match s {
+            Stage::FeatureExtraction => &self.feature_extraction,
+            Stage::Aggregate => &self.aggregate,
+            Stage::Update => &self.update,
+        }
+    }
+}
+
+/// Whole-pass report: the simulator's output.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub config_name: String,
+    pub model_name: String,
+    pub dataset_code: String,
+    pub layers: Vec<LayerReport>,
+    pub freq_ghz: f64,
+    /// Dynamic energy (J), split chip vs HBM.
+    pub chip_energy_j: f64,
+    pub hbm_energy_j: f64,
+    /// Chip power (W) = dynamic chip energy / time + static.
+    pub power_w: f64,
+}
+
+impl SimReport {
+    pub fn total_cycles(&self) -> f64 {
+        self.layers.iter().map(|l| l.total_cycles).sum()
+    }
+
+    pub fn total_ops(&self) -> f64 {
+        self.layers.iter().map(|l| l.total_ops()).sum()
+    }
+
+    /// End-to-end inference latency in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.total_cycles() / (self.freq_ghz * 1e9)
+    }
+
+    /// Achieved throughput, GOP/s.
+    pub fn gops(&self) -> f64 {
+        self.total_ops() / self.seconds() / 1e9
+    }
+
+    /// Total energy (chip + HBM), joules.
+    pub fn energy_j(&self) -> f64 {
+        self.chip_energy_j + self.hbm_energy_j
+    }
+
+    /// Energy efficiency, GOPS/W (ops over total energy).
+    pub fn gops_per_watt(&self) -> f64 {
+        self.total_ops() / self.energy_j() / 1e9
+    }
+
+    pub fn traffic(&self) -> TrafficStats {
+        let mut t = TrafficStats::default();
+        for l in &self.layers {
+            t.add(&l.traffic);
+        }
+        t
+    }
+
+    pub fn davc(&self) -> CacheStats {
+        let mut c = CacheStats::default();
+        for l in &self.layers {
+            c.add(&l.davc);
+        }
+        c
+    }
+
+    /// Fraction of peak MAC throughput achieved (Fig 10's 79.7% metric).
+    pub fn peak_fraction(&self, cfg: &AcceleratorConfig) -> f64 {
+        self.gops() / cfg.peak_gops()
+    }
+
+    /// Per-stage share of total compute cycles (Fig 2-style breakdown).
+    pub fn stage_breakdown(&self) -> [f64; 3] {
+        let fe: f64 = self.layers.iter().map(|l| l.feature_extraction.cycles).sum();
+        let ag: f64 = self.layers.iter().map(|l| l.aggregate.cycles).sum();
+        let up: f64 = self.layers.iter().map(|l| l.update.cycles).sum();
+        let total = (fe + ag + up).max(1e-12);
+        [fe / total, ag / total, up / total]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_layer(cycles: f64, ops: f64) -> LayerReport {
+        LayerReport {
+            layer_idx: 0,
+            f_in: 64,
+            f_out: 16,
+            q: 1,
+            feature_extraction: StageStats { cycles, ops, utilization: 0.8 },
+            aggregate: StageStats { cycles: cycles / 2.0, ops: ops / 4.0, utilization: 0.5 },
+            update: StageStats { cycles: cycles / 10.0, ops: ops / 10.0, utilization: 0.3 },
+            traffic: TrafficStats::default(),
+            davc: CacheStats { accesses: 100, hits: 80 },
+            compute_cycles: cycles * 1.6,
+            total_cycles: cycles * 1.7,
+            ring_utilization: 0.6,
+        }
+    }
+
+    #[test]
+    fn report_aggregations() {
+        let r = SimReport {
+            config_name: "EnGN".into(),
+            model_name: "GCN".into(),
+            dataset_code: "CA".into(),
+            layers: vec![dummy_layer(1000.0, 4000.0), dummy_layer(500.0, 2000.0)],
+            freq_ghz: 1.0,
+            chip_energy_j: 1e-6,
+            hbm_energy_j: 1e-6,
+            power_w: 2.5,
+        };
+        assert!((r.total_cycles() - (1700.0 + 850.0)).abs() < 1e-9);
+        let expected_ops = (4000.0 + 1000.0 + 400.0) + (2000.0 + 500.0 + 200.0);
+        assert!((r.total_ops() - expected_ops).abs() < 1e-9);
+        assert!((r.seconds() - 2550.0 / 1e9).abs() < 1e-18);
+        assert!(r.gops() > 0.0);
+        assert!((r.energy_j() - 2e-6).abs() < 1e-18);
+        let bd = r.stage_breakdown();
+        assert!((bd[0] + bd[1] + bd[2] - 1.0).abs() < 1e-12);
+        assert!(bd[0] > bd[1] && bd[1] > bd[2]);
+    }
+
+    #[test]
+    fn cache_stats_hit_rate() {
+        let c = CacheStats { accesses: 10, hits: 7 };
+        assert!((c.hit_rate() - 0.7).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Shared utilities: deterministic RNG, property-test harness, JSON,
+//! human-readable unit formatting.
+
+pub mod fxhash;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a quantity with SI-style suffixes (1.23 K / M / G / T).
+pub fn si(x: f64) -> String {
+    let (v, suffix) = if x.abs() >= 1e12 {
+        (x / 1e12, " T")
+    } else if x.abs() >= 1e9 {
+        (x / 1e9, " G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, " M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, " K")
+    } else {
+        (x, " ")
+    };
+    format!("{v:.2}{suffix}")
+}
+
+/// Format seconds with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{seconds:.2} s")
+    }
+}
+
+/// Format a byte count (B/KB/MB/GB).
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes >= 1e9 {
+        format!("{:.2} GB", bytes / 1e9)
+    } else if bytes >= 1e6 {
+        format!("{:.2} MB", bytes / 1e6)
+    } else if bytes >= 1e3 {
+        format!("{:.2} KB", bytes / 1e3)
+    } else {
+        format!("{bytes:.0} B")
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Geometric mean of a slice (ignores non-positive entries, which cannot
+/// occur for the ratios we aggregate but guards against NaN poisoning).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let vals: Vec<f64> = xs.iter().copied().filter(|v| *v > 0.0).collect();
+    if vals.is_empty() {
+        return 0.0;
+    }
+    (vals.iter().map(|v| v.ln()).sum::<f64>() / vals.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting() {
+        assert_eq!(si(3265.87e9), "3.27 T");
+        assert_eq!(si(42.0), "42.00 ");
+        assert!(fmt_time(0.00123).contains("ms"));
+        assert!(fmt_time(2.5).contains("s"));
+        assert!(fmt_bytes(22e6).contains("MB"));
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 128), 1);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

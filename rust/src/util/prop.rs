@@ -1,0 +1,100 @@
+//! A miniature property-based testing harness (offline stand-in for
+//! `proptest`).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(100, 0xC0FFEE, |rng| {
+//!     let n = rng.gen_usize(1, 64);
+//!     // ... build random input, assert invariant; return Err(msg) on fail
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure, the seed of the failing case is reported so it can be
+//! replayed exactly with [`prop_replay`].
+
+use super::rng::Xoshiro256StarStar;
+
+/// Run `cases` random test cases derived from `base_seed`.
+///
+/// Each case gets its own deterministic RNG (`base_seed + case index`),
+/// so a failure message's seed replays a single case in isolation.
+pub fn prop_check<F>(cases: u64, base_seed: u64, mut f: F)
+where
+    F: FnMut(&mut Xoshiro256StarStar) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn prop_replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Xoshiro256StarStar) -> Result<(), String>,
+{
+    let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert two f32 slices are elementwise close (absolute + relative).
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "allclose failed at [{i}]: {x} vs {y} (|diff|={} > tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_trivial_property() {
+        prop_check(50, 1, |rng| {
+            let n = rng.gen_usize(1, 100);
+            if n < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn prop_check_reports_failure() {
+        prop_check(50, 2, |rng| {
+            let n = rng.gen_usize(0, 10);
+            if n != 7 {
+                Ok(())
+            } else {
+                Err("hit 7".into())
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_close_rejects_far() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-5).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-5, 1e-5).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-5).is_err());
+    }
+}

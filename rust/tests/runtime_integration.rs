@@ -1,0 +1,146 @@
+//! Integration: the full AOT bridge — JAX/Pallas → HLO text →
+//! `HloModuleProto::from_text_file` → PJRT compile → execute — checked
+//! numerically against a hand-rolled Rust reference implementation of the
+//! GCN math, and end-to-end through the serving coordinator.
+//!
+//! Requires `make artifacts` (skips gracefully if missing so `cargo test`
+//! works in a fresh checkout).
+
+use engn::coordinator::{BatchConfig, Executor, InferenceService};
+use engn::runtime::{HostTensor, Runtime};
+use engn::util::prop::assert_allclose;
+use engn::util::rng::Xoshiro256StarStar;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn rand_tensor(rng: &mut Xoshiro256StarStar, shape: &[usize]) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    HostTensor::new(shape.to_vec(), data)
+}
+
+/// Reference GCN forward: relu(A @ (relu(A @ (X W1)) W2)), row-major.
+fn ref_gcn(a: &HostTensor, x: &HostTensor, w1: &HostTensor, w2: &HostTensor) -> Vec<f32> {
+    let layer = |a: &HostTensor, x: &[f32], xn: usize, xf: usize, w: &HostTensor| -> Vec<f32> {
+        let h = w.shape[1];
+        // xw = x @ w
+        let mut xw = vec![0.0f32; xn * h];
+        for i in 0..xn {
+            for k in 0..xf {
+                let xv = x[i * xf + k];
+                if xv != 0.0 {
+                    for j in 0..h {
+                        xw[i * h + j] += xv * w.data[k * h + j];
+                    }
+                }
+            }
+        }
+        // out = relu(a @ xw)
+        let n = a.shape[0];
+        let mut out = vec![0.0f32; n * h];
+        for i in 0..n {
+            for k in 0..xn {
+                let av = a.data[i * xn + k];
+                if av != 0.0 {
+                    for j in 0..h {
+                        out[i * h + j] += av * xw[k * h + j];
+                    }
+                }
+            }
+        }
+        out.iter_mut().for_each(|v| *v = v.max(0.0));
+        out
+    };
+    let h1 = layer(a, &x.data, x.shape[0], x.shape[1], w1);
+    layer(a, &h1, x.shape[0], w1.shape[1], w2)
+}
+
+#[test]
+fn tiny_gcn_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_only(&dir, &["gcn_tiny"]).expect("load gcn_tiny");
+    assert!(["cpu", "host"].contains(&rt.platform().to_lowercase().as_str()));
+    let spec = rt.spec("gcn_tiny").unwrap().clone();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(42);
+    // Build a small normalized-ish adjacency (entries in [0, 0.5]) and
+    // random features/weights.
+    let mut a = rand_tensor(&mut rng, &spec.inputs[0]);
+    a.data.iter_mut().for_each(|v| *v = (v.abs()) * 0.5);
+    let x = rand_tensor(&mut rng, &spec.inputs[1]);
+    let w1 = rand_tensor(&mut rng, &spec.inputs[2]);
+    let w2 = rand_tensor(&mut rng, &spec.inputs[3]);
+
+    let got = rt
+        .execute("gcn_tiny", &[a.clone(), x.clone(), w1.clone(), w2.clone()])
+        .expect("execute");
+    let want = ref_gcn(&a, &x, &w1, &w2);
+    assert_eq!(got.shape, spec.outputs[0]);
+    assert_allclose(&got.data, &want, 1e-4, 1e-4).expect("numerics");
+}
+
+#[test]
+fn execute_validates_shapes_and_names() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_only(&dir, &["gcn_tiny"]).expect("load");
+    let err = rt.execute("nonexistent", &[]).unwrap_err();
+    assert!(err.contains("unknown artifact"), "{err}");
+    let bad = vec![HostTensor::zeros(vec![3, 3])];
+    let err = rt.execute("gcn_tiny", &bad).unwrap_err();
+    assert!(err.contains("expected"), "{err}");
+}
+
+#[test]
+fn repeated_executions_are_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_only(&dir, &["gcn_tiny"]).expect("load");
+    let spec = rt.spec("gcn_tiny").unwrap().clone();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(7);
+    let inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| rand_tensor(&mut rng, s))
+        .collect();
+    let a = rt.execute("gcn_tiny", &inputs).unwrap();
+    let b = rt.execute("gcn_tiny", &inputs).unwrap();
+    assert_eq!(a.data, b.data);
+    assert_eq!(rt.executions(), 2);
+}
+
+#[test]
+fn serving_coordinator_end_to_end_over_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    // The runtime is built inside the worker thread (PJRT is !Send).
+    let svc = InferenceService::start(
+        move || {
+            Runtime::load_only(&dir, &["gcn_tiny"])
+                .map(|rt| Box::new(rt) as Box<dyn Executor>)
+        },
+        BatchConfig::default(),
+    );
+    let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+    let shapes = [vec![8, 8], vec![8, 4], vec![4, 3], vec![3, 2]];
+    let mut rxs = Vec::new();
+    for _ in 0..6 {
+        let inputs: Vec<HostTensor> = shapes.iter().map(|s| rand_tensor(&mut rng, s)).collect();
+        let (_, rx) = svc.submit("gcn_tiny", inputs);
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        let out = resp.result.expect("inference ok");
+        assert_eq!(out.shape, vec![8, 2]);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+    let m = svc.metrics();
+    assert_eq!(m.total_requests, 6);
+    assert!(m.per_artifact["gcn_tiny"].mean_exec_s > 0.0);
+    svc.shutdown();
+}

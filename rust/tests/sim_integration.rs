@@ -1,0 +1,174 @@
+//! Cross-module integration: simulator vs model accounting, experiment
+//! harness sanity at reduced scale, paper-shape assertions that tie the
+//! whole system together.
+
+use engn::baselines::cpu::{CpuModel, Framework};
+use engn::baselines::gpu::GpuModel;
+use engn::baselines::hygcn::HygcnModel;
+use engn::baselines::Workload;
+use engn::config::{AcceleratorConfig, Fidelity};
+use engn::graph::datasets::{self, ScalePolicy};
+use engn::model::{GnnKind, GnnModel};
+use engn::report::experiments::{self, Eval};
+use engn::sim::Simulator;
+use engn::util::geomean;
+
+fn eval() -> Eval {
+    Eval::new(ScalePolicy::Factor(128), 0xBEEF)
+}
+
+/// The headline claim, at reduced scale: EnGN beats every baseline on
+/// every (model, dataset) pair of the paper's suite, and HyGCN sits
+/// between GPUs and EnGN on average.
+#[test]
+fn engn_wins_across_the_suite() {
+    let eval = eval();
+    let mut vs_hygcn = Vec::new();
+    for (kind, spec) in eval.suite() {
+        let p = eval.pair(kind, &spec);
+        let engn_s = p.engn.seconds();
+        assert!(
+            p.cpu_dgl.seconds() > engn_s,
+            "{} {}: CPU-DGL {} <= EnGN {}",
+            kind.name(),
+            spec.code,
+            p.cpu_dgl.seconds(),
+            engn_s
+        );
+        if !p.gpu_dgl.oom {
+            assert!(
+                p.gpu_dgl.seconds() > engn_s * 0.8,
+                "{} {}: GPU-DGL {} unexpectedly below EnGN {}",
+                kind.name(),
+                spec.code,
+                p.gpu_dgl.seconds(),
+                engn_s
+            );
+        }
+        vs_hygcn.push(p.hygcn.seconds() / engn_s);
+    }
+    let hygcn_geo = geomean(&vs_hygcn);
+    assert!(
+        hygcn_geo > 1.2 && hygcn_geo < 20.0,
+        "EnGN vs HyGCN geomean {hygcn_geo} out of the paper's ballpark (2.97x)"
+    );
+}
+
+/// Energy-efficiency ordering (Fig 11): EnGN > HyGCN > GPU > CPU.
+#[test]
+fn energy_efficiency_ordering() {
+    let eval = eval();
+    let spec = datasets::by_code("PB").unwrap();
+    let p = eval.pair(GnnKind::Gcn, &spec);
+    let engn = p.engn.gops_per_watt();
+    let hygcn = p.hygcn.gops_per_watt();
+    let gpu = p.gpu_dgl.gops_per_watt();
+    let cpu = p.cpu_dgl.gops_per_watt();
+    assert!(engn > hygcn, "EnGN {engn} <= HyGCN {hygcn}");
+    assert!(hygcn > gpu, "HyGCN {hygcn} <= GPU {gpu}");
+    assert!(gpu > cpu, "GPU {gpu} <= CPU {cpu}");
+}
+
+/// Cycle and Phase fidelity agree (they only differ via sampling, which
+/// the capped suite does not trigger; this guards the invariant).
+#[test]
+fn fidelity_modes_agree_at_capped_scale() {
+    let spec = datasets::by_code("CA").unwrap();
+    let g = spec.instantiate(ScalePolicy::Capped, 5);
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let mut cfg = AcceleratorConfig::engn();
+    cfg.fidelity = Fidelity::Cycle;
+    let cycle = Simulator::new(cfg.clone()).run(&model, &g, "CA");
+    cfg.fidelity = Fidelity::Phase;
+    let phase = Simulator::new(cfg).run(&model, &g, "CA");
+    let rel = (cycle.total_cycles() - phase.total_cycles()).abs() / cycle.total_cycles();
+    assert!(rel < 0.05, "fidelity divergence {rel}");
+}
+
+/// The simulator's op accounting must equal the descriptor model's ops
+/// for every architecture (not just GCN).
+#[test]
+fn ops_match_descriptors_for_all_models() {
+    for (kind, code) in [
+        (GnnKind::Gcn, "PB"),
+        (GnnKind::GsPool, "RD"),
+        (GnnKind::GatedGcn, "SA"),
+        (GnnKind::Grn, "SC"),
+        (GnnKind::Rgcn, "AF"),
+    ] {
+        let spec = datasets::by_code(code).unwrap();
+        let g = spec.instantiate(ScalePolicy::Factor(128), 3);
+        let model = GnnModel::for_dataset(kind, &spec);
+        let r = Simulator::new(AcceleratorConfig::engn()).run(&model, &g, code);
+        let hist = engn::model::ops::relation_histogram(
+            &g.relations,
+            g.num_relations,
+            g.num_edges(),
+        );
+        let expected: f64 = engn::model::ops::model_ops(
+            &model,
+            g.num_vertices,
+            g.num_edges(),
+            &hist,
+            |l| engn::model::ops::dasr_order(&model, l),
+        )
+        .iter()
+        .map(|o| o.total())
+        .sum();
+        let rel = (r.total_ops() - expected).abs() / expected;
+        assert!(rel < 1e-9, "{} {code}: ops mismatch {rel}", kind.name());
+    }
+}
+
+/// Baselines respond to workload scale monotonically (sanity for the
+/// analytic models).
+#[test]
+fn baselines_scale_monotonically() {
+    let spec = datasets::by_code("PB").unwrap();
+    let m = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let small = Workload::new(10_000, 50_000);
+    let large = Workload::new(100_000, 500_000);
+    for seconds in [
+        |w: &Workload, m: &GnnModel| CpuModel::new(Framework::Dgl).run(m, w).seconds(),
+        |w: &Workload, m: &GnnModel| GpuModel::new(Framework::Dgl).run(m, w).seconds(),
+        |w: &Workload, m: &GnnModel| HygcnModel::paper().run(m, w).seconds(),
+    ] {
+        assert!(seconds(&large, &m) > seconds(&small, &m));
+    }
+}
+
+/// Every experiment renders, has content, and round-trips through CSV.
+#[test]
+fn all_experiments_render_at_small_scale() {
+    let eval = Eval::new(ScalePolicy::Factor(512), 11);
+    for id in experiments::ALL_IDS {
+        let t = experiments::by_id(&eval, id).unwrap_or_else(|| panic!("missing {id}"));
+        assert!(!t.rows.is_empty(), "{id} has no rows");
+        let rendered = t.render();
+        assert!(rendered.contains(&t.id), "{id} render");
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), t.rows.len() + 1, "{id} csv");
+    }
+}
+
+/// EnGN's per-configuration scaling (Fig 17's shape): more rows help,
+/// 32 columns do not when output dims are 16.
+#[test]
+fn pe_array_scaling_shape() {
+    let spec = datasets::by_code("PB").unwrap();
+    let g = spec.instantiate(ScalePolicy::Capped, 9);
+    let m = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let gops = |rows: usize, cols: usize| {
+        Simulator::new(AcceleratorConfig::with_array(rows, cols))
+            .run(&m, &g, "PB")
+            .gops()
+    };
+    let g32 = gops(32, 16);
+    let g128 = gops(128, 16);
+    assert!(g128 > g32, "rows should scale: {g128} vs {g32}");
+    let g32x32 = gops(32, 32);
+    assert!(
+        g32x32 < g32 * 1.15,
+        "extra columns should not help at hidden=16: {g32x32} vs {g32}"
+    );
+}
