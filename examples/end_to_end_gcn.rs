@@ -89,10 +89,12 @@ fn main() {
         // service answering queries over a shared graph).
         let mut r = Xoshiro256StarStar::seed_from_u64(100 + i);
         let xi = rand2(&mut r, n, f, 0.5);
-        let (_, rx) = svc.submit(
-            "gcn_forward",
-            vec![a_hat.clone(), xi, w1.clone(), w2.clone()],
-        );
+        let (_, rx) = svc
+            .submit(
+                "gcn_forward",
+                vec![a_hat.clone(), xi, w1.clone(), w2.clone()],
+            )
+            .expect("demo burst fits the default intake queue");
         rxs.push(rx);
     }
     let mut latencies = Vec::new();

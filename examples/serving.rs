@@ -1,13 +1,15 @@
 //! Multi-model GNN serving scenario (the e-commerce recommendation
 //! motivation from the paper's introduction): a mixed stream of GCN,
 //! GRN and R-GCN inference requests flows through the coordinator's
-//! router + batcher onto the PJRT runtime, while the EnGN simulator
-//! projects what the same request mix would cost on the accelerator.
+//! bounded intake and FIFO-fair batcher onto multiple PJRT worker
+//! threads, while the EnGN simulator projects what the same request mix
+//! would cost on the accelerator. Overloads surface as typed `Busy`
+//! rejections, which this client answers with backoff-and-retry.
 //!
 //!     make artifacts && cargo run --release --offline --example serving
 
 use engn::config::AcceleratorConfig;
-use engn::coordinator::{BatchConfig, Executor, InferenceService};
+use engn::coordinator::{BatchConfig, Executor, InferenceService, ServiceConfig, SubmitError};
 use engn::graph::datasets::{DatasetGroup, DatasetSpec};
 use engn::graph::rmat::{self, RmatParams};
 use engn::model::{GnnKind, GnnModel};
@@ -33,16 +35,24 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(24);
 
+    let workers: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
     let dir2 = dir.clone();
     let svc = InferenceService::start(
         move || Runtime::load_only(&dir2, &MODELS).map(|rt| Box::new(rt) as Box<dyn Executor>),
-        BatchConfig {
-            max_batch: 6,
-            max_wait: Duration::from_millis(3),
+        ServiceConfig {
+            batch: BatchConfig {
+                max_batch: 6,
+                max_wait: Duration::from_millis(3),
+            },
+            workers,
+            queue_capacity: 128,
         },
     );
 
-    println!("submitting {requests} mixed requests ({MODELS:?}) ...");
+    println!("submitting {requests} mixed requests ({MODELS:?}) over {workers} workers ...");
     let mut rng = Xoshiro256StarStar::seed_from_u64(1);
     let mut rxs = Vec::new();
     let t0 = std::time::Instant::now();
@@ -62,7 +72,23 @@ fn main() {
                 )
             })
             .collect();
-        rxs.push((name, svc.submit(name, inputs).1));
+        // Bounded intake: a `Busy` rejection is the shed signal, so back
+        // off and retry instead of queueing without limit.
+        loop {
+            match svc.submit(name, inputs.clone()) {
+                Ok((_, rx)) => {
+                    rxs.push((name, rx));
+                    break;
+                }
+                Err(SubmitError::Busy { .. }) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => {
+                    eprintln!("{name}: {e}");
+                    break;
+                }
+            }
+        }
     }
     let mut ok = 0usize;
     for (name, rx) in rxs {
@@ -80,6 +106,10 @@ fn main() {
     );
     println!("per-model serving stats (host CPU via PJRT):");
     let metrics = svc.metrics();
+    println!(
+        "  workers={} busy-rejections={}",
+        metrics.workers, metrics.rejected
+    );
     let mut names: Vec<_> = metrics.per_artifact.keys().cloned().collect();
     names.sort();
     for name in &names {

@@ -1,9 +1,16 @@
 //! Dynamic batching: group same-artifact requests within a bounded wait
 //! window, oldest-first, without starving other artifacts.
+//!
+//! Two layers live here:
+//! * [`form_batch`] — the pull-based batch former over a single FIFO
+//!   queue (the original coordinator shape; kept as a utility and for
+//!   its fairness tests);
+//! * [`PendingQueues`] — per-artifact FIFO queues with a global-FIFO
+//!   fairness rule, which the multi-worker service's workers pull from.
 
 use super::service::Request;
-use std::collections::VecDeque;
-use std::time::Duration;
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct BatchConfig {
@@ -25,26 +32,104 @@ impl Default for BatchConfig {
 
 /// Pull-based batch former over a pending queue.
 ///
-/// The worker owns a `VecDeque<Request>`; `form_batch` removes and
+/// The caller owns a `VecDeque<Request>`; `form_batch` removes and
 /// returns the next batch: the artifact of the *oldest* pending request
 /// determines the batch key (FIFO fairness across models), and up to
 /// `max_batch` requests with that artifact are drained in arrival order.
+/// Single pass, O(n); the relative order of everything left behind is
+/// preserved.
 pub fn form_batch(pending: &mut VecDeque<Request>, cfg: &BatchConfig) -> Vec<Request> {
     let Some(front) = pending.front() else {
         return Vec::new();
     };
     let key = front.artifact.clone();
     let mut batch = Vec::new();
-    let mut i = 0;
-    while i < pending.len() && batch.len() < cfg.max_batch {
-        if pending[i].artifact == key {
-            // O(n) removal is fine at serving queue depths.
-            batch.push(pending.remove(i).unwrap());
+    let mut rest = VecDeque::with_capacity(pending.len());
+    while let Some(req) = pending.pop_front() {
+        if batch.len() < cfg.max_batch && req.artifact == key {
+            batch.push(req);
         } else {
-            i += 1;
+            rest.push_back(req);
         }
     }
+    *pending = rest;
     batch
+}
+
+/// Per-artifact FIFO queues with a global-FIFO fairness rule: the
+/// artifact owning the globally oldest queued request is served first,
+/// and a batch drains that artifact's queue in arrival order.
+///
+/// Arrival order is tracked with an internal monotonic sequence number,
+/// so fairness does not depend on `Instant` resolution.
+#[derive(Default)]
+pub struct PendingQueues {
+    queues: HashMap<String, VecDeque<(u64, Request)>>,
+    next_seq: u64,
+    len: usize,
+}
+
+impl PendingQueues {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total queued requests across all artifacts.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(&mut self, req: Request) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queues
+            .entry(req.artifact.clone())
+            .or_default()
+            .push_back((seq, req));
+        self.len += 1;
+    }
+
+    /// The artifact whose head request is globally oldest, with that
+    /// head's enqueue time and the artifact's current queue depth.
+    /// `None` when nothing is queued.
+    pub fn oldest_head(&self) -> Option<(String, Instant, usize)> {
+        self.queues
+            .iter()
+            .filter_map(|(name, q)| q.front().map(|(seq, r)| (*seq, name, r.enqueued, q.len())))
+            .min_by_key(|(seq, ..)| *seq)
+            .map(|(_, name, enqueued, depth)| (name.clone(), enqueued, depth))
+    }
+
+    /// An artifact whose queue already holds a full batch (`depth >=
+    /// max`), oldest head first. Workers use this to stay busy while the
+    /// globally oldest request's batching window is still collecting.
+    pub fn full_artifact(&self, max: usize) -> Option<String> {
+        self.queues
+            .iter()
+            .filter(|(_, q)| q.len() >= max)
+            .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |(seq, _)| *seq))
+            .map(|(name, _)| name.clone())
+    }
+
+    /// Drain up to `max` oldest requests for `artifact`, in arrival
+    /// order. Empty when the artifact has no queue (e.g. another worker
+    /// took it between `oldest_head` and this call).
+    pub fn take_batch(&mut self, artifact: &str, max: usize) -> Vec<Request> {
+        let Some(q) = self.queues.get_mut(artifact) else {
+            return Vec::new();
+        };
+        let take = q.len().min(max);
+        let batch: Vec<Request> = q.drain(..take).map(|(_, r)| r).collect();
+        if q.is_empty() {
+            self.queues.remove(artifact);
+        }
+        self.len -= batch.len();
+        batch
+    }
 }
 
 #[cfg(test)]
@@ -99,5 +184,90 @@ mod tests {
     fn empty_queue_yields_empty_batch() {
         let mut q = VecDeque::new();
         assert!(form_batch(&mut q, &BatchConfig::default()).is_empty());
+    }
+
+    /// The single-pass drain must keep FIFO order for requests left
+    /// behind, including same-key requests beyond the `max_batch` cut.
+    #[test]
+    fn drain_preserves_fifo_past_max_batch() {
+        let mut q: VecDeque<Request> = [
+            req(1, "gcn"),
+            req(2, "grn"),
+            req(3, "gcn"),
+            req(4, "gcn"),
+            req(5, "gcn"),
+            req(6, "grn"),
+        ]
+        .into_iter()
+        .collect();
+        let cfg = BatchConfig {
+            max_batch: 3,
+            ..Default::default()
+        };
+        let b1 = form_batch(&mut q, &cfg);
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        // Remainder keeps arrival order: the overflow gcn (5) must not
+        // jump ahead of the older grn (2).
+        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 5, 6]);
+        let b2 = form_batch(&mut q, &cfg);
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 6]);
+        let b3 = form_batch(&mut q, &cfg);
+        assert_eq!(b3.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pending_queues_fifo_fair_across_artifacts() {
+        let mut pq = PendingQueues::new();
+        for r in [req(1, "gcn"), req(2, "grn"), req(3, "gcn"), req(4, "rgcn")] {
+            pq.push(r);
+        }
+        assert_eq!(pq.len(), 4);
+        // gcn owns the oldest head and has depth 2.
+        let (name, _, depth) = pq.oldest_head().expect("head");
+        assert_eq!(name, "gcn");
+        assert_eq!(depth, 2);
+        let b = pq.take_batch("gcn", 8);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        // grn (seq 1) now precedes rgcn (seq 3).
+        let (name, _, _) = pq.oldest_head().expect("head");
+        assert_eq!(name, "grn");
+        assert_eq!(pq.take_batch("grn", 8).len(), 1);
+        assert_eq!(pq.take_batch("rgcn", 8).len(), 1);
+        assert!(pq.is_empty());
+        assert!(pq.oldest_head().is_none());
+    }
+
+    #[test]
+    fn pending_queues_full_artifact_prefers_oldest_full_queue() {
+        let mut pq = PendingQueues::new();
+        // grn arrives first but never fills; gcn and rgcn both fill.
+        for r in [
+            req(1, "grn"),
+            req(2, "gcn"),
+            req(3, "rgcn"),
+            req(4, "rgcn"),
+            req(5, "gcn"),
+        ] {
+            pq.push(r);
+        }
+        assert_eq!(pq.full_artifact(2).as_deref(), Some("gcn"));
+        assert_eq!(pq.full_artifact(3), None);
+        pq.take_batch("gcn", 2);
+        assert_eq!(pq.full_artifact(2).as_deref(), Some("rgcn"));
+    }
+
+    #[test]
+    fn pending_queues_take_batch_caps_and_accounts() {
+        let mut pq = PendingQueues::new();
+        for i in 0..5 {
+            pq.push(req(i, "gcn"));
+        }
+        let b = pq.take_batch("gcn", 2);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(pq.len(), 3);
+        assert!(pq.take_batch("unknown", 2).is_empty());
+        assert_eq!(pq.take_batch("gcn", 10).len(), 3);
+        assert!(pq.is_empty());
     }
 }

@@ -1,16 +1,31 @@
-//! L3 coordinator: an inference-serving layer over the PJRT runtime and
-//! the EnGN simulator.
+//! L3 coordinator: a sharded inference-serving layer over the PJRT
+//! runtime and the EnGN simulator.
 //!
 //! EnGN is an accelerator paper, so the coordination contribution is a
-//! *driver*: a request router + dynamic batcher in the style of a model
-//! server. Requests name an artifact (a compiled GNN forward); the
-//! batcher groups same-model requests to amortize dispatch, a worker
-//! executes them on the PJRT runtime, and per-request metrics
-//! (queue wait, execution time, batch size) are recorded — the numbers
-//! the serving example reports next to the simulated EnGN latency.
+//! *driver* shaped like a model server, built around the paper's thesis
+//! that throughput comes from amortizing work across co-scheduled
+//! vertices/requests (§4.1, GPA dataflow):
+//!
+//! * **Bounded intake** — [`InferenceService::submit`] sheds load with a
+//!   typed [`SubmitError::Busy`] once the queue hits capacity, instead
+//!   of growing an unbounded channel;
+//! * **FIFO-fair per-artifact queues** — [`batcher::PendingQueues`]
+//!   serves the artifact owning the globally oldest request first, so a
+//!   hot model cannot starve the others;
+//! * **N worker threads** — each constructs its own executor (PJRT
+//!   handles are thread-local), pulls whole batches and answers them;
+//! * **Genuinely batched execution** — a formed batch is served by ONE
+//!   [`Executor::execute_batch`] call (the runtime stacks same-shape
+//!   requests along a new leading axis), not a per-request loop;
+//! * **Per-worker metrics** — each worker accumulates privately;
+//!   [`InferenceService::metrics`] merges on snapshot, so the request
+//!   hot path never takes a global metrics mutex.
 
 pub mod batcher;
 pub mod service;
 
-pub use batcher::BatchConfig;
-pub use service::{Executor, InferenceService, MetricsSnapshot, Request, Response};
+pub use batcher::{form_batch, BatchConfig, PendingQueues};
+pub use service::{
+    ArtifactStats, Executor, InferenceService, MetricsSnapshot, Request, Response, ServiceConfig,
+    SubmitError,
+};

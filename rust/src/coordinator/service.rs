@@ -1,29 +1,60 @@
-//! The inference service: request intake, the batching worker thread,
-//! execution on an [`Executor`] (the PJRT runtime in production, a mock
-//! in tests), and latency metrics.
+//! The inference service: bounded request intake with explicit overload
+//! shedding, N batching worker threads pulling FIFO-fair per-artifact
+//! queues, genuinely batched execution on an [`Executor`] (the PJRT
+//! runtime in production, mocks in tests), and per-worker latency
+//! metrics merged on snapshot.
 
-use super::batcher::{form_batch, BatchConfig};
+use super::batcher::{BatchConfig, PendingQueues};
 use crate::runtime::HostTensor;
-use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// How long an idle worker sleeps between stop checks when nothing is
+/// queued.
+const IDLE_POLL: Duration = Duration::from_millis(25);
 
 /// Anything that can execute a named artifact. Implemented by
 /// [`crate::runtime::Runtime`]; tests use mocks.
 ///
 /// PJRT handles are not `Send` (the `xla` crate wraps `Rc` + raw
-/// pointers), so the service *constructs the executor inside its worker
+/// pointers), so the service *constructs one executor inside each worker
 /// thread* via a loader closure and the trait itself needs no thread
 /// bounds.
 pub trait Executor: 'static {
     fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String>;
+
+    /// Execute a whole formed batch with ONE call: `batches[i]` is the
+    /// complete input set of request `i`, and the returned vec must hold
+    /// one result per request, in order. The default implementation
+    /// loops over [`Executor::execute`]; backends that can amortize
+    /// dispatch (the PJRT runtime stacks same-shape requests along a new
+    /// leading axis) override it.
+    fn execute_batch(
+        &self,
+        artifact: &str,
+        batches: &[Vec<HostTensor>],
+    ) -> Vec<Result<HostTensor, String>> {
+        batches
+            .iter()
+            .map(|inputs| self.execute(artifact, inputs))
+            .collect()
+    }
 }
 
 impl Executor for crate::runtime::Runtime {
     fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
         crate::runtime::Runtime::execute(self, artifact, inputs)
+    }
+
+    fn execute_batch(
+        &self,
+        artifact: &str,
+        batches: &[Vec<HostTensor>],
+    ) -> Vec<Result<HostTensor, String>> {
+        crate::runtime::Runtime::execute_batch(self, artifact, batches)
     }
 }
 
@@ -46,13 +77,122 @@ pub struct Response {
     pub batch_size: usize,
 }
 
+/// Typed intake rejection: the service sheds load instead of queueing
+/// without bound.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded intake queue is full. Callers should back off and
+    /// retry (or surface the overload to their own caller).
+    Busy { queue_depth: usize, capacity: usize },
+    /// [`InferenceService::shutdown`] has begun; no new work is accepted
+    /// while the queues drain.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy {
+                queue_depth,
+                capacity,
+            } => write!(f, "service busy: intake queue at {queue_depth}/{capacity}"),
+            SubmitError::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Service-level configuration. `From<BatchConfig>` keeps the common
+/// "just set the batching window" call sites short.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub batch: BatchConfig,
+    /// Worker threads. Each constructs its own executor via the loader
+    /// closure (PJRT handles are thread-local), so artifacts are
+    /// effectively sharded per worker.
+    pub workers: usize,
+    /// Bounded intake: submissions past this depth are shed with
+    /// [`SubmitError::Busy`].
+    pub queue_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            batch: BatchConfig::default(),
+            workers: 2,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+impl From<BatchConfig> for ServiceConfig {
+    fn from(batch: BatchConfig) -> Self {
+        Self {
+            batch,
+            ..Self::default()
+        }
+    }
+}
+
+/// Most recent samples kept per artifact per worker. Totals
+/// (`count`/`errors`) stay exact; the sample vectors are bounded ring
+/// windows so a long-running service doesn't grow memory per request
+/// and snapshots don't sort unbounded history.
+const MAX_SAMPLES: usize = 4096;
+
+/// Per-artifact accumulator. Each worker owns one map privately and only
+/// the metrics snapshot ever touches another thread's copy, so request
+/// hot paths never contend on a global metrics mutex.
 #[derive(Debug, Default, Clone)]
 struct ArtifactMetrics {
     count: u64,
     errors: u64,
+    /// Per-request: execution time of the batch that served the request
+    /// (ring window of the last [`MAX_SAMPLES`]).
     exec_s: Vec<f64>,
+    /// Per-request: time from enqueue to batch start (same window).
     wait_s: Vec<f64>,
+    /// Per-*batch* sizes (one entry per formed batch, NOT per request —
+    /// recording per request overweights large batches).
     batch_sizes: Vec<usize>,
+    /// Per-*batch* execution times (throughput denominators), aligned
+    /// slot-for-slot with `batch_sizes`.
+    batch_exec_s: Vec<f64>,
+    /// Ring cursors for the per-request and per-batch windows.
+    req_cursor: usize,
+    batch_cursor: usize,
+}
+
+impl ArtifactMetrics {
+    fn record_batch(&mut self, batch_size: usize, exec_s: f64) {
+        self.count += batch_size as u64;
+        if self.batch_sizes.len() < MAX_SAMPLES {
+            self.batch_sizes.push(batch_size);
+            self.batch_exec_s.push(exec_s);
+        } else {
+            let slot = self.batch_cursor % MAX_SAMPLES;
+            self.batch_sizes[slot] = batch_size;
+            self.batch_exec_s[slot] = exec_s;
+        }
+        self.batch_cursor += 1;
+    }
+
+    fn record_request(&mut self, exec_s: f64, wait_s: f64, is_err: bool) {
+        if is_err {
+            self.errors += 1;
+        }
+        if self.exec_s.len() < MAX_SAMPLES {
+            self.exec_s.push(exec_s);
+            self.wait_s.push(wait_s);
+        } else {
+            let slot = self.req_cursor % MAX_SAMPLES;
+            self.exec_s[slot] = exec_s;
+            self.wait_s[slot] = wait_s;
+        }
+        self.req_cursor += 1;
+    }
 }
 
 /// Aggregated service metrics.
@@ -60,6 +200,10 @@ struct ArtifactMetrics {
 pub struct MetricsSnapshot {
     pub per_artifact: HashMap<String, ArtifactStats>,
     pub total_requests: u64,
+    /// Submissions shed with [`SubmitError::Busy`].
+    pub rejected: u64,
+    /// Worker threads serving the queues.
+    pub workers: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -70,145 +214,225 @@ pub struct ArtifactStats {
     pub p95_exec_s: f64,
     pub mean_wait_s: f64,
     pub mean_batch: f64,
-    /// Requests per second of execution time (batching efficiency).
+    /// Requests per second of batch execution time (batching efficiency:
+    /// co-batched requests share one denominator entry).
     pub throughput_rps: f64,
 }
 
+/// Ceil nearest-rank percentile: the smallest element with at least a
+/// `p` fraction of the sample at or below it. (`.round()` here returned
+/// the max for some counts and a below-p element for others.) The
+/// round-to-nearest guard absorbs f64 noise: `0.95 * 20` lands a hair
+/// above 19 and must not ceil to 20.
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-    sorted[idx]
+    let exact = p * sorted.len() as f64;
+    let near = exact.round();
+    let rank = if (exact - near).abs() < 1e-9 {
+        near
+    } else {
+        exact.ceil()
+    };
+    sorted[(rank as usize).clamp(1, sorted.len()) - 1]
 }
 
-/// The running service. Dropping it (or calling [`shutdown`]) stops the
-/// worker after the queue drains.
+fn aggregate(am: &ArtifactMetrics) -> ArtifactStats {
+    let mut exec_sorted = am.exec_s.clone();
+    exec_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let batch_exec_total: f64 = am.batch_exec_s.iter().sum();
+    // Means and throughput are over the retained sample window (the
+    // full history until it exceeds MAX_SAMPLES); count/errors are
+    // exact lifetime totals.
+    ArtifactStats {
+        count: am.count,
+        errors: am.errors,
+        mean_exec_s: am.exec_s.iter().sum::<f64>() / am.exec_s.len().max(1) as f64,
+        p95_exec_s: percentile(&exec_sorted, 0.95),
+        mean_wait_s: am.wait_s.iter().sum::<f64>() / am.wait_s.len().max(1) as f64,
+        mean_batch: am.batch_sizes.iter().sum::<usize>() as f64
+            / am.batch_sizes.len().max(1) as f64,
+        throughput_rps: if batch_exec_total > 0.0 {
+            am.batch_sizes.iter().sum::<usize>() as f64 / batch_exec_total
+        } else {
+            0.0
+        },
+    }
+}
+
+/// Merge a worker's accumulator into a snapshot-local one. The merged
+/// sample vectors may exceed [`MAX_SAMPLES`] (up to workers × window);
+/// that's fine — the merge target is never pushed to through the ring
+/// path, and [`aggregate`] handles any length.
+fn merge_into(dst: &mut ArtifactMetrics, src: &ArtifactMetrics) {
+    dst.count += src.count;
+    dst.errors += src.errors;
+    dst.exec_s.extend_from_slice(&src.exec_s);
+    dst.wait_s.extend_from_slice(&src.wait_s);
+    dst.batch_sizes.extend_from_slice(&src.batch_sizes);
+    dst.batch_exec_s.extend_from_slice(&src.batch_exec_s);
+}
+
+/// Queue state guarded by one mutex: the per-artifact pending queues and
+/// the shutdown flag (inside the lock so submit/stop/drain can never
+/// race).
+struct QueueState {
+    pending: PendingQueues,
+    stop: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+type WorkerMetrics = Arc<Mutex<HashMap<String, ArtifactMetrics>>>;
+
+/// The running service. Dropping it (or calling [`shutdown`]) stops
+/// intake, drains the queues and joins the workers.
 ///
 /// [`shutdown`]: InferenceService::shutdown
 pub struct InferenceService {
-    tx: mpsc::Sender<Request>,
-    worker: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    worker_metrics: Vec<WorkerMetrics>,
     next_id: AtomicU64,
-    stop: Arc<AtomicBool>,
-    metrics: Arc<Mutex<HashMap<String, ArtifactMetrics>>>,
+    rejected: AtomicU64,
+    cfg: ServiceConfig,
 }
 
 impl InferenceService {
-    /// Start the service. `make_executor` runs once on the worker thread
-    /// (PJRT compilation happens there); if it fails, every request is
-    /// answered with the load error.
-    pub fn start<F>(make_executor: F, cfg: BatchConfig) -> Self
+    /// Start the service. `make_executor` runs once *per worker*, inside
+    /// that worker's thread (PJRT compilation happens there); if it
+    /// fails, that worker answers every request it pulls with the load
+    /// error.
+    pub fn start<F>(make_executor: F, cfg: impl Into<ServiceConfig>) -> Self
     where
-        F: FnOnce() -> Result<Box<dyn Executor>, String> + Send + 'static,
+        F: Fn() -> Result<Box<dyn Executor>, String> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let stop = Arc::new(AtomicBool::new(false));
-        let metrics: Arc<Mutex<HashMap<String, ArtifactMetrics>>> =
-            Arc::new(Mutex::new(HashMap::new()));
-        let worker = {
-            let stop = stop.clone();
-            let metrics = metrics.clone();
-            std::thread::spawn(move || match make_executor() {
-                Ok(executor) => worker_loop(rx, executor, cfg, stop, metrics),
-                Err(e) => {
-                    // Answer everything with the load failure until stop.
-                    while !stop.load(Ordering::SeqCst) {
-                        match rx.recv_timeout(Duration::from_millis(10)) {
-                            Ok(req) => {
-                                let _ = req.reply.send(Response {
-                                    id: req.id,
-                                    result: Err(format!("executor failed to load: {e}")),
-                                    queue_wait: Duration::ZERO,
-                                    exec_time: Duration::ZERO,
-                                    batch_size: 0,
-                                });
-                            }
-                            Err(mpsc::RecvTimeoutError::Timeout) => {}
-                            Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                        }
-                    }
-                }
-            })
-        };
+        let mut cfg = cfg.into();
+        cfg.workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                pending: PendingQueues::new(),
+                stop: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let make_executor = Arc::new(make_executor);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let mut worker_metrics = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let metrics: WorkerMetrics = Arc::new(Mutex::new(HashMap::new()));
+            worker_metrics.push(metrics.clone());
+            let shared = shared.clone();
+            let make = make_executor.clone();
+            let batch_cfg = cfg.batch.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("engn-worker-{i}"))
+                .spawn(move || {
+                    let executor = (*make)();
+                    worker_loop(&shared, &executor, &batch_cfg, &metrics);
+                })
+                .expect("spawn inference worker");
+            workers.push(handle);
+        }
         Self {
-            tx,
-            worker: Some(worker),
+            shared,
+            workers,
+            worker_metrics,
             next_id: AtomicU64::new(1),
-            stop,
-            metrics,
+            rejected: AtomicU64::new(0),
+            cfg,
         }
     }
 
-    /// Submit a request; returns (request id, response receiver).
+    /// Submit a request; returns (request id, response receiver), or a
+    /// typed rejection when the intake queue is full or the service is
+    /// draining.
     pub fn submit(
         &self,
         artifact: &str,
         inputs: Vec<HostTensor>,
-    ) -> (u64, mpsc::Receiver<Response>) {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+    ) -> Result<(u64, mpsc::Receiver<Response>), SubmitError> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        let req = Request {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.stop {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if st.pending.len() >= self.cfg.queue_capacity {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Busy {
+                queue_depth: st.pending.len(),
+                capacity: self.cfg.queue_capacity,
+            });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        st.pending.push(Request {
             id,
             artifact: artifact.to_string(),
             inputs,
             enqueued: Instant::now(),
             reply: reply_tx,
-        };
-        // A send failure means the worker is gone; the caller sees it as
-        // a disconnected reply channel.
-        let _ = self.tx.send(req);
-        (id, reply_rx)
+        });
+        drop(st);
+        self.shared.cv.notify_all();
+        Ok((id, reply_rx))
     }
 
     /// Convenience: submit and block for the response.
-    pub fn infer(&self, artifact: &str, inputs: Vec<HostTensor>) -> Response {
-        let (id, rx) = self.submit(artifact, inputs);
-        rx.recv().unwrap_or(Response {
+    pub fn infer(
+        &self,
+        artifact: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Response, SubmitError> {
+        let (id, rx) = self.submit(artifact, inputs)?;
+        Ok(rx.recv().unwrap_or(Response {
             id,
-            result: Err("service stopped".to_string()),
+            result: Err("service stopped before responding".to_string()),
             queue_wait: Duration::ZERO,
             exec_time: Duration::ZERO,
             batch_size: 0,
-        })
+        }))
     }
 
+    /// Merge every worker's private accumulator into one snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
-        let m = self.metrics.lock().unwrap();
+        let mut merged: HashMap<String, ArtifactMetrics> = HashMap::new();
+        for wm in &self.worker_metrics {
+            let m = wm.lock().unwrap();
+            for (name, am) in m.iter() {
+                merge_into(merged.entry(name.clone()).or_default(), am);
+            }
+        }
         let mut per_artifact = HashMap::new();
         let mut total = 0;
-        for (name, am) in m.iter() {
+        for (name, am) in &merged {
             total += am.count;
-            let mut exec_sorted = am.exec_s.clone();
-            exec_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let exec_total: f64 = am.exec_s.iter().sum();
-            per_artifact.insert(
-                name.clone(),
-                ArtifactStats {
-                    count: am.count,
-                    errors: am.errors,
-                    mean_exec_s: exec_total / am.count.max(1) as f64,
-                    p95_exec_s: percentile(&exec_sorted, 0.95),
-                    mean_wait_s: am.wait_s.iter().sum::<f64>() / am.count.max(1) as f64,
-                    mean_batch: am.batch_sizes.iter().sum::<usize>() as f64
-                        / am.batch_sizes.len().max(1) as f64,
-                    throughput_rps: if exec_total > 0.0 {
-                        am.count as f64 / exec_total
-                    } else {
-                        0.0
-                    },
-                },
-            );
+            per_artifact.insert(name.clone(), aggregate(am));
         }
         MetricsSnapshot {
             per_artifact,
             total_requests: total,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            workers: self.worker_metrics.len(),
         }
     }
 
+    /// Stop intake, let the workers drain everything already queued,
+    /// then join them. Every accepted request is answered.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.worker.take() {
+        self.begin_shutdown();
+    }
+
+    fn begin_shutdown(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stop = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -216,86 +440,130 @@ impl InferenceService {
 
 impl Drop for InferenceService {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        self.begin_shutdown();
+    }
+}
+
+/// Block until a batch can be formed. FIFO-fair: the artifact owning the
+/// globally oldest request is served first; the batching window is
+/// anchored to that request's enqueue time. Returns `None` once the
+/// service is stopping and the queues are drained.
+fn next_batch(shared: &Shared, cfg: &BatchConfig) -> Option<Vec<Request>> {
+    let max_batch = cfg.max_batch.max(1);
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.pending.is_empty() {
+            if st.stop {
+                return None;
+            }
+            st = shared.cv.wait_timeout(st, IDLE_POLL).unwrap().0;
+            continue;
         }
+        let (artifact, head_enqueued, depth) =
+            st.pending.oldest_head().expect("non-empty queue has a head");
+        // Hold the batching window open for co-batchable arrivals unless
+        // the batch is already full or the service is draining.
+        if depth < max_batch && !st.stop {
+            let deadline = head_enqueued + cfg.max_wait;
+            let now = Instant::now();
+            if now < deadline {
+                // While the oldest artifact is still collecting, serve
+                // any other artifact whose batch is already full rather
+                // than idling. Starvation-free: window expiry below
+                // always wins for the oldest head.
+                if let Some(ready) = st.pending.full_artifact(max_batch) {
+                    let batch = st.pending.take_batch(&ready, max_batch);
+                    if !batch.is_empty() {
+                        return Some(batch);
+                    }
+                    continue;
+                }
+                st = shared.cv.wait_timeout(st, deadline - now).unwrap().0;
+                continue;
+            }
+        }
+        let batch = st.pending.take_batch(&artifact, max_batch);
+        if !batch.is_empty() {
+            return Some(batch);
+        }
+        // Another worker drained the artifact between checks; re-scan.
     }
 }
 
 fn worker_loop(
-    rx: mpsc::Receiver<Request>,
-    executor: Box<dyn Executor>,
-    cfg: BatchConfig,
-    stop: Arc<AtomicBool>,
-    metrics: Arc<Mutex<HashMap<String, ArtifactMetrics>>>,
+    shared: &Shared,
+    executor: &Result<Box<dyn Executor>, String>,
+    cfg: &BatchConfig,
+    metrics: &Mutex<HashMap<String, ArtifactMetrics>>,
 ) {
-    let mut pending: VecDeque<Request> = VecDeque::new();
-    loop {
-        // Intake: block briefly for the first request, then drain the
-        // channel inside the batching window.
-        if pending.is_empty() {
-            match rx.recv_timeout(Duration::from_millis(10)) {
-                Ok(r) => pending.push_back(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if stop.load(Ordering::SeqCst) {
-                        return;
-                    }
-                    continue;
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
-            }
-        }
-        let window_end = Instant::now() + cfg.max_wait;
-        while pending.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= window_end {
-                break;
-            }
-            match rx.recv_timeout(window_end - now) {
-                Ok(r) => pending.push_back(r),
-                Err(_) => break,
-            }
-        }
+    while let Some(batch) = next_batch(shared, cfg) {
+        serve_batch(executor, batch, metrics);
+    }
+}
 
-        let batch = form_batch(&mut pending, &cfg);
-        if batch.is_empty() {
-            continue;
+/// Execute one formed batch with a single `execute_batch` call, record
+/// metrics (per batch AND per request), and answer every member.
+fn serve_batch(
+    executor: &Result<Box<dyn Executor>, String>,
+    batch: Vec<Request>,
+    metrics: &Mutex<HashMap<String, ArtifactMetrics>>,
+) {
+    let batch_size = batch.len();
+    let artifact = batch[0].artifact.clone();
+    let mut metas = Vec::with_capacity(batch_size);
+    let mut input_sets = Vec::with_capacity(batch_size);
+    for req in batch {
+        metas.push((req.id, req.enqueued, req.reply));
+        input_sets.push(req.inputs);
+    }
+    let started = Instant::now();
+    let mut results = match executor {
+        Ok(exe) => exe.execute_batch(&artifact, &input_sets),
+        Err(e) => vec![Err(format!("executor failed to load: {e}")); batch_size],
+    };
+    let exec_time = started.elapsed();
+    if results.len() != batch_size {
+        // Contract violation: request↔result alignment can no longer be
+        // trusted in either direction, so answer every member with the
+        // error instead of delivering possibly misaligned successes.
+        let msg = format!(
+            "executor returned {} results for a batch of {batch_size}",
+            results.len()
+        );
+        results.clear();
+        results.resize_with(batch_size, || Err(msg.clone()));
+    }
+    {
+        let mut m = metrics.lock().unwrap();
+        let am = m.entry(artifact).or_default();
+        am.record_batch(batch_size, exec_time.as_secs_f64());
+        for ((_, enqueued, _), result) in metas.iter().zip(&results) {
+            am.record_request(
+                exec_time.as_secs_f64(),
+                started.duration_since(*enqueued).as_secs_f64(),
+                result.is_err(),
+            );
         }
-        let batch_size = batch.len();
-        let artifact = batch[0].artifact.clone();
-        for req in batch {
-            let started = Instant::now();
-            let result = executor.execute(&req.artifact, &req.inputs);
-            let exec_time = started.elapsed();
-            let queue_wait = started.duration_since(req.enqueued);
-            {
-                let mut m = metrics.lock().unwrap();
-                let am = m.entry(artifact.clone()).or_default();
-                am.count += 1;
-                if result.is_err() {
-                    am.errors += 1;
-                }
-                am.exec_s.push(exec_time.as_secs_f64());
-                am.wait_s.push(queue_wait.as_secs_f64());
-                am.batch_sizes.push(batch_size);
-            }
-            let _ = req.reply.send(Response {
-                id: req.id,
-                result,
-                queue_wait,
-                exec_time,
-                batch_size,
-            });
-        }
+    }
+    for ((id, enqueued, reply), result) in metas.into_iter().zip(results) {
+        let _ = reply.send(Response {
+            id,
+            result,
+            queue_wait: started.duration_since(enqueued),
+            exec_time,
+            batch_size,
+        });
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     /// Mock executor: returns a 1-element tensor with the input count.
+    /// Only implements `execute`, so it exercises the default
+    /// `execute_batch` loop.
     struct Mock {
         delay: Duration,
         fail_on: Option<&'static str>,
@@ -329,7 +597,9 @@ mod tests {
     #[test]
     fn round_trip_single_request() {
         let svc = service(0, None);
-        let resp = svc.infer("gcn", vec![HostTensor::zeros(vec![2]), HostTensor::zeros(vec![2])]);
+        let resp = svc
+            .infer("gcn", vec![HostTensor::zeros(vec![2]), HostTensor::zeros(vec![2])])
+            .expect("accepted");
         let out = resp.result.unwrap();
         assert_eq!(out.data, vec![2.0]);
         assert!(resp.batch_size >= 1);
@@ -342,7 +612,9 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..20 {
             let artifact = if i % 2 == 0 { "gcn" } else { "grn" };
-            let (_, rx) = svc.submit(artifact, vec![HostTensor::zeros(vec![1])]);
+            let (_, rx) = svc
+                .submit(artifact, vec![HostTensor::zeros(vec![1])])
+                .expect("accepted");
             rxs.push(rx);
         }
         let mut ids = std::collections::HashSet::new();
@@ -353,6 +625,7 @@ mod tests {
         }
         let m = svc.metrics();
         assert_eq!(m.total_requests, 20);
+        assert_eq!(m.rejected, 0);
         assert!(m.per_artifact.contains_key("gcn"));
         assert!(m.per_artifact.contains_key("grn"));
     }
@@ -362,7 +635,9 @@ mod tests {
         let svc = service(2, None);
         let mut rxs = Vec::new();
         for _ in 0..4 {
-            let (_, rx) = svc.submit("gcn", vec![HostTensor::zeros(vec![1])]);
+            let (_, rx) = svc
+                .submit("gcn", vec![HostTensor::zeros(vec![1])])
+                .expect("accepted");
             rxs.push(rx);
         }
         let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
@@ -372,10 +647,106 @@ mod tests {
         assert!(m.per_artifact["gcn"].mean_batch > 1.0);
     }
 
+    /// Mock that counts batch-level vs request-level executor calls: the
+    /// service must issue exactly one `execute_batch` per formed batch
+    /// and never fall back to per-request `execute`.
+    struct BatchMock {
+        batch_calls: Arc<AtomicUsize>,
+        single_calls: Arc<AtomicUsize>,
+        sizes_seen: Arc<Mutex<Vec<usize>>>,
+        delay: Duration,
+    }
+
+    impl Executor for BatchMock {
+        fn execute(&self, _artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
+            self.single_calls.fetch_add(1, Ordering::SeqCst);
+            Ok(HostTensor::new(vec![1], vec![inputs.len() as f32]))
+        }
+
+        fn execute_batch(
+            &self,
+            _artifact: &str,
+            batches: &[Vec<HostTensor>],
+        ) -> Vec<Result<HostTensor, String>> {
+            self.batch_calls.fetch_add(1, Ordering::SeqCst);
+            self.sizes_seen.lock().unwrap().push(batches.len());
+            std::thread::sleep(self.delay);
+            batches
+                .iter()
+                .map(|b| Ok(HostTensor::new(vec![1], vec![b.len() as f32])))
+                .collect()
+        }
+    }
+
+    #[test]
+    fn one_execute_batch_call_services_a_whole_batch() {
+        let batch_calls = Arc::new(AtomicUsize::new(0));
+        let single_calls = Arc::new(AtomicUsize::new(0));
+        let sizes_seen = Arc::new(Mutex::new(Vec::new()));
+        let (bc, sc, ss) = (batch_calls.clone(), single_calls.clone(), sizes_seen.clone());
+        let svc = InferenceService::start(
+            move || {
+                Ok(Box::new(BatchMock {
+                    batch_calls: bc.clone(),
+                    single_calls: sc.clone(),
+                    sizes_seen: ss.clone(),
+                    delay: Duration::from_millis(200),
+                }) as Box<dyn Executor>)
+            },
+            ServiceConfig {
+                batch: BatchConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(5),
+                },
+                workers: 1,
+                queue_capacity: 64,
+            },
+        );
+        // Warmup request parks the single worker inside the mock's sleep…
+        let (_, warm_rx) = svc.submit("gcn", vec![]).expect("accepted");
+        let t0 = Instant::now();
+        while batch_calls.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // …so these four queue up together and must form ONE batch.
+        let rxs: Vec<_> = (0..4)
+            .map(|_| svc.submit("gcn", vec![]).expect("accepted").1)
+            .collect();
+        assert!(warm_rx.recv().unwrap().result.is_ok());
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok());
+            assert_eq!(resp.batch_size, 4, "request not served by the full batch");
+        }
+        assert_eq!(
+            single_calls.load(Ordering::SeqCst),
+            0,
+            "service must never call the per-request executor path"
+        );
+        assert_eq!(batch_calls.load(Ordering::SeqCst), 2, "warmup + one batch");
+        assert_eq!(*sizes_seen.lock().unwrap(), vec![1, 4]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn default_execute_batch_loops_over_execute() {
+        // `Mock` implements only `execute`; three co-batched requests
+        // must still all be answered through the default impl.
+        let svc = service(0, None);
+        let rxs: Vec<_> = (0..3)
+            .map(|_| svc.submit("gcn", vec![]).expect("accepted").1)
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        svc.shutdown();
+    }
+
     #[test]
     fn failures_reported_not_swallowed() {
         let svc = service(0, Some("bad"));
-        let resp = svc.infer("bad", vec![]);
+        let resp = svc.infer("bad", vec![]).expect("accepted");
         assert!(resp.result.is_err());
         let m = svc.metrics();
         assert_eq!(m.per_artifact["bad"].errors, 1);
@@ -387,9 +758,50 @@ mod tests {
             || Err("no artifacts".to_string()),
             BatchConfig::default(),
         );
-        let resp = svc.infer("gcn", vec![]);
+        let resp = svc.infer("gcn", vec![]).expect("accepted");
         let err = resp.result.unwrap_err();
         assert!(err.contains("no artifacts"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn zero_capacity_sheds_immediately_with_typed_busy() {
+        let svc = InferenceService::start(
+            || {
+                Ok(Box::new(Mock {
+                    delay: Duration::ZERO,
+                    fail_on: None,
+                }) as Box<dyn Executor>)
+            },
+            ServiceConfig {
+                batch: BatchConfig::default(),
+                workers: 1,
+                queue_capacity: 0,
+            },
+        );
+        let err = svc.submit("gcn", vec![]).unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::Busy {
+                queue_depth: 0,
+                capacity: 0
+            }
+        );
+        assert_eq!(svc.metrics().rejected, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_begins_is_rejected() {
+        let svc = service(0, None);
+        {
+            let mut st = svc.shared.state.lock().unwrap();
+            st.stop = true;
+        }
+        assert_eq!(
+            svc.submit("gcn", vec![]).unwrap_err(),
+            SubmitError::ShuttingDown
+        );
         svc.shutdown();
     }
 
@@ -397,12 +809,101 @@ mod tests {
     fn metrics_percentiles_monotone() {
         let svc = service(1, None);
         for _ in 0..10 {
-            let _ = svc.infer("gcn", vec![]);
+            let _ = svc.infer("gcn", vec![]).expect("accepted");
         }
         let m = svc.metrics();
         let s = &m.per_artifact["gcn"];
         assert!(s.p95_exec_s >= s.mean_exec_s * 0.5);
         assert!(s.count == 10);
         assert!(s.throughput_rps > 0.0);
+        assert_eq!(m.workers, 2);
+    }
+
+    // --- pure-function regression tests ---------------------------------
+
+    /// A lone size-4 batch plus four size-1 batches is a mean batch of
+    /// 1.6 — the old per-request recording reported 2.0.
+    #[test]
+    fn mean_batch_weighs_batches_not_requests() {
+        let am = ArtifactMetrics {
+            count: 8,
+            exec_s: vec![0.01; 8],
+            wait_s: vec![0.0; 8],
+            batch_sizes: vec![4, 1, 1, 1, 1],
+            batch_exec_s: vec![0.01; 5],
+            ..Default::default()
+        };
+        let s = aggregate(&am);
+        assert!((s.mean_batch - 1.6).abs() < 1e-12, "mean_batch {}", s.mean_batch);
+        // Throughput uses batch execution time: 8 requests / 0.05 s.
+        assert!((s.throughput_rps - 160.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_uses_ceil_nearest_rank() {
+        let v10: Vec<f64> = (1..=10).map(f64::from).collect();
+        // ceil(0.95 * 10) = 10 → the max, by definition of nearest-rank.
+        assert_eq!(percentile(&v10, 0.95), 10.0);
+        let v20: Vec<f64> = (1..=20).map(f64::from).collect();
+        // 0.95 * 20 = 19 exactly: the 19th element, NOT the max (the old
+        // round() path and naive ceil-with-f64-noise both get this wrong).
+        assert_eq!(percentile(&v20, 0.95), 19.0);
+        let v21: Vec<f64> = (1..=21).map(f64::from).collect();
+        // ceil(0.95 * 21) = ceil(19.95) = 20: the old round() returned
+        // element 19 — below the 95th percentile.
+        assert_eq!(percentile(&v21, 0.95), 20.0);
+        let v4 = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v4, 0.5), 2.0);
+        assert_eq!(percentile(&v4, 0.0), 1.0);
+        assert_eq!(percentile(&v4, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.95), 0.0);
+        assert_eq!(percentile(&[7.0], 0.95), 7.0);
+    }
+
+    /// The sample vectors are ring windows: totals keep counting, memory
+    /// stops growing at MAX_SAMPLES, oldest samples are overwritten.
+    #[test]
+    fn sample_windows_are_bounded() {
+        let mut am = ArtifactMetrics::default();
+        for i in 0..(MAX_SAMPLES + 10) {
+            am.record_batch(1, i as f64);
+            am.record_request(i as f64, 0.0, false);
+        }
+        assert_eq!(am.exec_s.len(), MAX_SAMPLES);
+        assert_eq!(am.wait_s.len(), MAX_SAMPLES);
+        assert_eq!(am.batch_exec_s.len(), MAX_SAMPLES);
+        assert_eq!(am.count, (MAX_SAMPLES + 10) as u64);
+        // Slots 0..10 hold the newest samples (wrapped), 10.. the rest.
+        assert_eq!(am.exec_s[0], MAX_SAMPLES as f64);
+        assert_eq!(am.exec_s[9], (MAX_SAMPLES + 9) as f64);
+        assert_eq!(am.exec_s[10], 10.0);
+    }
+
+    #[test]
+    fn merge_combines_worker_accumulators() {
+        let mut a = ArtifactMetrics {
+            count: 3,
+            errors: 1,
+            exec_s: vec![0.1, 0.2, 0.3],
+            wait_s: vec![0.0; 3],
+            batch_sizes: vec![3],
+            batch_exec_s: vec![0.3],
+            ..Default::default()
+        };
+        let b = ArtifactMetrics {
+            count: 2,
+            exec_s: vec![0.4, 0.5],
+            wait_s: vec![0.0; 2],
+            batch_sizes: vec![2],
+            batch_exec_s: vec![0.5],
+            ..Default::default()
+        };
+        merge_into(&mut a, &b);
+        assert_eq!(a.count, 5);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.exec_s.len(), 5);
+        assert_eq!(a.batch_sizes, vec![3, 2]);
+        let s = aggregate(&a);
+        assert!((s.mean_batch - 2.5).abs() < 1e-12);
     }
 }

@@ -16,8 +16,12 @@
 //! * [`baselines`] — CPU (DGL/PyG), GPU (DGL/PyG) and HyGCN cost models;
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas golden
 //!   models (functional correctness of the math the accelerator runs);
-//! * [`coordinator`] — an inference-serving layer (request router +
-//!   batcher) driving runtime and simulator together;
+//! * [`coordinator`] — a sharded inference-serving layer (bounded
+//!   intake, FIFO-fair per-artifact batching, N worker threads with
+//!   genuinely batched execution) driving runtime and simulator
+//!   together;
+//! * [`xla`] — offline stub of the PJRT bindings the runtime codes
+//!   against (swap in the real `xla` crate to execute artifacts);
 //! * [`report`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 
@@ -30,3 +34,4 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod xla;

@@ -5,10 +5,12 @@
 //!   run    --model M --dataset D     simulate one inference pass
 //!   bench  --exp <id|all> [--out D]  regenerate paper tables/figures
 //!   infer  --artifacts DIR [--name N]  functional inference via PJRT
-//!   serve  --artifacts DIR [--requests N]  serving demo (router+batcher)
+//!   serve  --artifacts DIR [--requests N] [--workers W] [--queue C]
+//!                                      serving demo (bounded intake,
+//!                                      multi-worker batched execution)
 
 use engn::config::{AcceleratorConfig, Fidelity};
-use engn::coordinator::{BatchConfig, Executor, InferenceService};
+use engn::coordinator::{BatchConfig, Executor, InferenceService, ServiceConfig, SubmitError};
 use engn::graph::datasets::{self, ScalePolicy};
 use engn::model::{GnnKind, GnnModel};
 use engn::report::experiments::{self, Eval};
@@ -34,7 +36,7 @@ fn main() {
                  \u{20}  engn bench --exp fig9 --out reports\n\
                  \u{20}  engn bench --exp all --out reports [--full]\n\
                  \u{20}  engn infer --artifacts artifacts --name gcn_forward\n\
-                 \u{20}  engn serve --artifacts artifacts --requests 32"
+                 \u{20}  engn serve --artifacts artifacts --requests 32 --workers 4 --queue 256"
             );
             2
         }
@@ -285,11 +287,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         .get("requests")
         .and_then(|s| s.parse().ok())
         .unwrap_or(16);
+    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let queue_capacity: usize = flags.get("queue").and_then(|s| s.parse().ok()).unwrap_or(256);
     let names = ["gcn_forward", "grn_forward"];
     let dir2 = dir.clone();
     let svc = InferenceService::start(
         move || Runtime::load_only(&dir2, &names).map(|rt| Box::new(rt) as Box<dyn Executor>),
-        BatchConfig::default(),
+        ServiceConfig {
+            batch: BatchConfig::default(),
+            workers,
+            queue_capacity,
+        },
     );
     // Shapes come from the manifest directly (cheap to parse).
     let manifest = match engn::runtime::Manifest::load(&dir) {
@@ -299,13 +307,35 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             return 1;
         }
     };
-    println!("submitting {n_requests} mixed gcn/grn requests ...");
+    println!("submitting {n_requests} mixed gcn/grn requests over {workers} workers ...");
     let mut rxs = Vec::new();
+    let mut shed = 0usize;
     for i in 0..n_requests {
         let name = names[i % names.len()];
         let spec = manifest.get(name).unwrap();
-        let (_, rx) = svc.submit(name, rand_inputs(spec, i as u64));
-        rxs.push((name, rx));
+        let inputs = rand_inputs(spec, i as u64);
+        // Busy means the bounded intake shed us: back off briefly and
+        // retry a few times before counting the request as dropped.
+        let mut accepted = None;
+        for _ in 0..50 {
+            match svc.submit(name, inputs.clone()) {
+                Ok((_, rx)) => {
+                    accepted = Some(rx);
+                    break;
+                }
+                Err(SubmitError::Busy { .. }) => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(e) => {
+                    eprintln!("{name}: {e}");
+                    break;
+                }
+            }
+        }
+        match accepted {
+            Some(rx) => rxs.push((name, rx)),
+            None => shed += 1,
+        }
     }
     let mut ok = 0;
     for (name, rx) in rxs {
@@ -316,7 +346,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         }
     }
     let m = svc.metrics();
-    println!("{ok}/{n_requests} ok; per-artifact stats:");
+    println!(
+        "{ok}/{n_requests} ok ({shed} shed, {} busy rejections); per-artifact stats:",
+        m.rejected
+    );
     let mut names_sorted: Vec<_> = m.per_artifact.keys().collect();
     names_sorted.sort();
     for name in names_sorted {

@@ -11,6 +11,7 @@ pub mod manifest;
 
 pub use manifest::{ArtifactSpec, Manifest};
 
+use crate::xla;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -49,12 +50,53 @@ impl HostTensor {
         debug_assert_eq!(self.shape.len(), 2);
         self.data[i * self.shape[1] + j]
     }
+
+    /// Stack `k` same-shape tensors along a new leading axis: tensors of
+    /// shape `S` become one tensor of shape `[k, S...]`. The batched
+    /// execution path uses this to turn a formed batch into one dispatch.
+    pub fn stack(parts: &[&HostTensor]) -> Result<HostTensor, String> {
+        let first = parts.first().ok_or("stack of zero tensors")?;
+        let mut data = Vec::with_capacity(first.data.len() * parts.len());
+        for t in parts {
+            if t.shape != first.shape {
+                return Err(format!(
+                    "stack: shape {:?} does not match {:?}",
+                    t.shape, first.shape
+                ));
+            }
+            data.extend_from_slice(&t.data);
+        }
+        let mut shape = Vec::with_capacity(first.shape.len() + 1);
+        shape.push(parts.len());
+        shape.extend_from_slice(&first.shape);
+        Ok(HostTensor::new(shape, data))
+    }
+
+    /// Inverse of [`HostTensor::stack`]: split the leading axis into
+    /// `parts` tensors of the inner shape.
+    pub fn split_leading(&self, parts: usize) -> Result<Vec<HostTensor>, String> {
+        if self.shape.first() != Some(&parts) {
+            return Err(format!(
+                "split_leading: leading dim of {:?} is not {parts}",
+                self.shape
+            ));
+        }
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let chunk: usize = inner.iter().product();
+        Ok((0..parts)
+            .map(|i| HostTensor::new(inner.clone(), self.data[i * chunk..(i + 1) * chunk].to_vec()))
+            .collect())
+    }
 }
 
 /// One compiled artifact.
 struct LoadedArtifact {
     spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
+    /// Cleared the first time a stacked (leading-batch-dim) dispatch is
+    /// rejected, so later batches skip the doomed stack-and-execute
+    /// attempt and go straight to per-request execution.
+    batchable: std::sync::atomic::AtomicBool,
 }
 
 /// The runtime: a PJRT CPU client plus all compiled executables.
@@ -111,6 +153,7 @@ impl Runtime {
                 LoadedArtifact {
                     spec: spec.clone(),
                     exe,
+                    batchable: std::sync::atomic::AtomicBool::new(true),
                 },
             );
         }
@@ -155,7 +198,6 @@ impl Runtime {
                 inputs.len()
             ));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, t) in inputs.iter().enumerate() {
             if t.shape != spec.inputs[i] {
                 return Err(format!(
@@ -163,6 +205,118 @@ impl Runtime {
                     t.shape, spec.inputs[i]
                 ));
             }
+        }
+        let out_shape = spec.outputs[0].clone();
+        self.execute_raw(name, inputs, &out_shape)
+    }
+
+    /// Execute a whole formed batch of same-artifact requests.
+    /// `batches[i]` is the complete input set of request `i`; the result
+    /// has one entry per request, in order.
+    ///
+    /// When every request carries identical input shapes, the inputs are
+    /// stacked along a new leading axis and submitted as ONE PJRT
+    /// execution, and the output is split back per request. The artifact
+    /// must have been compiled with a leading batch dimension for the
+    /// stacked dispatch to be accepted; if it is rejected (or the batch
+    /// is shape-heterogeneous), each request falls back to an individual
+    /// [`Runtime::execute`].
+    pub fn execute_batch(
+        &self,
+        name: &str,
+        batches: &[Vec<HostTensor>],
+    ) -> Vec<Result<HostTensor, String>> {
+        if batches.len() > 1 {
+            if let Some(results) = self.try_execute_stacked(name, batches) {
+                return results;
+            }
+        }
+        batches
+            .iter()
+            .map(|inputs| self.execute(name, inputs))
+            .collect()
+    }
+
+    /// Attempt the single stacked dispatch for a shape-homogeneous batch.
+    /// `None` means "not batchable this way" (arity/shape mismatch, or the
+    /// compiled executable rejected the batched shapes) and the caller
+    /// should fall back to per-request execution.
+    fn try_execute_stacked(
+        &self,
+        name: &str,
+        batches: &[Vec<HostTensor>],
+    ) -> Option<Vec<Result<HostTensor, String>>> {
+        let artifact = self.artifacts.get(name)?;
+        // Once a stacked dispatch has been rejected, don't pay the
+        // stack-copy plus doomed execution again for every later batch.
+        if !artifact.batchable.load(std::sync::atomic::Ordering::Relaxed) {
+            return None;
+        }
+        let spec = &artifact.spec;
+        let arity = spec.inputs.len();
+        let first = batches.first()?;
+        if first.len() != arity {
+            return None;
+        }
+        for b in batches {
+            if b.len() != arity {
+                return None;
+            }
+            // Validate against the manifest, not just homogeneity: a
+            // malformed batch must fall back to per-request execution
+            // (which reports the shape error properly) without latching
+            // `batchable` off below — that latch is reserved for shapes
+            // the *executable* rejects, i.e. no leading batch dim.
+            for (i, t) in b.iter().enumerate() {
+                if t.shape != spec.inputs[i] {
+                    return None;
+                }
+            }
+        }
+        let stacked: Result<Vec<HostTensor>, String> = (0..arity)
+            .map(|i| {
+                let column: Vec<&HostTensor> = batches.iter().map(|b| &b[i]).collect();
+                HostTensor::stack(&column)
+            })
+            .collect();
+        let stacked = stacked.ok()?;
+        let k = batches.len();
+        let mut out_shape = Vec::with_capacity(spec.outputs.first()?.len() + 1);
+        out_shape.push(k);
+        out_shape.extend_from_slice(spec.outputs.first()?);
+        let out = match self.execute_raw(name, &stacked, &out_shape) {
+            Ok(out) => out,
+            // The executable rejected the batched shapes (the artifact
+            // was not compiled with a leading batch dimension): remember
+            // that and let the caller fall back to per-request dispatch,
+            // which surfaces any genuine execution error per request.
+            Err(_) => {
+                artifact
+                    .batchable
+                    .store(false, std::sync::atomic::Ordering::Relaxed);
+                return None;
+            }
+        };
+        let parts = out.split_leading(k).ok()?;
+        Some(parts.into_iter().map(Ok).collect())
+    }
+
+    /// Execute without manifest shape validation (the compiled executable
+    /// is the arbiter). The stacked batch path goes through here because
+    /// its shapes deliberately differ from the per-request manifest
+    /// entries.
+    fn execute_raw(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+        out_shape: &[usize],
+    ) -> Result<HostTensor, String> {
+        let artifact = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| format!("unknown artifact {name:?} (have {:?})", self.artifact_names()))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
             let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
             let lit = xla::Literal::vec1(&t.data)
                 .reshape(&dims)
@@ -187,15 +341,14 @@ impl Runtime {
         let data = out
             .to_vec::<f32>()
             .map_err(|e| format!("{name}: reading result: {e}"))?;
-        let shape = spec.outputs[0].clone();
-        if data.len() != shape.iter().product::<usize>() {
+        if data.len() != out_shape.iter().product::<usize>() {
             return Err(format!(
-                "{name}: output has {} elements, manifest says {:?}",
+                "{name}: output has {} elements, expected shape {:?}",
                 data.len(),
-                shape
+                out_shape
             ));
         }
-        Ok(HostTensor::new(shape, data))
+        Ok(HostTensor::new(out_shape.to_vec(), data))
     }
 }
 
@@ -221,5 +374,39 @@ mod tests {
         let t = HostTensor::zeros(vec![4, 2]);
         assert_eq!(t.elements(), 8);
         assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn stack_adds_leading_axis() {
+        let a = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let s = HostTensor::stack(&[&a, &b]).expect("stack");
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        assert_eq!(s.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn stack_rejects_shape_mismatch_and_empty() {
+        let a = HostTensor::zeros(vec![2, 2]);
+        let b = HostTensor::zeros(vec![2, 3]);
+        assert!(HostTensor::stack(&[&a, &b]).is_err());
+        assert!(HostTensor::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn split_leading_inverts_stack() {
+        let a = HostTensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::new(vec![3], vec![4.0, 5.0, 6.0]);
+        let c = HostTensor::new(vec![3], vec![7.0, 8.0, 9.0]);
+        let s = HostTensor::stack(&[&a, &b, &c]).expect("stack");
+        let parts = s.split_leading(3).expect("split");
+        assert_eq!(parts, vec![a, b, c]);
+    }
+
+    #[test]
+    fn split_leading_rejects_wrong_parts() {
+        let s = HostTensor::zeros(vec![4, 2]);
+        assert!(s.split_leading(3).is_err());
+        assert!(HostTensor::zeros(vec![]).split_leading(1).is_err());
     }
 }

@@ -1,0 +1,183 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The runtime codes against the API of the `xla` crate (xla-rs):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `compile` → `execute`. That crate
+//! links a native XLA build this vendored tree intentionally does not
+//! ship, so this module mirrors the exact surface [`crate::runtime`]
+//! uses and fails at *client construction* with a clear message —
+//! everything upstream of execution (manifest parsing, literal
+//! packing, shape plumbing) stays exercisable and unit-tested.
+//!
+//! To run against real PJRT: add the `xla` crate as a dependency,
+//! delete the `pub mod xla;` line in `lib.rs`, and change
+//! `use crate::xla;` in `runtime/mod.rs` to `use xla;`. No other code
+//! changes are required.
+
+/// Error type matching the shape the runtime expects (`Display` is all
+/// it uses, via `map_err(|e| format!(...))`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const STUB_MSG: &str = "PJRT backend is stubbed out in this offline build (src/xla.rs); \
+                        link the real `xla` crate to execute compiled artifacts";
+
+fn stub_err() -> Error {
+    Error(STUB_MSG.to_string())
+}
+
+/// An HLO module read from the text form `python/compile/aot.py` emits.
+/// The stub holds the text verbatim and performs no parsing.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self, Error> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error(format!("{path}: {e}")))?;
+        Ok(Self { text })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self {
+            _text: proto.text.clone(),
+        }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub: no PJRT backend is linked in.
+    pub fn cpu() -> Result<Self, Error> {
+        Err(stub_err())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(stub_err())
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(stub_err())
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(stub_err())
+    }
+}
+
+/// Element types a [`Literal`] can be read back as. Only `f32` is
+/// needed by the runtime (every artifact is lowered at f32).
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// A host-side literal: flat f32 data plus dimensions. Fully functional
+/// (it is plain data), so the runtime's literal-packing path is real
+/// code even in the stubbed build.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Self {
+        Self {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Self, Error> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    pub fn to_tuple1(self) -> Result<Self, Error> {
+        Ok(self)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_packs_and_reshapes() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = lit.reshape(&[2, 3]).expect("reshape");
+        assert_eq!(lit.dims, vec![2, 3]);
+        let back: Vec<f32> = lit.to_vec().expect("read back");
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn reshape_rejects_element_mismatch() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn client_construction_reports_stub() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub client must not construct"),
+        };
+        assert!(err.to_string().contains("stubbed out"), "{err}");
+    }
+}

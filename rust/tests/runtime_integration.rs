@@ -114,6 +114,33 @@ fn repeated_executions_are_deterministic() {
     assert_eq!(rt.executions(), 2);
 }
 
+/// `execute_batch` must agree with per-request `execute` whatever path
+/// it takes: `gcn_tiny` is compiled without a leading batch dimension,
+/// so the stacked dispatch is rejected and the runtime falls back to
+/// individual executions — transparently to the caller.
+#[test]
+fn execute_batch_matches_individual_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_only(&dir, &["gcn_tiny"]).expect("load");
+    let spec = rt.spec("gcn_tiny").unwrap().clone();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(19);
+    let mut make_inputs = || -> Vec<HostTensor> {
+        spec.inputs
+            .iter()
+            .map(|s| rand_tensor(&mut rng, s))
+            .collect()
+    };
+    let batches = vec![make_inputs(), make_inputs(), make_inputs()];
+    let results = rt.execute_batch("gcn_tiny", &batches);
+    assert_eq!(results.len(), 3);
+    for (inputs, result) in batches.iter().zip(&results) {
+        let batched = result.as_ref().expect("batched execution ok");
+        let single = rt.execute("gcn_tiny", inputs).expect("single execution ok");
+        assert_eq!(batched.shape, single.shape);
+        assert_eq!(batched.data, single.data);
+    }
+}
+
 #[test]
 fn serving_coordinator_end_to_end_over_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
@@ -130,7 +157,7 @@ fn serving_coordinator_end_to_end_over_pjrt() {
     let mut rxs = Vec::new();
     for _ in 0..6 {
         let inputs: Vec<HostTensor> = shapes.iter().map(|s| rand_tensor(&mut rng, s)).collect();
-        let (_, rx) = svc.submit("gcn_tiny", inputs);
+        let (_, rx) = svc.submit("gcn_tiny", inputs).expect("intake accepts");
         rxs.push(rx);
     }
     for rx in rxs {
