@@ -17,7 +17,7 @@
 //!     make artifacts && cargo run --release --offline --example end_to_end_gcn
 
 use engn::config::AcceleratorConfig;
-use engn::coordinator::{BatchConfig, Executor, InferenceService};
+use engn::coordinator::{Backends, BatchConfig, InferenceService};
 use engn::graph::datasets::{DatasetGroup, DatasetSpec};
 use engn::graph::rmat::{self, RmatParams};
 use engn::model::{GnnKind, GnnModel};
@@ -76,39 +76,38 @@ fn main() {
     let dir2 = dir.clone();
     let svc = InferenceService::start(
         move || {
-            Runtime::load_only(&dir2, &["gcn_forward"])
-                .map(|rt| Box::new(rt) as Box<dyn Executor>)
+            Runtime::load_only(&dir2, &["gcn_forward"]).map(|rt| Backends::tensor(Box::new(rt)))
         },
         BatchConfig::default(),
     );
     let requests = 12;
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..requests {
         // Each request = same graph, fresh features (a node-classification
         // service answering queries over a shared graph).
         let mut r = Xoshiro256StarStar::seed_from_u64(100 + i);
         let xi = rand2(&mut r, n, f, 0.5);
-        let (_, rx) = svc
-            .submit(
+        let ticket = svc
+            .submit_tensor(
                 "gcn_forward",
                 vec![a_hat.clone(), xi, w1.clone(), w2.clone()],
             )
             .expect("demo burst fits the default intake queue");
-        rxs.push(rx);
+        tickets.push(ticket);
     }
     let mut latencies = Vec::new();
-    for rx in rxs {
-        let resp = rx.recv().expect("response");
-        resp.result.expect("inference ok");
+    for ticket in tickets {
+        let resp = ticket.wait();
         latencies.push(resp.exec_time.as_secs_f64() + resp.queue_wait.as_secs_f64());
+        resp.into_tensor().expect("inference ok");
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("\n=== serving {requests} requests (host CPU via PJRT) ===");
     println!("throughput   {:.1} req/s", requests as f64 / wall);
     println!("mean latency {}", fmt_time(mean(&latencies)));
     let m = svc.metrics();
-    let s = &m.per_artifact["gcn_forward"];
+    let s = &m.per_key["tensor:gcn_forward"];
     println!("mean batch   {:.2}", s.mean_batch);
     svc.shutdown();
 

@@ -1,47 +1,70 @@
-//! Multi-model GNN serving scenario (the e-commerce recommendation
-//! motivation from the paper's introduction): a mixed stream of GCN,
-//! GRN and R-GCN inference requests flows through the coordinator's
-//! bounded intake and FIFO-fair batcher onto multiple PJRT worker
-//! threads, while the EnGN simulator projects what the same request mix
-//! would cost on the accelerator. Overloads surface as typed `Busy`
-//! rejections, which this client answers with backoff-and-retry.
+//! Multi-plane GNN serving scenario (the e-commerce recommendation
+//! motivation from the paper's introduction, extended to the whole
+//! job contract): a mixed stream of typed jobs — tensor inference,
+//! cycle/energy what-if simulation and baseline cost-model queries —
+//! flows through the coordinator's bounded intake and FIFO-fair
+//! batcher onto multiple worker threads, each owning its own backends.
+//! Overloads surface as typed `Busy` rejections (answered here with
+//! backoff-and-retry), and a deliberately micro-deadlined job
+//! demonstrates deadline-aware shedding at batch formation.
 //!
-//!     make artifacts && cargo run --release --offline --example serving
+//! The tensor plane needs `make artifacts` plus the real `xla` crate;
+//! when it is unavailable (fresh checkout, offline PJRT stub) the
+//! example degrades to the two analytic planes and still exercises the
+//! full serving path — which is what CI's smoke run relies on.
+//!
+//!     cargo run --release --offline --example serving [requests] [workers]
 
-use engn::config::AcceleratorConfig;
-use engn::coordinator::{BatchConfig, Executor, InferenceService, ServiceConfig, SubmitError};
-use engn::graph::datasets::{DatasetGroup, DatasetSpec};
-use engn::graph::rmat::{self, RmatParams};
-use engn::model::{GnnKind, GnnModel};
+use engn::baselines::PlatformId;
+use engn::coordinator::{
+    Backends, BatchConfig, CostJob, InferenceService, JobError, JobOutput, JobPayload,
+    ServiceConfig, SimJob, SubmitError, TensorBackend, Ticket,
+};
+use engn::model::GnnKind;
 use engn::runtime::{HostTensor, Manifest, Runtime};
-use engn::sim::Simulator;
 use engn::util::fmt_time;
 use engn::util::rng::Xoshiro256StarStar;
 use std::time::Duration;
 
 const MODELS: [&str; 3] = ["gcn_forward", "grn_forward", "rgcn_forward"];
 
+/// The what-if mix: every simulation below groups under one batch key
+/// (same accelerator config + dataset), so a burst is served by few
+/// `execute_batch` calls over one shared graph instantiation.
+const SIM_MODELS: [GnnKind; 3] = [GnnKind::Gcn, GnnKind::GsPool, GnnKind::GatedGcn];
+const COST_PLATFORMS: [PlatformId; 3] =
+    [PlatformId::CpuDgl, PlatformId::GpuDgl, PlatformId::Hygcn];
+
 fn main() {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let manifest = match Manifest::load(&dir) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("{e}\nrun `make artifacts` first");
-            std::process::exit(1);
-        }
-    };
     let requests: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(24);
-
     let workers: usize = std::env::args()
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(2);
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    // Probe the tensor plane once up front: artifacts present AND the
+    // PJRT backend linked (the offline stub fails fast here).
+    let manifest = Manifest::load(&dir).ok();
+    let tensor_ok = manifest.is_some() && Runtime::load_only(&dir, &MODELS).is_ok();
+    if !tensor_ok {
+        println!("tensor plane unavailable (no artifacts or stubbed PJRT) — serving the");
+        println!("analytic planes only; run `make artifacts` + real `xla` for all three\n");
+    }
+
     let dir2 = dir.clone();
     let svc = InferenceService::start(
-        move || Runtime::load_only(&dir2, &MODELS).map(|rt| Box::new(rt) as Box<dyn Executor>),
+        move || {
+            let mut backends = Backends::analytic();
+            if tensor_ok {
+                let rt = Runtime::load_only(&dir2, &MODELS)?;
+                backends = backends.with(Box::new(TensorBackend::new(Box::new(rt))));
+            }
+            Ok(backends)
+        },
         ServiceConfig {
             batch: BatchConfig {
                 max_batch: 6,
@@ -52,71 +75,124 @@ fn main() {
         },
     );
 
-    println!("submitting {requests} mixed requests ({MODELS:?}) over {workers} workers ...");
+    println!("submitting {requests} mixed-plane jobs over {workers} workers ...");
     let mut rng = Xoshiro256StarStar::seed_from_u64(1);
-    let mut rxs = Vec::new();
+    let mut tickets: Vec<(String, Ticket)> = Vec::new();
+    let mut dropped = 0usize;
     let t0 = std::time::Instant::now();
     for i in 0..requests {
-        // Zipf-ish popularity: GCN most requested (a recommender's
-        // default path), GRN and R-GCN less so.
-        let name = MODELS[[0, 0, 0, 1, 1, 2][i % 6]];
-        let spec = manifest.get(name).unwrap();
-        let inputs: Vec<HostTensor> = spec
-            .inputs
-            .iter()
-            .map(|shape| {
-                let n: usize = shape.iter().product();
-                HostTensor::new(
-                    shape.clone(),
-                    (0..n).map(|_| rng.next_f32() * 0.1).collect(),
-                )
-            })
-            .collect();
+        // Round-robin over the planes; tensor slots fall back to sim
+        // jobs when the tensor plane is down so the stream length is
+        // stable either way.
+        let payload = match i % 3 {
+            0 if tensor_ok => {
+                let name = MODELS[i % MODELS.len()];
+                let spec = manifest.as_ref().unwrap().get(name).unwrap();
+                let inputs: Vec<HostTensor> = spec
+                    .inputs
+                    .iter()
+                    .map(|shape| {
+                        let n: usize = shape.iter().product();
+                        HostTensor::new(
+                            shape.clone(),
+                            (0..n).map(|_| rng.next_f32() * 0.1).collect(),
+                        )
+                    })
+                    .collect();
+                JobPayload::Tensor {
+                    artifact: name.to_string(),
+                    inputs,
+                }
+            }
+            1 => JobPayload::Cost(CostJob::new(
+                COST_PLATFORMS[i % COST_PLATFORMS.len()],
+                GnnKind::Gcn,
+                "CA",
+            )),
+            _ => JobPayload::Sim(SimJob::new(SIM_MODELS[i % SIM_MODELS.len()], "CA")),
+        };
+        let label = format!("job-{i}:{}", payload.batch_key());
         // Bounded intake: a `Busy` rejection is the shed signal, so back
-        // off and retry instead of queueing without limit.
-        loop {
-            match svc.submit(name, inputs.clone()) {
-                Ok((_, rx)) => {
-                    rxs.push((name, rx));
+        // off and retry — bounded, so a wedged service fails the run
+        // instead of spinning forever.
+        for attempt in 0..500 {
+            match svc.submit(payload.clone()) {
+                Ok(ticket) => {
+                    tickets.push((label, ticket));
                     break;
                 }
-                Err(SubmitError::Busy { .. }) => {
+                Err(SubmitError::Busy { .. }) if attempt < 499 => {
                     std::thread::sleep(Duration::from_millis(1));
                 }
                 Err(e) => {
-                    eprintln!("{name}: {e}");
+                    eprintln!("{label}: dropped after retries: {e}");
+                    dropped += 1;
                     break;
                 }
             }
         }
     }
+
+    // Deadline-aware shedding demo: a zero deadline expires at submit
+    // time, so batch formation is guaranteed to shed this job
+    // un-executed and answer `Expired`.
+    let doomed = svc
+        .submit_with_deadline(
+            JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA")),
+            Duration::ZERO,
+        )
+        .expect("accepted");
+
     let mut ok = 0usize;
-    for (name, rx) in rxs {
-        match rx.recv() {
-            Ok(resp) if resp.result.is_ok() => ok += 1,
-            Ok(resp) => eprintln!("{name} failed: {:?}", resp.result.err()),
-            Err(_) => eprintln!("{name}: worker gone"),
+    let mut by_plane = [0usize; 3];
+    for (label, ticket) in &tickets {
+        let resp = ticket.wait();
+        match resp.result {
+            Ok(JobOutput::Tensor(_)) => {
+                ok += 1;
+                by_plane[0] += 1;
+            }
+            Ok(JobOutput::Sim(_)) => {
+                ok += 1;
+                by_plane[1] += 1;
+            }
+            Ok(JobOutput::Cost(_)) => {
+                ok += 1;
+                by_plane[2] += 1;
+            }
+            Err(ref e) => eprintln!("{label} failed: {e}"),
         }
     }
+    let doomed_resp = doomed.wait();
+    let shed_ok = matches!(doomed_resp.result, Err(JobError::Expired));
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok}/{requests} in {} ({:.1} req/s)\n",
+        "served {ok}/{} in {} ({:.1} jobs/s): {} tensor, {} sim, {} cost",
+        tickets.len(),
         fmt_time(wall),
-        requests as f64 / wall
+        tickets.len() as f64 / wall.max(1e-9),
+        by_plane[0],
+        by_plane[1],
+        by_plane[2],
     );
-    println!("per-model serving stats (host CPU via PJRT):");
+    println!(
+        "micro-deadline job: {} (shed at batch formation, never executed)",
+        if shed_ok { "expired as expected" } else { "NOT shed!" }
+    );
+
+    println!("\nper-key serving stats:");
     let metrics = svc.metrics();
     println!(
-        "  workers={} busy-rejections={}",
-        metrics.workers, metrics.rejected
+        "  workers={} busy-rejections={} expired={} cancelled={}",
+        metrics.workers, metrics.rejected, metrics.expired, metrics.cancelled
     );
-    let mut names: Vec<_> = metrics.per_artifact.keys().cloned().collect();
-    names.sort();
-    for name in &names {
-        let s = &metrics.per_artifact[name];
+    let mut keys: Vec<_> = metrics.per_key.keys().cloned().collect();
+    keys.sort();
+    for key in &keys {
+        let s = &metrics.per_key[key];
         println!(
-            "  {:<16} n={:<3} mean={} p95={} wait={} batch={:.2}",
-            name,
+            "  {:<24} n={:<3} mean={} p95={} wait={} batch={:.2}",
+            key,
             s.count,
             fmt_time(s.mean_exec_s),
             fmt_time(s.p95_exec_s),
@@ -126,38 +202,10 @@ fn main() {
     }
     svc.shutdown();
 
-    // Project the same mix onto EnGN: per-request simulated latency for a
-    // quickstart-shaped graph under each model.
-    println!("\nsimulated EnGN latency for the same request shapes:");
-    let n = manifest.quickstart_param("n").unwrap_or(512);
-    let f = manifest.quickstart_param("f").unwrap_or(64);
-    let hidden = manifest.quickstart_param("hidden").unwrap_or(16);
-    let classes = manifest.quickstart_param("classes").unwrap_or(8);
-    let relations = manifest.quickstart_param("relations").unwrap_or(4);
-    let graph = rmat::generate(n, 6 * n, RmatParams::mild(), 7);
-    for (artifact, kind) in [
-        ("gcn_forward", GnnKind::Gcn),
-        ("grn_forward", GnnKind::Grn),
-        ("rgcn_forward", GnnKind::Rgcn),
-    ] {
-        let spec = DatasetSpec {
-            code: "QS",
-            name: "quickstart",
-            vertices: n,
-            edges: graph.num_edges(),
-            feature_dim: if kind == GnnKind::Grn { hidden } else { f },
-            labels: classes,
-            num_relations: if kind == GnnKind::Rgcn { relations } else { 1 },
-            group: DatasetGroup::Synthetic,
-        };
-        let model = GnnModel::with_hidden(kind, &spec, hidden);
-        let r = Simulator::new(AcceleratorConfig::engn()).run(&model, &graph, "QS");
-        println!(
-            "  {:<16} {} per inference, {:.0} GOPS/W",
-            artifact,
-            fmt_time(r.seconds()),
-            r.gops_per_watt()
-        );
+    if ok == tickets.len() && dropped == 0 && shed_ok {
+        println!("\nserving OK");
+    } else {
+        println!("\nserving FAILED");
+        std::process::exit(1);
     }
-    println!("\nserving OK");
 }

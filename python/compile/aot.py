@@ -118,24 +118,39 @@ def build_artifacts():
     )
 
 
+def lower_artifact(fn, specs, out_dir, path):
+    """jit-lower `fn` at `specs`, write HLO text, return output shapes."""
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, path), "w") as fh:
+        fh.write(text)
+    out_shapes = [list(s.shape) for s in jax.tree_util.tree_leaves(lowered.out_info)]
+    print(f"wrote {path} ({len(text) / 1e3:.1f} KB)")
+    return out_shapes
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    ap.add_argument(
+        "--batch-sizes",
+        default="2,4,8",
+        help="comma-separated leading-batch-dim variant sizes (empty to skip). "
+        "The Rust runtime's stacked execution path dispatches a size-K batch "
+        "to the `<name>__bK` variant, which vmap compiles to accept it.",
+    )
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
     only = set(args.only.split(",")) if args.only else None
+    batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b]
 
     manifest = {"version": 1, "quickstart": QUICKSTART, "tiny": TINY, "artifacts": []}
     for name, fn, specs, desc in build_artifacts():
         if only and name not in only:
             continue
-        lowered = jax.jit(fn).lower(*specs)
-        text = to_hlo_text(lowered)
         path = f"{name}.hlo.txt"
-        with open(os.path.join(args.out_dir, path), "w") as fh:
-            fh.write(text)
-        out_shapes = [list(s.shape) for s in jax.tree_util.tree_leaves(lowered.out_info)]
+        out_shapes = lower_artifact(fn, specs, args.out_dir, path)
         manifest["artifacts"].append(
             {
                 "name": name,
@@ -146,7 +161,27 @@ def main():
                 "dtype": "f32",
             }
         )
-        print(f"wrote {path} ({len(text) / 1e3:.1f} KB)")
+        # Leading-batch-dim variants: vmap over a new axis 0 of every
+        # input, so K stacked requests execute as ONE dispatch. Recorded
+        # in the manifest with `batch_of`/`batch` for the runtime's
+        # `Runtime::execute_batch` stacked path.
+        for k in batch_sizes:
+            vname = f"{name}__b{k}"
+            vpath = f"{vname}.hlo.txt"
+            vspecs = [_spec(k, *s.shape) for s in specs]
+            vout_shapes = lower_artifact(jax.vmap(fn), vspecs, args.out_dir, vpath)
+            manifest["artifacts"].append(
+                {
+                    "name": vname,
+                    "path": vpath,
+                    "description": f"batch-{k} variant of {name} (leading batch dim)",
+                    "inputs": [list(s.shape) for s in vspecs],
+                    "outputs": vout_shapes,
+                    "dtype": "f32",
+                    "batch_of": name,
+                    "batch": k,
+                }
+            )
 
     with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
         json.dump(manifest, fh, indent=2)

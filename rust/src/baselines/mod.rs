@@ -14,6 +14,63 @@ pub mod cpu;
 pub mod gpu;
 pub mod hygcn;
 
+/// One of the paper's comparison platforms, as a value — the serving
+/// plane's cost-model jobs and the CLI name platforms with this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformId {
+    CpuDgl,
+    CpuPyg,
+    GpuDgl,
+    GpuPyg,
+    Hygcn,
+}
+
+impl PlatformId {
+    pub fn all() -> [PlatformId; 5] {
+        [
+            PlatformId::CpuDgl,
+            PlatformId::CpuPyg,
+            PlatformId::GpuDgl,
+            PlatformId::GpuPyg,
+            PlatformId::Hygcn,
+        ]
+    }
+
+    /// Display name matching the paper's figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlatformId::CpuDgl => "CPU-DGL",
+            PlatformId::CpuPyg => "CPU-PyG",
+            PlatformId::GpuDgl => "GPU-DGL",
+            PlatformId::GpuPyg => "GPU-PyG",
+            PlatformId::Hygcn => "HyGCN",
+        }
+    }
+
+    /// Parse a CLI spelling ("cpu-dgl", "GPU-PyG", "hygcn", ...).
+    pub fn parse(s: &str) -> Option<PlatformId> {
+        PlatformId::all()
+            .into_iter()
+            .find(|p| p.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Evaluate `model` over `w` on one platform: the single dispatch point
+/// the cost-model serving backend and the CLI share.
+pub fn evaluate(
+    platform: PlatformId,
+    model: &crate::model::GnnModel,
+    w: &Workload,
+) -> BaselineReport {
+    match platform {
+        PlatformId::CpuDgl => cpu::CpuModel::new(cpu::Framework::Dgl).run(model, w),
+        PlatformId::CpuPyg => cpu::CpuModel::new(cpu::Framework::Pyg).run(model, w),
+        PlatformId::GpuDgl => gpu::GpuModel::new(cpu::Framework::Dgl).run(model, w),
+        PlatformId::GpuPyg => gpu::GpuModel::new(cpu::Framework::Pyg).run(model, w),
+        PlatformId::Hygcn => hygcn::HygcnModel::paper().run(model, w),
+    }
+}
+
 /// Per-stage wall-clock seconds for one whole model pass.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageTimes {
@@ -178,6 +235,23 @@ mod tests {
         };
         assert_eq!(r.gops(), 0.0);
         assert_eq!(r.gops_per_watt(), 0.0);
+    }
+
+    #[test]
+    fn platform_id_round_trips_and_dispatches() {
+        for p in PlatformId::all() {
+            assert_eq!(PlatformId::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlatformId::parse("cpu-dgl"), Some(PlatformId::CpuDgl));
+        assert_eq!(PlatformId::parse("nope"), None);
+        let spec = crate::graph::datasets::by_code("CA").unwrap();
+        let model = crate::model::GnnModel::for_dataset(crate::model::GnnKind::Gcn, &spec);
+        let w = Workload::from_spec(&spec);
+        for p in PlatformId::all() {
+            let r = evaluate(p, &model, &w);
+            assert_eq!(r.platform, p.name(), "platform name mismatch");
+            assert!(r.seconds() > 0.0, "{}: zero seconds", r.platform);
+        }
     }
 
     #[test]

@@ -1,22 +1,25 @@
-//! Dynamic batching: group same-artifact requests within a bounded wait
-//! window, oldest-first, without starving other artifacts.
+//! Dynamic batching: group same-key jobs within a bounded wait window,
+//! oldest-first, without starving other keys. The key is the job's
+//! [`crate::coordinator::engine::JobPayload::batch_key`] — artifact for
+//! tensor jobs, (config, dataset) for sim jobs, platform for cost jobs —
+//! so every plane flows through one bounded-intake, FIFO-fair path.
 //!
 //! Two layers live here:
 //! * [`form_batch`] — the pull-based batch former over a single FIFO
 //!   queue (the original coordinator shape; kept as a utility and for
 //!   its fairness tests);
-//! * [`PendingQueues`] — per-artifact FIFO queues with a global-FIFO
+//! * [`PendingQueues`] — per-key FIFO queues with a global-FIFO
 //!   fairness rule, which the multi-worker service's workers pull from.
 
-use super::service::Request;
+use super::service::Job;
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct BatchConfig {
-    /// Maximum requests per batch.
+    /// Maximum jobs per batch.
     pub max_batch: usize,
-    /// How long the batcher waits for co-batchable requests once it has
+    /// How long the batcher waits for co-batchable jobs once it has
     /// at least one.
     pub max_wait: Duration,
 }
@@ -32,39 +35,38 @@ impl Default for BatchConfig {
 
 /// Pull-based batch former over a pending queue.
 ///
-/// The caller owns a `VecDeque<Request>`; `form_batch` removes and
-/// returns the next batch: the artifact of the *oldest* pending request
-/// determines the batch key (FIFO fairness across models), and up to
-/// `max_batch` requests with that artifact are drained in arrival order.
-/// Single pass, O(n); the relative order of everything left behind is
-/// preserved.
-pub fn form_batch(pending: &mut VecDeque<Request>, cfg: &BatchConfig) -> Vec<Request> {
+/// The caller owns a `VecDeque<Job>`; `form_batch` removes and returns
+/// the next batch: the batch key of the *oldest* pending job determines
+/// the batch (FIFO fairness across keys), and up to `max_batch` jobs
+/// with that key are drained in arrival order. Single pass, O(n); the
+/// relative order of everything left behind is preserved.
+pub fn form_batch(pending: &mut VecDeque<Job>, cfg: &BatchConfig) -> Vec<Job> {
     let Some(front) = pending.front() else {
         return Vec::new();
     };
-    let key = front.artifact.clone();
+    let key = front.key.clone();
     let mut batch = Vec::new();
     let mut rest = VecDeque::with_capacity(pending.len());
-    while let Some(req) = pending.pop_front() {
-        if batch.len() < cfg.max_batch && req.artifact == key {
-            batch.push(req);
+    while let Some(job) = pending.pop_front() {
+        if batch.len() < cfg.max_batch && job.key == key {
+            batch.push(job);
         } else {
-            rest.push_back(req);
+            rest.push_back(job);
         }
     }
     *pending = rest;
     batch
 }
 
-/// Per-artifact FIFO queues with a global-FIFO fairness rule: the
-/// artifact owning the globally oldest queued request is served first,
-/// and a batch drains that artifact's queue in arrival order.
+/// Per-key FIFO queues with a global-FIFO fairness rule: the key owning
+/// the globally oldest queued job is served first, and a batch drains
+/// that key's queue in arrival order.
 ///
 /// Arrival order is tracked with an internal monotonic sequence number,
 /// so fairness does not depend on `Instant` resolution.
 #[derive(Default)]
 pub struct PendingQueues {
-    queues: HashMap<String, VecDeque<(u64, Request)>>,
+    queues: HashMap<String, VecDeque<(u64, Job)>>,
     next_seq: u64,
     len: usize,
 }
@@ -74,7 +76,7 @@ impl PendingQueues {
         Self::default()
     }
 
-    /// Total queued requests across all artifacts.
+    /// Total queued jobs across all keys.
     pub fn len(&self) -> usize {
         self.len
     }
@@ -83,19 +85,19 @@ impl PendingQueues {
         self.len == 0
     }
 
-    pub fn push(&mut self, req: Request) {
+    pub fn push(&mut self, job: Job) {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.queues
-            .entry(req.artifact.clone())
+            .entry(job.key.clone())
             .or_default()
-            .push_back((seq, req));
+            .push_back((seq, job));
         self.len += 1;
     }
 
-    /// The artifact whose head request is globally oldest, with that
-    /// head's enqueue time and the artifact's current queue depth.
-    /// `None` when nothing is queued.
+    /// The key whose head job is globally oldest, with that head's
+    /// enqueue time and the key's current queue depth. `None` when
+    /// nothing is queued.
     pub fn oldest_head(&self) -> Option<(String, Instant, usize)> {
         self.queues
             .iter()
@@ -104,10 +106,10 @@ impl PendingQueues {
             .map(|(_, name, enqueued, depth)| (name.clone(), enqueued, depth))
     }
 
-    /// An artifact whose queue already holds a full batch (`depth >=
-    /// max`), oldest head first. Workers use this to stay busy while the
-    /// globally oldest request's batching window is still collecting.
-    pub fn full_artifact(&self, max: usize) -> Option<String> {
+    /// A key whose queue already holds a full batch (`depth >= max`),
+    /// oldest head first. Workers use this to stay busy while the
+    /// globally oldest job's batching window is still collecting.
+    pub fn full_key(&self, max: usize) -> Option<String> {
         self.queues
             .iter()
             .filter(|(_, q)| q.len() >= max)
@@ -115,17 +117,17 @@ impl PendingQueues {
             .map(|(name, _)| name.clone())
     }
 
-    /// Drain up to `max` oldest requests for `artifact`, in arrival
-    /// order. Empty when the artifact has no queue (e.g. another worker
-    /// took it between `oldest_head` and this call).
-    pub fn take_batch(&mut self, artifact: &str, max: usize) -> Vec<Request> {
-        let Some(q) = self.queues.get_mut(artifact) else {
+    /// Drain up to `max` oldest jobs for `key`, in arrival order.
+    /// Empty when the key has no queue (e.g. another worker took it
+    /// between `oldest_head` and this call).
+    pub fn take_batch(&mut self, key: &str, max: usize) -> Vec<Job> {
+        let Some(q) = self.queues.get_mut(key) else {
             return Vec::new();
         };
         let take = q.len().min(max);
-        let batch: Vec<Request> = q.drain(..take).map(|(_, r)| r).collect();
+        let batch: Vec<Job> = q.drain(..take).map(|(_, r)| r).collect();
         if q.is_empty() {
-            self.queues.remove(artifact);
+            self.queues.remove(key);
         }
         self.len -= batch.len();
         batch
@@ -135,25 +137,29 @@ impl PendingQueues {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::service::Request;
-    use std::sync::mpsc;
-    use std::time::Instant;
+    use crate::coordinator::engine::JobPayload;
+    use crate::coordinator::service::{Job, ResponseSlot};
 
-    fn req(id: u64, artifact: &str) -> Request {
-        let (tx, _rx) = mpsc::channel();
-        Request {
+    fn job(id: u64, artifact: &str) -> Job {
+        Job::new(
             id,
-            artifact: artifact.to_string(),
-            inputs: Vec::new(),
-            enqueued: Instant::now(),
-            reply: tx,
-        }
+            JobPayload::Tensor {
+                artifact: artifact.to_string(),
+                inputs: Vec::new(),
+            },
+            None,
+            ResponseSlot::new(),
+        )
+    }
+
+    fn key(artifact: &str) -> String {
+        format!("tensor:{artifact}")
     }
 
     #[test]
-    fn batches_by_oldest_artifact_fifo() {
-        let mut q: VecDeque<Request> =
-            [req(1, "gcn"), req(2, "grn"), req(3, "gcn"), req(4, "gcn")]
+    fn batches_by_oldest_key_fifo() {
+        let mut q: VecDeque<Job> =
+            [job(1, "gcn"), job(2, "grn"), job(3, "gcn"), job(4, "gcn")]
                 .into_iter()
                 .collect();
         let cfg = BatchConfig {
@@ -171,7 +177,7 @@ mod tests {
 
     #[test]
     fn respects_max_batch() {
-        let mut q: VecDeque<Request> = (0..10).map(|i| req(i, "gcn")).collect();
+        let mut q: VecDeque<Job> = (0..10).map(|i| job(i, "gcn")).collect();
         let cfg = BatchConfig {
             max_batch: 4,
             ..Default::default()
@@ -186,17 +192,17 @@ mod tests {
         assert!(form_batch(&mut q, &BatchConfig::default()).is_empty());
     }
 
-    /// The single-pass drain must keep FIFO order for requests left
-    /// behind, including same-key requests beyond the `max_batch` cut.
+    /// The single-pass drain must keep FIFO order for jobs left behind,
+    /// including same-key jobs beyond the `max_batch` cut.
     #[test]
     fn drain_preserves_fifo_past_max_batch() {
-        let mut q: VecDeque<Request> = [
-            req(1, "gcn"),
-            req(2, "grn"),
-            req(3, "gcn"),
-            req(4, "gcn"),
-            req(5, "gcn"),
-            req(6, "grn"),
+        let mut q: VecDeque<Job> = [
+            job(1, "gcn"),
+            job(2, "grn"),
+            job(3, "gcn"),
+            job(4, "gcn"),
+            job(5, "gcn"),
+            job(6, "grn"),
         ]
         .into_iter()
         .collect();
@@ -217,57 +223,90 @@ mod tests {
     }
 
     #[test]
-    fn pending_queues_fifo_fair_across_artifacts() {
+    fn pending_queues_fifo_fair_across_keys() {
         let mut pq = PendingQueues::new();
-        for r in [req(1, "gcn"), req(2, "grn"), req(3, "gcn"), req(4, "rgcn")] {
+        for r in [job(1, "gcn"), job(2, "grn"), job(3, "gcn"), job(4, "rgcn")] {
             pq.push(r);
         }
         assert_eq!(pq.len(), 4);
         // gcn owns the oldest head and has depth 2.
         let (name, _, depth) = pq.oldest_head().expect("head");
-        assert_eq!(name, "gcn");
+        assert_eq!(name, key("gcn"));
         assert_eq!(depth, 2);
-        let b = pq.take_batch("gcn", 8);
+        let b = pq.take_batch(&key("gcn"), 8);
         assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
         // grn (seq 1) now precedes rgcn (seq 3).
         let (name, _, _) = pq.oldest_head().expect("head");
-        assert_eq!(name, "grn");
-        assert_eq!(pq.take_batch("grn", 8).len(), 1);
-        assert_eq!(pq.take_batch("rgcn", 8).len(), 1);
+        assert_eq!(name, key("grn"));
+        assert_eq!(pq.take_batch(&key("grn"), 8).len(), 1);
+        assert_eq!(pq.take_batch(&key("rgcn"), 8).len(), 1);
         assert!(pq.is_empty());
         assert!(pq.oldest_head().is_none());
     }
 
     #[test]
-    fn pending_queues_full_artifact_prefers_oldest_full_queue() {
+    fn pending_queues_full_key_prefers_oldest_full_queue() {
         let mut pq = PendingQueues::new();
         // grn arrives first but never fills; gcn and rgcn both fill.
         for r in [
-            req(1, "grn"),
-            req(2, "gcn"),
-            req(3, "rgcn"),
-            req(4, "rgcn"),
-            req(5, "gcn"),
+            job(1, "grn"),
+            job(2, "gcn"),
+            job(3, "rgcn"),
+            job(4, "rgcn"),
+            job(5, "gcn"),
         ] {
             pq.push(r);
         }
-        assert_eq!(pq.full_artifact(2).as_deref(), Some("gcn"));
-        assert_eq!(pq.full_artifact(3), None);
-        pq.take_batch("gcn", 2);
-        assert_eq!(pq.full_artifact(2).as_deref(), Some("rgcn"));
+        assert_eq!(pq.full_key(2), Some(key("gcn")));
+        assert_eq!(pq.full_key(3), None);
+        pq.take_batch(&key("gcn"), 2);
+        assert_eq!(pq.full_key(2), Some(key("rgcn")));
     }
 
     #[test]
     fn pending_queues_take_batch_caps_and_accounts() {
         let mut pq = PendingQueues::new();
         for i in 0..5 {
-            pq.push(req(i, "gcn"));
+            pq.push(job(i, "gcn"));
         }
-        let b = pq.take_batch("gcn", 2);
+        let b = pq.take_batch(&key("gcn"), 2);
         assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(pq.len(), 3);
         assert!(pq.take_batch("unknown", 2).is_empty());
-        assert_eq!(pq.take_batch("gcn", 10).len(), 3);
+        assert_eq!(pq.take_batch(&key("gcn"), 10).len(), 3);
+        assert!(pq.is_empty());
+    }
+
+    /// Sim and cost payloads get their own queues under their own keys —
+    /// the per-variant batching rules fall out of `batch_key`.
+    #[test]
+    fn planes_queue_under_distinct_keys() {
+        use crate::coordinator::engine::{CostJob, SimJob};
+        use crate::model::GnnKind;
+
+        let mut pq = PendingQueues::new();
+        pq.push(job(1, "gcn"));
+        pq.push(Job::new(
+            2,
+            JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA")),
+            None,
+            ResponseSlot::new(),
+        ));
+        pq.push(Job::new(
+            3,
+            JobPayload::Cost(CostJob::new(
+                crate::baselines::PlatformId::Hygcn,
+                GnnKind::Gcn,
+                "CA",
+            )),
+            None,
+            ResponseSlot::new(),
+        ));
+        assert_eq!(pq.len(), 3);
+        assert_eq!(pq.oldest_head().unwrap().0, key("gcn"));
+        assert_eq!(pq.take_batch("sim:EnGN:CA", 8).len(), 1);
+        assert_eq!(pq.take_batch("cost:HyGCN", 8).len(), 1);
+        assert_eq!(pq.take_batch(&key("gcn"), 8).len(), 1);
         assert!(pq.is_empty());
     }
 }

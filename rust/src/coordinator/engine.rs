@@ -1,0 +1,597 @@
+//! Execution planes behind the serving coordinator: the [`Backend`]
+//! trait plus the three concrete planes the service multiplexes —
+//! tensor inference over the PJRT runtime ([`TensorBackend`]),
+//! cycle/energy what-if simulation ([`SimBackend`]) and analytic
+//! baseline cost-model queries ([`CostBackend`]).
+//!
+//! A [`JobPayload`] names its plane ([`JobKind`]) and its batching key
+//! ([`JobPayload::batch_key`]): tensor jobs stack per artifact, sim jobs
+//! group per (accelerator config, dataset) so a formed batch amortizes
+//! one graph instantiation, and cost jobs group per platform. The
+//! service routes a whole formed batch to one backend with a single
+//! [`Backend::execute_batch`] call.
+
+use crate::baselines::{self, PlatformId, Workload};
+use crate::config::AcceleratorConfig;
+use crate::graph::datasets::{self, ScalePolicy};
+use crate::graph::Graph;
+use crate::model::{GnnKind, GnnModel};
+use crate::runtime::HostTensor;
+use crate::sim::Simulator;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Anything that can execute a named tensor artifact. Implemented by
+/// [`crate::runtime::Runtime`]; tests use mocks.
+///
+/// PJRT handles are not `Send` (the `xla` crate wraps `Rc` + raw
+/// pointers), so the service *constructs one executor inside each worker
+/// thread* via a loader closure and the trait itself needs no thread
+/// bounds.
+pub trait Executor: 'static {
+    fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String>;
+
+    /// Execute a whole formed batch with ONE call: `batches[i]` is the
+    /// complete input set of request `i`, and the returned vec must hold
+    /// one result per request, in order. The default implementation
+    /// loops over [`Executor::execute`]; backends that can amortize
+    /// dispatch (the PJRT runtime stacks same-shape requests along a new
+    /// leading axis) override it.
+    fn execute_batch(
+        &self,
+        artifact: &str,
+        batches: &[Vec<HostTensor>],
+    ) -> Vec<Result<HostTensor, String>> {
+        batches
+            .iter()
+            .map(|inputs| self.execute(artifact, inputs))
+            .collect()
+    }
+}
+
+impl Executor for crate::runtime::Runtime {
+    fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
+        crate::runtime::Runtime::execute(self, artifact, inputs)
+    }
+
+    fn execute_batch(
+        &self,
+        artifact: &str,
+        batches: &[Vec<HostTensor>],
+    ) -> Vec<Result<HostTensor, String>> {
+        crate::runtime::Runtime::execute_batch(self, artifact, batches)
+    }
+}
+
+/// The execution plane a job belongs to; one registered [`Backend`]
+/// serves each kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobKind {
+    /// Tensor inference against a named AOT artifact.
+    Tensor,
+    /// Cycle/energy what-if simulation on the EnGN model.
+    Sim,
+    /// Analytic baseline cost-model query (CPU/GPU/HyGCN).
+    Cost,
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Tensor => "tensor",
+            JobKind::Sim => "sim",
+            JobKind::Cost => "cost",
+        }
+    }
+}
+
+/// A cycle/energy what-if query: simulate `model` on a Table-5 dataset
+/// under an accelerator configuration. Capacity-planning and
+/// design-space requests are expressed as streams of these.
+#[derive(Debug, Clone)]
+pub struct SimJob {
+    pub model: GnnKind,
+    /// Table-5 dataset code (see `engn datasets`).
+    pub dataset: String,
+    pub policy: ScalePolicy,
+    pub config: AcceleratorConfig,
+    /// Graph-synthesis seed; jobs sharing (dataset, policy, seed) share
+    /// one instantiated graph inside the backend.
+    pub seed: u64,
+}
+
+impl SimJob {
+    /// A what-if on the paper's EnGN configuration at capped scale.
+    pub fn new(model: GnnKind, dataset: &str) -> Self {
+        Self {
+            model,
+            dataset: dataset.to_string(),
+            policy: ScalePolicy::Capped,
+            config: AcceleratorConfig::engn(),
+            seed: 0xE16A,
+        }
+    }
+
+    pub fn with_config(mut self, config: AcceleratorConfig) -> Self {
+        self.config = config;
+        self
+    }
+}
+
+/// A baseline cost-model query: what would `model` on `dataset` cost on
+/// one of the paper's comparison platforms?
+#[derive(Debug, Clone)]
+pub struct CostJob {
+    pub platform: PlatformId,
+    pub model: GnnKind,
+    /// Table-5 dataset code.
+    pub dataset: String,
+}
+
+impl CostJob {
+    pub fn new(platform: PlatformId, model: GnnKind, dataset: &str) -> Self {
+        Self {
+            platform,
+            model,
+            dataset: dataset.to_string(),
+        }
+    }
+}
+
+/// What a job asks for. The variant decides the execution plane and the
+/// batching rule (see [`JobPayload::batch_key`]).
+#[derive(Debug, Clone)]
+pub enum JobPayload {
+    /// Tensor inference: run `artifact` on `inputs`.
+    Tensor {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+    },
+    /// What-if simulation.
+    Sim(SimJob),
+    /// Baseline cost-model query.
+    Cost(CostJob),
+}
+
+impl JobPayload {
+    pub fn kind(&self) -> JobKind {
+        match self {
+            JobPayload::Tensor { .. } => JobKind::Tensor,
+            JobPayload::Sim(_) => JobKind::Sim,
+            JobPayload::Cost(_) => JobKind::Cost,
+        }
+    }
+
+    /// The batching key: jobs with equal keys may be served by one
+    /// [`Backend::execute_batch`] call. Tensor jobs stack per artifact;
+    /// sim jobs group per (config, dataset) so one formed batch shares a
+    /// graph instantiation; cost jobs group per platform.
+    pub fn batch_key(&self) -> String {
+        match self {
+            JobPayload::Tensor { artifact, .. } => format!("tensor:{artifact}"),
+            JobPayload::Sim(j) => format!("sim:{}:{}", j.config.name, j.dataset),
+            JobPayload::Cost(j) => format!("cost:{}", j.platform.name()),
+        }
+    }
+}
+
+/// Compact simulation result (the serving-plane view of a
+/// [`crate::sim::SimReport`]).
+#[derive(Debug, Clone)]
+pub struct SimSummary {
+    pub config: String,
+    pub model: String,
+    pub dataset: String,
+    pub cycles: f64,
+    pub seconds: f64,
+    pub energy_j: f64,
+    pub power_w: f64,
+    pub gops: f64,
+    pub gops_per_watt: f64,
+}
+
+/// Compact baseline cost-model result.
+#[derive(Debug, Clone)]
+pub struct CostSummary {
+    pub platform: String,
+    pub model: String,
+    pub dataset: String,
+    pub seconds: f64,
+    pub energy_j: f64,
+    pub gops: f64,
+    /// The platform cannot run the workload (PyG OOM on large graphs).
+    pub oom: bool,
+}
+
+/// What a completed job returns; the variant mirrors the payload's.
+#[derive(Debug, Clone)]
+pub enum JobOutput {
+    Tensor(HostTensor),
+    Sim(SimSummary),
+    Cost(CostSummary),
+}
+
+impl JobOutput {
+    pub fn into_tensor(self) -> Option<HostTensor> {
+        match self {
+            JobOutput::Tensor(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_tensor(&self) -> Option<&HostTensor> {
+        match self {
+            JobOutput::Tensor(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_sim(&self) -> Option<&SimSummary> {
+        match self {
+            JobOutput::Sim(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_cost(&self) -> Option<&CostSummary> {
+        match self {
+            JobOutput::Cost(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+/// An execution plane. The service guarantees every payload handed to
+/// [`Backend::execute_batch`] shares one [`JobPayload::batch_key`] (and
+/// therefore one [`JobKind`], matching [`Backend::kind`]).
+///
+/// Like [`Executor`], backends are constructed inside each worker
+/// thread (PJRT handles are not `Send`), so no thread bounds.
+pub trait Backend: 'static {
+    /// The payload kind this backend serves.
+    fn kind(&self) -> JobKind;
+
+    /// Execute a whole formed batch with ONE call; must return exactly
+    /// one result per job, in order.
+    fn execute_batch(&self, jobs: Vec<JobPayload>) -> Vec<Result<JobOutput, String>>;
+}
+
+/// The tensor plane: adapts any [`Executor`] (the PJRT runtime in
+/// production, mocks in tests) to the job contract.
+pub struct TensorBackend {
+    exec: Box<dyn Executor>,
+}
+
+impl TensorBackend {
+    pub fn new(exec: Box<dyn Executor>) -> Self {
+        Self { exec }
+    }
+}
+
+impl Backend for TensorBackend {
+    fn kind(&self) -> JobKind {
+        JobKind::Tensor
+    }
+
+    fn execute_batch(&self, jobs: Vec<JobPayload>) -> Vec<Result<JobOutput, String>> {
+        let n = jobs.len();
+        let mut artifact: Option<String> = None;
+        let mut input_sets = Vec::with_capacity(n);
+        for job in jobs {
+            match job {
+                JobPayload::Tensor { artifact: a, inputs } => {
+                    artifact.get_or_insert(a);
+                    input_sets.push(inputs);
+                }
+                other => {
+                    // The batch-key invariant was violated upstream.
+                    let msg =
+                        format!("tensor backend handed a {:?} job", other.kind());
+                    return vec![Err(msg); n];
+                }
+            }
+        }
+        let Some(artifact) = artifact else {
+            return Vec::new();
+        };
+        self.exec
+            .execute_batch(&artifact, &input_sets)
+            .into_iter()
+            .map(|r| r.map(JobOutput::Tensor))
+            .collect()
+    }
+}
+
+/// Cache key for an instantiated dataset graph.
+type GraphKey = (String, u8, usize, u64);
+
+fn policy_key(p: ScalePolicy) -> (u8, usize) {
+    match p {
+        ScalePolicy::Capped => (0, 0),
+        ScalePolicy::Full => (1, 0),
+        ScalePolicy::Factor(f) => (2, f),
+    }
+}
+
+/// Graphs kept per backend instance. The key is client-controlled
+/// (dataset, policy, seed), so the cache must be bounded or a request
+/// stream varying the seed would grow memory without limit.
+const GRAPH_CACHE_CAP: usize = 8;
+
+/// The simulation plane: answers [`SimJob`]s with the cycle/energy
+/// simulator. Instantiated graphs are cached per (dataset, policy,
+/// seed) — bounded FIFO of [`GRAPH_CACHE_CAP`] — so a same-config
+/// batch, and any later batch over the same dataset, amortizes graph
+/// synthesis.
+#[derive(Default)]
+pub struct SimBackend {
+    graphs: Mutex<Vec<(GraphKey, Arc<Graph>)>>,
+}
+
+impl SimBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn graph_for(
+        &self,
+        spec: &datasets::DatasetSpec,
+        policy: ScalePolicy,
+        seed: u64,
+    ) -> Arc<Graph> {
+        let (pk, pf) = policy_key(policy);
+        let key: GraphKey = (spec.code.to_string(), pk, pf, seed);
+        if let Some((_, g)) = self.graphs.lock().unwrap().iter().find(|(k, _)| *k == key) {
+            return g.clone();
+        }
+        // Synthesize outside the lock: instantiation dominates and other
+        // keys' batches must not serialize behind it. A racing duplicate
+        // build is benign (both entries answer identically).
+        let g = Arc::new(spec.instantiate(policy, seed));
+        let mut cache = self.graphs.lock().unwrap();
+        if cache.len() >= GRAPH_CACHE_CAP {
+            cache.remove(0);
+        }
+        cache.push((key, g.clone()));
+        g
+    }
+
+    fn run_job(&self, job: &SimJob) -> Result<SimSummary, String> {
+        let spec = datasets::by_code(&job.dataset)
+            .ok_or_else(|| format!("unknown dataset {:?}", job.dataset))?;
+        if !job.model.runs_on(&spec) {
+            return Err(format!(
+                "{} does not run on {} in the paper's suite",
+                job.model.name(),
+                spec.code
+            ));
+        }
+        let graph = self.graph_for(&spec, job.policy, job.seed);
+        let report = Simulator::new(job.config.clone()).run_for_spec(job.model, &spec, &graph);
+        Ok(SimSummary {
+            config: job.config.name.clone(),
+            model: job.model.name().to_string(),
+            dataset: spec.code.to_string(),
+            cycles: report.total_cycles(),
+            seconds: report.seconds(),
+            energy_j: report.energy_j(),
+            power_w: report.power_w,
+            gops: report.gops(),
+            gops_per_watt: report.gops_per_watt(),
+        })
+    }
+}
+
+impl Backend for SimBackend {
+    fn kind(&self) -> JobKind {
+        JobKind::Sim
+    }
+
+    fn execute_batch(&self, jobs: Vec<JobPayload>) -> Vec<Result<JobOutput, String>> {
+        jobs.iter()
+            .map(|job| match job {
+                JobPayload::Sim(j) => self.run_job(j).map(JobOutput::Sim),
+                other => Err(format!("sim backend handed a {:?} job", other.kind())),
+            })
+            .collect()
+    }
+}
+
+/// The cost-model plane: answers [`CostJob`]s with the analytic
+/// CPU/GPU/HyGCN baselines (pure arithmetic — no graph is built).
+#[derive(Default)]
+pub struct CostBackend;
+
+impl CostBackend {
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn run_job(job: &CostJob) -> Result<CostSummary, String> {
+        let spec = datasets::by_code(&job.dataset)
+            .ok_or_else(|| format!("unknown dataset {:?}", job.dataset))?;
+        if !job.model.runs_on(&spec) {
+            return Err(format!(
+                "{} does not run on {} in the paper's suite",
+                job.model.name(),
+                spec.code
+            ));
+        }
+        let model = GnnModel::for_dataset(job.model, &spec);
+        let w = Workload::from_spec(&spec);
+        let r = baselines::evaluate(job.platform, &model, &w);
+        Ok(CostSummary {
+            platform: r.platform.clone(),
+            model: job.model.name().to_string(),
+            dataset: spec.code.to_string(),
+            seconds: r.seconds(),
+            energy_j: r.energy_j(),
+            gops: r.gops(),
+            oom: r.oom,
+        })
+    }
+}
+
+impl Backend for CostBackend {
+    fn kind(&self) -> JobKind {
+        JobKind::Cost
+    }
+
+    fn execute_batch(&self, jobs: Vec<JobPayload>) -> Vec<Result<JobOutput, String>> {
+        jobs.iter()
+            .map(|job| match job {
+                JobPayload::Cost(j) => Self::run_job(j).map(JobOutput::Cost),
+                other => Err(format!("cost backend handed a {:?} job", other.kind())),
+            })
+            .collect()
+    }
+}
+
+/// The set of execution planes one worker serves: at most one backend
+/// per [`JobKind`]. Built inside the worker thread by the service's
+/// loader closure.
+#[derive(Default)]
+pub struct Backends {
+    map: HashMap<JobKind, Box<dyn Backend>>,
+}
+
+impl Backends {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a backend (builder style); replaces any previous backend
+    /// of the same kind.
+    pub fn with(mut self, backend: Box<dyn Backend>) -> Self {
+        self.map.insert(backend.kind(), backend);
+        self
+    }
+
+    pub fn get(&self, kind: JobKind) -> Option<&dyn Backend> {
+        self.map.get(&kind).map(|b| b.as_ref())
+    }
+
+    pub fn kinds(&self) -> Vec<JobKind> {
+        let mut kinds: Vec<JobKind> = self.map.keys().copied().collect();
+        kinds.sort_by_key(|k| k.name());
+        kinds
+    }
+
+    /// Tensor plane only, over any executor (tests, the PJRT runtime).
+    pub fn tensor(exec: Box<dyn Executor>) -> Self {
+        Self::new().with(Box::new(TensorBackend::new(exec)))
+    }
+
+    /// The two analytic planes (simulation + cost models); needs no
+    /// compiled artifacts, so it always loads.
+    pub fn analytic() -> Self {
+        Self::new()
+            .with(Box::new(SimBackend::new()))
+            .with(Box::new(CostBackend::new()))
+    }
+
+    /// All three planes.
+    pub fn full(exec: Box<dyn Executor>) -> Self {
+        Self::analytic().with(Box::new(TensorBackend::new(exec)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_keys_group_by_plane_rules() {
+        let t = JobPayload::Tensor {
+            artifact: "gcn".into(),
+            inputs: vec![],
+        };
+        assert_eq!(t.kind(), JobKind::Tensor);
+        assert_eq!(t.batch_key(), "tensor:gcn");
+
+        let s = JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA"));
+        assert_eq!(s.kind(), JobKind::Sim);
+        assert_eq!(s.batch_key(), "sim:EnGN:CA");
+        let s22 = JobPayload::Sim(
+            SimJob::new(GnnKind::Gcn, "CA").with_config(AcceleratorConfig::engn_22mb()),
+        );
+        // Different accelerator config => different group.
+        assert_ne!(s.batch_key(), s22.batch_key());
+
+        let c = JobPayload::Cost(CostJob::new(PlatformId::CpuDgl, GnnKind::Gcn, "CA"));
+        assert_eq!(c.kind(), JobKind::Cost);
+        assert_eq!(c.batch_key(), "cost:CPU-DGL");
+    }
+
+    #[test]
+    fn sim_backend_answers_and_caches_graphs() {
+        let be = SimBackend::new();
+        let jobs = vec![
+            JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA")),
+            JobPayload::Sim(SimJob::new(GnnKind::GsPool, "CA")),
+        ];
+        let results = be.execute_batch(jobs);
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            let out = r.as_ref().expect("sim job ok");
+            let s = out.as_sim().expect("sim output");
+            assert_eq!(s.dataset, "CA");
+            assert!(s.seconds > 0.0 && s.energy_j > 0.0 && s.cycles > 0.0);
+        }
+        // Both jobs share (dataset, policy, seed): one cached graph.
+        assert_eq!(be.graphs.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn sim_graph_cache_is_bounded() {
+        let be = SimBackend::new();
+        for seed in 0..(GRAPH_CACHE_CAP as u64 + 3) {
+            let mut job = SimJob::new(GnnKind::Gcn, "CA");
+            job.seed = seed;
+            be.run_job(&job).expect("sim ok");
+        }
+        assert!(be.graphs.lock().unwrap().len() <= GRAPH_CACHE_CAP);
+    }
+
+    #[test]
+    fn sim_backend_rejects_unknown_dataset_and_bad_pairing() {
+        let be = SimBackend::new();
+        let bad = be.execute_batch(vec![JobPayload::Sim(SimJob::new(GnnKind::Gcn, "nope"))]);
+        assert!(bad[0].as_ref().unwrap_err().contains("unknown dataset"));
+        // R-GCN only runs on the multi-relational datasets.
+        let pair = be.execute_batch(vec![JobPayload::Sim(SimJob::new(GnnKind::Rgcn, "CA"))]);
+        assert!(pair[0].as_ref().unwrap_err().contains("does not run"));
+    }
+
+    #[test]
+    fn cost_backend_answers_every_platform() {
+        let be = CostBackend::new();
+        let jobs: Vec<JobPayload> = PlatformId::all()
+            .into_iter()
+            .map(|p| JobPayload::Cost(CostJob::new(p, GnnKind::Gcn, "CA")))
+            .collect();
+        let results = be.execute_batch(jobs);
+        assert_eq!(results.len(), PlatformId::all().len());
+        for r in results {
+            let out = r.expect("cost job ok");
+            let c = out.as_cost().expect("cost output");
+            assert!(c.seconds > 0.0, "{}: zero seconds", c.platform);
+        }
+    }
+
+    #[test]
+    fn backends_registry_routes_by_kind() {
+        let b = Backends::analytic();
+        assert!(b.get(JobKind::Sim).is_some());
+        assert!(b.get(JobKind::Cost).is_some());
+        assert!(b.get(JobKind::Tensor).is_none());
+        assert_eq!(b.kinds(), vec![JobKind::Cost, JobKind::Sim]);
+    }
+
+    #[test]
+    fn mismatched_kind_is_reported_per_job() {
+        let be = CostBackend::new();
+        let res = be.execute_batch(vec![JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA"))]);
+        assert!(res[0].as_ref().unwrap_err().contains("cost backend"));
+    }
+}

@@ -1,31 +1,51 @@
-//! L3 coordinator: a sharded inference-serving layer over the PJRT
-//! runtime and the EnGN simulator.
+//! L3 coordinator: a sharded, multi-plane serving layer over the PJRT
+//! runtime, the EnGN simulator and the analytic baseline cost models.
 //!
 //! EnGN is an accelerator paper, so the coordination contribution is a
 //! *driver* shaped like a model server, built around the paper's thesis
 //! that throughput comes from amortizing work across co-scheduled
 //! vertices/requests (§4.1, GPA dataflow):
 //!
-//! * **Bounded intake** — [`InferenceService::submit`] sheds load with a
-//!   typed [`SubmitError::Busy`] once the queue hits capacity, instead
-//!   of growing an unbounded channel;
-//! * **FIFO-fair per-artifact queues** — [`batcher::PendingQueues`]
-//!   serves the artifact owning the globally oldest request first, so a
-//!   hot model cannot starve the others;
-//! * **N worker threads** — each constructs its own executor (PJRT
-//!   handles are thread-local), pulls whole batches and answers them;
-//! * **Genuinely batched execution** — a formed batch is served by ONE
-//!   [`Executor::execute_batch`] call (the runtime stacks same-shape
-//!   requests along a new leading axis), not a per-request loop;
+//! * **Typed jobs over pluggable execution planes** — a
+//!   [`JobPayload`] names its plane ([`engine::Backend`]): tensor
+//!   inference via the PJRT runtime, cycle/energy what-if simulation
+//!   via [`crate::sim::Simulator`], and cost-model queries via
+//!   [`crate::baselines`] — so capacity-planning and design-space
+//!   requests flow through the same bounded-intake, FIFO-fair,
+//!   batched path as inference;
+//! * **Per-variant batching rules** — [`JobPayload::batch_key`] stacks
+//!   tensor jobs per artifact, groups sim jobs per (config, dataset)
+//!   so a formed batch amortizes one graph instantiation, and groups
+//!   cost jobs per platform;
+//! * **Ticket handles** — [`InferenceService::submit`] returns a
+//!   [`Ticket`] with `wait` / `wait_timeout` / `try_poll` / `cancel`
+//!   instead of a raw channel;
+//! * **Deadline-aware batching** — per-job deadlines are honored by
+//!   batch formation, which sheds already-expired jobs *before*
+//!   execution and records them in the `expired` metrics counter;
+//! * **Bounded intake** — submissions past capacity are shed with a
+//!   typed [`SubmitError::Busy`], instead of growing an unbounded
+//!   channel;
+//! * **FIFO-fair per-key queues** — [`batcher::PendingQueues`] serves
+//!   the key owning the globally oldest job first, so a hot model
+//!   cannot starve the others;
+//! * **N worker threads** — each constructs its own backends (PJRT
+//!   handles are thread-local), pulls whole batches and answers them
+//!   with ONE [`engine::Backend::execute_batch`] call;
 //! * **Per-worker metrics** — each worker accumulates privately;
-//!   [`InferenceService::metrics`] merges on snapshot, so the request
+//!   [`InferenceService::metrics`] merges on snapshot, so the job
 //!   hot path never takes a global metrics mutex.
 
 pub mod batcher;
+pub mod engine;
 pub mod service;
 
 pub use batcher::{form_batch, BatchConfig, PendingQueues};
+pub use engine::{
+    Backend, Backends, CostBackend, CostJob, CostSummary, Executor, JobKind, JobOutput,
+    JobPayload, SimBackend, SimJob, SimSummary, TensorBackend,
+};
 pub use service::{
-    ArtifactStats, Executor, InferenceService, MetricsSnapshot, Request, Response, ServiceConfig,
-    SubmitError,
+    InferenceService, Job, JobError, JobResponse, KeyStats, MetricsSnapshot, ServiceConfig,
+    SubmitError, Ticket,
 };

@@ -1,80 +1,207 @@
-//! The inference service: bounded request intake with explicit overload
-//! shedding, N batching worker threads pulling FIFO-fair per-artifact
-//! queues, genuinely batched execution on an [`Executor`] (the PJRT
-//! runtime in production, mocks in tests), and per-worker latency
-//! metrics merged on snapshot.
+//! The serving service: bounded job intake with explicit overload
+//! shedding, N batching worker threads pulling FIFO-fair per-key
+//! queues, genuinely batched execution on the registered [`Backend`]s
+//! (tensor inference, what-if simulation, cost models), typed
+//! [`Ticket`] handles with deadline-aware shedding, and per-worker
+//! latency metrics merged on snapshot.
 
 use super::batcher::{BatchConfig, PendingQueues};
+use super::engine::{Backends, JobOutput, JobPayload};
 use crate::runtime::HostTensor;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// How long an idle worker sleeps between stop checks when nothing is
-/// queued.
-const IDLE_POLL: Duration = Duration::from_millis(25);
+/// Fallback tick for an idle worker. Submissions and shutdown are
+/// condvar-notified, so this only bounds recovery from a hypothetical
+/// lost wakeup — an idle service wakes each worker ~1×/s, not 40×/s.
+const IDLE_FALLBACK: Duration = Duration::from_secs(1);
 
-/// Anything that can execute a named artifact. Implemented by
-/// [`crate::runtime::Runtime`]; tests use mocks.
-///
-/// PJRT handles are not `Send` (the `xla` crate wraps `Rc` + raw
-/// pointers), so the service *constructs one executor inside each worker
-/// thread* via a loader closure and the trait itself needs no thread
-/// bounds.
-pub trait Executor: 'static {
-    fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String>;
-
-    /// Execute a whole formed batch with ONE call: `batches[i]` is the
-    /// complete input set of request `i`, and the returned vec must hold
-    /// one result per request, in order. The default implementation
-    /// loops over [`Executor::execute`]; backends that can amortize
-    /// dispatch (the PJRT runtime stacks same-shape requests along a new
-    /// leading axis) override it.
-    fn execute_batch(
-        &self,
-        artifact: &str,
-        batches: &[Vec<HostTensor>],
-    ) -> Vec<Result<HostTensor, String>> {
-        batches
-            .iter()
-            .map(|inputs| self.execute(artifact, inputs))
-            .collect()
-    }
-}
-
-impl Executor for crate::runtime::Runtime {
-    fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
-        crate::runtime::Runtime::execute(self, artifact, inputs)
-    }
-
-    fn execute_batch(
-        &self,
-        artifact: &str,
-        batches: &[Vec<HostTensor>],
-    ) -> Vec<Result<HostTensor, String>> {
-        crate::runtime::Runtime::execute_batch(self, artifact, batches)
-    }
-}
-
-/// An enqueued inference request.
-pub struct Request {
+/// An enqueued job: a typed payload plus its delivery slot.
+pub struct Job {
     pub id: u64,
-    pub artifact: String,
-    pub inputs: Vec<HostTensor>,
+    /// Cached [`JobPayload::batch_key`] (the queue/metrics key).
+    pub key: String,
+    pub payload: JobPayload,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<Response>,
+    /// Absolute deadline; batch formation sheds the job un-executed once
+    /// this passes.
+    pub deadline: Option<Instant>,
+    pub(crate) slot: ResponseSlot,
 }
+
+impl Job {
+    pub(crate) fn new(
+        id: u64,
+        payload: JobPayload,
+        deadline: Option<Instant>,
+        slot: ResponseSlot,
+    ) -> Self {
+        Self {
+            id,
+            key: payload.batch_key(),
+            payload,
+            enqueued: Instant::now(),
+            deadline,
+            slot,
+        }
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| d <= now)
+    }
+}
+
+/// Why a job was answered without a successful output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobError {
+    /// The backend (or its loader) failed; the message says how.
+    Failed(String),
+    /// The deadline passed while the job was queued: it was shed at
+    /// batch formation and never executed.
+    Expired,
+    /// [`Ticket::cancel`] was called before execution.
+    Cancelled,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Failed(msg) => write!(f, "{msg}"),
+            JobError::Expired => write!(f, "deadline expired before execution"),
+            JobError::Cancelled => write!(f, "cancelled before execution"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// The reply delivered to the submitter.
-#[derive(Debug)]
-pub struct Response {
+#[derive(Debug, Clone)]
+pub struct JobResponse {
     pub id: u64,
-    pub result: Result<HostTensor, String>,
+    pub result: Result<JobOutput, JobError>,
     pub queue_wait: Duration,
     pub exec_time: Duration,
     pub batch_size: usize,
+}
+
+impl JobResponse {
+    /// Sugar for the tensor plane: the output tensor, or the error.
+    pub fn into_tensor(self) -> Result<HostTensor, JobError> {
+        match self.result {
+            Ok(JobOutput::Tensor(t)) => Ok(t),
+            Ok(other) => Err(JobError::Failed(format!(
+                "expected a tensor output, got {:?}",
+                other
+            ))),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Shared slot a worker delivers the response into; the submitter's
+/// [`Ticket`] waits on it.
+#[derive(Clone)]
+pub(crate) struct ResponseSlot(Arc<SlotInner>);
+
+struct SlotInner {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct SlotState {
+    response: Option<JobResponse>,
+    cancelled: bool,
+}
+
+impl ResponseSlot {
+    pub(crate) fn new() -> Self {
+        Self(Arc::new(SlotInner {
+            state: Mutex::new(SlotState::default()),
+            cv: Condvar::new(),
+        }))
+    }
+
+    fn deliver(&self, resp: JobResponse) {
+        let mut st = self.0.state.lock().unwrap();
+        if st.response.is_none() {
+            st.response = Some(resp);
+        }
+        drop(st);
+        self.0.cv.notify_all();
+    }
+
+    fn is_cancelled(&self) -> bool {
+        self.0.state.lock().unwrap().cancelled
+    }
+}
+
+/// Handle to a submitted job, returned by [`InferenceService::submit`].
+///
+/// The service's shutdown-drain guarantee means every accepted job is
+/// eventually answered, so [`Ticket::wait`] always returns.
+pub struct Ticket {
+    id: u64,
+    slot: ResponseSlot,
+}
+
+impl Ticket {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the job is answered.
+    pub fn wait(&self) -> JobResponse {
+        let mut st = self.slot.0.state.lock().unwrap();
+        loop {
+            if let Some(resp) = &st.response {
+                return resp.clone();
+            }
+            st = self.slot.0.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Block for at most `timeout`; `None` if the job is still pending.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<JobResponse> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.slot.0.state.lock().unwrap();
+        loop {
+            if let Some(resp) = &st.response {
+                return Some(resp.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st = self.slot.0.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Non-blocking check: the response, if already delivered.
+    pub fn try_poll(&self) -> Option<JobResponse> {
+        self.slot.0.state.lock().unwrap().response.clone()
+    }
+
+    /// Request cancellation. Returns `true` if the flag was recorded
+    /// before a response was delivered: a job still *queued* is then
+    /// shed un-executed at batch formation and answered
+    /// [`JobError::Cancelled`]; a job already *executing* races the
+    /// flag and may still complete, in which case its real result is
+    /// delivered. Returns `false` if a response had already arrived
+    /// (the result stands). Check the eventual [`Ticket::wait`]
+    /// response to learn which happened.
+    pub fn cancel(&self) -> bool {
+        let mut st = self.slot.0.state.lock().unwrap();
+        if st.response.is_some() {
+            return false;
+        }
+        st.cancelled = true;
+        true
+    }
 }
 
 /// Typed intake rejection: the service sheds load instead of queueing
@@ -108,7 +235,7 @@ impl std::error::Error for SubmitError {}
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub batch: BatchConfig,
-    /// Worker threads. Each constructs its own executor via the loader
+    /// Worker threads. Each constructs its own backends via the loader
     /// closure (PJRT handles are thread-local), so artifacts are
     /// effectively sharded per worker.
     pub workers: usize,
@@ -136,36 +263,36 @@ impl From<BatchConfig> for ServiceConfig {
     }
 }
 
-/// Most recent samples kept per artifact per worker. Totals
+/// Most recent samples kept per batch key per worker. Totals
 /// (`count`/`errors`) stay exact; the sample vectors are bounded ring
 /// windows so a long-running service doesn't grow memory per request
 /// and snapshots don't sort unbounded history.
 const MAX_SAMPLES: usize = 4096;
 
-/// Per-artifact accumulator. Each worker owns one map privately and only
-/// the metrics snapshot ever touches another thread's copy, so request
+/// Per-key accumulator. Each worker owns one map privately and only
+/// the metrics snapshot ever touches another thread's copy, so job
 /// hot paths never contend on a global metrics mutex.
 #[derive(Debug, Default, Clone)]
-struct ArtifactMetrics {
+struct KeyMetrics {
     count: u64,
     errors: u64,
-    /// Per-request: execution time of the batch that served the request
+    /// Per-job: execution time of the batch that served the job
     /// (ring window of the last [`MAX_SAMPLES`]).
     exec_s: Vec<f64>,
-    /// Per-request: time from enqueue to batch start (same window).
+    /// Per-job: time from enqueue to batch start (same window).
     wait_s: Vec<f64>,
-    /// Per-*batch* sizes (one entry per formed batch, NOT per request —
-    /// recording per request overweights large batches).
+    /// Per-*batch* sizes (one entry per formed batch, NOT per job —
+    /// recording per job overweights large batches).
     batch_sizes: Vec<usize>,
     /// Per-*batch* execution times (throughput denominators), aligned
     /// slot-for-slot with `batch_sizes`.
     batch_exec_s: Vec<f64>,
-    /// Ring cursors for the per-request and per-batch windows.
+    /// Ring cursors for the per-job and per-batch windows.
     req_cursor: usize,
     batch_cursor: usize,
 }
 
-impl ArtifactMetrics {
+impl KeyMetrics {
     fn record_batch(&mut self, batch_size: usize, exec_s: f64) {
         self.count += batch_size as u64;
         if self.batch_sizes.len() < MAX_SAMPLES {
@@ -198,24 +325,31 @@ impl ArtifactMetrics {
 /// Aggregated service metrics.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
-    pub per_artifact: HashMap<String, ArtifactStats>,
+    /// Stats per batch key (`tensor:<artifact>`, `sim:<config>:<dataset>`,
+    /// `cost:<platform>`).
+    pub per_key: HashMap<String, KeyStats>,
     pub total_requests: u64,
     /// Submissions shed with [`SubmitError::Busy`].
     pub rejected: u64,
+    /// Jobs shed at batch formation because their deadline had passed
+    /// (answered with [`JobError::Expired`], never executed).
+    pub expired: u64,
+    /// Jobs shed at batch formation after [`Ticket::cancel`].
+    pub cancelled: u64,
     /// Worker threads serving the queues.
     pub workers: usize,
 }
 
 #[derive(Debug, Clone)]
-pub struct ArtifactStats {
+pub struct KeyStats {
     pub count: u64,
     pub errors: u64,
     pub mean_exec_s: f64,
     pub p95_exec_s: f64,
     pub mean_wait_s: f64,
     pub mean_batch: f64,
-    /// Requests per second of batch execution time (batching efficiency:
-    /// co-batched requests share one denominator entry).
+    /// Jobs per second of batch execution time (batching efficiency:
+    /// co-batched jobs share one denominator entry).
     pub throughput_rps: f64,
 }
 
@@ -238,14 +372,14 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[(rank as usize).clamp(1, sorted.len()) - 1]
 }
 
-fn aggregate(am: &ArtifactMetrics) -> ArtifactStats {
+fn aggregate(am: &KeyMetrics) -> KeyStats {
     let mut exec_sorted = am.exec_s.clone();
     exec_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let batch_exec_total: f64 = am.batch_exec_s.iter().sum();
     // Means and throughput are over the retained sample window (the
     // full history until it exceeds MAX_SAMPLES); count/errors are
     // exact lifetime totals.
-    ArtifactStats {
+    KeyStats {
         count: am.count,
         errors: am.errors,
         mean_exec_s: am.exec_s.iter().sum::<f64>() / am.exec_s.len().max(1) as f64,
@@ -265,7 +399,7 @@ fn aggregate(am: &ArtifactMetrics) -> ArtifactStats {
 /// sample vectors may exceed [`MAX_SAMPLES`] (up to workers × window);
 /// that's fine — the merge target is never pushed to through the ring
 /// path, and [`aggregate`] handles any length.
-fn merge_into(dst: &mut ArtifactMetrics, src: &ArtifactMetrics) {
+fn merge_into(dst: &mut KeyMetrics, src: &KeyMetrics) {
     dst.count += src.count;
     dst.errors += src.errors;
     dst.exec_s.extend_from_slice(&src.exec_s);
@@ -274,7 +408,7 @@ fn merge_into(dst: &mut ArtifactMetrics, src: &ArtifactMetrics) {
     dst.batch_exec_s.extend_from_slice(&src.batch_exec_s);
 }
 
-/// Queue state guarded by one mutex: the per-artifact pending queues and
+/// Queue state guarded by one mutex: the per-key pending queues and
 /// the shutdown flag (inside the lock so submit/stop/drain can never
 /// race).
 struct QueueState {
@@ -287,7 +421,14 @@ struct Shared {
     cv: Condvar,
 }
 
-type WorkerMetrics = Arc<Mutex<HashMap<String, ArtifactMetrics>>>;
+/// Shed counters shared between the service handle and its workers.
+#[derive(Default)]
+struct ShedCounters {
+    expired: AtomicU64,
+    cancelled: AtomicU64,
+}
+
+type WorkerMetrics = Arc<Mutex<HashMap<String, KeyMetrics>>>;
 
 /// The running service. Dropping it (or calling [`shutdown`]) stops
 /// intake, drains the queues and joins the workers.
@@ -297,19 +438,20 @@ pub struct InferenceService {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     worker_metrics: Vec<WorkerMetrics>,
+    shed: Arc<ShedCounters>,
     next_id: AtomicU64,
     rejected: AtomicU64,
     cfg: ServiceConfig,
 }
 
 impl InferenceService {
-    /// Start the service. `make_executor` runs once *per worker*, inside
+    /// Start the service. `make_backends` runs once *per worker*, inside
     /// that worker's thread (PJRT compilation happens there); if it
-    /// fails, that worker answers every request it pulls with the load
+    /// fails, that worker answers every job it pulls with the load
     /// error.
-    pub fn start<F>(make_executor: F, cfg: impl Into<ServiceConfig>) -> Self
+    pub fn start<F>(make_backends: F, cfg: impl Into<ServiceConfig>) -> Self
     where
-        F: Fn() -> Result<Box<dyn Executor>, String> + Send + Sync + 'static,
+        F: Fn() -> Result<Backends, String> + Send + Sync + 'static,
     {
         let mut cfg = cfg.into();
         cfg.workers = cfg.workers.max(1);
@@ -320,43 +462,72 @@ impl InferenceService {
             }),
             cv: Condvar::new(),
         });
-        let make_executor = Arc::new(make_executor);
+        let shed = Arc::new(ShedCounters::default());
+        let make_backends = Arc::new(make_backends);
         let mut workers = Vec::with_capacity(cfg.workers);
         let mut worker_metrics = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
             let metrics: WorkerMetrics = Arc::new(Mutex::new(HashMap::new()));
             worker_metrics.push(metrics.clone());
             let shared = shared.clone();
-            let make = make_executor.clone();
+            let shed = shed.clone();
+            let make = make_backends.clone();
             let batch_cfg = cfg.batch.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("engn-worker-{i}"))
                 .spawn(move || {
-                    let executor = (*make)();
-                    worker_loop(&shared, &executor, &batch_cfg, &metrics);
+                    let backends = (*make)();
+                    worker_loop(&shared, &backends, &batch_cfg, &metrics, &shed);
                 })
-                .expect("spawn inference worker");
+                .expect("spawn serving worker");
             workers.push(handle);
         }
         Self {
             shared,
             workers,
             worker_metrics,
+            shed,
             next_id: AtomicU64::new(1),
             rejected: AtomicU64::new(0),
             cfg,
         }
     }
 
-    /// Submit a request; returns (request id, response receiver), or a
-    /// typed rejection when the intake queue is full or the service is
-    /// draining.
-    pub fn submit(
+    /// Submit a job; returns a [`Ticket`] handle, or a typed rejection
+    /// when the intake queue is full or the service is draining.
+    pub fn submit(&self, payload: JobPayload) -> Result<Ticket, SubmitError> {
+        self.submit_inner(payload, None)
+    }
+
+    /// Submit with a deadline relative to now: if the job is still
+    /// queued when the deadline passes, batch formation sheds it
+    /// un-executed and answers [`JobError::Expired`].
+    pub fn submit_with_deadline(
+        &self,
+        payload: JobPayload,
+        deadline: Duration,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_inner(payload, Some(Instant::now() + deadline))
+    }
+
+    /// Sugar for the tensor plane: submit an artifact inference job.
+    pub fn submit_tensor(
         &self,
         artifact: &str,
         inputs: Vec<HostTensor>,
-    ) -> Result<(u64, mpsc::Receiver<Response>), SubmitError> {
-        let (reply_tx, reply_rx) = mpsc::channel();
+    ) -> Result<Ticket, SubmitError> {
+        self.submit(JobPayload::Tensor {
+            artifact: artifact.to_string(),
+            inputs,
+        })
+    }
+
+    fn submit_inner(
+        &self,
+        payload: JobPayload,
+        deadline: Option<Instant>,
+    ) -> Result<Ticket, SubmitError> {
+        let slot = ResponseSlot::new();
         let mut st = self.shared.state.lock().unwrap();
         if st.stop {
             return Err(SubmitError::ShuttingDown);
@@ -369,59 +540,48 @@ impl InferenceService {
             });
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        st.pending.push(Request {
-            id,
-            artifact: artifact.to_string(),
-            inputs,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        });
+        st.pending.push(Job::new(id, payload, deadline, slot.clone()));
         drop(st);
         self.shared.cv.notify_all();
-        Ok((id, reply_rx))
+        Ok(Ticket { id, slot })
     }
 
-    /// Convenience: submit and block for the response.
+    /// Convenience: submit a tensor job and block for the response.
     pub fn infer(
         &self,
         artifact: &str,
         inputs: Vec<HostTensor>,
-    ) -> Result<Response, SubmitError> {
-        let (id, rx) = self.submit(artifact, inputs)?;
-        Ok(rx.recv().unwrap_or(Response {
-            id,
-            result: Err("service stopped before responding".to_string()),
-            queue_wait: Duration::ZERO,
-            exec_time: Duration::ZERO,
-            batch_size: 0,
-        }))
+    ) -> Result<JobResponse, SubmitError> {
+        Ok(self.submit_tensor(artifact, inputs)?.wait())
     }
 
     /// Merge every worker's private accumulator into one snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
-        let mut merged: HashMap<String, ArtifactMetrics> = HashMap::new();
+        let mut merged: HashMap<String, KeyMetrics> = HashMap::new();
         for wm in &self.worker_metrics {
             let m = wm.lock().unwrap();
             for (name, am) in m.iter() {
                 merge_into(merged.entry(name.clone()).or_default(), am);
             }
         }
-        let mut per_artifact = HashMap::new();
+        let mut per_key = HashMap::new();
         let mut total = 0;
         for (name, am) in &merged {
             total += am.count;
-            per_artifact.insert(name.clone(), aggregate(am));
+            per_key.insert(name.clone(), aggregate(am));
         }
         MetricsSnapshot {
-            per_artifact,
+            per_key,
             total_requests: total,
             rejected: self.rejected.load(Ordering::Relaxed),
+            expired: self.shed.expired.load(Ordering::Relaxed),
+            cancelled: self.shed.cancelled.load(Ordering::Relaxed),
             workers: self.worker_metrics.len(),
         }
     }
 
     /// Stop intake, let the workers drain everything already queued,
-    /// then join them. Every accepted request is answered.
+    /// then join them. Every accepted job is answered.
     pub fn shutdown(mut self) {
         self.begin_shutdown();
     }
@@ -444,11 +604,11 @@ impl Drop for InferenceService {
     }
 }
 
-/// Block until a batch can be formed. FIFO-fair: the artifact owning the
-/// globally oldest request is served first; the batching window is
-/// anchored to that request's enqueue time. Returns `None` once the
+/// Block until a batch can be formed. FIFO-fair: the key owning the
+/// globally oldest job is served first; the batching window is
+/// anchored to that job's enqueue time. Returns `None` once the
 /// service is stopping and the queues are drained.
-fn next_batch(shared: &Shared, cfg: &BatchConfig) -> Option<Vec<Request>> {
+fn next_batch(shared: &Shared, cfg: &BatchConfig) -> Option<Vec<Job>> {
     let max_batch = cfg.max_batch.max(1);
     let mut st = shared.state.lock().unwrap();
     loop {
@@ -456,10 +616,12 @@ fn next_batch(shared: &Shared, cfg: &BatchConfig) -> Option<Vec<Request>> {
             if st.stop {
                 return None;
             }
-            st = shared.cv.wait_timeout(st, IDLE_POLL).unwrap().0;
+            // Idle: park on the condvar. Submissions and shutdown
+            // notify; the long tick is only lost-wakeup insurance.
+            st = shared.cv.wait_timeout(st, IDLE_FALLBACK).unwrap().0;
             continue;
         }
-        let (artifact, head_enqueued, depth) =
+        let (key, head_enqueued, depth) =
             st.pending.oldest_head().expect("non-empty queue has a head");
         // Hold the batching window open for co-batchable arrivals unless
         // the batch is already full or the service is draining.
@@ -467,11 +629,11 @@ fn next_batch(shared: &Shared, cfg: &BatchConfig) -> Option<Vec<Request>> {
             let deadline = head_enqueued + cfg.max_wait;
             let now = Instant::now();
             if now < deadline {
-                // While the oldest artifact is still collecting, serve
-                // any other artifact whose batch is already full rather
+                // While the oldest key is still collecting, serve
+                // any other key whose batch is already full rather
                 // than idling. Starvation-free: window expiry below
                 // always wins for the oldest head.
-                if let Some(ready) = st.pending.full_artifact(max_batch) {
+                if let Some(ready) = st.pending.full_key(max_batch) {
                     let batch = st.pending.take_batch(&ready, max_batch);
                     if !batch.is_empty() {
                         return Some(batch);
@@ -482,52 +644,103 @@ fn next_batch(shared: &Shared, cfg: &BatchConfig) -> Option<Vec<Request>> {
                 continue;
             }
         }
-        let batch = st.pending.take_batch(&artifact, max_batch);
+        let batch = st.pending.take_batch(&key, max_batch);
         if !batch.is_empty() {
             return Some(batch);
         }
-        // Another worker drained the artifact between checks; re-scan.
+        // Another worker drained the key between checks; re-scan.
     }
 }
 
 fn worker_loop(
     shared: &Shared,
-    executor: &Result<Box<dyn Executor>, String>,
+    backends: &Result<Backends, String>,
     cfg: &BatchConfig,
-    metrics: &Mutex<HashMap<String, ArtifactMetrics>>,
+    metrics: &Mutex<HashMap<String, KeyMetrics>>,
+    shed: &ShedCounters,
 ) {
     while let Some(batch) = next_batch(shared, cfg) {
-        serve_batch(executor, batch, metrics);
+        serve_batch(backends, batch, metrics, shed);
     }
 }
 
-/// Execute one formed batch with a single `execute_batch` call, record
-/// metrics (per batch AND per request), and answer every member.
+/// Answer a shed job (expired or cancelled) without executing it.
+fn deliver_shed(job: Job, err: JobError, now: Instant) {
+    job.slot.deliver(JobResponse {
+        id: job.id,
+        result: Err(err),
+        queue_wait: now.duration_since(job.enqueued),
+        exec_time: Duration::ZERO,
+        batch_size: 0,
+    });
+}
+
+/// Shed dead members, then execute the surviving batch with a single
+/// `execute_batch` call on the backend owning its kind, record metrics
+/// (per batch AND per job), and answer every member.
 fn serve_batch(
-    executor: &Result<Box<dyn Executor>, String>,
-    batch: Vec<Request>,
-    metrics: &Mutex<HashMap<String, ArtifactMetrics>>,
+    backends: &Result<Backends, String>,
+    batch: Vec<Job>,
+    metrics: &Mutex<HashMap<String, KeyMetrics>>,
+    shed: &ShedCounters,
 ) {
-    let batch_size = batch.len();
-    let artifact = batch[0].artifact.clone();
+    // Deadline-aware shedding at batch formation: already-expired (or
+    // cancelled) jobs are answered immediately and never reach the
+    // backend.
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.slot.is_cancelled() {
+            shed.cancelled.fetch_add(1, Ordering::Relaxed);
+            deliver_shed(job, JobError::Cancelled, now);
+        } else if job.expired(now) {
+            shed.expired.fetch_add(1, Ordering::Relaxed);
+            deliver_shed(job, JobError::Expired, now);
+        } else {
+            live.push(job);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let batch_size = live.len();
+    let key = live[0].key.clone();
+    let kind = live[0].payload.kind();
     let mut metas = Vec::with_capacity(batch_size);
-    let mut input_sets = Vec::with_capacity(batch_size);
-    for req in batch {
-        metas.push((req.id, req.enqueued, req.reply));
-        input_sets.push(req.inputs);
+    let mut payloads = Vec::with_capacity(batch_size);
+    for job in live {
+        metas.push((job.id, job.enqueued, job.slot));
+        payloads.push(job.payload);
     }
     let started = Instant::now();
-    let mut results = match executor {
-        Ok(exe) => exe.execute_batch(&artifact, &input_sets),
-        Err(e) => vec![Err(format!("executor failed to load: {e}")); batch_size],
+    let mut results: Vec<Result<JobOutput, String>> = match backends {
+        Ok(b) => match b.get(kind) {
+            // catch_unwind upholds the answered-once guarantee: a
+            // panicking backend must not take the worker (and every
+            // waiter's Ticket) down with it.
+            Some(backend) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || backend.execute_batch(payloads),
+            ))
+            .unwrap_or_else(|_| {
+                vec![
+                    Err(format!("backend panicked serving a {} batch", kind.name()));
+                    batch_size
+                ]
+            }),
+            None => vec![
+                Err(format!("no backend registered for {} jobs", kind.name()));
+                batch_size
+            ],
+        },
+        Err(e) => vec![Err(format!("backends failed to load: {e}")); batch_size],
     };
     let exec_time = started.elapsed();
     if results.len() != batch_size {
-        // Contract violation: request↔result alignment can no longer be
+        // Contract violation: job↔result alignment can no longer be
         // trusted in either direction, so answer every member with the
         // error instead of delivering possibly misaligned successes.
         let msg = format!(
-            "executor returned {} results for a batch of {batch_size}",
+            "backend returned {} results for a batch of {batch_size}",
             results.len()
         );
         results.clear();
@@ -535,7 +748,7 @@ fn serve_batch(
     }
     {
         let mut m = metrics.lock().unwrap();
-        let am = m.entry(artifact).or_default();
+        let am = m.entry(key).or_default();
         am.record_batch(batch_size, exec_time.as_secs_f64());
         for ((_, enqueued, _), result) in metas.iter().zip(&results) {
             am.record_request(
@@ -545,10 +758,10 @@ fn serve_batch(
             );
         }
     }
-    for ((id, enqueued, reply), result) in metas.into_iter().zip(results) {
-        let _ = reply.send(Response {
+    for ((id, enqueued, slot), result) in metas.into_iter().zip(results) {
+        slot.deliver(JobResponse {
             id,
-            result,
+            result: result.map_err(JobError::Failed),
             queue_wait: started.duration_since(enqueued),
             exec_time,
             batch_size,
@@ -559,6 +772,7 @@ fn serve_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::Executor;
     use std::sync::atomic::AtomicUsize;
 
     /// Mock executor: returns a 1-element tensor with the input count.
@@ -582,10 +796,10 @@ mod tests {
     fn service(delay_ms: u64, fail_on: Option<&'static str>) -> InferenceService {
         InferenceService::start(
             move || {
-                Ok(Box::new(Mock {
+                Ok(Backends::tensor(Box::new(Mock {
                     delay: Duration::from_millis(delay_ms),
                     fail_on,
-                }) as Box<dyn Executor>)
+                })))
             },
             BatchConfig {
                 max_batch: 4,
@@ -600,51 +814,45 @@ mod tests {
         let resp = svc
             .infer("gcn", vec![HostTensor::zeros(vec![2]), HostTensor::zeros(vec![2])])
             .expect("accepted");
-        let out = resp.result.unwrap();
-        assert_eq!(out.data, vec![2.0]);
         assert!(resp.batch_size >= 1);
+        let out = resp.into_tensor().unwrap();
+        assert_eq!(out.data, vec![2.0]);
         svc.shutdown();
     }
 
     #[test]
     fn concurrent_submissions_all_answered() {
         let svc = Arc::new(service(1, None));
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for i in 0..20 {
             let artifact = if i % 2 == 0 { "gcn" } else { "grn" };
-            let (_, rx) = svc
-                .submit(artifact, vec![HostTensor::zeros(vec![1])])
-                .expect("accepted");
-            rxs.push(rx);
+            tickets.push(svc.submit_tensor(artifact, vec![HostTensor::zeros(vec![1])]).expect("accepted"));
         }
         let mut ids = std::collections::HashSet::new();
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
+        for t in tickets {
+            let resp = t.wait();
             assert!(resp.result.is_ok());
+            assert_eq!(resp.id, t.id());
             assert!(ids.insert(resp.id), "duplicate response id");
         }
         let m = svc.metrics();
         assert_eq!(m.total_requests, 20);
         assert_eq!(m.rejected, 0);
-        assert!(m.per_artifact.contains_key("gcn"));
-        assert!(m.per_artifact.contains_key("grn"));
+        assert!(m.per_key.contains_key("tensor:gcn"));
+        assert!(m.per_key.contains_key("tensor:grn"));
     }
 
     #[test]
     fn batching_groups_same_artifact() {
         let svc = service(2, None);
-        let mut rxs = Vec::new();
-        for _ in 0..4 {
-            let (_, rx) = svc
-                .submit("gcn", vec![HostTensor::zeros(vec![1])])
-                .expect("accepted");
-            rxs.push(rx);
-        }
-        let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|_| svc.submit_tensor("gcn", vec![HostTensor::zeros(vec![1])]).expect("accepted"))
+            .collect();
+        let sizes: Vec<usize> = tickets.iter().map(|t| t.wait().batch_size).collect();
         // At least one response should have been co-batched.
         assert!(sizes.iter().any(|&s| s > 1), "batch sizes {sizes:?}");
         let m = svc.metrics();
-        assert!(m.per_artifact["gcn"].mean_batch > 1.0);
+        assert!(m.per_key["tensor:gcn"].mean_batch > 1.0);
     }
 
     /// Mock that counts batch-level vs request-level executor calls: the
@@ -686,12 +894,12 @@ mod tests {
         let (bc, sc, ss) = (batch_calls.clone(), single_calls.clone(), sizes_seen.clone());
         let svc = InferenceService::start(
             move || {
-                Ok(Box::new(BatchMock {
+                Ok(Backends::tensor(Box::new(BatchMock {
                     batch_calls: bc.clone(),
                     single_calls: sc.clone(),
                     sizes_seen: ss.clone(),
                     delay: Duration::from_millis(200),
-                }) as Box<dyn Executor>)
+                })))
             },
             ServiceConfig {
                 batch: BatchConfig {
@@ -703,19 +911,19 @@ mod tests {
             },
         );
         // Warmup request parks the single worker inside the mock's sleep…
-        let (_, warm_rx) = svc.submit("gcn", vec![]).expect("accepted");
+        let warm = svc.submit_tensor("gcn", vec![]).expect("accepted");
         let t0 = Instant::now();
         while batch_calls.load(Ordering::SeqCst) == 0 {
             assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
             std::thread::sleep(Duration::from_millis(1));
         }
         // …so these four queue up together and must form ONE batch.
-        let rxs: Vec<_> = (0..4)
-            .map(|_| svc.submit("gcn", vec![]).expect("accepted").1)
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|_| svc.submit_tensor("gcn", vec![]).expect("accepted"))
             .collect();
-        assert!(warm_rx.recv().unwrap().result.is_ok());
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
+        assert!(warm.wait().result.is_ok());
+        for t in tickets {
+            let resp = t.wait();
             assert!(resp.result.is_ok());
             assert_eq!(resp.batch_size, 4, "request not served by the full batch");
         }
@@ -734,11 +942,11 @@ mod tests {
         // `Mock` implements only `execute`; three co-batched requests
         // must still all be answered through the default impl.
         let svc = service(0, None);
-        let rxs: Vec<_> = (0..3)
-            .map(|_| svc.submit("gcn", vec![]).expect("accepted").1)
+        let tickets: Vec<Ticket> = (0..3)
+            .map(|_| svc.submit_tensor("gcn", vec![]).expect("accepted"))
             .collect();
-        for rx in rxs {
-            assert!(rx.recv().unwrap().result.is_ok());
+        for t in tickets {
+            assert!(t.wait().result.is_ok());
         }
         svc.shutdown();
     }
@@ -747,9 +955,12 @@ mod tests {
     fn failures_reported_not_swallowed() {
         let svc = service(0, Some("bad"));
         let resp = svc.infer("bad", vec![]).expect("accepted");
-        assert!(resp.result.is_err());
+        match resp.result {
+            Err(JobError::Failed(msg)) => assert!(msg.contains("mock failure"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
         let m = svc.metrics();
-        assert_eq!(m.per_artifact["bad"].errors, 1);
+        assert_eq!(m.per_key["tensor:bad"].errors, 1);
     }
 
     #[test]
@@ -759,8 +970,61 @@ mod tests {
             BatchConfig::default(),
         );
         let resp = svc.infer("gcn", vec![]).expect("accepted");
-        let err = resp.result.unwrap_err();
-        assert!(err.contains("no artifacts"), "{err}");
+        match resp.result {
+            Err(JobError::Failed(msg)) => assert!(msg.contains("no artifacts"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn missing_backend_answers_with_error() {
+        // Tensor-only service receives a sim job: answered, typed error.
+        let svc = service(0, None);
+        let ticket = svc
+            .submit(JobPayload::Sim(crate::coordinator::engine::SimJob::new(
+                crate::model::GnnKind::Gcn,
+                "CA",
+            )))
+            .expect("accepted");
+        match ticket.wait().result {
+            Err(JobError::Failed(msg)) => {
+                assert!(msg.contains("no backend registered"), "{msg}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    /// A panicking backend must not take the worker down: the batch is
+    /// answered with a typed error and the worker keeps serving, so
+    /// `Ticket::wait` never hangs (the answered-once guarantee).
+    #[test]
+    fn panicking_backend_answers_batch_and_worker_survives() {
+        struct Panicker;
+        impl Executor for Panicker {
+            fn execute(&self, _a: &str, _i: &[HostTensor]) -> Result<HostTensor, String> {
+                panic!("backend bug");
+            }
+        }
+        let svc = InferenceService::start(
+            || Ok(Backends::tensor(Box::new(Panicker))),
+            ServiceConfig {
+                batch: BatchConfig {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                },
+                workers: 1,
+                queue_capacity: 16,
+            },
+        );
+        for _ in 0..2 {
+            let resp = svc.infer("gcn", vec![]).expect("accepted");
+            match resp.result {
+                Err(JobError::Failed(msg)) => assert!(msg.contains("panicked"), "{msg}"),
+                other => panic!("expected Failed, got {other:?}"),
+            }
+        }
         svc.shutdown();
     }
 
@@ -768,10 +1032,10 @@ mod tests {
     fn zero_capacity_sheds_immediately_with_typed_busy() {
         let svc = InferenceService::start(
             || {
-                Ok(Box::new(Mock {
+                Ok(Backends::tensor(Box::new(Mock {
                     delay: Duration::ZERO,
                     fail_on: None,
-                }) as Box<dyn Executor>)
+                })))
             },
             ServiceConfig {
                 batch: BatchConfig::default(),
@@ -779,7 +1043,7 @@ mod tests {
                 queue_capacity: 0,
             },
         );
-        let err = svc.submit("gcn", vec![]).unwrap_err();
+        let err = svc.submit_tensor("gcn", vec![]).unwrap_err();
         assert_eq!(
             err,
             SubmitError::Busy {
@@ -799,9 +1063,86 @@ mod tests {
             st.stop = true;
         }
         assert_eq!(
-            svc.submit("gcn", vec![]).unwrap_err(),
+            svc.submit_tensor("gcn", vec![]).unwrap_err(),
             SubmitError::ShuttingDown
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn ticket_try_poll_and_wait_timeout() {
+        let svc = service(20, None);
+        let ticket = svc.submit_tensor("gcn", vec![]).expect("accepted");
+        // Pending immediately (20 ms mock delay): polls say not-yet.
+        assert!(ticket.wait_timeout(Duration::from_millis(1)).is_none());
+        let resp = ticket.wait();
+        assert!(resp.result.is_ok());
+        // Once delivered, every accessor agrees.
+        assert!(ticket.try_poll().is_some());
+        assert!(ticket.wait_timeout(Duration::ZERO).is_some());
+        // Cancel after delivery is a no-op that reports false.
+        assert!(!ticket.cancel());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_job_is_shed_before_execution() {
+        // max_wait 50ms >> the 1ms deadline: the job expires while its
+        // batching window is still open, so formation must shed it.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = calls.clone();
+        struct Counting(Arc<AtomicUsize>);
+        impl Executor for Counting {
+            fn execute(&self, _a: &str, _i: &[HostTensor]) -> Result<HostTensor, String> {
+                self.0.fetch_add(1, Ordering::SeqCst);
+                Ok(HostTensor::zeros(vec![1]))
+            }
+        }
+        let svc = InferenceService::start(
+            move || Ok(Backends::tensor(Box::new(Counting(c.clone())))),
+            ServiceConfig {
+                batch: BatchConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(50),
+                },
+                workers: 1,
+                queue_capacity: 16,
+            },
+        );
+        let ticket = svc
+            .submit_with_deadline(
+                JobPayload::Tensor {
+                    artifact: "gcn".into(),
+                    inputs: vec![],
+                },
+                Duration::from_millis(1),
+            )
+            .expect("accepted");
+        let resp = ticket.wait();
+        assert!(matches!(resp.result, Err(JobError::Expired)), "{:?}", resp.result);
+        assert_eq!(resp.batch_size, 0);
+        let m = svc.metrics();
+        assert_eq!(m.expired, 1);
+        assert_eq!(m.total_requests, 0, "expired job must not be executed");
+        svc.shutdown();
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn cancelled_job_is_shed_before_execution() {
+        let svc = service(0, None);
+        // Park nothing: cancel can race execution, so use a long window
+        // (5ms batch wait) and cancel immediately — formation sees the
+        // flag when the window closes.
+        let ticket = svc.submit_tensor("gcn", vec![]).expect("accepted");
+        if ticket.cancel() {
+            let resp = ticket.wait();
+            // Either the worker saw the flag (Cancelled) or it had
+            // already started executing (Ok): both deliver exactly once.
+            if matches!(resp.result, Err(JobError::Cancelled)) {
+                assert_eq!(svc.metrics().cancelled, 1);
+            }
+        }
         svc.shutdown();
     }
 
@@ -812,11 +1153,13 @@ mod tests {
             let _ = svc.infer("gcn", vec![]).expect("accepted");
         }
         let m = svc.metrics();
-        let s = &m.per_artifact["gcn"];
+        let s = &m.per_key["tensor:gcn"];
         assert!(s.p95_exec_s >= s.mean_exec_s * 0.5);
         assert!(s.count == 10);
         assert!(s.throughput_rps > 0.0);
         assert_eq!(m.workers, 2);
+        assert_eq!(m.expired, 0);
+        assert_eq!(m.cancelled, 0);
     }
 
     // --- pure-function regression tests ---------------------------------
@@ -825,7 +1168,7 @@ mod tests {
     /// 1.6 — the old per-request recording reported 2.0.
     #[test]
     fn mean_batch_weighs_batches_not_requests() {
-        let am = ArtifactMetrics {
+        let am = KeyMetrics {
             count: 8,
             exec_s: vec![0.01; 8],
             wait_s: vec![0.0; 8],
@@ -864,7 +1207,7 @@ mod tests {
     /// stops growing at MAX_SAMPLES, oldest samples are overwritten.
     #[test]
     fn sample_windows_are_bounded() {
-        let mut am = ArtifactMetrics::default();
+        let mut am = KeyMetrics::default();
         for i in 0..(MAX_SAMPLES + 10) {
             am.record_batch(1, i as f64);
             am.record_request(i as f64, 0.0, false);
@@ -881,7 +1224,7 @@ mod tests {
 
     #[test]
     fn merge_combines_worker_accumulators() {
-        let mut a = ArtifactMetrics {
+        let mut a = KeyMetrics {
             count: 3,
             errors: 1,
             exec_s: vec![0.1, 0.2, 0.3],
@@ -890,7 +1233,7 @@ mod tests {
             batch_exec_s: vec![0.3],
             ..Default::default()
         };
-        let b = ArtifactMetrics {
+        let b = KeyMetrics {
             count: 2,
             exec_s: vec![0.4, 0.5],
             wait_s: vec![0.0; 2],

@@ -16,10 +16,12 @@
 //! * [`baselines`] — CPU (DGL/PyG), GPU (DGL/PyG) and HyGCN cost models;
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas golden
 //!   models (functional correctness of the math the accelerator runs);
-//! * [`coordinator`] — a sharded inference-serving layer (bounded
-//!   intake, FIFO-fair per-artifact batching, N worker threads with
-//!   genuinely batched execution) driving runtime and simulator
-//!   together;
+//! * [`coordinator`] — a sharded, multi-plane serving layer: typed
+//!   jobs ([`coordinator::JobPayload`]) flow through bounded intake,
+//!   FIFO-fair per-key batching and N worker threads onto pluggable
+//!   [`coordinator::Backend`]s — tensor inference (PJRT), what-if
+//!   simulation and baseline cost models — answered via
+//!   [`coordinator::Ticket`] handles with optional deadlines;
 //! * [`xla`] — offline stub of the PJRT bindings the runtime codes
 //!   against (swap in the real `xla` crate to execute artifacts);
 //! * [`report`] — the harness that regenerates every table and figure of

@@ -6,11 +6,20 @@
 //!   bench  --exp <id|all> [--out D]  regenerate paper tables/figures
 //!   infer  --artifacts DIR [--name N]  functional inference via PJRT
 //!   serve  --artifacts DIR [--requests N] [--workers W] [--queue C]
-//!                                      serving demo (bounded intake,
-//!                                      multi-worker batched execution)
+//!          [--deadline-ms D]           serving demo (bounded intake,
+//!                                      multi-worker batched execution,
+//!                                      deadline-aware shedding)
+//!   whatif --model M --dataset D [--platforms P,..] [--workers W]
+//!                                      capacity planning through the
+//!                                      serving coordinator: sim + cost
+//!                                      jobs on the analytic backends
 
 use engn::config::{AcceleratorConfig, Fidelity};
-use engn::coordinator::{BatchConfig, Executor, InferenceService, ServiceConfig, SubmitError};
+use engn::coordinator::{
+    Backends, BatchConfig, CostJob, InferenceService, JobOutput, JobPayload, ServiceConfig,
+    SimJob, SubmitError, Ticket,
+};
+use engn::baselines::PlatformId;
 use engn::graph::datasets::{self, ScalePolicy};
 use engn::model::{GnnKind, GnnModel};
 use engn::report::experiments::{self, Eval};
@@ -19,6 +28,7 @@ use engn::sim::Simulator;
 use engn::util::rng::Xoshiro256StarStar;
 use engn::util::{fmt_bytes, fmt_time, si};
 use std::collections::HashMap;
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -28,15 +38,17 @@ fn main() {
         Some("bench") => cmd_bench(&parse_flags(&args[1..])),
         Some("infer") => cmd_infer(&parse_flags(&args[1..])),
         Some("serve") => cmd_serve(&parse_flags(&args[1..])),
+        Some("whatif") => cmd_whatif(&parse_flags(&args[1..])),
         _ => {
             eprintln!(
-                "usage: engn <datasets|run|bench|infer|serve> [flags]\n\
+                "usage: engn <datasets|run|bench|infer|serve|whatif> [flags]\n\
                  examples:\n\
                  \u{20}  engn run --model gcn --dataset CA\n\
                  \u{20}  engn bench --exp fig9 --out reports\n\
                  \u{20}  engn bench --exp all --out reports [--full]\n\
                  \u{20}  engn infer --artifacts artifacts --name gcn_forward\n\
-                 \u{20}  engn serve --artifacts artifacts --requests 32 --workers 4 --queue 256"
+                 \u{20}  engn serve --artifacts artifacts --requests 32 --workers 4 --queue 256\n\
+                 \u{20}  engn whatif --model gcn --dataset CA --platforms cpu-dgl,gpu-dgl,hygcn"
             );
             2
         }
@@ -289,10 +301,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         .unwrap_or(16);
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
     let queue_capacity: usize = flags.get("queue").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let deadline = flags
+        .get("deadline-ms")
+        .and_then(|s| s.parse().ok())
+        .map(Duration::from_millis);
     let names = ["gcn_forward", "grn_forward"];
     let dir2 = dir.clone();
     let svc = InferenceService::start(
-        move || Runtime::load_only(&dir2, &names).map(|rt| Box::new(rt) as Box<dyn Executor>),
+        move || Runtime::load_only(&dir2, &names).map(|rt| Backends::tensor(Box::new(rt))),
         ServiceConfig {
             batch: BatchConfig::default(),
             workers,
@@ -308,7 +324,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         }
     };
     println!("submitting {n_requests} mixed gcn/grn requests over {workers} workers ...");
-    let mut rxs = Vec::new();
+    let mut tickets: Vec<(&str, Ticket)> = Vec::new();
     let mut shed = 0usize;
     for i in 0..n_requests {
         let name = names[i % names.len()];
@@ -318,13 +334,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         // retry a few times before counting the request as dropped.
         let mut accepted = None;
         for _ in 0..50 {
-            match svc.submit(name, inputs.clone()) {
-                Ok((_, rx)) => {
-                    accepted = Some(rx);
+            let payload = JobPayload::Tensor {
+                artifact: name.to_string(),
+                inputs: inputs.clone(),
+            };
+            let submitted = match deadline {
+                Some(d) => svc.submit_with_deadline(payload, d),
+                None => svc.submit(payload),
+            };
+            match submitted {
+                Ok(ticket) => {
+                    accepted = Some(ticket);
                     break;
                 }
                 Err(SubmitError::Busy { .. }) => {
-                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    std::thread::sleep(Duration::from_millis(2));
                 }
                 Err(e) => {
                     eprintln!("{name}: {e}");
@@ -333,29 +357,29 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             }
         }
         match accepted {
-            Some(rx) => rxs.push((name, rx)),
+            Some(ticket) => tickets.push((name, ticket)),
             None => shed += 1,
         }
     }
     let mut ok = 0;
-    for (name, rx) in rxs {
-        match rx.recv() {
-            Ok(resp) if resp.result.is_ok() => ok += 1,
-            Ok(resp) => eprintln!("{name}: {:?}", resp.result.err()),
-            Err(_) => eprintln!("{name}: worker gone"),
+    for (name, ticket) in tickets {
+        let resp = ticket.wait();
+        match resp.result {
+            Ok(_) => ok += 1,
+            Err(e) => eprintln!("{name}: {e}"),
         }
     }
     let m = svc.metrics();
     println!(
-        "{ok}/{n_requests} ok ({shed} shed, {} busy rejections); per-artifact stats:",
-        m.rejected
+        "{ok}/{n_requests} ok ({shed} shed, {} busy rejections, {} expired); per-key stats:",
+        m.rejected, m.expired
     );
-    let mut names_sorted: Vec<_> = m.per_artifact.keys().collect();
+    let mut names_sorted: Vec<_> = m.per_key.keys().collect();
     names_sorted.sort();
     for name in names_sorted {
-        let s = &m.per_artifact[name];
+        let s = &m.per_key[name];
         println!(
-            "  {:<16} n={:<4} mean={} p95={} wait={} batch={:.2} ({:.1} req/s exec)",
+            "  {:<24} n={:<4} mean={} p95={} wait={} batch={:.2} ({:.1} req/s exec)",
             name,
             s.count,
             fmt_time(s.mean_exec_s),
@@ -367,6 +391,102 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     }
     svc.shutdown();
     if ok == n_requests {
+        0
+    } else {
+        1
+    }
+}
+
+/// Capacity planning through the serving coordinator: what-if
+/// simulation and baseline cost-model jobs flow through the same
+/// bounded-intake, FIFO-fair, batched path as tensor inference — just
+/// on the analytic backends, which need no compiled artifacts.
+fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("gcn");
+    let code = flags.get("dataset").map(String::as_str).unwrap_or("CA");
+    let Some(kind) = GnnKind::by_name(model_name) else {
+        eprintln!("unknown model {model_name:?} (gcn|gspool|rgcn|gatedgcn|grn)");
+        return 2;
+    };
+    if datasets::by_code(code).is_none() {
+        eprintln!("unknown dataset {code:?} — see `engn datasets`");
+        return 2;
+    }
+    let platforms: Vec<PlatformId> = match flags.get("platforms") {
+        Some(list) => {
+            let mut ps = Vec::new();
+            for s in list.split(',') {
+                let Some(p) = PlatformId::parse(s) else {
+                    eprintln!("unknown platform {s:?} (cpu-dgl|cpu-pyg|gpu-dgl|gpu-pyg|hygcn)");
+                    return 2;
+                };
+                ps.push(p);
+            }
+            ps
+        }
+        None => PlatformId::all().to_vec(),
+    };
+    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let svc = InferenceService::start(
+        || Ok(Backends::analytic()),
+        ServiceConfig {
+            batch: BatchConfig::default(),
+            workers,
+            queue_capacity: 256,
+        },
+    );
+    let mut tickets = Vec::new();
+    match svc.submit(JobPayload::Sim(SimJob::new(kind, code))) {
+        Ok(t) => tickets.push(t),
+        Err(e) => eprintln!("sim job rejected: {e}"),
+    }
+    for p in &platforms {
+        match svc.submit(JobPayload::Cost(CostJob::new(*p, kind, code))) {
+            Ok(t) => tickets.push(t),
+            Err(e) => eprintln!("{} job rejected: {e}", p.name()),
+        }
+    }
+    println!(
+        "{:<10} {:>12} {:>10} {:>12}",
+        "platform", "latency", "GOP/s", "energy (J)"
+    );
+    let mut failures = 0;
+    for t in tickets {
+        match t.wait().result {
+            Ok(JobOutput::Sim(s)) => println!(
+                "{:<10} {:>12} {:>10.0} {:>12.2e}",
+                s.config,
+                fmt_time(s.seconds),
+                s.gops,
+                s.energy_j
+            ),
+            Ok(JobOutput::Cost(c)) => {
+                if c.oom {
+                    println!("{:<10} {:>12}", c.platform, "OOM");
+                } else {
+                    println!(
+                        "{:<10} {:>12} {:>10.0} {:>12.2e}",
+                        c.platform,
+                        fmt_time(c.seconds),
+                        c.gops,
+                        c.energy_j
+                    );
+                }
+            }
+            Ok(other) => {
+                eprintln!("unexpected output {other:?}");
+                failures += 1;
+            }
+            Err(e) => {
+                eprintln!("job failed: {e}");
+                failures += 1;
+            }
+        }
+    }
+    let m = svc.metrics();
+    println!("\nserved {} jobs over {} workers", m.total_requests, m.workers);
+    svc.shutdown();
+    if failures == 0 {
         0
     } else {
         1

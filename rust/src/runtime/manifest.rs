@@ -15,6 +15,11 @@ pub struct ArtifactSpec {
     pub inputs: Vec<Vec<usize>>,
     /// Output tensor shapes.
     pub outputs: Vec<Vec<usize>>,
+    /// For batch-compiled variants: the base artifact this is the
+    /// leading-batch-dim version of (aot.py emits `<base>__b<K>`).
+    pub batch_of: Option<String>,
+    /// The leading batch dimension the variant was compiled for.
+    pub batch: Option<usize>,
 }
 
 impl ArtifactSpec {
@@ -77,6 +82,11 @@ impl Manifest {
                     .to_string(),
                 inputs: shapes(a.get("inputs").ok_or("artifact missing inputs")?)?,
                 outputs: shapes(a.get("outputs").ok_or("artifact missing outputs")?)?,
+                batch_of: a
+                    .get("batch_of")
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string),
+                batch: a.get("batch").and_then(|v| v.as_usize()),
             });
         }
         let quickstart = root
@@ -97,6 +107,14 @@ impl Manifest {
 
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The batch-compiled variant of `base` for exactly `k` stacked
+    /// requests, if aot.py emitted one.
+    pub fn batch_variant(&self, base: &str, k: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.batch_of.as_deref() == Some(base) && a.batch == Some(k))
     }
 
     pub fn quickstart_param(&self, key: &str) -> Option<usize> {
@@ -138,6 +156,38 @@ mod tests {
         assert_eq!(a.path, PathBuf::from("/tmp/a/gcn_forward.hlo.txt"));
         assert_eq!(m.quickstart_param("hidden"), Some(16));
         assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn parses_batch_variants() {
+        let text = r#"{
+          "version": 1,
+          "artifacts": [
+            {
+              "name": "gcn_forward",
+              "path": "gcn_forward.hlo.txt",
+              "inputs": [[4, 4]],
+              "outputs": [[4, 2]]
+            },
+            {
+              "name": "gcn_forward__b8",
+              "path": "gcn_forward__b8.hlo.txt",
+              "batch_of": "gcn_forward",
+              "batch": 8,
+              "inputs": [[8, 4, 4]],
+              "outputs": [[8, 4, 2]]
+            }
+          ]
+        }"#;
+        let m = Manifest::parse(text, PathBuf::from("/tmp/a")).unwrap();
+        let base = m.get("gcn_forward").unwrap();
+        assert_eq!(base.batch_of, None);
+        assert_eq!(base.batch, None);
+        let v = m.batch_variant("gcn_forward", 8).expect("variant");
+        assert_eq!(v.name, "gcn_forward__b8");
+        assert_eq!(v.inputs, vec![vec![8, 4, 4]]);
+        assert!(m.batch_variant("gcn_forward", 4).is_none());
+        assert!(m.batch_variant("grn_forward", 8).is_none());
     }
 
     #[test]

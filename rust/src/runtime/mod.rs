@@ -107,6 +107,11 @@ struct LoadedArtifact {
 pub struct Runtime {
     client: xla::PjRtClient,
     artifacts: HashMap<String, LoadedArtifact>,
+    /// `(base artifact, batch size) -> variant artifact` for the
+    /// leading-batch-dim variants aot.py emits (`<base>__b<K>`): an
+    /// exact-size stacked batch dispatches to the variant, which was
+    /// compiled to accept it.
+    batch_variants: HashMap<(String, usize), String>,
     exec_lock: Mutex<()>,
     /// Executions served (for the coordinator's metrics).
     executions: std::sync::atomic::AtomicU64,
@@ -120,14 +125,23 @@ impl Runtime {
     }
 
     /// Load a subset (avoids compiling all seven artifacts when a test or
-    /// example needs one).
+    /// example needs one). Batch-compiled variants of the requested
+    /// artifacts ride along so the stacked execution path stays live.
     pub fn load_only(
         dir: impl AsRef<std::path::Path>,
         names: &[&str],
     ) -> Result<Self, String> {
         let mut manifest = Manifest::load(&dir)?;
-        manifest.artifacts.retain(|a| names.contains(&a.name.as_str()));
-        if manifest.artifacts.len() != names.len() {
+        manifest.artifacts.retain(|a| {
+            names.contains(&a.name.as_str())
+                || a.batch_of.as_deref().map_or(false, |b| names.contains(&b))
+        });
+        let found = manifest
+            .artifacts
+            .iter()
+            .filter(|a| names.contains(&a.name.as_str()))
+            .count();
+        if found != names.len() {
             return Err(format!(
                 "missing artifacts: wanted {names:?}, manifest has {:?}",
                 manifest.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()
@@ -157,9 +171,16 @@ impl Runtime {
                 },
             );
         }
+        let mut batch_variants = HashMap::new();
+        for spec in &manifest.artifacts {
+            if let (Some(base), Some(k)) = (&spec.batch_of, spec.batch) {
+                batch_variants.insert((base.clone(), k), spec.name.clone());
+            }
+        }
         Ok(Self {
             client,
             artifacts,
+            batch_variants,
             exec_lock: Mutex::new(()),
             executions: std::sync::atomic::AtomicU64::new(0),
         })
@@ -216,11 +237,13 @@ impl Runtime {
     ///
     /// When every request carries identical input shapes, the inputs are
     /// stacked along a new leading axis and submitted as ONE PJRT
-    /// execution, and the output is split back per request. The artifact
-    /// must have been compiled with a leading batch dimension for the
-    /// stacked dispatch to be accepted; if it is rejected (or the batch
-    /// is shape-heterogeneous), each request falls back to an individual
-    /// [`Runtime::execute`].
+    /// execution, and the output is split back per request. A
+    /// batch-compiled variant (`<name>__b<k>`, emitted by aot.py) is
+    /// preferred when one matches the batch size exactly; otherwise the
+    /// base artifact is attempted and must have been compiled with a
+    /// leading batch dimension for the stacked dispatch to be accepted.
+    /// If it is rejected (or the batch is shape-heterogeneous), each
+    /// request falls back to an individual [`Runtime::execute`].
     pub fn execute_batch(
         &self,
         name: &str,
@@ -247,12 +270,17 @@ impl Runtime {
         batches: &[Vec<HostTensor>],
     ) -> Option<Vec<Result<HostTensor, String>>> {
         let artifact = self.artifacts.get(name)?;
-        // Once a stacked dispatch has been rejected, don't pay the
-        // stack-copy plus doomed execution again for every later batch.
-        if !artifact.batchable.load(std::sync::atomic::Ordering::Relaxed) {
+        let spec = &artifact.spec;
+        let k = batches.len();
+        // An exact-size batch-compiled variant (`<name>__b<k>`) accepts
+        // the stacked shapes by construction; without one, the base
+        // artifact is attempted once and latched off on rejection.
+        let variant = self.batch_variants.get(&(name.to_string(), k));
+        if variant.is_none() && !artifact.batchable.load(std::sync::atomic::Ordering::Relaxed) {
+            // Once a stacked dispatch has been rejected, don't pay the
+            // stack-copy plus doomed execution again for every batch.
             return None;
         }
-        let spec = &artifact.spec;
         let arity = spec.inputs.len();
         let first = batches.first()?;
         if first.len() != arity {
@@ -280,7 +308,21 @@ impl Runtime {
             })
             .collect();
         let stacked = stacked.ok()?;
-        let k = batches.len();
+        if let Some(variant) = variant {
+            // The variant's manifest entry already carries the batched
+            // output shape ([k, ...base output]).
+            let out_shape = self.artifacts.get(variant)?.spec.outputs.first()?.clone();
+            return match self.execute_raw(variant, &stacked, &out_shape) {
+                Ok(out) => {
+                    let parts = out.split_leading(k).ok()?;
+                    Some(parts.into_iter().map(Ok).collect())
+                }
+                // Variant execution failed (e.g. the stubbed offline
+                // backend): fall back to per-request dispatch, which
+                // surfaces any genuine error per request.
+                Err(_) => None,
+            };
+        }
         let mut out_shape = Vec::with_capacity(spec.outputs.first()?.len() + 1);
         out_shape.push(k);
         out_shape.extend_from_slice(spec.outputs.first()?);
@@ -407,6 +449,56 @@ mod tests {
     fn split_leading_rejects_wrong_parts() {
         let s = HostTensor::zeros(vec![4, 2]);
         assert!(s.split_leading(3).is_err());
+        assert!(s.split_leading(5).is_err());
         assert!(HostTensor::zeros(vec![]).split_leading(1).is_err());
+        // Non-divisible splits cannot type-check by construction: the
+        // leading dim must equal the part count exactly.
+        assert!(HostTensor::zeros(vec![5]).split_leading(2).is_err());
+    }
+
+    /// Property: stack then split_leading is the identity for any rank
+    /// (including rank-0 scalars) and any batch size ≥ 1.
+    #[test]
+    fn stack_split_round_trip_property() {
+        let mut rng = crate::util::rng::Xoshiro256StarStar::seed_from_u64(7);
+        let shapes: Vec<Vec<usize>> =
+            vec![vec![], vec![1], vec![3], vec![2, 2], vec![4, 1, 2]];
+        for shape in shapes {
+            for k in 1..=4usize {
+                let parts: Vec<HostTensor> = (0..k)
+                    .map(|_| {
+                        let n: usize = shape.iter().product();
+                        HostTensor::new(
+                            shape.clone(),
+                            (0..n).map(|_| rng.next_f32()).collect(),
+                        )
+                    })
+                    .collect();
+                let refs: Vec<&HostTensor> = parts.iter().collect();
+                let stacked = HostTensor::stack(&refs).expect("stack");
+                assert_eq!(stacked.shape[0], k, "leading dim for {shape:?}");
+                assert_eq!(&stacked.shape[1..], &shape[..]);
+                let back = stacked.split_leading(k).expect("split");
+                assert_eq!(back, parts, "round trip for {shape:?} x{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn stack_rank0_scalars_makes_a_vector() {
+        let a = HostTensor::new(vec![], vec![1.5]);
+        let b = HostTensor::new(vec![], vec![-2.5]);
+        let s = HostTensor::stack(&[&a, &b]).expect("stack scalars");
+        assert_eq!(s.shape, vec![2]);
+        assert_eq!(s.data, vec![1.5, -2.5]);
+        let parts = s.split_leading(2).expect("split back to scalars");
+        assert_eq!(parts, vec![a, b]);
+    }
+
+    #[test]
+    fn split_leading_zero_parts_of_empty_tensor() {
+        let empty = HostTensor::new(vec![0, 3], vec![]);
+        let parts = empty.split_leading(0).expect("zero parts");
+        assert!(parts.is_empty());
     }
 }

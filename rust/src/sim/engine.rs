@@ -81,6 +81,21 @@ impl Simulator {
         Self { cfg }
     }
 
+    /// Serving-plane entry: bind `kind` to the dataset's published
+    /// dimensions (Table 5) and simulate one pass over `graph`. The
+    /// coordinator's simulation backend answers what-if jobs through
+    /// this, so a sim request is exactly `engn run` with the graph
+    /// amortized across the batch.
+    pub fn run_for_spec(
+        &self,
+        kind: crate::model::GnnKind,
+        spec: &crate::graph::datasets::DatasetSpec,
+        graph: &Graph,
+    ) -> SimReport {
+        let model = GnnModel::for_dataset(kind, spec);
+        self.run(&model, graph, spec.code)
+    }
+
     /// Simulate one full inference pass of `model` over `graph`.
     pub fn run(&self, model: &GnnModel, graph: &Graph, dataset_code: &str) -> SimReport {
         let cfg = &self.cfg;

@@ -6,7 +6,7 @@
 //! Requires `make artifacts` (skips gracefully if missing so `cargo test`
 //! works in a fresh checkout).
 
-use engn::coordinator::{BatchConfig, Executor, InferenceService};
+use engn::coordinator::{Backends, BatchConfig, InferenceService};
 use engn::runtime::{HostTensor, Runtime};
 use engn::util::prop::assert_allclose;
 use engn::util::rng::Xoshiro256StarStar;
@@ -146,28 +146,23 @@ fn serving_coordinator_end_to_end_over_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
     // The runtime is built inside the worker thread (PJRT is !Send).
     let svc = InferenceService::start(
-        move || {
-            Runtime::load_only(&dir, &["gcn_tiny"])
-                .map(|rt| Box::new(rt) as Box<dyn Executor>)
-        },
+        move || Runtime::load_only(&dir, &["gcn_tiny"]).map(|rt| Backends::tensor(Box::new(rt))),
         BatchConfig::default(),
     );
     let mut rng = Xoshiro256StarStar::seed_from_u64(3);
     let shapes = [vec![8, 8], vec![8, 4], vec![4, 3], vec![3, 2]];
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for _ in 0..6 {
         let inputs: Vec<HostTensor> = shapes.iter().map(|s| rand_tensor(&mut rng, s)).collect();
-        let (_, rx) = svc.submit("gcn_tiny", inputs).expect("intake accepts");
-        rxs.push(rx);
+        tickets.push(svc.submit_tensor("gcn_tiny", inputs).expect("intake accepts"));
     }
-    for rx in rxs {
-        let resp = rx.recv().expect("response");
-        let out = resp.result.expect("inference ok");
+    for ticket in tickets {
+        let out = ticket.wait().into_tensor().expect("inference ok");
         assert_eq!(out.shape, vec![8, 2]);
         assert!(out.data.iter().all(|v| v.is_finite()));
     }
     let m = svc.metrics();
     assert_eq!(m.total_requests, 6);
-    assert!(m.per_artifact["gcn_tiny"].mean_exec_s > 0.0);
+    assert!(m.per_key["tensor:gcn_tiny"].mean_exec_s > 0.0);
     svc.shutdown();
 }

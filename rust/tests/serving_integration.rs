@@ -1,12 +1,16 @@
-//! Integration: the multi-worker serving coordinator under concurrent
-//! multi-artifact load — genuine worker parallelism, shutdown-drain
-//! semantics, and bounded-intake backpressure observable as typed
-//! `Busy` rejections. Everything runs against mock executors, so these
-//! tests need no compiled artifacts.
+//! Integration: the multi-plane serving coordinator under concurrent
+//! multi-key load — genuine worker parallelism, mixed tensor/sim/cost
+//! job streams through one service, deadline- and cancel-shedding at
+//! batch formation, shutdown-drain semantics, and bounded-intake
+//! backpressure observable as typed `Busy` rejections. Tensor planes
+//! run against mock executors, so these tests need no compiled
+//! artifacts; the sim/cost planes are the real analytic backends.
 
 use engn::coordinator::{
-    BatchConfig, Executor, InferenceService, ServiceConfig, SubmitError,
+    Backends, BatchConfig, CostJob, Executor, InferenceService, JobError, JobOutput,
+    JobPayload, ServiceConfig, SimJob, SubmitError,
 };
+use engn::model::GnnKind;
 use engn::runtime::HostTensor;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -58,11 +62,11 @@ fn two_workers_serve_distinct_artifacts_concurrently() {
     let (infl, maxi) = (inflight.clone(), max_inflight.clone());
     let svc = InferenceService::start(
         move || {
-            Ok(Box::new(Rendezvous {
+            Ok(Backends::tensor(Box::new(Rendezvous {
                 inflight: infl.clone(),
                 max_inflight: maxi.clone(),
                 target: 2,
-            }) as Box<dyn Executor>)
+            })))
         },
         ServiceConfig {
             batch: BatchConfig {
@@ -73,12 +77,12 @@ fn two_workers_serve_distinct_artifacts_concurrently() {
             queue_capacity: 64,
         },
     );
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for artifact in ["gcn", "gcn", "grn", "grn"] {
-        rxs.push(svc.submit(artifact, vec![]).expect("accepted").1);
+        tickets.push(svc.submit_tensor(artifact, vec![]).expect("accepted"));
     }
-    for rx in rxs {
-        let resp = rx.recv().expect("answered");
+    for ticket in tickets {
+        let resp = ticket.wait();
         assert!(resp.result.is_ok(), "{:?}", resp.result);
     }
     assert!(
@@ -88,13 +92,14 @@ fn two_workers_serve_distinct_artifacts_concurrently() {
     let m = svc.metrics();
     assert_eq!(m.total_requests, 4);
     assert_eq!(m.workers, 2);
-    assert!(m.per_artifact.contains_key("gcn"));
-    assert!(m.per_artifact.contains_key("grn"));
+    assert!(m.per_key.contains_key("tensor:gcn"));
+    assert!(m.per_key.contains_key("tensor:grn"));
     svc.shutdown();
 }
 
 /// Executor gated on a flag: enters, signals, and blocks until released.
-/// Lets the backpressure test fill the intake queue deterministically.
+/// Lets the backpressure/shedding tests control execution timing
+/// deterministically.
 struct Gate {
     entered: Arc<AtomicUsize>,
     release: Arc<AtomicBool>,
@@ -118,20 +123,18 @@ impl Executor for Gate {
     }
 }
 
-/// With the single worker parked inside the executor, the bounded queue
-/// fills to capacity and the next submission is shed with a typed
-/// `Busy` — not queued, not an opaque string.
-#[test]
-fn bounded_intake_sheds_with_typed_busy() {
-    let entered = Arc::new(AtomicUsize::new(0));
-    let release = Arc::new(AtomicBool::new(false));
+fn gate_service(
+    entered: &Arc<AtomicUsize>,
+    release: &Arc<AtomicBool>,
+    queue_capacity: usize,
+) -> InferenceService {
     let (ent, rel) = (entered.clone(), release.clone());
-    let svc = InferenceService::start(
+    InferenceService::start(
         move || {
-            Ok(Box::new(Gate {
+            Ok(Backends::tensor(Box::new(Gate {
                 entered: ent.clone(),
                 release: rel.clone(),
-            }) as Box<dyn Executor>)
+            })))
         },
         ServiceConfig {
             batch: BatchConfig {
@@ -139,11 +142,21 @@ fn bounded_intake_sheds_with_typed_busy() {
                 max_wait: Duration::ZERO,
             },
             workers: 1,
-            queue_capacity: 3,
+            queue_capacity,
         },
-    );
+    )
+}
+
+/// With the single worker parked inside the executor, the bounded queue
+/// fills to capacity and the next submission is shed with a typed
+/// `Busy` — not queued, not an opaque string.
+#[test]
+fn bounded_intake_sheds_with_typed_busy() {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Arc::new(AtomicBool::new(false));
+    let svc = gate_service(&entered, &release, 3);
     // First request is pulled by the worker, which then blocks on the gate.
-    let (_, first_rx) = svc.submit("gcn", vec![]).expect("accepted");
+    let first = svc.submit_tensor("gcn", vec![]).expect("accepted");
     let t0 = Instant::now();
     while entered.load(Ordering::SeqCst) == 0 {
         assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
@@ -151,10 +164,10 @@ fn bounded_intake_sheds_with_typed_busy() {
     }
     // Fill the intake queue to capacity behind the parked worker…
     let queued: Vec<_> = (0..3)
-        .map(|_| svc.submit("gcn", vec![]).expect("fits capacity").1)
+        .map(|_| svc.submit_tensor("gcn", vec![]).expect("fits capacity"))
         .collect();
     // …and the next submission must be shed, typed.
-    let err = svc.submit("gcn", vec![]).unwrap_err();
+    let err = svc.submit_tensor("gcn", vec![]).unwrap_err();
     assert_eq!(
         err,
         SubmitError::Busy {
@@ -165,11 +178,86 @@ fn bounded_intake_sheds_with_typed_busy() {
     assert_eq!(svc.metrics().rejected, 1);
     // Release the gate: every accepted request still completes.
     release.store(true, Ordering::SeqCst);
-    assert!(first_rx.recv().expect("answered").result.is_ok());
-    for rx in queued {
-        assert!(rx.recv().expect("answered").result.is_ok());
+    assert!(first.wait().result.is_ok());
+    for ticket in queued {
+        assert!(ticket.wait().result.is_ok());
     }
     svc.shutdown();
+}
+
+/// Acceptance: a deadline-expired job is shed AT BATCH FORMATION —
+/// answered `Expired`, never handed to the executor — and the `expired`
+/// metrics counter records it. Jobs around it execute normally.
+#[test]
+fn deadline_expired_job_is_shed_at_batch_formation() {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Arc::new(AtomicBool::new(false));
+    let svc = gate_service(&entered, &release, 8);
+    // Park the single worker inside the first job's execution…
+    let first = svc.submit_tensor("gcn", vec![]).expect("accepted");
+    let t0 = Instant::now();
+    while entered.load(Ordering::SeqCst) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // …queue a deadlined job and a live job behind it…
+    let doomed = svc
+        .submit_with_deadline(
+            JobPayload::Tensor {
+                artifact: "gcn".into(),
+                inputs: vec![],
+            },
+            Duration::from_millis(5),
+        )
+        .expect("accepted");
+    let live = svc.submit_tensor("gcn", vec![]).expect("accepted");
+    // …let the deadline pass while the worker is still parked…
+    std::thread::sleep(Duration::from_millis(25));
+    assert!(doomed.try_poll().is_none(), "not answered before formation");
+    // …then release: formation sheds the expired job and executes only
+    // the live one.
+    release.store(true, Ordering::SeqCst);
+    assert!(first.wait().result.is_ok());
+    let doomed_resp = doomed.wait();
+    assert!(
+        matches!(doomed_resp.result, Err(JobError::Expired)),
+        "{:?}",
+        doomed_resp.result
+    );
+    assert_eq!(doomed_resp.batch_size, 0, "expired job served by no batch");
+    assert!(live.wait().result.is_ok());
+    svc.shutdown();
+    assert_eq!(
+        entered.load(Ordering::SeqCst),
+        2,
+        "executor must see exactly the two live jobs, never the expired one"
+    );
+}
+
+/// `Ticket::cancel` before execution sheds the job at batch formation,
+/// answers `Cancelled`, and the executor never sees it.
+#[test]
+fn cancelled_job_is_shed_at_batch_formation() {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Arc::new(AtomicBool::new(false));
+    let svc = gate_service(&entered, &release, 8);
+    let first = svc.submit_tensor("gcn", vec![]).expect("accepted");
+    let t0 = Instant::now();
+    while entered.load(Ordering::SeqCst) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let victim = svc.submit_tensor("gcn", vec![]).expect("accepted");
+    assert!(victim.cancel(), "cancel before execution must win");
+    release.store(true, Ordering::SeqCst);
+    assert!(first.wait().result.is_ok());
+    let resp = victim.wait();
+    assert!(matches!(resp.result, Err(JobError::Cancelled)), "{:?}", resp.result);
+    let m = svc.metrics();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.expired, 0);
+    svc.shutdown();
+    assert_eq!(entered.load(Ordering::SeqCst), 1, "victim must never execute");
 }
 
 /// Mock with a fixed per-batch delay (default `execute_batch` loop).
@@ -182,13 +270,13 @@ impl Executor for Slow {
     }
 }
 
-/// `shutdown` must drain: every request accepted before the stop flag is
+/// `shutdown` must drain: every job accepted before the stop flag is
 /// answered (with a real result, not an error), and only then do the
 /// workers exit.
 #[test]
 fn shutdown_drains_accepted_requests() {
     let svc = InferenceService::start(
-        || Ok(Box::new(Slow(Duration::from_millis(3))) as Box<dyn Executor>),
+        || Ok(Backends::tensor(Box::new(Slow(Duration::from_millis(3))))),
         ServiceConfig {
             batch: BatchConfig {
                 max_batch: 4,
@@ -198,27 +286,102 @@ fn shutdown_drains_accepted_requests() {
             queue_capacity: 64,
         },
     );
-    let rxs: Vec<_> = (0..12)
+    let tickets: Vec<_> = (0..12)
         .map(|i| {
             let artifact = if i % 3 == 0 { "grn" } else { "gcn" };
-            svc.submit(artifact, vec![]).expect("accepted").1
+            svc.submit_tensor(artifact, vec![]).expect("accepted")
         })
         .collect();
     // Blocks until both workers have drained the queues and joined.
     svc.shutdown();
-    for rx in rxs {
-        let resp = rx.recv().expect("drained requests are answered");
+    for ticket in tickets {
+        let resp = ticket.wait();
         assert!(resp.result.is_ok(), "{:?}", resp.result);
     }
 }
 
+/// Acceptance: tensor, simulation and cost-model jobs are served
+/// through ONE `InferenceService` end to end, concurrently, each
+/// answered by its own execution plane with the right output variant
+/// and its own batching key in the metrics.
+#[test]
+fn mixed_tensor_and_sim_jobs_served_concurrently() {
+    let svc = Arc::new(InferenceService::start(
+        || Ok(Backends::full(Box::new(Slow(Duration::from_micros(200))))),
+        ServiceConfig {
+            batch: BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 3,
+            queue_capacity: 1024,
+        },
+    ));
+    let mut clients = Vec::new();
+    for c in 0..3usize {
+        let svc = svc.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut tickets = Vec::new();
+            for i in 0..9usize {
+                let payload = match (c + i) % 3 {
+                    0 => JobPayload::Tensor {
+                        artifact: "gcn".to_string(),
+                        inputs: vec![],
+                    },
+                    1 => JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA")),
+                    _ => JobPayload::Cost(CostJob::new(
+                        engn::baselines::PlatformId::Hygcn,
+                        GnnKind::Gcn,
+                        "CA",
+                    )),
+                };
+                let kind = payload.kind();
+                tickets.push((kind, svc.submit(payload).expect("accepted")));
+            }
+            for (kind, ticket) in tickets {
+                let resp = ticket.wait();
+                match (kind, resp.result.expect("job ok")) {
+                    (engn::coordinator::JobKind::Tensor, JobOutput::Tensor(_)) => {}
+                    (engn::coordinator::JobKind::Sim, JobOutput::Sim(s)) => {
+                        assert_eq!(s.dataset, "CA");
+                        assert!(s.seconds > 0.0 && s.energy_j > 0.0);
+                    }
+                    (engn::coordinator::JobKind::Cost, JobOutput::Cost(cst)) => {
+                        assert_eq!(cst.platform, "HyGCN");
+                        assert!(cst.seconds > 0.0);
+                    }
+                    (k, out) => panic!("plane mismatch: {k:?} answered with {out:?}"),
+                }
+            }
+        }));
+    }
+    for cl in clients {
+        cl.join().expect("client thread");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.total_requests, 27);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.expired, 0);
+    assert!(m.per_key.contains_key("tensor:gcn"), "{:?}", m.per_key.keys());
+    assert!(m.per_key.contains_key("sim:EnGN:CA"), "{:?}", m.per_key.keys());
+    assert!(m.per_key.contains_key("cost:HyGCN"), "{:?}", m.per_key.keys());
+    for (key, s) in &m.per_key {
+        assert_eq!(s.errors, 0, "{key} had errors");
+        assert!(s.count > 0, "{key} served nothing");
+        assert!(s.mean_batch >= 1.0);
+    }
+    Arc::try_unwrap(svc)
+        .unwrap_or_else(|_| panic!("service still shared"))
+        .shutdown();
+}
+
 /// Soak: several client threads hammer three artifacts across three
-/// workers; every request is answered exactly once and the merged
-/// metrics account for all of them.
+/// workers; every job is answered exactly once and the merged metrics
+/// account for all of them.
 #[test]
 fn concurrent_clients_multi_artifact_soak() {
     let svc = Arc::new(InferenceService::start(
-        || Ok(Box::new(Slow(Duration::from_micros(200))) as Box<dyn Executor>),
+        || Ok(Backends::tensor(Box::new(Slow(Duration::from_micros(200))))),
         ServiceConfig {
             batch: BatchConfig {
                 max_batch: 8,
@@ -235,15 +398,15 @@ fn concurrent_clients_multi_artifact_soak() {
         let ids = ids.clone();
         clients.push(std::thread::spawn(move || {
             let artifacts = ["gcn", "grn", "rgcn"];
-            let mut rxs = Vec::new();
+            let mut tickets = Vec::new();
             for i in 0..25 {
                 let artifact = artifacts[(c + i) % 3];
-                let (id, rx) = svc.submit(artifact, vec![]).expect("accepted");
-                assert!(ids.lock().unwrap().insert(id), "duplicate request id");
-                rxs.push(rx);
+                let ticket = svc.submit_tensor(artifact, vec![]).expect("accepted");
+                assert!(ids.lock().unwrap().insert(ticket.id()), "duplicate job id");
+                tickets.push(ticket);
             }
-            for rx in rxs {
-                assert!(rx.recv().expect("answered").result.is_ok());
+            for ticket in tickets {
+                assert!(ticket.wait().result.is_ok());
             }
         }));
     }
@@ -253,9 +416,9 @@ fn concurrent_clients_multi_artifact_soak() {
     let m = svc.metrics();
     assert_eq!(m.total_requests, 100);
     assert_eq!(m.rejected, 0);
-    let per_artifact_total: u64 = m.per_artifact.values().map(|s| s.count).sum();
-    assert_eq!(per_artifact_total, 100);
-    for s in m.per_artifact.values() {
+    let per_key_total: u64 = m.per_key.values().map(|s| s.count).sum();
+    assert_eq!(per_key_total, 100);
+    for s in m.per_key.values() {
         assert_eq!(s.errors, 0);
         assert!(s.mean_batch >= 1.0);
         assert!(s.throughput_rps > 0.0);
