@@ -1,15 +1,21 @@
 //! Design-space exploration: the hw-codesign workflow the simulator
 //! enables — sweep the EnGN micro-architecture (PE array geometry, DAVC
-//! capacity, tile scheduling, stage ordering, buffer size) on a target
-//! workload and print the latency / energy / area trade-off frontier.
+//! capacity, tile scheduling, stage ordering, buffer size, aggregation
+//! dataflow) on a target workload and print the latency / energy / area
+//! trade-off frontier.
+//!
+//! The graph is prepared exactly once: every configuration point shares
+//! one `PreparedGraph` (edge tilings, degree ranking), so the sweep pays
+//! the O(E log E) derivation a single time instead of per point.
 //!
 //!     cargo run --release --offline --example design_space [dataset]
 
-use engn::config::{AcceleratorConfig, StageOrder, TileOrder};
+use engn::config::{AcceleratorConfig, DataflowKind, StageOrder, TileOrder};
 use engn::graph::datasets::{self, ScalePolicy};
 use engn::model::{GnnKind, GnnModel};
-use engn::sim::Simulator;
+use engn::sim::{PreparedGraph, SimSession};
 use engn::util::fmt_time;
+use std::sync::Arc;
 
 fn main() {
     let code = std::env::args().nth(1).unwrap_or_else(|| "PB".to_string());
@@ -17,13 +23,13 @@ fn main() {
         eprintln!("unknown dataset {code:?} — see `engn datasets`");
         std::process::exit(2);
     };
-    let graph = spec.instantiate(ScalePolicy::Capped, 99);
+    let prepared = PreparedGraph::from_arc(Arc::new(spec.instantiate(ScalePolicy::Capped, 99)));
     let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
     println!(
         "design space for GCN on {} ({} vertices, {} edges)\n",
         spec.name,
-        graph.num_vertices,
-        graph.num_edges()
+        prepared.graph().num_vertices,
+        prepared.graph().num_edges()
     );
 
     let mut variants: Vec<AcceleratorConfig> = Vec::new();
@@ -50,6 +56,14 @@ fn main() {
     let mut v = AcceleratorConfig::engn().named("EnGN_noreorg");
     v.edge_reorganization = false;
     variants.push(v);
+    // Dataflow ablation: HyGCN/VersaGNN-style dense systolic aggregation
+    // (no ring, no DAVC) — the poor-locality baseline the RER dataflow
+    // is compared against.
+    variants.push(
+        AcceleratorConfig::engn()
+            .with_dataflow(DataflowKind::DenseSystolic)
+            .named("EnGN_densesys"),
+    );
     // Buffer scaling (Table 4's EnGN_22MB).
     variants.push(AcceleratorConfig::engn_22mb());
 
@@ -57,10 +71,11 @@ fn main() {
         "{:<16} {:>10} {:>10} {:>11} {:>9} {:>9} {:>10}",
         "config", "latency", "GOP/s", "energy (J)", "power W", "area mm2", "EDP (J*s)"
     );
-    let baseline = Simulator::new(AcceleratorConfig::engn()).run(&model, &graph, spec.code);
+    let baseline_cfg = AcceleratorConfig::engn();
+    let baseline = SimSession::new(&baseline_cfg, &prepared, &model).run(spec.code);
     for cfg in variants {
         let area = cfg.area.total_mm2(cfg.num_pes(), cfg.vpu_pes, cfg.on_chip_bytes());
-        let r = Simulator::new(cfg.clone()).run(&model, &graph, spec.code);
+        let r = SimSession::new(&cfg, &prepared, &model).run(spec.code);
         println!(
             "{:<16} {:>10} {:>10.0} {:>11.2e} {:>9.2} {:>9.2} {:>10.2e}",
             cfg.name,
@@ -76,5 +91,9 @@ fn main() {
         "\nreference EnGN: {} / {:.2e} J  (the paper's chosen design point)",
         fmt_time(baseline.seconds()),
         baseline.energy_j()
+    );
+    println!(
+        "prepared {} tiling(s) once, shared across every configuration point",
+        prepared.cached_tilings()
     );
 }

@@ -22,7 +22,7 @@ use engn::graph::datasets::{DatasetGroup, DatasetSpec};
 use engn::graph::rmat::{self, RmatParams};
 use engn::model::{GnnKind, GnnModel};
 use engn::runtime::{HostTensor, Manifest, Runtime};
-use engn::sim::Simulator;
+use engn::sim::{PreparedGraph, SimSession};
 use engn::util::prop::assert_allclose;
 use engn::util::rng::Xoshiro256StarStar;
 use engn::util::{fmt_time, mean};
@@ -123,7 +123,9 @@ fn main() {
         group: DatasetGroup::Synthetic,
     };
     let model = GnnModel::with_hidden(GnnKind::Gcn, &spec, hidden);
-    let sim = Simulator::new(AcceleratorConfig::engn()).run(&model, &graph, "QS");
+    let cfg = AcceleratorConfig::engn();
+    let prepared = PreparedGraph::new(&graph);
+    let sim = SimSession::new(&cfg, &prepared, &model).run("QS");
     println!("\n=== simulated EnGN on the same workload ===");
     println!("latency      {}", fmt_time(sim.seconds()));
     println!("energy       {:.2e} J", sim.energy_j());

@@ -7,7 +7,7 @@ use engn::config::AcceleratorConfig;
 use engn::graph::datasets::{self, ScalePolicy};
 use engn::graph::stats::GraphStats;
 use engn::model::{GnnKind, GnnModel};
-use engn::sim::Simulator;
+use engn::sim::{PreparedGraph, SimSession};
 use engn::util::{fmt_bytes, fmt_time, si};
 
 fn main() {
@@ -31,10 +31,13 @@ fn main() {
         println!("layer {i}: {} -> {}", l.f_in, l.f_out);
     }
 
-    // 3. Simulate on the paper's EnGN configuration (128x16 RER array,
-    //    64 KB DAVC, HBM 2.0).
+    // 3. Prepare the graph once (tilings, degree ranking) and simulate
+    //    a session on the paper's EnGN configuration (128x16 RER array,
+    //    64 KB DAVC, HBM 2.0). The same PreparedGraph could serve any
+    //    number of further configurations without re-sorting edges.
+    let prepared = PreparedGraph::new(&graph);
     let cfg = AcceleratorConfig::engn();
-    let report = Simulator::new(cfg.clone()).run(&model, &graph, spec.code);
+    let report = SimSession::new(&cfg, &prepared, &model).run(spec.code);
 
     println!("\n=== EnGN simulation ===");
     println!("latency      {}", fmt_time(report.seconds()));

@@ -16,6 +16,7 @@
 //!     cargo run --release --offline --example serving [requests] [workers]
 
 use engn::baselines::PlatformId;
+use engn::config::DataflowKind;
 use engn::coordinator::{
     Backends, BatchConfig, CostJob, InferenceService, JobError, JobOutput, JobPayload,
     ServiceConfig, SimJob, SubmitError, TensorBackend, Ticket,
@@ -109,7 +110,17 @@ fn main() {
                 GnnKind::Gcn,
                 "CA",
             )),
-            _ => JobPayload::Sim(SimJob::new(SIM_MODELS[i % SIM_MODELS.len()], "CA")),
+            _ => {
+                let mut job = SimJob::new(SIM_MODELS[i % SIM_MODELS.len()], "CA");
+                if i % 6 == 2 {
+                    // Exercise the pluggable dataflow end to end: a
+                    // dense-systolic what-if groups under its own batch
+                    // key (the config name is suffixed) but shares the
+                    // backend's prepared graph with the RER jobs.
+                    job = job.with_dataflow(DataflowKind::DenseSystolic);
+                }
+                JobPayload::Sim(job)
+            }
         };
         let label = format!("job-{i}:{}", payload.batch_key());
         // Bounded intake: a `Busy` rejection is the shed signal, so back

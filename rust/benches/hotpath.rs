@@ -4,9 +4,12 @@
 //! * `ring.schedule_tile` — the per-edge scheduler (Cycle fidelity's
 //!   inner loop) on dense / sparse / disordered tiles;
 //! * `davc.access` — cache replay rate;
-//! * `KeyedEdges`-equivalent tile grouping — the per-layer sort;
+//! * `EdgeTiling::build` — the per-(graph, Q) keyed sort + distinct
+//!   endpoint counting;
 //! * `rmat.generate` — dataset synthesis;
-//! * whole-simulator edges/s.
+//! * whole-simulator edges/s;
+//! * prepared-vs-cold configuration sweep — the amortization win of
+//!   sharing one `PreparedGraph` across N design points.
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -18,7 +21,7 @@ use engn::graph::rmat::{self, RmatParams};
 use engn::model::{GnnKind, GnnModel};
 use engn::sim::davc::Davc;
 use engn::sim::ring;
-use engn::sim::Simulator;
+use engn::sim::{EdgeTiling, PreparedGraph, SimSession, Simulator};
 use std::time::Duration;
 
 fn main() {
@@ -59,21 +62,10 @@ fn main() {
     r.print();
     println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
 
-    let r = bench("tile-sort:1M-edges", budget, || {
-        // The engine's per-layer grouping: key + sort.
-        let span = 4096usize;
-        let q = 16u64;
-        let mut pairs: Vec<(u64, engn::graph::Edge)> = g
-            .edges
-            .iter()
-            .map(|&e| {
-                let row = (e.src as usize / span) as u64;
-                let col = (e.dst as usize / span) as u64;
-                (row * q + col, e)
-            })
-            .collect();
-        pairs.sort_unstable_by_key(|&(k, _)| k);
-        black_box(pairs.len());
+    let r = bench("tiling:build:1M-edges", budget, || {
+        // The engine's per-(graph, Q) grouping: keyed sort + distinct
+        // endpoint counts — what PreparedGraph amortizes across runs.
+        black_box(EdgeTiling::build(&g.edges, 4096, 16));
     });
     r.print();
     println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
@@ -89,4 +81,38 @@ fn main() {
     });
     r.print();
     println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
+
+    section("prepared vs cold configuration sweep (GCN on PubMed)");
+    // N design points over one graph: the cold path re-derives the
+    // tilings per point (the pre-PreparedGraph behavior); the prepared
+    // path derives them once and shares them across every point.
+    let variants: Vec<AcceleratorConfig> = {
+        let mut v: Vec<AcceleratorConfig> = [(32usize, 16usize), (64, 16), (128, 16), (32, 32)]
+            .iter()
+            .map(|&(r, c)| AcceleratorConfig::with_array(r, c))
+            .collect();
+        for kb in [16usize, 64, 256] {
+            let mut cfg = AcceleratorConfig::engn().named(&format!("EnGN_davc{kb}K"));
+            cfg.davc_bytes = kb * 1024;
+            v.push(cfg);
+        }
+        v.push(AcceleratorConfig::engn_22mb());
+        v
+    };
+    let points = variants.len() as f64;
+    let r = bench("sweep:cold:8cfg", budget, || {
+        for cfg in &variants {
+            black_box(Simulator::new(cfg.clone()).run(&model, &pb, "PB"));
+        }
+    });
+    r.print();
+    println!("    -> {:.1} config-points/s", r.per_second(points));
+    let r = bench("sweep:prepared:8cfg", budget, || {
+        let prepared = PreparedGraph::new(&pb);
+        for cfg in &variants {
+            black_box(SimSession::new(cfg, &prepared, &model).run("PB"));
+        }
+    });
+    r.print();
+    println!("    -> {:.1} config-points/s", r.per_second(points));
 }

@@ -14,7 +14,7 @@ use engn::config::AcceleratorConfig;
 use engn::graph::datasets::{self, ScalePolicy};
 use engn::model::{GnnKind, GnnModel};
 use engn::report::experiments::{self, Eval};
-use engn::sim::Simulator;
+use engn::sim::{PreparedGraph, SimSession};
 use std::time::Duration;
 
 fn main() {
@@ -31,7 +31,8 @@ fn main() {
         r.print();
     }
 
-    section("simulator end-to-end per workload class (Factor(64))");
+    section("simulator end-to-end per workload class (Factor(64), prepared)");
+    let cfg = AcceleratorConfig::engn();
     for (kind, code) in [
         (GnnKind::Gcn, "CA"),
         (GnnKind::Gcn, "NE"),
@@ -41,12 +42,14 @@ fn main() {
         (GnnKind::Rgcn, "AM"),
     ] {
         let spec = datasets::by_code(code).unwrap();
-        let g = spec.instantiate(ScalePolicy::Factor(64), 7);
+        let prepared = PreparedGraph::from_arc(std::sync::Arc::new(
+            spec.instantiate(ScalePolicy::Factor(64), 7),
+        ));
         let model = GnnModel::for_dataset(kind, &spec);
-        let edges = g.num_edges() as f64;
+        let edges = prepared.graph().num_edges() as f64;
         let r = bench(&format!("sim:{}:{}", kind.short(), code), budget, || {
-            let sim = Simulator::new(AcceleratorConfig::engn());
-            black_box(sim.run(&model, &g, code));
+            // Steady-state serving rate: preparation amortized away.
+            black_box(SimSession::new(&cfg, &prepared, &model).run(code));
         });
         r.print();
         println!(

@@ -27,6 +27,40 @@ pub enum StageOrder {
     Dasr,
 }
 
+/// Aggregation dataflow the simulator models (see DESIGN.md §6). The
+/// paper's claims are comparative — RER vs poor-locality dense arrays —
+/// so the engine executes either through one pluggable trait.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataflowKind {
+    /// EnGN's ring-edge-reduce PE array: ring multicast, DAVC,
+    /// edge-bounded gather prefetching (the paper's design).
+    RingEdgeReduce,
+    /// HyGCN/VersaGNN-style dense systolic aggregation: no ring, no
+    /// vertex cache, interval-granular streaming.
+    DenseSystolic,
+}
+
+impl DataflowKind {
+    pub fn all() -> [DataflowKind; 2] {
+        [DataflowKind::RingEdgeReduce, DataflowKind::DenseSystolic]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataflowKind::RingEdgeReduce => "rer",
+            DataflowKind::DenseSystolic => "dense",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DataflowKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "rer" | "ring" | "ring-edge-reduce" => Some(DataflowKind::RingEdgeReduce),
+            "dense" | "systolic" | "dense-systolic" => Some(DataflowKind::DenseSystolic),
+            _ => None,
+        }
+    }
+}
+
 /// Simulator fidelity (see DESIGN.md §5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Fidelity {
@@ -73,6 +107,8 @@ pub struct AcceleratorConfig {
     pub tile_order: TileOrder,
     pub stage_order: StageOrder,
     pub fidelity: Fidelity,
+    /// Aggregation dataflow the engine executes layers through.
+    pub dataflow: DataflowKind,
     pub energy: EnergyModel,
     pub area: AreaModel,
 }
@@ -100,6 +136,7 @@ impl AcceleratorConfig {
             tile_order: TileOrder::Adaptive,
             stage_order: StageOrder::Dasr,
             fidelity: Fidelity::Phase,
+            dataflow: DataflowKind::RingEdgeReduce,
             energy: EnergyModel::tsmc14(),
             area: AreaModel::tsmc14(),
         }
@@ -127,6 +164,12 @@ impl AcceleratorConfig {
     /// Ablation helper.
     pub fn named(mut self, name: &str) -> Self {
         self.name = name.to_string();
+        self
+    }
+
+    /// Dataflow-variant helper (builder style).
+    pub fn with_dataflow(mut self, dataflow: DataflowKind) -> Self {
+        self.dataflow = dataflow;
         self
     }
 
@@ -191,6 +234,19 @@ mod tests {
         let c = AcceleratorConfig::with_array(32, 16);
         assert_eq!(c.peak_gops(), 1024.0);
         assert_eq!(c.name, "EnGN_32x16");
+    }
+
+    #[test]
+    fn dataflow_kind_parse_round_trips() {
+        for df in DataflowKind::all() {
+            assert_eq!(DataflowKind::parse(df.name()), Some(df));
+        }
+        assert_eq!(DataflowKind::parse("ring"), Some(DataflowKind::RingEdgeReduce));
+        assert_eq!(DataflowKind::parse("systolic"), Some(DataflowKind::DenseSystolic));
+        assert_eq!(DataflowKind::parse("nope"), None);
+        assert_eq!(AcceleratorConfig::engn().dataflow, DataflowKind::RingEdgeReduce);
+        let dense = AcceleratorConfig::engn().with_dataflow(DataflowKind::DenseSystolic);
+        assert_eq!(dense.dataflow, DataflowKind::DenseSystolic);
     }
 
     #[test]

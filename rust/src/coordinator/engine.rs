@@ -7,17 +7,17 @@
 //! A [`JobPayload`] names its plane ([`JobKind`]) and its batching key
 //! ([`JobPayload::batch_key`]): tensor jobs stack per artifact, sim jobs
 //! group per (accelerator config, dataset) so a formed batch amortizes
-//! one graph instantiation, and cost jobs group per platform. The
-//! service routes a whole formed batch to one backend with a single
-//! [`Backend::execute_batch`] call.
+//! one graph instantiation *and* preparation (the [`PreparedGraph`]
+//! cache of edge tilings / degree ranking), and cost jobs group per
+//! platform. The service routes a whole formed batch to one backend
+//! with a single [`Backend::execute_batch`] call.
 
 use crate::baselines::{self, PlatformId, Workload};
-use crate::config::AcceleratorConfig;
+use crate::config::{AcceleratorConfig, DataflowKind};
 use crate::graph::datasets::{self, ScalePolicy};
-use crate::graph::Graph;
 use crate::model::{GnnKind, GnnModel};
 use crate::runtime::HostTensor;
-use crate::sim::Simulator;
+use crate::sim::{PreparedGraph, SimSession};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -114,6 +114,18 @@ impl SimJob {
 
     pub fn with_config(mut self, config: AcceleratorConfig) -> Self {
         self.config = config;
+        self
+    }
+
+    /// What-if under an alternative aggregation dataflow. A no-op when
+    /// the config already uses it (so an explicit default keeps
+    /// batching with plain jobs); otherwise the config name is suffixed
+    /// so the job batches — and reports — under its own kind.
+    pub fn with_dataflow(mut self, dataflow: DataflowKind) -> Self {
+        if self.config.dataflow != dataflow {
+            self.config.dataflow = dataflow;
+            self.config.name = format!("{}@{}", self.config.name, dataflow.name());
+        }
         self
     }
 }
@@ -313,19 +325,21 @@ fn policy_key(p: ScalePolicy) -> (u8, usize) {
     }
 }
 
-/// Graphs kept per backend instance. The key is client-controlled
-/// (dataset, policy, seed), so the cache must be bounded or a request
-/// stream varying the seed would grow memory without limit.
+/// Prepared graphs kept per backend instance. The key is
+/// client-controlled (dataset, policy, seed), so the cache must be
+/// bounded or a request stream varying the seed would grow memory
+/// without limit.
 const GRAPH_CACHE_CAP: usize = 8;
 
 /// The simulation plane: answers [`SimJob`]s with the cycle/energy
-/// simulator. Instantiated graphs are cached per (dataset, policy,
-/// seed) — bounded FIFO of [`GRAPH_CACHE_CAP`] — so a same-config
-/// batch, and any later batch over the same dataset, amortizes graph
-/// synthesis.
+/// simulator. Graphs are instantiated AND prepared once per (dataset,
+/// policy, seed) — bounded FIFO of [`GRAPH_CACHE_CAP`] — so a formed
+/// batch, and any later batch over the same dataset, amortizes both the
+/// synthesis and the derived state (edge tilings, degree ranking); per
+/// job only the session itself runs.
 #[derive(Default)]
 pub struct SimBackend {
-    graphs: Mutex<Vec<(GraphKey, Arc<Graph>)>>,
+    graphs: Mutex<Vec<(GraphKey, Arc<PreparedGraph>)>>,
 }
 
 impl SimBackend {
@@ -333,21 +347,21 @@ impl SimBackend {
         Self::default()
     }
 
-    fn graph_for(
+    fn prepared_for(
         &self,
         spec: &datasets::DatasetSpec,
         policy: ScalePolicy,
         seed: u64,
-    ) -> Arc<Graph> {
+    ) -> Arc<PreparedGraph> {
         let (pk, pf) = policy_key(policy);
         let key: GraphKey = (spec.code.to_string(), pk, pf, seed);
         if let Some((_, g)) = self.graphs.lock().unwrap().iter().find(|(k, _)| *k == key) {
             return g.clone();
         }
-        // Synthesize outside the lock: instantiation dominates and other
-        // keys' batches must not serialize behind it. A racing duplicate
-        // build is benign (both entries answer identically).
-        let g = Arc::new(spec.instantiate(policy, seed));
+        // Synthesize + prepare outside the lock: instantiation dominates
+        // and other keys' batches must not serialize behind it. A racing
+        // duplicate build is benign (both entries answer identically).
+        let g = Arc::new(PreparedGraph::from_arc(Arc::new(spec.instantiate(policy, seed))));
         let mut cache = self.graphs.lock().unwrap();
         if cache.len() >= GRAPH_CACHE_CAP {
             cache.remove(0);
@@ -366,8 +380,9 @@ impl SimBackend {
                 spec.code
             ));
         }
-        let graph = self.graph_for(&spec, job.policy, job.seed);
-        let report = Simulator::new(job.config.clone()).run_for_spec(job.model, &spec, &graph);
+        let prepared = self.prepared_for(&spec, job.policy, job.seed);
+        let model = GnnModel::for_dataset(job.model, &spec);
+        let report = SimSession::new(&job.config, &prepared, &model).run(spec.code);
         Ok(SimSummary {
             config: job.config.name.clone(),
             model: job.model.name().to_string(),
@@ -540,6 +555,24 @@ mod tests {
         }
         // Both jobs share (dataset, policy, seed): one cached graph.
         assert_eq!(be.graphs.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn sim_jobs_with_dataflow_get_their_own_batch_key_and_run() {
+        let be = SimBackend::new();
+        // Selecting the default dataflow explicitly must not split the
+        // batch key (or rename the config); repeated selection is a
+        // no-op, not a second suffix.
+        let default = SimJob::new(GnnKind::Gcn, "CA").with_dataflow(DataflowKind::RingEdgeReduce);
+        assert_eq!(JobPayload::Sim(default).batch_key(), "sim:EnGN:CA");
+        let job = SimJob::new(GnnKind::Gcn, "CA")
+            .with_dataflow(DataflowKind::DenseSystolic)
+            .with_dataflow(DataflowKind::DenseSystolic);
+        assert_eq!(JobPayload::Sim(job.clone()).batch_key(), "sim:EnGN@dense:CA");
+        let res = be.execute_batch(vec![JobPayload::Sim(job)]);
+        let s = res[0].as_ref().expect("sim ok").as_sim().expect("sim output").clone();
+        assert_eq!(s.config, "EnGN@dense");
+        assert!(s.cycles > 0.0);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   datasets                         list the Table-5 dataset suite
-//!   run    --model M --dataset D     simulate one inference pass
+//!   run    --model M --dataset D [--dataflow rer|dense]
+//!                                    simulate one inference pass
 //!   bench  --exp <id|all> [--out D]  regenerate paper tables/figures
 //!   infer  --artifacts DIR [--name N]  functional inference via PJRT
 //!   serve  --artifacts DIR [--requests N] [--workers W] [--queue C]
@@ -10,11 +11,11 @@
 //!                                      multi-worker batched execution,
 //!                                      deadline-aware shedding)
 //!   whatif --model M --dataset D [--platforms P,..] [--workers W]
-//!                                      capacity planning through the
+//!          [--dataflow rer|dense]      capacity planning through the
 //!                                      serving coordinator: sim + cost
 //!                                      jobs on the analytic backends
 
-use engn::config::{AcceleratorConfig, Fidelity};
+use engn::config::{AcceleratorConfig, DataflowKind, Fidelity};
 use engn::coordinator::{
     Backends, BatchConfig, CostJob, InferenceService, JobOutput, JobPayload, ServiceConfig,
     SimJob, SubmitError, Ticket,
@@ -24,7 +25,7 @@ use engn::graph::datasets::{self, ScalePolicy};
 use engn::model::{GnnKind, GnnModel};
 use engn::report::experiments::{self, Eval};
 use engn::runtime::{HostTensor, Runtime};
-use engn::sim::Simulator;
+use engn::sim::{PreparedGraph, SimSession};
 use engn::util::rng::Xoshiro256StarStar;
 use engn::util::{fmt_bytes, fmt_time, si};
 use std::collections::HashMap;
@@ -102,6 +103,17 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         eprintln!("unknown model {model_name:?} (gcn|gspool|rgcn|gatedgcn|grn)");
         return 2;
     };
+    let mut cfg = AcceleratorConfig::engn();
+    if flags.contains_key("cycle") {
+        cfg.fidelity = Fidelity::Cycle;
+    }
+    if let Some(s) = flags.get("dataflow") {
+        let Some(df) = DataflowKind::parse(s) else {
+            eprintln!("unknown dataflow {s:?} (rer|dense)");
+            return 2;
+        };
+        cfg.dataflow = df;
+    }
     // Real edge-list input: `--edges FILE [--feature-dim F] [--labels L]`.
     if let Some(path) = flags.get("edges") {
         let loaded = match engn::graph::io::load_edge_list(path) {
@@ -126,7 +138,8 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             group: engn::graph::datasets::DatasetGroup::Synthetic,
         };
         let model = GnnModel::for_dataset(kind, &spec);
-        let r = Simulator::new(AcceleratorConfig::engn()).run(&model, &g, "FILE");
+        let prepared = PreparedGraph::new(&g);
+        let r = SimSession::new(&cfg, &prepared, &model).run("FILE");
         println!(
             "{} on {} ({} vertices, {} edges): {} | {} GOP/s | {:.2e} J",
             kind.name(),
@@ -152,10 +165,6 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
     } else {
         ScalePolicy::Capped
     };
-    let mut cfg = AcceleratorConfig::engn();
-    if flags.contains_key("cycle") {
-        cfg.fidelity = Fidelity::Cycle;
-    }
     let (v, e, factor) = spec.scaled_sizes(policy);
     println!(
         "synthesizing {} ({} vertices, {} edges{}) ...",
@@ -164,15 +173,17 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         e,
         if factor > 1 { format!(", scaled 1/{factor}") } else { String::new() }
     );
-    let g = spec.instantiate(policy, 0xE16A);
+    let prepared = PreparedGraph::from_arc(std::sync::Arc::new(spec.instantiate(policy, 0xE16A)));
     let model = GnnModel::for_dataset(kind, &spec);
-    let r = Simulator::new(cfg.clone()).run(&model, &g, spec.code);
+    let session = SimSession::new(&cfg, &prepared, &model);
+    let r = session.run(spec.code);
     println!(
-        "\n{} on {} under {} ({:?} fidelity)",
+        "\n{} on {} under {} ({:?} fidelity, {} dataflow)",
         kind.name(),
         spec.name,
         cfg.name,
-        cfg.fidelity
+        cfg.fidelity,
+        session.dataflow_name()
     );
     println!("  cycles       : {}", si(r.total_cycles()));
     println!("  latency      : {}", fmt_time(r.seconds()));
@@ -426,6 +437,14 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
         }
         None => PlatformId::all().to_vec(),
     };
+    let mut sim_job = SimJob::new(kind, code);
+    if let Some(s) = flags.get("dataflow") {
+        let Some(df) = DataflowKind::parse(s) else {
+            eprintln!("unknown dataflow {s:?} (rer|dense)");
+            return 2;
+        };
+        sim_job = sim_job.with_dataflow(df);
+    }
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
     let svc = InferenceService::start(
         || Ok(Backends::analytic()),
@@ -436,7 +455,7 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
         },
     );
     let mut tickets = Vec::new();
-    match svc.submit(JobPayload::Sim(SimJob::new(kind, code))) {
+    match svc.submit(JobPayload::Sim(sim_job)) {
         Ok(t) => tickets.push(t),
         Err(e) => eprintln!("sim job rejected: {e}"),
     }

@@ -14,20 +14,22 @@ use crate::baselines::hygcn::HygcnModel;
 use crate::baselines::{BaselineReport, Workload};
 use crate::config::{AcceleratorConfig, StageOrder, TileOrder};
 use crate::graph::datasets::{self, DatasetSpec, ScalePolicy};
-use crate::graph::Graph;
 use crate::model::{GnnKind, GnnModel, LayerDims};
 use crate::report::{f, pct, x, Table};
-use crate::sim::{SimReport, Simulator};
+use crate::sim::{PreparedGraph, SimReport, SimSession};
 use crate::util::geomean;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
-/// Evaluation context: scaling policy, seed, and caches.
+/// Evaluation context: scaling policy, seed, and caches. Every dataset
+/// is instantiated and prepared at most once per context; the dozens of
+/// configuration points a figure sweeps share one [`PreparedGraph`].
 pub struct Eval {
     pub policy: ScalePolicy,
     pub seed: u64,
-    graphs: RefCell<HashMap<String, Rc<Graph>>>,
+    graphs: RefCell<HashMap<String, Rc<PreparedGraph>>>,
     pairs: RefCell<HashMap<String, Rc<PairEval>>>,
 }
 
@@ -68,20 +70,24 @@ impl Eval {
         Self::new(ScalePolicy::Capped, 0xE16A)
     }
 
-    pub fn graph(&self, spec: &DatasetSpec) -> Rc<Graph> {
+    /// The prepared graph for a dataset (instantiated + derived state,
+    /// cached per context).
+    pub fn prepared(&self, spec: &DatasetSpec) -> Rc<PreparedGraph> {
         if let Some(g) = self.graphs.borrow().get(spec.code) {
             return g.clone();
         }
-        let g = Rc::new(spec.instantiate(self.policy, self.seed));
+        let g = Rc::new(PreparedGraph::from_arc(Arc::new(
+            spec.instantiate(self.policy, self.seed),
+        )));
         self.graphs.borrow_mut().insert(spec.code.to_string(), g.clone());
         g
     }
 
     /// Run EnGN (simulated) on one model/dataset with a given config.
     pub fn engn_with(&self, cfg: AcceleratorConfig, kind: GnnKind, spec: &DatasetSpec) -> SimReport {
-        let g = self.graph(spec);
+        let prepared = self.prepared(spec);
         let model = GnnModel::for_dataset(kind, spec);
-        Simulator::new(cfg).run(&model, &g, spec.code)
+        SimSession::new(&cfg, &prepared, &model).run(spec.code)
     }
 
     /// All platforms on one pair (cached).
@@ -90,13 +96,14 @@ impl Eval {
         if let Some(p) = self.pairs.borrow().get(&key) {
             return p.clone();
         }
-        let g = self.graph(spec);
+        let prepared = self.prepared(spec);
         let model = GnnModel::for_dataset(kind, spec);
-        let w = Workload::from_graph(&g);
+        let w = Workload::from_graph(prepared.graph());
+        let engn_cfg = AcceleratorConfig::engn();
         let p = Rc::new(PairEval {
             kind,
             spec: spec.clone(),
-            engn: Simulator::new(AcceleratorConfig::engn()).run(&model, &g, spec.code),
+            engn: SimSession::new(&engn_cfg, &prepared, &model).run(spec.code),
             cpu_dgl: CpuModel::new(Framework::Dgl).run(&model, &w),
             cpu_pyg: CpuModel::new(Framework::Pyg).run(&model, &w),
             gpu_dgl: GpuModel::new(Framework::Dgl).run(&model, &w),

@@ -145,6 +145,24 @@ impl Davc {
         hit
     }
 
+    /// Replay a (possibly sampled) destination stream and fold the
+    /// access/hit deltas into `out`, scaled by `scale` — the Phase
+    /// fidelity extrapolation from a tile's sampled prefix to its full
+    /// edge run. The cache's own state advances unscaled.
+    pub fn replay_scaled(
+        &mut self,
+        dsts: impl Iterator<Item = u32>,
+        scale: f64,
+        out: &mut CacheStats,
+    ) {
+        let before = (self.stats.accesses, self.stats.hits);
+        for v in dsts {
+            self.access(v);
+        }
+        out.accesses += ((self.stats.accesses - before.0) as f64 * scale) as u64;
+        out.hits += ((self.stats.hits - before.1) as f64 * scale) as u64;
+    }
+
     pub fn hit_rate(&self) -> f64 {
         self.stats.hit_rate()
     }
@@ -260,6 +278,23 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn replay_scaled_extrapolates_deltas() {
+        let ranked = vec![1u32, 2, 3];
+        let mut c = Davc::new(2, 1.0, &ranked); // {1, 2} pinned
+        let mut out = CacheStats::default();
+        // 4 accesses, 2 hits, scaled 2x.
+        c.replay_scaled([1, 2, 9, 9].into_iter(), 2.0, &mut out);
+        assert_eq!(out.accesses, 8);
+        assert_eq!(out.hits, 4);
+        // Unit scale equals the raw delta.
+        c.replay_scaled([1].into_iter(), 1.0, &mut out);
+        assert_eq!(out.accesses, 9);
+        assert_eq!(out.hits, 5);
+        // Cache state itself advanced unscaled.
+        assert_eq!(c.stats.accesses, 5);
     }
 
     #[test]

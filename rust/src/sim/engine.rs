@@ -1,24 +1,34 @@
-//! The EnGN simulation engine: orchestrates one GNN inference pass layer
-//! by layer — stage ordering (DASR), grid tiling, tile scheduling, the
-//! RER ring replay, DAVC replay, HBM traffic and the energy tally — and
-//! produces a [`SimReport`].
+//! The EnGN simulation engine, decomposed into three pieces:
+//!
+//! * [`crate::sim::PreparedGraph`] — immutable derived graph state
+//!   (degree ranking, relation histogram, per-Q edge tilings) built
+//!   once and shared across layers, runs, sweeps and serving batches;
+//! * [`SimSession`] — plans one pass of a model over a prepared graph
+//!   as per-layer [`LayerPlan`]s (stage order, tiling, schedule choice)
+//!   and executes them through a pluggable
+//!   [`crate::sim::Dataflow`] (ring-edge-reduce by default, dense
+//!   systolic for the paper's comparison baselines);
+//! * [`Simulator`] — the original convenience entry points, kept as
+//!   thin compatibility wrappers that prepare-and-run in one call.
 //!
 //! Two fidelity modes (config::Fidelity):
-//! * `Cycle` — replay the ring schedule and DAVC for *every* edge;
+//! * `Cycle` — replay the aggregation schedule and DAVC for *every* edge;
 //! * `Phase` — replay a bounded sample per tile and extrapolate
 //!   (validated against `Cycle` by integration tests; see DESIGN.md §5).
 
 use crate::config::{AcceleratorConfig, Fidelity, StageOrder};
-use crate::graph::{Edge, Graph};
-use crate::model::ops::{self, ExecOrder, Work};
-use crate::model::GnnModel;
+use crate::graph::Graph;
+use crate::model::ops::{self, ExecOrder, StageWork, Work};
+use crate::model::{GnnModel, LayerDims};
+use crate::sim::dataflow::{self, Dataflow, TileOutcome, TileView};
 use crate::sim::davc::Davc;
 use crate::sim::energy::{self, EnergyBreakdown};
 use crate::sim::pe_array;
-use crate::sim::ring::{self, RingOutcome};
+use crate::sim::prepared::{EdgeTiling, PreparedGraph};
 use crate::sim::stats::{CacheStats, LayerReport, SimReport, StageStats, TrafficStats};
 use crate::sim::tiles;
 use crate::util::ceil_div;
+use std::sync::Arc;
 
 /// Edge-sample budget per layer in `Phase` fidelity. Sampling keeps the
 /// per-tile stream structure (contiguous prefix), so it is only safe on
@@ -30,50 +40,11 @@ const PHASE_SAMPLE_BUDGET: usize = 8_000_000;
 /// double-buffers source properties / temp features).
 const DST_BANK_SHARE: f64 = 0.5;
 
+/// Compatibility wrapper: prepares the graph and runs a [`SimSession`]
+/// in one call. Callers that reuse a graph across configurations or
+/// jobs should hold a [`PreparedGraph`] and build sessions directly.
 pub struct Simulator {
     pub cfg: AcceleratorConfig,
-}
-
-/// Edges grouped by tile: parallel `keys`/`edges` arrays sorted by tile
-/// key (`grid_row * q + grid_col`), iterated as contiguous runs.
-struct KeyedEdges {
-    q: usize,
-    keys: Vec<u64>,
-    edges: Vec<Edge>,
-}
-
-impl KeyedEdges {
-    fn build(edges: &[Edge], span: usize, q: usize) -> Self {
-        let mut pairs: Vec<(u64, Edge)> = edges
-            .iter()
-            .map(|&e| {
-                let r = (e.src as usize / span).min(q - 1) as u64;
-                let c = (e.dst as usize / span).min(q - 1) as u64;
-                (r * q as u64 + c, e)
-            })
-            .collect();
-        pairs.sort_unstable_by_key(|&(k, _)| k);
-        let keys = pairs.iter().map(|&(k, _)| k).collect();
-        let edges = pairs.into_iter().map(|(_, e)| e).collect();
-        Self { q, keys, edges }
-    }
-
-    /// Iterate `(grid_row, grid_col, edge_slice)` per non-empty tile.
-    fn runs(&self) -> impl Iterator<Item = (u32, u32, &[Edge])> {
-        let mut i = 0usize;
-        let q = self.q as u64;
-        std::iter::from_fn(move || {
-            if i >= self.keys.len() {
-                return None;
-            }
-            let key = self.keys[i];
-            let start = i;
-            while i < self.keys.len() && self.keys[i] == key {
-                i += 1;
-            }
-            Some(((key / q) as u32, (key % q) as u32, &self.edges[start..i]))
-        })
-    }
 }
 
 impl Simulator {
@@ -84,8 +55,7 @@ impl Simulator {
     /// Serving-plane entry: bind `kind` to the dataset's published
     /// dimensions (Table 5) and simulate one pass over `graph`. The
     /// coordinator's simulation backend answers what-if jobs through
-    /// this, so a sim request is exactly `engn run` with the graph
-    /// amortized across the batch.
+    /// the session API; this wrapper serves one-shot callers.
     pub fn run_for_spec(
         &self,
         kind: crate::model::GnnKind,
@@ -98,240 +68,130 @@ impl Simulator {
 
     /// Simulate one full inference pass of `model` over `graph`.
     pub fn run(&self, model: &GnnModel, graph: &Graph, dataset_code: &str) -> SimReport {
-        let cfg = &self.cfg;
-        let n = graph.num_vertices;
-        let e = graph.num_edges();
-        let rel_hist =
-            ops::relation_histogram(&graph.relations, graph.num_relations, e);
-        let degree_ranked = graph.vertices_by_in_degree_desc();
+        let prepared = PreparedGraph::new(graph);
+        SimSession::new(&self.cfg, &prepared, model).run(dataset_code)
+    }
+}
 
-        let mut layers = Vec::with_capacity(model.layers.len());
+/// Execution plan for one layer: everything decided before a cycle is
+/// charged — stage order, work decomposition, grid partition, the
+/// shared tiling, and the tile-schedule choice.
+pub struct LayerPlan {
+    pub layer_idx: usize,
+    pub dims: LayerDims,
+    pub order: ExecOrder,
+    pub work: StageWork,
+    /// Dimension of the property the aggregate stage reduces (≥ 1).
+    pub agg_dim: usize,
+    pub q: usize,
+    pub span: usize,
+    pub choice: tiles::ScheduleChoice,
+    pub tiling: Arc<EdgeTiling>,
+}
+
+/// One simulation pass of a model over a prepared graph under one
+/// accelerator configuration. Cheap to construct; the expensive graph
+/// preparation lives in [`PreparedGraph`] and is shared.
+pub struct SimSession<'a> {
+    cfg: &'a AcceleratorConfig,
+    prepared: &'a PreparedGraph,
+    model: &'a GnnModel,
+    dataflow: Box<dyn Dataflow>,
+}
+
+impl<'a> SimSession<'a> {
+    /// A session executing through the dataflow `cfg.dataflow` names.
+    pub fn new(
+        cfg: &'a AcceleratorConfig,
+        prepared: &'a PreparedGraph,
+        model: &'a GnnModel,
+    ) -> Self {
+        Self {
+            cfg,
+            prepared,
+            model,
+            dataflow: dataflow::for_kind(cfg.dataflow),
+        }
+    }
+
+    /// Swap in a custom dataflow implementation (builder style).
+    pub fn with_dataflow(mut self, dataflow: Box<dyn Dataflow>) -> Self {
+        self.dataflow = dataflow;
+        self
+    }
+
+    pub fn dataflow_name(&self) -> &'static str {
+        self.dataflow.name()
+    }
+
+    /// Plan every layer of the pass without executing anything.
+    pub fn plan(&self) -> Vec<LayerPlan> {
+        let n = self.prepared.graph().num_vertices;
+        let e = self.prepared.graph().num_edges();
+        self.model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(idx, &layer)| self.plan_layer(idx, layer, n, e))
+            .collect()
+    }
+
+    fn plan_layer(&self, idx: usize, layer: LayerDims, n: usize, e: usize) -> LayerPlan {
+        let cfg = self.cfg;
+        let order = match cfg.stage_order {
+            StageOrder::Fau => ExecOrder::FeatureFirst,
+            StageOrder::Afu => ExecOrder::AggregateFirst,
+            StageOrder::Dasr => ops::dasr_order(self.model, layer),
+        };
+        let work = ops::layer_work(self.model, n, e, self.prepared.rel_hist(), layer, order);
+        let agg_dim = work.agg_dim().max(1);
+
+        // Grid partition: destination intervals must fit their half of
+        // the result bank.
+        let iv_cap = ((cfg.result_bank_bytes as f64 * DST_BANK_SHARE) as usize
+            / (agg_dim * cfg.word_bytes))
+            .max(cfg.pe_rows);
+        let q = ceil_div(n.max(1), iv_cap).max(1);
+        let tiling = self.prepared.tiling(q);
+        let span = tiling.span;
+
+        // Tile-schedule choice, compared by the same stream model the
+        // executor charges traffic with.
+        let choice = self.stream_model(&tiling, agg_dim).choose(cfg.tile_order);
+        LayerPlan {
+            layer_idx: idx,
+            dims: layer,
+            order,
+            work,
+            agg_dim,
+            q,
+            span,
+            choice,
+            tiling,
+        }
+    }
+
+    fn stream_model(&self, tiling: &EdgeTiling, agg_dim: usize) -> tiles::StreamModel {
+        tiles::StreamModel {
+            q: tiling.q,
+            span: tiling.span,
+            num_vertices: self.prepared.graph().num_vertices,
+            agg_dim,
+            word_bytes: self.cfg.word_bytes,
+            src_touched: tiling.src_touched(),
+            dst_touched: tiling.dst_touched(),
+            edge_bounded: self.dataflow.edge_bounded_gather(),
+        }
+    }
+
+    /// Plan and execute the full pass.
+    pub fn run(&self, dataset_code: &str) -> SimReport {
+        let mut layers = Vec::with_capacity(self.model.layers.len());
         let mut energy_total = EnergyBreakdown::default();
-        // Keyed edge buffer reused across layers when Q is unchanged.
-        let mut keyed: Option<KeyedEdges> = None;
-
-        for (idx, &layer) in model.layers.iter().enumerate() {
-            let order = match cfg.stage_order {
-                StageOrder::Fau => ExecOrder::FeatureFirst,
-                StageOrder::Afu => ExecOrder::AggregateFirst,
-                StageOrder::Dasr => ops::dasr_order(model, layer),
-            };
-            let work = ops::layer_work(model, n, e, &rel_hist, layer, order);
-            let agg_dim = work.agg_dim().max(1);
-
-            // --- Tiling ---------------------------------------------------
-            let iv_cap = ((cfg.result_bank_bytes as f64 * DST_BANK_SHARE) as usize
-                / (agg_dim * cfg.word_bytes))
-                .max(cfg.pe_rows);
-            let q = ceil_div(n.max(1), iv_cap).max(1);
-            let span = ceil_div(n.max(1), q);
-            if keyed.as_ref().map(|k| k.q) != Some(q) {
-                keyed = Some(KeyedEdges::build(&graph.edges, span, q));
-            }
-            let tiles_grouped = keyed.as_ref().unwrap();
-
-            // --- Dense stages (PE array) ----------------------------------
-            let (fe_cycles, fe_util) = dense_cycles(&work.feature_extraction, e, cfg);
-            let (upd_cycles, upd_util) = dense_cycles(&work.update, e, cfg);
-
-            // --- Aggregation (ring + DAVC) --------------------------------
-            let sample_frac = if cfg.fidelity == Fidelity::Cycle || e <= PHASE_SAMPLE_BUDGET {
-                1.0
-            } else {
-                PHASE_SAMPLE_BUDGET as f64 / e as f64
-            };
-            let davc_entries =
-                Davc::entries_for(cfg.davc_bytes, agg_dim, cfg.word_bytes);
-            let mut davc = Davc::new(davc_entries, cfg.davc_reserved_frac, &degree_ranked);
-            let mut ring_total = RingOutcome::default();
-            let mut ring_cycles_scaled = 0.0f64;
-            let mut davc_scaled = CacheStats::default();
-            // Vertices actually touched per tile (bounds gather traffic:
-            // a sparse tile streams only the properties its edges name,
-            // not the whole interval).
-            let mut src_touched = 0.0f64;
-            let mut dst_touched = 0.0f64;
-            for (tile_row, tile_col, tile_edges) in tiles_grouped.runs() {
-                src_touched += tile_edges.len().min(span) as f64;
-                dst_touched += tile_edges.len().min(span) as f64;
-                let take = if sample_frac >= 1.0 {
-                    tile_edges.len()
-                } else {
-                    ((tile_edges.len() as f64 * sample_frac).ceil() as usize)
-                        .clamp(1, tile_edges.len())
-                };
-                let scale = tile_edges.len() as f64 / take as f64;
-                let sample = &tile_edges[..take];
-                let outcome = ring::schedule_tile(
-                    sample,
-                    tile_row * span as u32,
-                    tile_col * span as u32,
-                    cfg.pe_rows,
-                    cfg.edge_reorganization,
-                );
-                ring_total.add(&outcome);
-                let tile_cycles = if cfg.ideal_ring {
-                    outcome.ideal_cycles
-                } else {
-                    outcome.cycles
-                };
-                ring_cycles_scaled += tile_cycles as f64 * scale;
-                let before = (davc.stats.accesses, davc.stats.hits);
-                for edge in sample {
-                    davc.access(edge.dst);
-                }
-                davc_scaled.accesses +=
-                    ((davc.stats.accesses - before.0) as f64 * scale) as u64;
-                davc_scaled.hits += ((davc.stats.hits - before.1) as f64 * scale) as u64;
-            }
-            let dim_groups = ceil_div(agg_dim, cfg.pe_cols) as f64;
-            let davc_misses = (davc_scaled.accesses - davc_scaled.hits) as f64;
-            // Result-bank fills stall the consuming row ~2 cycles; rows
-            // operate in parallel so the array-level penalty is amortized.
-            let davc_stall = davc_misses * 2.0 / cfg.pe_rows as f64;
-            let agg_ring_cycles = ring_cycles_scaled * dim_groups + davc_stall;
-            // Per-edge overlapped work (Gated-GCN's gating product).
-            let agg_extra: f64 = work
-                .aggregate
-                .iter()
-                .map(|w| dense_work_cycles(w, e, cfg))
-                .sum::<f64>()
-                - 0.0; // EdgeReduce items return 0 from dense_work_cycles
-            let agg_cycles = agg_ring_cycles + agg_extra;
-            let ring_util = if ring_cycles_scaled > 0.0 {
-                (ring_total.edges as f64 / sample_frac.max(1e-12))
-                    / (ring_cycles_scaled * cfg.pe_rows as f64)
-            } else {
-                0.0
-            };
-
-            // --- Ops per stage --------------------------------------------
-            let stage_ops = |ws: &[Work]| ws.iter().map(|w| w.ops(e)).sum::<f64>();
-            let fe_ops = stage_ops(&work.feature_extraction);
-            let agg_ops = stage_ops(&work.aggregate);
-            let upd_ops = stage_ops(&work.update);
-
-            // --- HBM traffic -----------------------------------------------
-            // Edge-bounded version of the paper's Table-3 cost model: the
-            // dense closed form (intervals × dims) caps from above, the
-            // per-tile touched-vertex count caps gather traffic from
-            // below (EnGN's prefetcher fetches the properties the edge
-            // stream names, not whole intervals, when tiles are sparse).
-            let nf = n as f64;
-            let wb = cfg.word_bytes as f64;
-            let d_agg_f = agg_dim as f64;
-            let edge_bytes = e as f64
-                * (8.0 + if graph.relations.is_empty() { 0.0 } else { 2.0 });
-            // One-time passes: raw input read (extraction), temp property
-            // write when the extracted features spill off-chip (Q > 1).
-            let one_time_read = nf * layer.f_in as f64 * wb;
-            let temp_write = if q > 1 { nf * d_agg_f * wb } else { 0.0 };
-            // Aggregation streaming per the schedule choice. When the
-            // whole working set fits on chip (Q == 1), nothing re-streams.
-            let stream_for = |choice: tiles::ScheduleChoice| -> (f64, f64, f64) {
-                if q == 1 {
-                    return (0.0, 0.0, 0.0);
-                }
-                let dense = ((q * q - q + 1) * span) as f64;
-                match choice {
-                    tiles::ScheduleChoice::Column => (
-                        // Sources reload per tile (S-shape saves
-                        // boundaries); destination partials resident,
-                        // one read+write per interval.
-                        dense.min(src_touched) * d_agg_f * wb,
-                        nf.min((q * span) as f64) * d_agg_f * wb,
-                        nf.min((q * span) as f64) * d_agg_f * wb,
-                    ),
-                    tiles::ScheduleChoice::Row => (
-                        // Sources resident per grid row; destination
-                        // partials reload + flush per tile.
-                        nf.min((q * span) as f64) * d_agg_f * wb,
-                        dense.min(dst_touched) * d_agg_f * wb,
-                        (q as f64 * q as f64 * span as f64).min(dst_touched) * d_agg_f * wb,
-                    ),
-                }
-            };
-            // Adaptive scheduling compares the same model it is charged
-            // by (the paper's compiler does this with the Table-3 closed
-            // form; ours is the edge-bounded refinement of it).
-            let choice = match cfg.tile_order {
-                crate::config::TileOrder::Column => tiles::ScheduleChoice::Column,
-                crate::config::TileOrder::Row => tiles::ScheduleChoice::Row,
-                crate::config::TileOrder::Adaptive => {
-                    let sum = |t: (f64, f64, f64)| t.0 + t.1 + t.2;
-                    if sum(stream_for(tiles::ScheduleChoice::Column))
-                        <= sum(stream_for(tiles::ScheduleChoice::Row))
-                    {
-                        tiles::ScheduleChoice::Column
-                    } else {
-                        tiles::ScheduleChoice::Row
-                    }
-                }
-            };
-            let (src_stream, dst_read, dst_write) = stream_for(choice);
-            let out_write = nf * layer.f_out as f64 * wb;
-            let hbm_read = one_time_read + src_stream + dst_read + edge_bytes;
-            let hbm_write = temp_write + dst_write + out_write;
-
-            // --- On-chip traffic -------------------------------------------
-            let line_bytes = (agg_dim * cfg.word_bytes) as f64;
-            let mac_ops: f64 = [&work.feature_extraction, &work.aggregate, &work.update]
-                .iter()
-                .flat_map(|ws| ws.iter())
-                .filter(|w| matches!(w, Work::Matmul { .. }))
-                .map(|w| w.ops(e))
-                .sum();
-            let alu_ops = (fe_ops + agg_ops + upd_ops) - mac_ops;
-            let traffic = TrafficStats {
-                // Two 4-byte operands per MAC plus partial-sum update for
-                // reduce ops.
-                rf_bytes: (mac_ops / 2.0) * 8.0 + alu_ops * 8.0,
-                davc_bytes: davc_scaled.accesses as f64 * line_bytes * 2.0,
-                bank_bytes: davc_misses * line_bytes * 2.0,
-                hbm_read_bytes: hbm_read,
-                hbm_write_bytes: hbm_write,
-                edge_bytes,
-                schedule_bytes: src_stream + dst_read + dst_write + temp_write,
-            };
-
-            // --- Layer roll-up ---------------------------------------------
-            // FE and aggregation overlap batch-wise (Fig 8); update runs on
-            // the final aggregated values.
-            let compute_cycles = fe_cycles.max(agg_cycles)
-                + upd_cycles
-                + pe_array::pipeline_fill(cfg.pe_rows, cfg.pe_cols);
-            let hbm_cycles = traffic.hbm_total() / cfg.hbm_bytes_per_cycle()
-                + cfg.hbm_latency_ns * cfg.freq_ghz; // one exposed burst
-            let total_cycles = compute_cycles.max(hbm_cycles);
-
-            energy_total.add(&energy::tally(cfg, mac_ops, alu_ops, &traffic));
-
-            layers.push(LayerReport {
-                layer_idx: idx,
-                f_in: layer.f_in,
-                f_out: layer.f_out,
-                q,
-                feature_extraction: StageStats {
-                    cycles: fe_cycles,
-                    ops: fe_ops,
-                    utilization: fe_util,
-                },
-                aggregate: StageStats {
-                    cycles: agg_cycles,
-                    ops: agg_ops,
-                    utilization: ring_util.min(1.0),
-                },
-                update: StageStats {
-                    cycles: upd_cycles,
-                    ops: upd_ops,
-                    utilization: upd_util,
-                },
-                traffic,
-                davc: davc_scaled,
-                compute_cycles,
-                total_cycles,
-                ring_utilization: ring_util.min(1.0),
-            });
+        for plan in self.plan() {
+            let (report, energy) = self.execute_layer(&plan);
+            energy_total.add(&energy);
+            layers.push(report);
         }
 
         let freq = self.cfg.freq_ghz;
@@ -342,7 +202,7 @@ impl Simulator {
         let power_w = if seconds > 0.0 { chip_energy_j / seconds } else { 0.0 };
         SimReport {
             config_name: self.cfg.name.clone(),
-            model_name: model.kind.name().to_string(),
+            model_name: self.model.kind.name().to_string(),
             dataset_code: dataset_code.to_string(),
             layers,
             freq_ghz: freq,
@@ -351,44 +211,184 @@ impl Simulator {
             power_w,
         }
     }
-}
 
-/// Cycles + mean utilization for a list of dense work items.
-fn dense_cycles(items: &[Work], num_edges: usize, cfg: &AcceleratorConfig) -> (f64, f64) {
-    let mut cycles = 0.0;
-    let mut util_weighted = 0.0;
-    for w in items {
-        let c = dense_work_cycles(w, num_edges, cfg);
-        cycles += c;
-        let u = match *w {
-            Work::Matmul { n, f, h } => {
-                pe_array::matmul_utilization(n, f, h, cfg.pe_rows, cfg.pe_cols)
-            }
-            _ => 1.0,
+    /// Execute one planned layer: dense stages on the PE array, the
+    /// aggregation tile loop through the dataflow, then traffic and
+    /// energy accounting.
+    fn execute_layer(&self, plan: &LayerPlan) -> (LayerReport, EnergyBreakdown) {
+        let cfg = self.cfg;
+        let n = self.prepared.graph().num_vertices;
+        let e = self.prepared.graph().num_edges();
+        let work = &plan.work;
+        let agg_dim = plan.agg_dim;
+        let q = plan.q;
+        let span = plan.span;
+
+        // --- Dense stages (PE array) ----------------------------------
+        let (fe_cycles, fe_util) = self.dataflow.dense_stage(&work.feature_extraction, e, cfg);
+        let (upd_cycles, upd_util) = self.dataflow.dense_stage(&work.update, e, cfg);
+
+        // --- Aggregation (tile loop through the dataflow) -------------
+        let sample_frac = if cfg.fidelity == Fidelity::Cycle || e <= PHASE_SAMPLE_BUDGET {
+            1.0
+        } else {
+            PHASE_SAMPLE_BUDGET as f64 / e as f64
         };
-        util_weighted += u * c;
-    }
-    let util = if cycles > 0.0 { util_weighted / cycles } else { 0.0 };
-    (cycles, util)
-}
-
-/// PE-array cycles for one dense work item (EdgeReduce → 0: the ring
-/// replay owns its timing).
-fn dense_work_cycles(w: &Work, num_edges: usize, cfg: &AcceleratorConfig) -> f64 {
-    match *w {
-        Work::Matmul { n, f, h } => pe_array::matmul_cycles(n, f, h, cfg.pe_rows, cfg.pe_cols),
-        Work::Elementwise { n, d } => pe_array::elementwise_cycles(n, d, cfg.pe_rows, cfg.pe_cols),
-        Work::EdgeWise { d, .. } => {
-            pe_array::elementwise_cycles(num_edges, d, cfg.pe_rows, cfg.pe_cols)
+        let use_davc = self.dataflow.uses_davc();
+        let davc_entries = Davc::entries_for(cfg.davc_bytes, agg_dim, cfg.word_bytes);
+        let ranked = self.prepared.degree_ranked();
+        let mut davc = Davc::new(davc_entries, cfg.davc_reserved_frac, ranked);
+        let mut agg_total = TileOutcome::default();
+        let mut agg_cycles_scaled = 0.0f64;
+        let mut davc_scaled = CacheStats::default();
+        // Result-bank line accesses: DAVC misses for cached dataflows,
+        // one interval spill per tile otherwise.
+        let mut bank_line_accesses = 0.0f64;
+        for tile in plan.tiling.runs() {
+            let take = if sample_frac >= 1.0 {
+                tile.edges.len()
+            } else {
+                ((tile.edges.len() as f64 * sample_frac).ceil() as usize)
+                    .clamp(1, tile.edges.len())
+            };
+            let scale = tile.edges.len() as f64 / take as f64;
+            let view = TileView {
+                edges: &tile.edges[..take],
+                grid_row: tile.row,
+                grid_col: tile.col,
+                src_start: tile.row * span as u32,
+                dst_start: tile.col * span as u32,
+                span,
+                distinct_src: tile.distinct_src,
+                distinct_dst: tile.distinct_dst,
+            };
+            let outcome = self.dataflow.aggregate_tile(cfg, &view);
+            agg_total.add(&outcome);
+            // Interval-shaped dataflows charge the full tile even from
+            // a sampled slice; only edge-driven schedules extrapolate.
+            let cycle_scale = if self.dataflow.cycles_scale_with_edges() { scale } else { 1.0 };
+            agg_cycles_scaled += outcome.cycles as f64 * cycle_scale;
+            if use_davc {
+                davc.replay_scaled(view.edges.iter().map(|edge| edge.dst), scale, &mut davc_scaled);
+            } else {
+                bank_line_accesses += span as f64;
+            }
         }
-        Work::EdgeReduce { .. } => 0.0,
+        let dim_groups = ceil_div(agg_dim, cfg.pe_cols) as f64;
+        let davc_misses = (davc_scaled.accesses - davc_scaled.hits) as f64;
+        // Result-bank fills stall the consuming row ~2 cycles; rows
+        // operate in parallel so the array-level penalty is amortized.
+        let davc_stall = if use_davc {
+            bank_line_accesses = davc_misses;
+            davc_misses * 2.0 / cfg.pe_rows as f64
+        } else {
+            0.0
+        };
+        let agg_sched_cycles = agg_cycles_scaled * dim_groups + davc_stall;
+        // Per-edge overlapped work riding the edge stream (Gated-GCN's
+        // gating product); EdgeReduce items cost nothing here — the
+        // dataflow's tile schedule owns their timing.
+        let agg_extra: f64 = work
+            .aggregate
+            .iter()
+            .map(|w| dataflow::dense_work_cycles(w, e, cfg))
+            .sum();
+        let agg_cycles = agg_sched_cycles + agg_extra;
+        let agg_util = if agg_cycles_scaled > 0.0 {
+            (agg_total.edges as f64 / sample_frac.max(1e-12))
+                / (agg_cycles_scaled * cfg.pe_rows as f64)
+        } else {
+            0.0
+        };
+
+        // --- Ops per stage --------------------------------------------
+        let stage_ops = |ws: &[Work]| ws.iter().map(|w| w.ops(e)).sum::<f64>();
+        let fe_ops = stage_ops(&work.feature_extraction);
+        let agg_ops = stage_ops(&work.aggregate);
+        let upd_ops = stage_ops(&work.update);
+
+        // --- HBM traffic ----------------------------------------------
+        let nf = n as f64;
+        let wb = cfg.word_bytes as f64;
+        let d_agg_f = agg_dim as f64;
+        let edge_bytes =
+            e as f64 * (8.0 + if self.prepared.graph().relations.is_empty() { 0.0 } else { 2.0 });
+        // One-time passes: raw input read (extraction), temp property
+        // write when the extracted features spill off-chip (Q > 1).
+        let one_time_read = nf * plan.dims.f_in as f64 * wb;
+        let temp_write = if q > 1 { nf * d_agg_f * wb } else { 0.0 };
+        let stream = self.stream_model(&plan.tiling, agg_dim);
+        let (src_stream, dst_read, dst_write) = stream.stream_bytes(plan.choice);
+        let out_write = nf * plan.dims.f_out as f64 * wb;
+        let hbm_read = one_time_read + src_stream + dst_read + edge_bytes;
+        let hbm_write = temp_write + dst_write + out_write;
+
+        // --- On-chip traffic ------------------------------------------
+        let line_bytes = (agg_dim * cfg.word_bytes) as f64;
+        let mac_ops: f64 = [&work.feature_extraction, &work.aggregate, &work.update]
+            .iter()
+            .flat_map(|ws| ws.iter())
+            .filter(|w| matches!(w, Work::Matmul { .. }))
+            .map(|w| w.ops(e))
+            .sum();
+        let alu_ops = (fe_ops + agg_ops + upd_ops) - mac_ops;
+        let traffic = TrafficStats {
+            // Two 4-byte operands per MAC plus partial-sum update for
+            // reduce ops.
+            rf_bytes: (mac_ops / 2.0) * 8.0 + alu_ops * 8.0,
+            davc_bytes: davc_scaled.accesses as f64 * line_bytes * 2.0,
+            bank_bytes: bank_line_accesses * line_bytes * 2.0,
+            hbm_read_bytes: hbm_read,
+            hbm_write_bytes: hbm_write,
+            edge_bytes,
+            schedule_bytes: src_stream + dst_read + dst_write + temp_write,
+        };
+
+        // --- Layer roll-up --------------------------------------------
+        // FE and aggregation overlap batch-wise (Fig 8); update runs on
+        // the final aggregated values.
+        let compute_cycles = fe_cycles.max(agg_cycles)
+            + upd_cycles
+            + pe_array::pipeline_fill(cfg.pe_rows, cfg.pe_cols);
+        let hbm_cycles = traffic.hbm_total() / cfg.hbm_bytes_per_cycle()
+            + cfg.hbm_latency_ns * cfg.freq_ghz; // one exposed burst
+        let total_cycles = compute_cycles.max(hbm_cycles);
+
+        let energy = energy::tally(cfg, mac_ops, alu_ops, &traffic);
+        let report = LayerReport {
+            layer_idx: plan.layer_idx,
+            f_in: plan.dims.f_in,
+            f_out: plan.dims.f_out,
+            q,
+            feature_extraction: StageStats {
+                cycles: fe_cycles,
+                ops: fe_ops,
+                utilization: fe_util,
+            },
+            aggregate: StageStats {
+                cycles: agg_cycles,
+                ops: agg_ops,
+                utilization: agg_util.min(1.0),
+            },
+            update: StageStats {
+                cycles: upd_cycles,
+                ops: upd_ops,
+                utilization: upd_util,
+            },
+            traffic,
+            davc: davc_scaled,
+            compute_cycles,
+            total_cycles,
+            ring_utilization: agg_util.min(1.0),
+        };
+        (report, energy)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{AcceleratorConfig, Fidelity, StageOrder, TileOrder};
+    use crate::config::{AcceleratorConfig, DataflowKind, Fidelity, StageOrder, TileOrder};
     use crate::graph::datasets::{self, ScalePolicy};
     use crate::graph::rmat;
     use crate::model::{GnnKind, GnnModel};
@@ -398,23 +398,6 @@ mod tests {
         let g = spec.instantiate(ScalePolicy::Capped, 1);
         let m = GnnModel::for_dataset(GnnKind::Gcn, &spec);
         (m, g, spec)
-    }
-
-    #[test]
-    fn keyed_edges_cover_everything_and_respect_bounds() {
-        let g = rmat::generate(100, 700, rmat::RmatParams::default(), 5);
-        let q = 4;
-        let span = ceil_div(100, q);
-        let keyed = KeyedEdges::build(&g.edges, span, q);
-        let mut total = 0usize;
-        for (r, c, edges) in keyed.runs() {
-            total += edges.len();
-            for e in edges {
-                assert_eq!((e.src as usize / span).min(q - 1), r as usize);
-                assert_eq!((e.dst as usize / span).min(q - 1), c as usize);
-            }
-        }
-        assert_eq!(total, 700);
     }
 
     #[test]
@@ -436,6 +419,39 @@ mod tests {
         .map(|o| o.total())
         .sum();
         assert!((r.total_ops() - expected).abs() / expected < 1e-9);
+    }
+
+    #[test]
+    fn session_plans_one_layer_per_model_layer() {
+        let (m, g, _) = cora();
+        let cfg = AcceleratorConfig::engn();
+        let prepared = PreparedGraph::new(&g);
+        let session = SimSession::new(&cfg, &prepared, &m);
+        assert_eq!(session.dataflow_name(), "ring-edge-reduce");
+        let plans = session.plan();
+        assert_eq!(plans.len(), m.layers.len());
+        for (i, p) in plans.iter().enumerate() {
+            assert_eq!(p.layer_idx, i);
+            assert_eq!(p.tiling.q, p.q);
+            assert_eq!(p.tiling.span, p.span);
+            assert!(p.agg_dim >= 1);
+        }
+        // Planning must not build more tilings than distinct Qs.
+        let distinct_qs: std::collections::HashSet<usize> = plans.iter().map(|p| p.q).collect();
+        assert_eq!(prepared.cached_tilings(), distinct_qs.len());
+    }
+
+    #[test]
+    fn dense_systolic_session_selects_the_dataflow() {
+        let (m, g, spec) = cora();
+        let cfg = AcceleratorConfig::engn().with_dataflow(DataflowKind::DenseSystolic);
+        let prepared = PreparedGraph::new(&g);
+        let session = SimSession::new(&cfg, &prepared, &m);
+        assert_eq!(session.dataflow_name(), "dense-systolic");
+        let r = session.run(spec.code);
+        // No DAVC in the dense-array baseline.
+        assert_eq!(r.davc().accesses, 0);
+        assert!(r.total_cycles() > 0.0);
     }
 
     #[test]

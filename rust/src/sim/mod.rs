@@ -7,15 +7,27 @@
 //! * [`davc`] — the degree-aware vertex cache (L2 of the hierarchy);
 //! * [`tiles`] — grid-tile scheduling and the Table-3 I/O model;
 //! * [`energy`] — the dynamic-energy tally;
-//! * [`engine`] — the per-layer orchestrator producing [`stats::SimReport`].
+//!
+//! and the execution API layers on top (see DESIGN.md §6):
+//! * [`prepared`] — [`PreparedGraph`]: shared, immutable derived graph
+//!   state (degree ranking, relation histogram, per-Q edge tilings);
+//! * [`dataflow`] — the pluggable [`Dataflow`] trait
+//!   ([`RingEdgeReduce`] default, [`DenseSystolic`] baseline);
+//! * [`engine`] — [`SimSession`] planning/executing [`LayerPlan`]s into
+//!   a [`stats::SimReport`], with [`Simulator`] as the one-shot wrapper.
 
+pub mod dataflow;
 pub mod davc;
 pub mod energy;
 pub mod engine;
 pub mod pe_array;
+pub mod prepared;
 pub mod ring;
 pub mod stats;
 pub mod tiles;
 
-pub use engine::Simulator;
+pub use dataflow::{Dataflow, DenseSystolic, TileOutcome, TileView};
+pub use engine::{LayerPlan, SimSession, Simulator};
+pub use prepared::{EdgeTiling, PreparedGraph, TileEdges};
+pub use ring::RingEdgeReduce;
 pub use stats::SimReport;

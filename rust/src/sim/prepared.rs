@@ -1,0 +1,278 @@
+//! [`PreparedGraph`]: the `Arc`-shareable, immutable bundle of derived
+//! per-graph state the simulator needs — the in-degree ranking the DAVC
+//! reserves entries from, the relation histogram the op model charges
+//! per-relation work with, and the grid [`EdgeTiling`]s (one per
+//! partition factor Q, built lazily and cached).
+//!
+//! Preparing a graph is the expensive part of a simulation call: the
+//! tiling is an O(E log E) keyed sort and the ranking an O(V log V)
+//! sort. A `PreparedGraph` is built once per graph and shared — across
+//! the layers of one pass, across the configurations of a design-space
+//! sweep, and across the jobs of a serving batch — so only the first
+//! user of a given Q pays for its tiling.
+
+use crate::graph::{Edge, Graph};
+use crate::model::ops;
+use crate::util::ceil_div;
+use std::sync::{Arc, Mutex};
+
+/// One non-empty grid tile: a half-open range into the tiling's sorted
+/// edge array plus the distinct-endpoint counts the traffic model needs.
+#[derive(Debug, Clone, Copy)]
+struct TileRun {
+    row: u32,
+    col: u32,
+    start: usize,
+    end: usize,
+    distinct_src: u32,
+    distinct_dst: u32,
+}
+
+/// Edges grouped into a Q×Q grid of tiles (tile key
+/// `grid_row * q + grid_col`), sorted by key and iterated as contiguous
+/// runs. Distinct sources/destinations are counted per tile at build
+/// time: a sparse tile's gather traffic is bounded by the vertices its
+/// edges actually name, and duplicate endpoints must not inflate it.
+#[derive(Debug)]
+pub struct EdgeTiling {
+    pub q: usize,
+    /// Vertex-interval length of one tile row/column.
+    pub span: usize,
+    edges: Vec<Edge>,
+    tiles: Vec<TileRun>,
+    src_touched: f64,
+    dst_touched: f64,
+}
+
+/// Borrowed view of one tile's edges, yielded by [`EdgeTiling::runs`].
+#[derive(Debug, Clone, Copy)]
+pub struct TileEdges<'a> {
+    pub row: u32,
+    pub col: u32,
+    pub edges: &'a [Edge],
+    pub distinct_src: usize,
+    pub distinct_dst: usize,
+}
+
+impl EdgeTiling {
+    pub fn build(edges: &[Edge], span: usize, q: usize) -> Self {
+        let mut pairs: Vec<(u64, Edge)> = edges
+            .iter()
+            .map(|&e| {
+                let r = (e.src as usize / span).min(q - 1) as u64;
+                let c = (e.dst as usize / span).min(q - 1) as u64;
+                (r * q as u64 + c, e)
+            })
+            .collect();
+        pairs.sort_unstable_by_key(|&(k, _)| k);
+
+        let mut tiles = Vec::new();
+        let mut src_touched = 0.0f64;
+        let mut dst_touched = 0.0f64;
+        let mut scratch: Vec<u32> = Vec::new();
+        let mut i = 0usize;
+        while i < pairs.len() {
+            let key = pairs[i].0;
+            let start = i;
+            while i < pairs.len() && pairs[i].0 == key {
+                i += 1;
+            }
+            let run = &pairs[start..i];
+            let distinct = |scratch: &mut Vec<u32>, pick: fn(&Edge) -> u32| -> u32 {
+                scratch.clear();
+                scratch.extend(run.iter().map(|(_, e)| pick(e)));
+                scratch.sort_unstable();
+                scratch.dedup();
+                scratch.len() as u32
+            };
+            let distinct_src = distinct(&mut scratch, |e| e.src);
+            let distinct_dst = distinct(&mut scratch, |e| e.dst);
+            src_touched += distinct_src as f64;
+            dst_touched += distinct_dst as f64;
+            tiles.push(TileRun {
+                row: (key / q as u64) as u32,
+                col: (key % q as u64) as u32,
+                start,
+                end: i,
+                distinct_src,
+                distinct_dst,
+            });
+        }
+        let edges = pairs.into_iter().map(|(_, e)| e).collect();
+        Self {
+            q,
+            span,
+            edges,
+            tiles,
+            src_touched,
+            dst_touched,
+        }
+    }
+
+    /// Iterate the non-empty tiles in key order.
+    pub fn runs(&self) -> impl Iterator<Item = TileEdges<'_>> + '_ {
+        self.tiles.iter().map(move |t| TileEdges {
+            row: t.row,
+            col: t.col,
+            edges: &self.edges[t.start..t.end],
+            distinct_src: t.distinct_src as usize,
+            distinct_dst: t.distinct_dst as usize,
+        })
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Sum over tiles of distinct sources (bounds gather traffic).
+    pub fn src_touched(&self) -> f64 {
+        self.src_touched
+    }
+
+    /// Sum over tiles of distinct destinations (bounds partial traffic).
+    pub fn dst_touched(&self) -> f64 {
+        self.dst_touched
+    }
+}
+
+/// Immutable per-graph derived state, shareable via `Arc` across
+/// layers, runs, sweeps and serving batches.
+#[derive(Debug)]
+pub struct PreparedGraph {
+    graph: Arc<Graph>,
+    degree_ranked: Vec<u32>,
+    rel_hist: Vec<usize>,
+    tilings: Mutex<Vec<(usize, Arc<EdgeTiling>)>>,
+}
+
+impl PreparedGraph {
+    /// Prepare a borrowed graph (clones it once to take shared
+    /// ownership). Prefer [`PreparedGraph::from_arc`] when an
+    /// `Arc<Graph>` already exists.
+    pub fn new(graph: &Graph) -> Self {
+        Self::from_arc(Arc::new(graph.clone()))
+    }
+
+    pub fn from_arc(graph: Arc<Graph>) -> Self {
+        let degree_ranked = graph.vertices_by_in_degree_desc();
+        let rel_hist =
+            ops::relation_histogram(&graph.relations, graph.num_relations, graph.num_edges());
+        Self {
+            graph,
+            degree_ranked,
+            rel_hist,
+            tilings: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn graph_arc(&self) -> Arc<Graph> {
+        self.graph.clone()
+    }
+
+    /// Vertex ids sorted by descending in-degree (the DAVC reservation
+    /// ranking), computed once at preparation.
+    pub fn degree_ranked(&self) -> &[u32] {
+        &self.degree_ranked
+    }
+
+    /// Edges per relation (single-relation graphs get `[num_edges]`).
+    pub fn rel_hist(&self) -> &[usize] {
+        &self.rel_hist
+    }
+
+    /// The grid tiling for partition factor `q`, built on first use and
+    /// cached for every later layer / run / configuration sharing it.
+    pub fn tiling(&self, q: usize) -> Arc<EdgeTiling> {
+        if let Some((_, t)) = self.tilings.lock().unwrap().iter().find(|(tq, _)| *tq == q) {
+            return t.clone();
+        }
+        // Build outside the lock: the sort dominates and concurrent
+        // sessions over other Qs must not serialize behind it. A racing
+        // duplicate build is benign (both tilings are identical).
+        let span = ceil_div(self.graph.num_vertices.max(1), q);
+        let built = Arc::new(EdgeTiling::build(&self.graph.edges, span, q));
+        let mut cache = self.tilings.lock().unwrap();
+        if let Some((_, t)) = cache.iter().find(|(tq, _)| *tq == q) {
+            return t.clone();
+        }
+        cache.push((q, built.clone()));
+        built
+    }
+
+    /// Number of distinct Qs prepared so far (tests / benches).
+    pub fn cached_tilings(&self) -> usize {
+        self.tilings.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{self, RmatParams};
+
+    #[test]
+    fn tiling_covers_everything_and_respects_bounds() {
+        let g = rmat::generate(100, 700, RmatParams::default(), 5);
+        let q = 4;
+        let span = ceil_div(100, q);
+        let tiling = EdgeTiling::build(&g.edges, span, q);
+        let mut total = 0usize;
+        for tile in tiling.runs() {
+            total += tile.edges.len();
+            for e in tile.edges {
+                assert_eq!((e.src as usize / span).min(q - 1), tile.row as usize);
+                assert_eq!((e.dst as usize / span).min(q - 1), tile.col as usize);
+            }
+            let mut srcs: Vec<u32> = tile.edges.iter().map(|e| e.src).collect();
+            srcs.sort_unstable();
+            srcs.dedup();
+            assert_eq!(tile.distinct_src, srcs.len());
+            let mut dsts: Vec<u32> = tile.edges.iter().map(|e| e.dst).collect();
+            dsts.sort_unstable();
+            dsts.dedup();
+            assert_eq!(tile.distinct_dst, dsts.len());
+        }
+        assert_eq!(total, 700);
+        assert!(tiling.src_touched() <= 700.0);
+        assert!(tiling.dst_touched() <= 700.0);
+    }
+
+    #[test]
+    fn distinct_counts_ignore_duplicate_endpoints() {
+        // Three edges from one source: the old `len().min(span)` bound
+        // would count 3 touched sources; the distinct count is 1.
+        let edges = vec![Edge::new(0, 1), Edge::new(0, 2), Edge::new(0, 3)];
+        let tiling = EdgeTiling::build(&edges, 4, 1);
+        let tile = tiling.runs().next().unwrap();
+        assert_eq!(tile.distinct_src, 1);
+        assert_eq!(tile.distinct_dst, 3);
+        assert_eq!(tiling.src_touched(), 1.0);
+        assert_eq!(tiling.dst_touched(), 3.0);
+    }
+
+    #[test]
+    fn prepared_caches_tilings_per_q() {
+        let g = rmat::generate(200, 1_000, RmatParams::default(), 3);
+        let p = PreparedGraph::new(&g);
+        let a = p.tiling(4);
+        let b = p.tiling(4);
+        assert!(Arc::ptr_eq(&a, &b), "same Q must share one tiling");
+        let c = p.tiling(2);
+        assert_eq!(c.q, 2);
+        assert_eq!(p.cached_tilings(), 2);
+    }
+
+    #[test]
+    fn prepared_exposes_graph_derived_state() {
+        let g = rmat::generate(64, 400, RmatParams::default(), 9);
+        let ranked = g.vertices_by_in_degree_desc();
+        let p = PreparedGraph::new(&g);
+        assert_eq!(p.degree_ranked(), ranked.as_slice());
+        assert_eq!(p.rel_hist(), &[400]);
+        assert_eq!(p.graph().num_edges(), 400);
+    }
+}

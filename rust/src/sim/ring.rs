@@ -30,7 +30,9 @@
 //!   any source any cycle): a row with `k` edges finishes in `k` cycles.
 //!   The paper normalizes Fig 12 against this.
 
+use crate::config::AcceleratorConfig;
 use crate::graph::Edge;
+use crate::sim::dataflow::{Dataflow, TileOutcome, TileView};
 use crate::util::fxhash::IntMap;
 
 /// Edge-parser lookahead per bank (entries it can pick among while
@@ -193,6 +195,43 @@ fn circulation_cycles(arrivals: &[u64], window_size: usize, r: u64) -> u64 {
         pending = window;
     }
     cycles
+}
+
+/// EnGN's ring-edge-reduce dataflow as a pluggable [`Dataflow`]: tiles
+/// replay through [`schedule_tile`], destination partials go through
+/// the DAVC, and HBM gather traffic is bounded by the distinct vertices
+/// a tile's edges touch. Honors `cfg.edge_reorganization` and
+/// `cfg.ideal_ring` (the Fig 12 normalization baseline).
+pub struct RingEdgeReduce;
+
+impl Dataflow for RingEdgeReduce {
+    fn name(&self) -> &'static str {
+        "ring-edge-reduce"
+    }
+
+    fn uses_davc(&self) -> bool {
+        true
+    }
+
+    fn edge_bounded_gather(&self) -> bool {
+        true
+    }
+
+    fn aggregate_tile(&self, cfg: &AcceleratorConfig, tile: &TileView<'_>) -> TileOutcome {
+        let o = schedule_tile(
+            tile.edges,
+            tile.src_start,
+            tile.dst_start,
+            cfg.pe_rows,
+            cfg.edge_reorganization,
+        );
+        TileOutcome {
+            cycles: if cfg.ideal_ring { o.ideal_cycles } else { o.cycles },
+            ideal_cycles: o.ideal_cycles,
+            edges: o.edges,
+            sources: o.sources,
+        }
+    }
 }
 
 /// Sampled scheduling: schedule at most `max_edges` leading edges and

@@ -67,6 +67,95 @@ pub fn resolve(order: TileOrder, q: usize, f: usize, h: usize) -> ScheduleChoice
     }
 }
 
+/// Edge-bounded refinement of the Table-3 stream model, in bytes: the
+/// dense closed form (intervals × dims) caps from above, the per-tile
+/// distinct-touched-vertex counts cap gather traffic from below (EnGN's
+/// prefetcher fetches the properties the edge stream names, not whole
+/// intervals, when tiles are sparse). Dataflows without edge-bounded
+/// gather (dense systolic arrays) stream full intervals:
+/// `edge_bounded = false` drops the touched caps.
+///
+/// The planner picks the schedule with [`StreamModel::choose`] and the
+/// executor charges traffic with [`StreamModel::stream_bytes`] — the
+/// adaptive choice is compared by the same model it is billed by.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamModel {
+    pub q: usize,
+    /// Vertex-interval length of one tile row/column.
+    pub span: usize,
+    pub num_vertices: usize,
+    /// Dimension of the property the aggregate stage reduces.
+    pub agg_dim: usize,
+    pub word_bytes: usize,
+    /// Sum over tiles of distinct sources the edges touch.
+    pub src_touched: f64,
+    /// Sum over tiles of distinct destinations the edges touch.
+    pub dst_touched: f64,
+    pub edge_bounded: bool,
+}
+
+impl StreamModel {
+    /// `(src_stream, dst_read, dst_write)` bytes re-streamed during
+    /// aggregation. When the whole working set fits on chip (Q == 1),
+    /// nothing re-streams.
+    pub fn stream_bytes(&self, choice: ScheduleChoice) -> (f64, f64, f64) {
+        if self.q == 1 {
+            return (0.0, 0.0, 0.0);
+        }
+        let q = self.q as f64;
+        let dense = ((self.q * self.q - self.q + 1) * self.span) as f64;
+        let nf = self.num_vertices as f64;
+        let dw = (self.agg_dim * self.word_bytes) as f64;
+        let (src_cap, dst_cap) = if self.edge_bounded {
+            (self.src_touched, self.dst_touched)
+        } else {
+            (f64::INFINITY, f64::INFINITY)
+        };
+        let interval = nf.min((self.q * self.span) as f64);
+        match choice {
+            ScheduleChoice::Column => (
+                // Sources reload per tile (S-shape saves boundaries);
+                // destination partials resident, one read+write per
+                // interval.
+                dense.min(src_cap) * dw,
+                interval * dw,
+                interval * dw,
+            ),
+            ScheduleChoice::Row => (
+                // Sources resident per grid row; destination partials
+                // reload + flush per tile.
+                interval * dw,
+                dense.min(dst_cap) * dw,
+                (q * q * self.span as f64).min(dst_cap) * dw,
+            ),
+        }
+    }
+
+    /// Total re-streamed bytes for a choice.
+    pub fn total_bytes(&self, choice: ScheduleChoice) -> f64 {
+        let (s, r, w) = self.stream_bytes(choice);
+        s + r + w
+    }
+
+    /// Resolve the configured policy; `Adaptive` compares this model's
+    /// totals directly (the edge-bounded analogue of Table 3 / Eq. 8).
+    pub fn choose(&self, order: TileOrder) -> ScheduleChoice {
+        match order {
+            TileOrder::Column => ScheduleChoice::Column,
+            TileOrder::Row => ScheduleChoice::Row,
+            TileOrder::Adaptive => {
+                if self.total_bytes(ScheduleChoice::Column)
+                    <= self.total_bytes(ScheduleChoice::Row)
+                {
+                    ScheduleChoice::Column
+                } else {
+                    ScheduleChoice::Row
+                }
+            }
+        }
+    }
+}
+
 /// The S-shaped tile visit order: `(grid_row, grid_col)` pairs.
 pub fn tile_sequence(q: usize, choice: ScheduleChoice) -> Vec<(usize, usize)> {
     let mut seq = Vec::with_capacity(q * q);
@@ -227,6 +316,52 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    fn model(q: usize, edge_bounded: bool) -> StreamModel {
+        StreamModel {
+            q,
+            span: 1000,
+            num_vertices: q * 1000,
+            agg_dim: 16,
+            word_bytes: 4,
+            src_touched: 500.0,
+            dst_touched: 800.0,
+            edge_bounded,
+        }
+    }
+
+    #[test]
+    fn stream_model_q1_streams_nothing() {
+        for choice in [ScheduleChoice::Column, ScheduleChoice::Row] {
+            assert_eq!(model(1, true).stream_bytes(choice), (0.0, 0.0, 0.0));
+        }
+    }
+
+    #[test]
+    fn stream_model_edge_bound_only_tightens() {
+        for q in [2usize, 4, 8] {
+            for choice in [ScheduleChoice::Column, ScheduleChoice::Row] {
+                let bounded = model(q, true).total_bytes(choice);
+                let dense = model(q, false).total_bytes(choice);
+                assert!(
+                    bounded <= dense,
+                    "q={q} {choice:?}: bounded {bounded} > dense {dense}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stream_model_choose_is_minimal_and_respects_fixed_orders() {
+        let m = model(4, true);
+        assert_eq!(m.choose(TileOrder::Column), ScheduleChoice::Column);
+        assert_eq!(m.choose(TileOrder::Row), ScheduleChoice::Row);
+        let chosen = m.choose(TileOrder::Adaptive);
+        let best = m
+            .total_bytes(ScheduleChoice::Column)
+            .min(m.total_bytes(ScheduleChoice::Row));
+        assert!((m.total_bytes(chosen) - best).abs() < 1e-9);
     }
 
     #[test]

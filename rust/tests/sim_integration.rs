@@ -6,11 +6,12 @@ use engn::baselines::cpu::{CpuModel, Framework};
 use engn::baselines::gpu::GpuModel;
 use engn::baselines::hygcn::HygcnModel;
 use engn::baselines::Workload;
-use engn::config::{AcceleratorConfig, Fidelity};
+use engn::config::{AcceleratorConfig, DataflowKind, Fidelity};
 use engn::graph::datasets::{self, ScalePolicy};
+use engn::graph::rmat::{self, RmatParams};
 use engn::model::{GnnKind, GnnModel};
 use engn::report::experiments::{self, Eval};
-use engn::sim::Simulator;
+use engn::sim::{PreparedGraph, SimReport, SimSession, Simulator};
 use engn::util::geomean;
 
 fn eval() -> Eval {
@@ -118,6 +119,75 @@ fn ops_match_descriptors_for_all_models() {
         let rel = (r.total_ops() - expected).abs() / expected;
         assert!(rel < 1e-9, "{} {code}: ops mismatch {rel}", kind.name());
     }
+}
+
+/// Preparation reuse must be invisible to results: a report produced
+/// through a shared `PreparedGraph` (twice, so the second run hits the
+/// tiling cache) is bit-identical to a fresh `Simulator::run` that
+/// prepares its own state.
+#[test]
+fn prepared_session_bit_identical_to_fresh_run() {
+    let spec = datasets::by_code("PB").unwrap();
+    let g = spec.instantiate(ScalePolicy::Capped, 21);
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let cfg = AcceleratorConfig::engn();
+    let fresh = Simulator::new(cfg.clone()).run(&model, &g, "PB");
+    let prepared = PreparedGraph::new(&g);
+    let session = SimSession::new(&cfg, &prepared, &model);
+    let first = session.run("PB");
+    let reused = session.run("PB");
+    for r in [&first, &reused] {
+        assert_eq!(r.total_cycles(), fresh.total_cycles());
+        assert_eq!(r.total_ops(), fresh.total_ops());
+        assert_eq!(r.chip_energy_j, fresh.chip_energy_j);
+        assert_eq!(r.hbm_energy_j, fresh.hbm_energy_j);
+        assert_eq!(r.power_w, fresh.power_w);
+        assert_eq!(r.traffic().hbm_read_bytes, fresh.traffic().hbm_read_bytes);
+        assert_eq!(r.traffic().hbm_write_bytes, fresh.traffic().hbm_write_bytes);
+        assert_eq!(r.davc().accesses, fresh.davc().accesses);
+        assert_eq!(r.davc().hits, fresh.davc().hits);
+        assert_eq!(r.layers.len(), fresh.layers.len());
+        for (a, b) in r.layers.iter().zip(fresh.layers.iter()) {
+            assert_eq!(a.q, b.q);
+            assert_eq!(a.aggregate.cycles, b.aggregate.cycles);
+            assert_eq!(a.total_cycles, b.total_cycles);
+        }
+    }
+}
+
+/// The dense-systolic baseline dataflow must never beat RER on a
+/// power-law graph: its interval-shaped aggregation and unbounded
+/// interval streaming are exactly the locality gap EnGN closes.
+#[test]
+fn dense_systolic_no_faster_than_rer_on_power_law() {
+    let g = rmat::generate(20_000, 120_000, RmatParams::default(), 13);
+    let spec = datasets::by_code("PB").unwrap();
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let prepared = PreparedGraph::new(&g);
+    let rer_cfg = AcceleratorConfig::engn();
+    let dense_cfg = AcceleratorConfig::engn()
+        .with_dataflow(DataflowKind::DenseSystolic)
+        .named("EnGN_densesys");
+    let rer = SimSession::new(&rer_cfg, &prepared, &model).run("SY");
+    let dense = SimSession::new(&dense_cfg, &prepared, &model).run("SY");
+    assert!(
+        dense.total_cycles() >= rer.total_cycles(),
+        "dense {} < rer {}",
+        dense.total_cycles(),
+        rer.total_cycles()
+    );
+    let agg = |r: &SimReport| r.layers.iter().map(|l| l.aggregate.cycles).sum::<f64>();
+    assert!(
+        agg(&dense) > agg(&rer),
+        "dense aggregation {} should strictly exceed RER {} on sparse tiles",
+        agg(&dense),
+        agg(&rer)
+    );
+    // No vertex cache in the dense baseline; RER's DAVC sees traffic.
+    assert_eq!(dense.davc().accesses, 0);
+    assert!(rer.davc().accesses > 0);
+    // Unbounded interval streaming costs at least as much HBM traffic.
+    assert!(dense.traffic().hbm_total() >= rer.traffic().hbm_total());
 }
 
 /// Baselines respond to workload scale monotonically (sanity for the
