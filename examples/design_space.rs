@@ -6,19 +6,24 @@
 //!
 //! The graph is prepared exactly once: every configuration point shares
 //! one `PreparedGraph` (edge tilings, degree ranking), so the sweep pays
-//! the O(E log E) derivation a single time instead of per point.
+//! the O(E + Q²) derivation a single time instead of per point — and the
+//! points themselves fan out across the worker pool (`engn::sim::sweep`),
+//! collected by index so the frontier is identical at any thread count.
 //!
-//!     cargo run --release --offline --example design_space [dataset]
+//!     cargo run --release --offline --example design_space [dataset] [threads]
 
 use engn::config::{AcceleratorConfig, DataflowKind, StageOrder, TileOrder};
 use engn::graph::datasets::{self, ScalePolicy};
 use engn::model::{GnnKind, GnnModel};
-use engn::sim::{PreparedGraph, SimSession};
-use engn::util::fmt_time;
+use engn::sim::{sweep, PreparedGraph, SimSession};
+use engn::util::{fmt_time, pool};
 use std::sync::Arc;
 
 fn main() {
     let code = std::env::args().nth(1).unwrap_or_else(|| "PB".to_string());
+    if let Some(n) = std::env::args().nth(2).and_then(|s| s.parse::<usize>().ok()) {
+        pool::set_threads(n.max(1));
+    }
     let Some(spec) = datasets::by_code(&code) else {
         eprintln!("unknown dataset {code:?} — see `engn datasets`");
         std::process::exit(2);
@@ -73,9 +78,11 @@ fn main() {
     );
     let baseline_cfg = AcceleratorConfig::engn();
     let baseline = SimSession::new(&baseline_cfg, &prepared, &model).run(spec.code);
-    for cfg in variants {
+    let t0 = std::time::Instant::now();
+    let reports = sweep(&variants, &prepared, &model, spec.code);
+    let wall = t0.elapsed();
+    for (cfg, r) in variants.iter().zip(&reports) {
         let area = cfg.area.total_mm2(cfg.num_pes(), cfg.vpu_pes, cfg.on_chip_bytes());
-        let r = SimSession::new(&cfg, &prepared, &model).run(spec.code);
         println!(
             "{:<16} {:>10} {:>10.0} {:>11.2e} {:>9.2} {:>9.2} {:>10.2e}",
             cfg.name,
@@ -93,7 +100,10 @@ fn main() {
         baseline.energy_j()
     );
     println!(
-        "prepared {} tiling(s) once, shared across every configuration point",
+        "swept {} points on {} thread(s) in {} ({} tiling(s) prepared once, shared)",
+        variants.len(),
+        pool::configured_threads(),
+        fmt_time(wall.as_secs_f64()),
         prepared.cached_tilings()
     );
 }

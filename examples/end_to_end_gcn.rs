@@ -124,7 +124,8 @@ fn main() {
     };
     let model = GnnModel::with_hidden(GnnKind::Gcn, &spec, hidden);
     let cfg = AcceleratorConfig::engn();
-    let prepared = PreparedGraph::new(&graph);
+    // The graph's last user: hand it to the PreparedGraph without a clone.
+    let prepared = PreparedGraph::from_arc(std::sync::Arc::new(graph));
     let sim = SimSession::new(&cfg, &prepared, &model).run("QS");
     println!("\n=== simulated EnGN on the same workload ===");
     println!("latency      {}", fmt_time(sim.seconds()));

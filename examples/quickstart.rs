@@ -9,12 +9,14 @@ use engn::graph::stats::GraphStats;
 use engn::model::{GnnKind, GnnModel};
 use engn::sim::{PreparedGraph, SimSession};
 use engn::util::{fmt_bytes, fmt_time, si};
+use std::sync::Arc;
 
 fn main() {
     // 1. Pick a Table-5 dataset and synthesize it (Cora is small enough
-    //    to build at its exact published size).
+    //    to build at its exact published size). The Arc lets the
+    //    PreparedGraph share the graph instead of cloning it.
     let spec = datasets::by_code("CA").expect("Cora is in the suite");
-    let graph = spec.instantiate(ScalePolicy::Full, 42);
+    let graph = Arc::new(spec.instantiate(ScalePolicy::Full, 42));
     let stats = GraphStats::compute(&graph);
     println!(
         "graph: {} — {} vertices, {} edges, top-20% degree share {:.0}%",
@@ -34,8 +36,8 @@ fn main() {
     // 3. Prepare the graph once (tilings, degree ranking) and simulate
     //    a session on the paper's EnGN configuration (128x16 RER array,
     //    64 KB DAVC, HBM 2.0). The same PreparedGraph could serve any
-    //    number of further configurations without re-sorting edges.
-    let prepared = PreparedGraph::new(&graph);
+    //    number of further configurations without regrouping edges.
+    let prepared = PreparedGraph::from_arc(graph.clone());
     let cfg = AcceleratorConfig::engn();
     let report = SimSession::new(&cfg, &prepared, &model).run(spec.code);
 

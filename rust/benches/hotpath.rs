@@ -4,28 +4,43 @@
 //! * `ring.schedule_tile` — the per-edge scheduler (Cycle fidelity's
 //!   inner loop) on dense / sparse / disordered tiles;
 //! * `davc.access` — cache replay rate;
-//! * `EdgeTiling::build` — the per-(graph, Q) keyed sort + distinct
-//!   endpoint counting;
+//! * `tiling:counting` vs `tiling:sort` — the O(E + Q²) counting-sort
+//!   `EdgeTiling::build` against the O(E log E) comparison-sort
+//!   reference it replaced (bit-identical outputs, pinned by the
+//!   property suite);
 //! * `rmat.generate` — dataset synthesis;
 //! * whole-simulator edges/s;
 //! * prepared-vs-cold configuration sweep — the amortization win of
-//!   sharing one `PreparedGraph` across N design points.
+//!   sharing one `PreparedGraph` across N design points;
+//! * `sweep:serial` vs `sweep:parallel` — the same design-point sweep
+//!   on one thread vs the full worker pool (`util::pool`).
+//!
+//! Set `BENCH_JSON=/path/to/BENCH_hotpath.json` (or run
+//! `scripts/bench_snapshot.sh`) to also write every group's median
+//! nanoseconds as JSON — the perf trajectory future PRs compare against.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
-use bench_util::{bench, black_box, section};
+use bench_util::{bench, black_box, section, BenchResult};
 use engn::config::AcceleratorConfig;
 use engn::graph::datasets::{self, ScalePolicy};
 use engn::graph::rmat::{self, RmatParams};
 use engn::model::{GnnKind, GnnModel};
 use engn::sim::davc::Davc;
 use engn::sim::ring;
-use engn::sim::{EdgeTiling, PreparedGraph, SimSession, Simulator};
+use engn::sim::{sweep_with, EdgeTiling, PreparedGraph, SimSession, Simulator};
+use engn::util::pool;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
     let budget = Duration::from_millis(1200);
+    let mut medians: Vec<(String, f64)> = Vec::new();
+    let record = |r: &BenchResult, medians: &mut Vec<(String, f64)>| {
+        medians.push((r.name.clone(), r.median.as_nanos() as f64));
+        r.print();
+    };
 
     section("ring scheduler");
     let dense = rmat::generate(2_048, 262_144, RmatParams::default(), 1);
@@ -39,7 +54,7 @@ fn main() {
         let r = bench(name, budget, || {
             black_box(ring::schedule_tile(&g.edges, 0, 0, 128, reorg));
         });
-        r.print();
+        record(&r, &mut medians);
         println!("    -> {:.1} M edges/s", r.per_second(g.num_edges() as f64) / 1e6);
     }
 
@@ -52,34 +67,40 @@ fn main() {
             black_box(davc.access(e.dst));
         }
     });
-    r.print();
+    record(&r, &mut medians);
     println!("    -> {:.1} M accesses/s", r.per_second(1e6) / 1e6);
 
     section("graph synthesis + tile grouping");
     let r = bench("rmat:1M-edges", budget, || {
         black_box(rmat::generate(65_536, 1_000_000, RmatParams::default(), 4));
     });
-    r.print();
+    record(&r, &mut medians);
     println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
 
-    let r = bench("tiling:build:1M-edges", budget, || {
-        // The engine's per-(graph, Q) grouping: keyed sort + distinct
-        // endpoint counts — what PreparedGraph amortizes across runs.
+    // The engine's per-(graph, Q) grouping — what PreparedGraph
+    // amortizes across runs: counting-sort fast path vs the
+    // comparison-sort reference build it replaced.
+    let r = bench("tiling:counting:1M-edges", budget, || {
         black_box(EdgeTiling::build(&g.edges, 4096, 16));
     });
-    r.print();
+    record(&r, &mut medians);
+    println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
+    let r = bench("tiling:sort:1M-edges", budget, || {
+        black_box(EdgeTiling::build_reference(&g.edges, 4096, 16));
+    });
+    record(&r, &mut medians);
     println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
 
     section("whole simulator (GCN on PubMed)");
     let spec = datasets::by_code("PB").unwrap();
-    let pb = spec.instantiate(ScalePolicy::Capped, 7);
+    let pb = Arc::new(spec.instantiate(ScalePolicy::Capped, 7));
     let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
     let edges = pb.num_edges() as f64 * model.layers.len() as f64;
     let r = bench("sim:gcn:PB", budget, || {
         let sim = Simulator::new(AcceleratorConfig::engn());
         black_box(sim.run(&model, &pb, "PB"));
     });
-    r.print();
+    record(&r, &mut medians);
     println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
 
     section("prepared vs cold configuration sweep (GCN on PubMed)");
@@ -105,14 +126,52 @@ fn main() {
             black_box(Simulator::new(cfg.clone()).run(&model, &pb, "PB"));
         }
     });
-    r.print();
+    record(&r, &mut medians);
     println!("    -> {:.1} config-points/s", r.per_second(points));
     let r = bench("sweep:prepared:8cfg", budget, || {
-        let prepared = PreparedGraph::new(&pb);
+        let prepared = PreparedGraph::from_arc(pb.clone());
         for cfg in &variants {
             black_box(SimSession::new(cfg, &prepared, &model).run("PB"));
         }
     });
-    r.print();
+    record(&r, &mut medians);
     println!("    -> {:.1} config-points/s", r.per_second(points));
+
+    section("serial vs parallel sweep (shared PreparedGraph, warm tilings)");
+    // The pool's wall-clock win on the same 8-point sweep: identical
+    // reports (collected by index), different thread counts. Tilings
+    // are warmed outside the timer so both groups measure execution
+    // fan-out, not preparation.
+    let prepared = PreparedGraph::from_arc(pb.clone());
+    let _warm = sweep_with(1, &variants, &prepared, &model, "PB");
+    let threads = pool::configured_threads();
+    pool::set_threads(1); // force the nested per-layer maps serial too
+    let r = bench("sweep:serial:8cfg", budget, || {
+        black_box(sweep_with(1, &variants, &prepared, &model, "PB"));
+    });
+    record(&r, &mut medians);
+    println!("    -> {:.1} config-points/s", r.per_second(points));
+    pool::set_threads(0); // restore auto width
+    let r = bench("sweep:parallel:8cfg", budget, || {
+        black_box(sweep_with(threads, &variants, &prepared, &model, "PB"));
+    });
+    record(&r, &mut medians);
+    println!(
+        "    -> {:.1} config-points/s on {} threads",
+        r.per_second(points),
+        threads
+    );
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let obj = engn::util::json::Json::Obj(
+            medians
+                .iter()
+                .map(|(name, ns)| (name.clone(), engn::util::json::Json::Num(*ns)))
+                .collect(),
+        );
+        match std::fs::write(&path, obj.to_string_pretty() + "\n") {
+            Ok(()) => println!("\nwrote bench medians (ns) to {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
 }

@@ -18,6 +18,7 @@ use crate::graph::datasets::{self, ScalePolicy};
 use crate::model::{GnnKind, GnnModel};
 use crate::runtime::HostTensor;
 use crate::sim::{PreparedGraph, SimSession};
+use crate::util::pool;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -360,9 +361,15 @@ impl SimBackend {
         }
         // Synthesize + prepare outside the lock: instantiation dominates
         // and other keys' batches must not serialize behind it. A racing
-        // duplicate build is benign (both entries answer identically).
+        // duplicate build is benign (both graphs answer identically),
+        // but re-check under the lock so racing builders collapse to
+        // ONE entry — duplicate pushes would shrink the FIFO cache and
+        // evict graphs sibling jobs still need mid-batch.
         let g = Arc::new(PreparedGraph::from_arc(Arc::new(spec.instantiate(policy, seed))));
         let mut cache = self.graphs.lock().unwrap();
+        if let Some((_, cached)) = cache.iter().find(|(k, _)| *k == key) {
+            return cached.clone();
+        }
         if cache.len() >= GRAPH_CACHE_CAP {
             cache.remove(0);
         }
@@ -402,13 +409,42 @@ impl Backend for SimBackend {
         JobKind::Sim
     }
 
+    /// A formed sim batch fans out across the worker pool instead of
+    /// draining serially: the jobs share one cached [`PreparedGraph`]
+    /// (same batch key ⇒ same dataset), and results are collected by
+    /// job index, so the answers are bit-identical to a serial loop at
+    /// any thread count (`--threads 1` forces serial).
     fn execute_batch(&self, jobs: Vec<JobPayload>) -> Vec<Result<JobOutput, String>> {
-        jobs.iter()
-            .map(|job| match job {
-                JobPayload::Sim(j) => self.run_job(j).map(JobOutput::Sim),
-                other => Err(format!("sim backend handed a {:?} job", other.kind())),
-            })
-            .collect()
+        // Warm the graph cache once per distinct (dataset, policy,
+        // seed) first: a cold-cache fan-out would otherwise race
+        // batch-size duplicate instantiations of the same graph (the
+        // batch key pins the dataset but not policy or seed).
+        let mut distinct: Vec<(GraphKey, (datasets::DatasetSpec, ScalePolicy, u64))> = Vec::new();
+        for job in &jobs {
+            if let JobPayload::Sim(j) = job {
+                if let Some(spec) = datasets::by_code(&j.dataset) {
+                    if !j.model.runs_on(&spec) {
+                        continue; // run_job rejects it without a graph
+                    }
+                    let (pk, pf) = policy_key(j.policy);
+                    let key: GraphKey = (spec.code.to_string(), pk, pf, j.seed);
+                    if !distinct.iter().any(|(k, _)| *k == key) {
+                        distinct.push((key, (spec, j.policy, j.seed)));
+                    }
+                }
+            }
+        }
+        // Never warm more keys than the cache can hold: past the cap,
+        // FIFO eviction would evict graphs this very pass inserted and
+        // the fan-out would rebuild them anyway.
+        distinct.truncate(GRAPH_CACHE_CAP);
+        let _ = pool::parallel_map(distinct, |_, (_, (spec, policy, seed))| {
+            self.prepared_for(&spec, policy, seed);
+        });
+        pool::parallel_map(jobs, |_, job| match job {
+            JobPayload::Sim(j) => self.run_job(&j).map(JobOutput::Sim),
+            other => Err(format!("sim backend handed a {:?} job", other.kind())),
+        })
     }
 }
 

@@ -473,9 +473,15 @@ impl InferenceService {
             let shed = shed.clone();
             let make = make_backends.clone();
             let batch_cfg = cfg.batch.clone();
+            let n_workers = cfg.workers;
             let handle = std::thread::Builder::new()
                 .name(format!("engn-worker-{i}"))
                 .spawn(move || {
+                    // N workers execute batches concurrently: each gets
+                    // an equal share of the machine so a backend's
+                    // parallel fan-out (e.g. SimBackend) never spawns
+                    // workers × cores threads.
+                    crate::util::pool::set_thread_width_share(n_workers);
                     let backends = (*make)();
                     worker_loop(&shared, &backends, &batch_cfg, &metrics, &shed);
                 })

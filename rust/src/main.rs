@@ -32,7 +32,25 @@ use std::collections::HashMap;
 use std::time::Duration;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // Global `--threads N` (any position, any subcommand): width of the
+    // worker pool used by sweeps, session layer execution, report
+    // figures and sim batches. Default: available_parallelism, min 1;
+    // `--threads 1` forces every parallel path back to serial. The flag
+    // and its value are removed before subcommand dispatch so
+    // `engn --threads 8 run ...` works too.
+    if let Some(i) = args.iter().position(|a| a == "--threads") {
+        match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
+            Some(n) if n >= 1 => {
+                engn::util::pool::set_threads(n);
+                args.drain(i..=i + 1);
+            }
+            _ => {
+                eprintln!("--threads expects a positive integer");
+                std::process::exit(2);
+            }
+        }
+    }
     let code = match args.first().map(String::as_str) {
         Some("datasets") => cmd_datasets(),
         Some("run") => cmd_run(&parse_flags(&args[1..])),
@@ -42,7 +60,7 @@ fn main() {
         Some("whatif") => cmd_whatif(&parse_flags(&args[1..])),
         _ => {
             eprintln!(
-                "usage: engn <datasets|run|bench|infer|serve|whatif> [flags]\n\
+                "usage: engn <datasets|run|bench|infer|serve|whatif> [--threads N] [flags]\n\
                  examples:\n\
                  \u{20}  engn run --model gcn --dataset CA\n\
                  \u{20}  engn bench --exp fig9 --out reports\n\
@@ -138,14 +156,16 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             group: engn::graph::datasets::DatasetGroup::Synthetic,
         };
         let model = GnnModel::for_dataset(kind, &spec);
-        let prepared = PreparedGraph::new(&g);
+        // The graph is owned here: share it into the PreparedGraph
+        // instead of cloning it on the prepare path.
+        let prepared = PreparedGraph::from_arc(std::sync::Arc::new(g));
         let r = SimSession::new(&cfg, &prepared, &model).run("FILE");
         println!(
             "{} on {} ({} vertices, {} edges): {} | {} GOP/s | {:.2e} J",
             kind.name(),
             path,
-            g.num_vertices,
-            g.num_edges(),
+            prepared.graph().num_vertices,
+            prepared.graph().num_edges(),
             fmt_time(r.seconds()),
             si(r.gops() * 1e9 / 1e9),
             r.energy_j()

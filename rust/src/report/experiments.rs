@@ -17,20 +17,29 @@ use crate::graph::datasets::{self, DatasetSpec, ScalePolicy};
 use crate::model::{GnnKind, GnnModel, LayerDims};
 use crate::report::{f, pct, x, Table};
 use crate::sim::{PreparedGraph, SimReport, SimSession};
-use crate::util::geomean;
-use std::cell::RefCell;
+use crate::util::{geomean, pool};
 use std::collections::HashMap;
-use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Coalescing cache slot: concurrent misses on one key block on ONE
+/// build (`OnceLock::get_or_init`) instead of racing duplicates.
+type Slot<T> = Arc<OnceLock<Arc<T>>>;
 
 /// Evaluation context: scaling policy, seed, and caches. Every dataset
-/// is instantiated and prepared at most once per context; the dozens of
-/// configuration points a figure sweeps share one [`PreparedGraph`].
+/// is instantiated and prepared at most once per context — enforced by
+/// the cache itself, not by call-site convention: concurrent misses on
+/// one key coalesce onto a single build. The dozens of configuration
+/// points a figure sweeps share one [`PreparedGraph`].
+///
+/// The caches are mutex-guarded and the values `Arc`-shared, so figure
+/// evaluation fans out across the worker pool ([`Eval::warm_suite`] and
+/// the per-figure point maps below); rows are always assembled in index
+/// order, so a parallel figure is identical to the serial one.
 pub struct Eval {
     pub policy: ScalePolicy,
     pub seed: u64,
-    graphs: RefCell<HashMap<String, Rc<PreparedGraph>>>,
-    pairs: RefCell<HashMap<String, Rc<PairEval>>>,
+    graphs: Mutex<HashMap<String, Slot<PreparedGraph>>>,
+    pairs: Mutex<HashMap<String, Slot<PairEval>>>,
 }
 
 /// All platforms on one (model, dataset) workload.
@@ -61,8 +70,8 @@ impl Eval {
         Self {
             policy,
             seed,
-            graphs: RefCell::new(HashMap::new()),
-            pairs: RefCell::new(HashMap::new()),
+            graphs: Mutex::new(HashMap::new()),
+            pairs: Mutex::new(HashMap::new()),
         }
     }
 
@@ -71,16 +80,24 @@ impl Eval {
     }
 
     /// The prepared graph for a dataset (instantiated + derived state,
-    /// cached per context).
-    pub fn prepared(&self, spec: &DatasetSpec) -> Rc<PreparedGraph> {
-        if let Some(g) = self.graphs.borrow().get(spec.code) {
-            return g.clone();
-        }
-        let g = Rc::new(PreparedGraph::from_arc(Arc::new(
-            spec.instantiate(self.policy, self.seed),
-        )));
-        self.graphs.borrow_mut().insert(spec.code.to_string(), g.clone());
-        g
+    /// cached per context). The map lock is held only to fetch the
+    /// key's slot; the expensive instantiation runs in
+    /// `OnceLock::get_or_init`, so concurrent misses on one dataset
+    /// block on a single build while other datasets proceed.
+    pub fn prepared(&self, spec: &DatasetSpec) -> Arc<PreparedGraph> {
+        let slot = self
+            .graphs
+            .lock()
+            .unwrap()
+            .entry(spec.code.to_string())
+            .or_default()
+            .clone();
+        slot.get_or_init(|| {
+            Arc::new(PreparedGraph::from_arc(Arc::new(
+                spec.instantiate(self.policy, self.seed),
+            )))
+        })
+        .clone()
     }
 
     /// Run EnGN (simulated) on one model/dataset with a given config.
@@ -90,28 +107,37 @@ impl Eval {
         SimSession::new(&cfg, &prepared, &model).run(spec.code)
     }
 
-    /// All platforms on one pair (cached).
-    pub fn pair(&self, kind: GnnKind, spec: &DatasetSpec) -> Rc<PairEval> {
+    /// All platforms on one pair (cached; concurrent misses coalesce
+    /// onto one evaluation).
+    pub fn pair(&self, kind: GnnKind, spec: &DatasetSpec) -> Arc<PairEval> {
         let key = format!("{}:{}", kind.short(), spec.code);
-        if let Some(p) = self.pairs.borrow().get(&key) {
-            return p.clone();
-        }
-        let prepared = self.prepared(spec);
-        let model = GnnModel::for_dataset(kind, spec);
-        let w = Workload::from_graph(prepared.graph());
-        let engn_cfg = AcceleratorConfig::engn();
-        let p = Rc::new(PairEval {
-            kind,
-            spec: spec.clone(),
-            engn: SimSession::new(&engn_cfg, &prepared, &model).run(spec.code),
-            cpu_dgl: CpuModel::new(Framework::Dgl).run(&model, &w),
-            cpu_pyg: CpuModel::new(Framework::Pyg).run(&model, &w),
-            gpu_dgl: GpuModel::new(Framework::Dgl).run(&model, &w),
-            gpu_pyg: GpuModel::new(Framework::Pyg).run(&model, &w),
-            hygcn: HygcnModel::paper().run(&model, &w),
+        let slot = self.pairs.lock().unwrap().entry(key).or_default().clone();
+        slot.get_or_init(|| {
+            let prepared = self.prepared(spec);
+            let model = GnnModel::for_dataset(kind, spec);
+            let w = Workload::from_graph(prepared.graph());
+            let engn_cfg = AcceleratorConfig::engn();
+            Arc::new(PairEval {
+                kind,
+                spec: spec.clone(),
+                engn: SimSession::new(&engn_cfg, &prepared, &model).run(spec.code),
+                cpu_dgl: CpuModel::new(Framework::Dgl).run(&model, &w),
+                cpu_pyg: CpuModel::new(Framework::Pyg).run(&model, &w),
+                gpu_dgl: GpuModel::new(Framework::Dgl).run(&model, &w),
+                gpu_pyg: GpuModel::new(Framework::Pyg).run(&model, &w),
+                hygcn: HygcnModel::paper().run(&model, &w),
+            })
+        })
+        .clone()
+    }
+
+    /// Evaluate every (model, dataset) pair of the suite across the
+    /// worker pool, filling the caches so the figure loops below are
+    /// pure cache hits. Idempotent and cheap once warm.
+    pub fn warm_suite(&self) {
+        let _ = pool::parallel_map(self.suite(), |_, (kind, spec)| {
+            self.pair(kind, &spec);
         });
-        self.pairs.borrow_mut().insert(key, p.clone());
-        p
     }
 
     /// The paper's (model, dataset) benchmark suite (Table 5 pairing).
@@ -299,16 +325,26 @@ pub fn table4(eval: &Eval) -> Table {
     let engn22 = AcceleratorConfig::engn_22mb();
     let hygcn = HygcnModel::paper();
 
-    // Geomean power and speedups over the benchmark suite.
+    // Geomean power and speedups over the benchmark suite; the per-pair
+    // evaluations (including the EnGN_22MB re-run) fan out across the
+    // pool, collected in suite order.
+    eval.warm_suite();
+    let points = pool::parallel_map(eval.suite(), |_, (kind, spec)| {
+        let p = eval.pair(kind, &spec);
+        let r22 = eval.engn_with(engn22.clone(), kind, &spec);
+        (
+            p.engn.power_w,
+            p.hygcn.seconds() / r22.seconds(),
+            p.hygcn.seconds() / p.engn.seconds(),
+        )
+    });
     let mut engn_power = Vec::new();
     let mut speed22 = Vec::new();
     let mut speed = Vec::new();
-    for (kind, spec) in eval.suite() {
-        let p = eval.pair(kind, &spec);
-        engn_power.push(p.engn.power_w);
-        let r22 = eval.engn_with(engn22.clone(), kind, &spec);
-        speed22.push(p.hygcn.seconds() / r22.seconds());
-        speed.push(p.hygcn.seconds() / p.engn.seconds());
+    for (pw, s22, s) in points {
+        engn_power.push(pw);
+        speed22.push(s22);
+        speed.push(s);
     }
     let engn_area = engn.area.total_mm2(engn.num_pes(), engn.vpu_pes, engn.on_chip_bytes());
     let engn22_area = engn22
@@ -366,6 +402,7 @@ pub fn fig9(eval: &Eval) -> Table {
     let cell = |s: Option<f64>| s.map(x).unwrap_or_else(|| "OOM".into());
     let mut acc: HashMap<&str, Vec<f64>> = HashMap::new();
     let mut small_acc: HashMap<&str, Vec<f64>> = HashMap::new();
+    eval.warm_suite();
     for (kind, spec) in eval.suite() {
         let p = eval.pair(kind, &spec);
         let cols = [
@@ -424,6 +461,7 @@ pub fn fig10(eval: &Eval) -> Table {
     let mut engn_tp = Vec::new();
     let mut frac = Vec::new();
     let cfg = AcceleratorConfig::engn();
+    eval.warm_suite();
     for (kind, spec) in eval.suite() {
         let p = eval.pair(kind, &spec);
         engn_tp.push(p.engn.gops());
@@ -461,6 +499,7 @@ pub fn fig11(eval: &Eval) -> Table {
     let mut r_cpu = Vec::new();
     let mut r_gpu = Vec::new();
     let mut r_hygcn = Vec::new();
+    eval.warm_suite();
     for (kind, spec) in eval.suite() {
         let p = eval.pair(kind, &spec);
         let e = p.engn.gops_per_watt();
@@ -501,8 +540,10 @@ pub fn fig12(eval: &Eval) -> Table {
         "RER with original vs reorganized edges, normalized to ideal topology",
         &["model", "dataset", "original/ideal", "reorganized/ideal", "reorg speedup"],
     );
-    let mut speedups = Vec::new();
-    for (kind, spec) in eval.suite() {
+    // Three simulated points per suite pair: fan the pairs across the
+    // pool, then assemble rows in suite order.
+    eval.warm_suite();
+    let points = pool::parallel_map(eval.suite(), |_, (kind, spec)| {
         let mut orig_cfg = AcceleratorConfig::engn();
         orig_cfg.edge_reorganization = false;
         let mut ideal_cfg = AcceleratorConfig::engn();
@@ -510,6 +551,10 @@ pub fn fig12(eval: &Eval) -> Table {
         let orig = eval.engn_with(orig_cfg, kind, &spec);
         let reorg = eval.pair(kind, &spec).engn.clone();
         let ideal = eval.engn_with(ideal_cfg, kind, &spec);
+        (kind, spec, orig, reorg, ideal)
+    });
+    let mut speedups = Vec::new();
+    for (kind, spec, orig, reorg, ideal) in points {
         // Normalize on the aggregate stage (where the topology matters).
         let agg = |r: &SimReport| r.layers.iter().map(|l| l.aggregate.cycles).sum::<f64>().max(1.0);
         let s = agg(&orig) / agg(&reorg);
@@ -542,23 +587,30 @@ pub fn fig13(eval: &Eval) -> Table {
         &["feature dim", "GPU utilization", "EnGN PE utilization"],
     );
     let gpu = GpuModel::new(Framework::Dgl);
-    for f_dim in [64usize, 100, 256, 512, 1000, 1024, 2048, 4096] {
-        let spec = DatasetSpec {
-            code: "SY",
-            name: "synthetic-65k",
-            vertices: 65_000,
-            edges: 2_500_000,
-            feature_dim: f_dim,
-            labels: 16,
-            num_relations: 1,
-            group: crate::graph::datasets::DatasetGroup::Synthetic,
-        };
+    let spec_for = |f_dim: usize| DatasetSpec {
+        code: "SY",
+        name: "synthetic-65k",
+        vertices: 65_000,
+        edges: 2_500_000,
+        feature_dim: f_dim,
+        labels: 16,
+        num_relations: 1,
+        group: crate::graph::datasets::DatasetGroup::Synthetic,
+    };
+    // One shared synthetic graph (keyed by code): the eight dims
+    // coalesce onto a single instantiation inside the cache.
+    let dims: Vec<usize> = vec![64, 100, 256, 512, 1000, 1024, 2048, 4096];
+    let rows = pool::parallel_map(dims, |_, f_dim| {
+        let spec = spec_for(f_dim);
         let r = eval.engn_with(AcceleratorConfig::engn(), GnnKind::Gcn, &spec);
-        t.row(vec![
+        vec![
             f_dim.to_string(),
             pct(gpu.dense_utilization(f_dim)),
             pct(r.layers[0].feature_extraction.utilization),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t.note("paper: GPU under 50% below 512 dims with dips at odd dims; EnGN flat (GPA dataflow)");
     t
@@ -574,20 +626,25 @@ pub fn fig14(eval: &Eval) -> Table {
         "Dimension-aware stage re-ordering vs FAU / AFU",
         &["model", "dataset", "DASR vs FAU", "DASR vs AFU"],
     );
-    let mut vs_fau = Vec::new();
-    let mut vs_afu = Vec::new();
-    for (kind, spec) in eval.suite() {
-        if kind == GnnKind::GsPool {
-            continue; // max aggregation pins the order (paper excludes it)
-        }
+    eval.warm_suite();
+    let rows: Vec<(GnnKind, DatasetSpec)> = eval
+        .suite()
+        .into_iter()
+        // Max aggregation pins the order (paper excludes GS-Pool).
+        .filter(|(kind, _)| *kind != GnnKind::GsPool)
+        .collect();
+    let points = pool::parallel_map(rows, |_, (kind, spec)| {
         let run = |order: StageOrder| {
             let mut cfg = AcceleratorConfig::engn();
             cfg.stage_order = order;
             eval.engn_with(cfg, kind, &spec).total_cycles()
         };
         let dasr = run(StageOrder::Dasr);
-        let fau = run(StageOrder::Fau) / dasr;
-        let afu = run(StageOrder::Afu) / dasr;
+        (kind, spec, run(StageOrder::Fau) / dasr, run(StageOrder::Afu) / dasr)
+    });
+    let mut vs_fau = Vec::new();
+    let mut vs_afu = Vec::new();
+    for (kind, spec, fau, afu) in points {
         vs_fau.push(fau);
         vs_afu.push(afu);
         t.row(vec![kind.name().into(), spec.code.into(), x(fau), x(afu)]);
@@ -611,16 +668,16 @@ pub fn fig15(eval: &Eval) -> Table {
         "Total off-chip I/O: EnGN scheduling (adaptive tiles + DASR) vs fixed Column / Row (GCN)",
         &["dataset", "EnGN (MB)", "column (MB)", "row (MB)", "col/EnGN", "row/EnGN"],
     );
-    let mut col_r = Vec::new();
-    let mut row_r = Vec::new();
-    for code in ["CA", "PB", "NE", "CF", "RD", "SA", "SC"] {
+    // The fixed baselines "stick to the fixed policy to update the
+    // graph" (paper §6.3): fixed traversal *and* fixed FAU stage
+    // order; EnGN's scheduler adapts both to the dimension changes.
+    // Compare the schedule-dependent traffic (vertex re-streaming and
+    // partial spills); the one-time input read / output write / edge
+    // stream are identical under every schedule. Three simulated
+    // points per dataset: fan the datasets across the pool.
+    let codes: Vec<&str> = vec!["CA", "PB", "NE", "CF", "RD", "SA", "SC"];
+    let points = pool::parallel_map(codes, |_, code| {
         let spec = datasets::by_code(code).unwrap();
-        // The fixed baselines "stick to the fixed policy to update the
-        // graph" (paper §6.3): fixed traversal *and* fixed FAU stage
-        // order; EnGN's scheduler adapts both to the dimension changes.
-        // Compare the schedule-dependent traffic (vertex re-streaming and
-        // partial spills); the one-time input read / output write / edge
-        // stream are identical under every schedule.
         let io = |order: TileOrder, stage: StageOrder| {
             let mut cfg = AcceleratorConfig::engn();
             cfg.tile_order = order;
@@ -633,6 +690,11 @@ pub fn fig15(eval: &Eval) -> Table {
         let a = io(TileOrder::Adaptive, StageOrder::Dasr);
         let c = io(TileOrder::Column, StageOrder::Fau);
         let r = io(TileOrder::Row, StageOrder::Fau);
+        (code, a, c, r)
+    });
+    let mut col_r = Vec::new();
+    let mut row_r = Vec::new();
+    for (code, a, c, r) in points {
         col_r.push(c / a);
         row_r.push(r / a);
         t.row(vec![code.into(), f(a), f(c), f(r), x(c / a), x(r / a)]);
@@ -656,30 +718,46 @@ pub fn fig16(eval: &Eval) -> Table {
         "DAVC hit rate vs reserved fraction (64KB) and vs capacity (fully reserved)",
         &["dataset", "sweep", "setting", "hit rate"],
     );
+    // Flatten the (dataset × setting) grid into one ordered point list
+    // and fan it across the pool; rows keep the serial order (per
+    // dataset: the five reserved fractions, then the four capacities).
+    enum DavcSweep {
+        Frac(f64),
+        Kb(usize),
+    }
+    let mut grid: Vec<(&str, DavcSweep)> = Vec::new();
+    // Instantiate the four datasets concurrently up front (misses on
+    // one dataset coalesce in the cache; this adds cross-dataset
+    // parallelism the nine-points-per-dataset grid would serialize).
+    let _ = pool::parallel_map(vec!["CA", "PB", "NE", "RD"], |_, code| {
+        eval.prepared(&datasets::by_code(code).unwrap());
+    });
     for code in ["CA", "PB", "NE", "RD"] {
-        let spec = datasets::by_code(code).unwrap();
         for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
-            let mut cfg = AcceleratorConfig::engn();
-            cfg.davc_reserved_frac = frac;
-            let r = eval.engn_with(cfg, GnnKind::Gcn, &spec);
-            t.row(vec![
-                code.into(),
-                "reserved frac".into(),
-                format!("{frac}"),
-                pct(r.davc().hit_rate()),
-            ]);
+            grid.push((code, DavcSweep::Frac(frac)));
         }
         for kb in [16usize, 64, 256, 512] {
-            let mut cfg = AcceleratorConfig::engn();
-            cfg.davc_bytes = kb * 1024;
-            let r = eval.engn_with(cfg, GnnKind::Gcn, &spec);
-            t.row(vec![
-                code.into(),
-                "capacity".into(),
-                format!("{kb}KB"),
-                pct(r.davc().hit_rate()),
-            ]);
+            grid.push((code, DavcSweep::Kb(kb)));
         }
+    }
+    let rows = pool::parallel_map(grid, |_, (code, setting)| {
+        let spec = datasets::by_code(code).unwrap();
+        let mut cfg = AcceleratorConfig::engn();
+        let (sweep_name, label) = match setting {
+            DavcSweep::Frac(frac) => {
+                cfg.davc_reserved_frac = frac;
+                ("reserved frac", format!("{frac}"))
+            }
+            DavcSweep::Kb(kb) => {
+                cfg.davc_bytes = kb * 1024;
+                ("capacity", format!("{kb}KB"))
+            }
+        };
+        let r = eval.engn_with(cfg, GnnKind::Gcn, &spec);
+        vec![code.into(), sweep_name.into(), label, pct(r.davc().hit_rate())]
+    });
+    for row in rows {
+        t.row(row);
     }
     t.note("paper Fig 16: hit rate increases monotonically with the reserved proportion \
             (hence DAVC reserves everything) and with capacity; large graphs stay low, \
@@ -697,21 +775,23 @@ pub fn fig17(eval: &Eval) -> Table {
         "Throughput vs PE-array size (normalized to 32x16)",
         &["model", "dataset", "32x16", "64x16", "128x16", "32x32", "128x32"],
     );
-    for (kind, code) in [
+    let pairs: Vec<(GnnKind, &str)> = vec![
         (GnnKind::Gcn, "CA"),
         (GnnKind::Gcn, "NE"),
         (GnnKind::GsPool, "RD"),
         (GnnKind::GatedGcn, "SA"),
         (GnnKind::Grn, "SC"),
         (GnnKind::Rgcn, "AM"),
-    ] {
+    ];
+    // Five array geometries per row: fan the rows across the pool.
+    let rows = pool::parallel_map(pairs, |_, (kind, code)| {
         let spec = datasets::by_code(code).unwrap();
         let tp = |rows: usize, cols: usize| {
             eval.engn_with(AcceleratorConfig::with_array(rows, cols), kind, &spec)
                 .gops()
         };
         let base = tp(32, 16);
-        t.row(vec![
+        vec![
             kind.name().into(),
             code.into(),
             "1.00x".into(),
@@ -719,7 +799,10 @@ pub fn fig17(eval: &Eval) -> Table {
             x(tp(128, 16) / base),
             x(tp(32, 32) / base),
             x(tp(128, 32) / base),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t.note("paper: row scaling helps; 32x32 shows no improvement over 32x16 because layer-1 \
             output dims (16) underfill 32 columns; large graphs scale worse (aggregate-bound)");

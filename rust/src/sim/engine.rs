@@ -27,7 +27,7 @@ use crate::sim::pe_array;
 use crate::sim::prepared::{EdgeTiling, PreparedGraph};
 use crate::sim::stats::{CacheStats, LayerReport, SimReport, StageStats, TrafficStats};
 use crate::sim::tiles;
-use crate::util::ceil_div;
+use crate::util::{ceil_div, pool};
 use std::sync::Arc;
 
 /// Edge-sample budget per layer in `Phase` fidelity. Sampling keeps the
@@ -71,6 +71,35 @@ impl Simulator {
         let prepared = PreparedGraph::new(graph);
         SimSession::new(&self.cfg, &prepared, model).run(dataset_code)
     }
+}
+
+/// Evaluate many accelerator configurations over one prepared graph,
+/// fanning the points across the worker pool. Every point shares the
+/// `PreparedGraph` (and therefore its tiling cache); reports come back
+/// indexed by configuration, so the result is bit-identical to a serial
+/// loop over `cfgs` at any thread count. `--threads 1` (or
+/// [`pool::set_threads`]`(1)`) is the serial escape hatch.
+pub fn sweep(
+    cfgs: &[AcceleratorConfig],
+    prepared: &PreparedGraph,
+    model: &GnnModel,
+    dataset_code: &str,
+) -> Vec<SimReport> {
+    sweep_with(pool::configured_threads(), cfgs, prepared, model, dataset_code)
+}
+
+/// [`sweep`] with an explicit thread count (benches and the determinism
+/// tests compare `sweep_with(1, ..)` against a wide pool).
+pub fn sweep_with(
+    threads: usize,
+    cfgs: &[AcceleratorConfig],
+    prepared: &PreparedGraph,
+    model: &GnnModel,
+    dataset_code: &str,
+) -> Vec<SimReport> {
+    pool::parallel_map_with(threads, cfgs.iter().collect(), |_, cfg| {
+        SimSession::new(cfg, prepared, model).run(dataset_code)
+    })
 }
 
 /// Execution plan for one layer: everything decided before a cycle is
@@ -124,19 +153,63 @@ impl<'a> SimSession<'a> {
         self.dataflow.name()
     }
 
-    /// Plan every layer of the pass without executing anything.
+    /// Plan every layer of the pass without executing anything. The
+    /// distinct tiling Qs the plan needs are speculatively pre-built
+    /// across the worker pool (the `PreparedGraph` cache tolerates
+    /// racing builds), so a multi-Q pass pays max(build) instead of
+    /// sum(build) wall time; the plans themselves are assembled
+    /// serially, in layer order, from cache hits.
     pub fn plan(&self) -> Vec<LayerPlan> {
         let n = self.prepared.graph().num_vertices;
         let e = self.prepared.graph().num_edges();
+        let shapes: Vec<(ExecOrder, StageWork, usize, usize)> = self
+            .model
+            .layers
+            .iter()
+            .map(|&layer| self.layer_shape(layer, n, e))
+            .collect();
+        let mut qs: Vec<usize> = shapes.iter().map(|s| s.3).collect();
+        qs.sort_unstable();
+        qs.dedup();
+        if qs.len() > 1 {
+            let _ = pool::parallel_map(qs, |_, q| {
+                self.prepared.tiling(q);
+            });
+        }
         self.model
             .layers
             .iter()
+            .zip(shapes)
             .enumerate()
-            .map(|(idx, &layer)| self.plan_layer(idx, layer, n, e))
+            .map(|(idx, (&layer, (order, work, agg_dim, q)))| {
+                let tiling = self.prepared.tiling(q);
+                let span = tiling.span;
+                // Tile-schedule choice, compared by the same stream
+                // model the executor charges traffic with.
+                let choice = self.stream_model(&tiling, agg_dim).choose(self.cfg.tile_order);
+                LayerPlan {
+                    layer_idx: idx,
+                    dims: layer,
+                    order,
+                    work,
+                    agg_dim,
+                    q,
+                    span,
+                    choice,
+                    tiling,
+                }
+            })
             .collect()
     }
 
-    fn plan_layer(&self, idx: usize, layer: LayerDims, n: usize, e: usize) -> LayerPlan {
+    /// The cheap, tiling-free half of planning one layer: stage order,
+    /// work decomposition, aggregate dimension and grid partition Q.
+    fn layer_shape(
+        &self,
+        layer: LayerDims,
+        n: usize,
+        e: usize,
+    ) -> (ExecOrder, StageWork, usize, usize) {
         let cfg = self.cfg;
         let order = match cfg.stage_order {
             StageOrder::Fau => ExecOrder::FeatureFirst,
@@ -152,23 +225,7 @@ impl<'a> SimSession<'a> {
             / (agg_dim * cfg.word_bytes))
             .max(cfg.pe_rows);
         let q = ceil_div(n.max(1), iv_cap).max(1);
-        let tiling = self.prepared.tiling(q);
-        let span = tiling.span;
-
-        // Tile-schedule choice, compared by the same stream model the
-        // executor charges traffic with.
-        let choice = self.stream_model(&tiling, agg_dim).choose(cfg.tile_order);
-        LayerPlan {
-            layer_idx: idx,
-            dims: layer,
-            order,
-            work,
-            agg_dim,
-            q,
-            span,
-            choice,
-            tiling,
-        }
+        (order, work, agg_dim, q)
     }
 
     fn stream_model(&self, tiling: &EdgeTiling, agg_dim: usize) -> tiles::StreamModel {
@@ -184,12 +241,17 @@ impl<'a> SimSession<'a> {
         }
     }
 
-    /// Plan and execute the full pass.
+    /// Plan and execute the full pass. Layers are independent given
+    /// their [`LayerPlan`]s, so they execute across the worker pool;
+    /// outcomes are collected by layer index and folded in order, so
+    /// the report is bit-identical to serial execution at any thread
+    /// count (DESIGN.md §7).
     pub fn run(&self, dataset_code: &str) -> SimReport {
+        let plans = self.plan();
+        let outcomes = pool::parallel_map_ref(&plans, |_, plan| self.execute_layer(plan));
         let mut layers = Vec::with_capacity(self.model.layers.len());
         let mut energy_total = EnergyBreakdown::default();
-        for plan in self.plan() {
-            let (report, energy) = self.execute_layer(&plan);
+        for (report, energy) in outcomes {
             energy_total.add(&energy);
             layers.push(report);
         }
@@ -425,7 +487,7 @@ mod tests {
     fn session_plans_one_layer_per_model_layer() {
         let (m, g, _) = cora();
         let cfg = AcceleratorConfig::engn();
-        let prepared = PreparedGraph::new(&g);
+        let prepared = PreparedGraph::from_arc(Arc::new(g));
         let session = SimSession::new(&cfg, &prepared, &m);
         assert_eq!(session.dataflow_name(), "ring-edge-reduce");
         let plans = session.plan();
@@ -445,7 +507,7 @@ mod tests {
     fn dense_systolic_session_selects_the_dataflow() {
         let (m, g, spec) = cora();
         let cfg = AcceleratorConfig::engn().with_dataflow(DataflowKind::DenseSystolic);
-        let prepared = PreparedGraph::new(&g);
+        let prepared = PreparedGraph::from_arc(Arc::new(g));
         let session = SimSession::new(&cfg, &prepared, &m);
         assert_eq!(session.dataflow_name(), "dense-systolic");
         let r = session.run(spec.code);
@@ -521,6 +583,27 @@ mod tests {
         let adaptive = io(TileOrder::Adaptive);
         assert!(adaptive <= io(TileOrder::Column) * 1.0001);
         assert!(adaptive <= io(TileOrder::Row) * 1.0001);
+    }
+
+    #[test]
+    fn sweep_with_one_thread_matches_wide_pool_bit_identically() {
+        let (m, g, _) = cora();
+        let prepared = PreparedGraph::from_arc(Arc::new(g));
+        let cfgs = vec![
+            AcceleratorConfig::engn(),
+            AcceleratorConfig::with_array(32, 16),
+            AcceleratorConfig::engn_22mb(),
+        ];
+        let serial = sweep_with(1, &cfgs, &prepared, &m, "CA");
+        let parallel = sweep_with(8, &cfgs, &prepared, &m, "CA");
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.config_name, b.config_name, "reports out of order");
+            assert_eq!(a.total_cycles(), b.total_cycles());
+            assert_eq!(a.chip_energy_j, b.chip_energy_j);
+            assert_eq!(a.hbm_energy_j, b.hbm_energy_j);
+            assert_eq!(a.power_w, b.power_w);
+        }
     }
 
     #[test]

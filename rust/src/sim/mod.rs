@@ -27,7 +27,7 @@ pub mod stats;
 pub mod tiles;
 
 pub use dataflow::{Dataflow, DenseSystolic, TileOutcome, TileView};
-pub use engine::{LayerPlan, SimSession, Simulator};
+pub use engine::{sweep, sweep_with, LayerPlan, SimSession, Simulator};
 pub use prepared::{EdgeTiling, PreparedGraph, TileEdges};
 pub use ring::RingEdgeReduce;
 pub use stats::SimReport;

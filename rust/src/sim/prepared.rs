@@ -5,11 +5,14 @@
 //! partition factor Q, built lazily and cached).
 //!
 //! Preparing a graph is the expensive part of a simulation call: the
-//! tiling is an O(E log E) keyed sort and the ranking an O(V log V)
-//! sort. A `PreparedGraph` is built once per graph and shared — across
-//! the layers of one pass, across the configurations of a design-space
-//! sweep, and across the jobs of a serving batch — so only the first
-//! user of a given Q pays for its tiling.
+//! tiling is an O(E + Q²) counting sort (keys are dense integers below
+//! Q², so no comparison sort is needed; see [`EdgeTiling::build`]) and
+//! the ranking an O(V log V) sort. A `PreparedGraph` is built once per
+//! graph and shared — across the layers of one pass, across the
+//! configurations of a design-space sweep, and across the jobs of a
+//! serving batch — so only the first user of a given Q pays for its
+//! tiling. The tiling cache tolerates racing builds, so speculative
+//! pre-builds from multiple pool workers are safe (DESIGN.md §7).
 
 use crate::graph::{Edge, Graph};
 use crate::model::ops;
@@ -18,12 +21,14 @@ use std::sync::{Arc, Mutex};
 
 /// One non-empty grid tile: a half-open range into the tiling's sorted
 /// edge array plus the distinct-endpoint counts the traffic model needs.
+/// Offsets are `u32` (edge counts are checked against `u32::MAX` at
+/// build time), halving the tile-table footprint on large Qs.
 #[derive(Debug, Clone, Copy)]
 struct TileRun {
     row: u32,
     col: u32,
-    start: usize,
-    end: usize,
+    start: u32,
+    end: u32,
     distinct_src: u32,
     distinct_dst: u32,
 }
@@ -54,8 +59,130 @@ pub struct TileEdges<'a> {
     pub distinct_dst: usize,
 }
 
+/// Mark `idx` with `epoch`; true when this is the first sighting this
+/// epoch. Grows the array on demand for the ragged last interval (a
+/// clamped row/column can exceed `span` when callers pass a span with
+/// `span * q` below the max vertex id).
+#[inline]
+fn stamp(mark: &mut Vec<u32>, idx: usize, epoch: u32) -> bool {
+    if idx >= mark.len() {
+        mark.resize(idx + 1, 0);
+    }
+    if mark[idx] == epoch {
+        false
+    } else {
+        mark[idx] = epoch;
+        true
+    }
+}
+
 impl EdgeTiling {
+    /// Group `edges` into key order with a two-pass counting sort. Tile
+    /// keys are dense integers below `q²`, so the grouping is O(E + Q²)
+    /// — count per key, prefix-sum, stable scatter — and the distinct
+    /// endpoints per tile are counted in one pass over each run with
+    /// epoch-stamped mark arrays over the tile's vertex span: O(E)
+    /// total, no per-tile allocation, no comparison sort anywhere.
     pub fn build(edges: &[Edge], span: usize, q: usize) -> Self {
+        assert!(q > 0 && span > 0, "q and span must be positive");
+        assert!(
+            edges.len() < u32::MAX as usize,
+            "edge count exceeds the tiling's u32 offset range"
+        );
+        let nk = q * q;
+        let key_of = |e: &Edge| -> usize {
+            let r = (e.src as usize / span).min(q - 1);
+            let c = (e.dst as usize / span).min(q - 1);
+            r * q + c
+        };
+
+        // Pass 1: edges per key, then prefix-sum into start offsets.
+        // `offsets[k]..offsets[k+1]` is tile k's run in the sorted array.
+        let mut offsets = vec![0u32; nk + 1];
+        for e in edges {
+            offsets[key_of(e) + 1] += 1;
+        }
+        for k in 0..nk {
+            offsets[k + 1] += offsets[k];
+        }
+
+        // Pass 2: stable scatter (preserves input order within a tile).
+        let mut cursor = offsets.clone();
+        let mut sorted = vec![Edge::new(0, 0); edges.len()];
+        for &e in edges {
+            let slot = &mut cursor[key_of(&e)];
+            sorted[*slot as usize] = e;
+            *slot += 1;
+        }
+
+        // Distinct endpoints per non-empty tile, src and dst in the same
+        // pass. The mark arrays cover one tile's vertex span and are
+        // re-used across every tile via epoch stamps.
+        let mut tiles = Vec::new();
+        let mut src_touched = 0.0f64;
+        let mut dst_touched = 0.0f64;
+        let mut src_mark = vec![0u32; span];
+        let mut dst_mark = vec![0u32; span];
+        let mut epoch = 0u32;
+        for k in 0..nk {
+            let (start, end) = (offsets[k], offsets[k + 1]);
+            if start == end {
+                continue;
+            }
+            epoch = epoch.wrapping_add(1);
+            if epoch == 0 {
+                // u32 epoch wrapped (needs > 4 billion non-empty tiles):
+                // reset the stamps and restart the epoch counter.
+                src_mark.fill(0);
+                dst_mark.fill(0);
+                epoch = 1;
+            }
+            let row = (k / q) as u32;
+            let col = (k % q) as u32;
+            let src_base = row as usize * span;
+            let dst_base = col as usize * span;
+            let mut distinct_src = 0u32;
+            let mut distinct_dst = 0u32;
+            for e in &sorted[start as usize..end as usize] {
+                if stamp(&mut src_mark, e.src as usize - src_base, epoch) {
+                    distinct_src += 1;
+                }
+                if stamp(&mut dst_mark, e.dst as usize - dst_base, epoch) {
+                    distinct_dst += 1;
+                }
+            }
+            src_touched += distinct_src as f64;
+            dst_touched += distinct_dst as f64;
+            tiles.push(TileRun {
+                row,
+                col,
+                start,
+                end,
+                distinct_src,
+                distinct_dst,
+            });
+        }
+        Self {
+            q,
+            span,
+            edges: sorted,
+            tiles,
+            src_touched,
+            dst_touched,
+        }
+    }
+
+    /// Reference build: a *stable* O(E log E) comparison sort plus the
+    /// original per-tile sort+dedup distinct counting. Kept as the
+    /// independent implementation the property tests and the
+    /// `tiling:sort` bench group pin [`EdgeTiling::build`]'s counting
+    /// sort bit-identical against — not for production use.
+    pub fn build_reference(edges: &[Edge], span: usize, q: usize) -> Self {
+        assert!(q > 0 && span > 0, "q and span must be positive");
+        assert!(
+            edges.len() < u32::MAX as usize,
+            "edge count exceeds the tiling's u32 offset range"
+        );
         let mut pairs: Vec<(u64, Edge)> = edges
             .iter()
             .map(|&e| {
@@ -64,7 +191,8 @@ impl EdgeTiling {
                 (r * q as u64 + c, e)
             })
             .collect();
-        pairs.sort_unstable_by_key(|&(k, _)| k);
+        // Stable: ties keep input order, matching the counting scatter.
+        pairs.sort_by_key(|&(k, _)| k);
 
         let mut tiles = Vec::new();
         let mut src_touched = 0.0f64;
@@ -92,8 +220,8 @@ impl EdgeTiling {
             tiles.push(TileRun {
                 row: (key / q as u64) as u32,
                 col: (key % q as u64) as u32,
-                start,
-                end: i,
+                start: start as u32,
+                end: i as u32,
                 distinct_src,
                 distinct_dst,
             });
@@ -114,7 +242,7 @@ impl EdgeTiling {
         self.tiles.iter().map(move |t| TileEdges {
             row: t.row,
             col: t.col,
-            edges: &self.edges[t.start..t.end],
+            edges: &self.edges[t.start as usize..t.end as usize],
             distinct_src: t.distinct_src as usize,
             distinct_dst: t.distinct_dst as usize,
         })
@@ -190,9 +318,12 @@ impl PreparedGraph {
         if let Some((_, t)) = self.tilings.lock().unwrap().iter().find(|(tq, _)| *tq == q) {
             return t.clone();
         }
-        // Build outside the lock: the sort dominates and concurrent
-        // sessions over other Qs must not serialize behind it. A racing
-        // duplicate build is benign (both tilings are identical).
+        // Build outside the lock: the O(E) grouping dominates and
+        // concurrent sessions over other Qs must not serialize behind
+        // it. A racing duplicate build — including the planner's
+        // speculative pre-builds from pool workers — is benign (both
+        // tilings are identical; first insert wins, the loser is
+        // dropped).
         let span = ceil_div(self.graph.num_vertices.max(1), q);
         let built = Arc::new(EdgeTiling::build(&self.graph.edges, span, q));
         let mut cache = self.tilings.lock().unwrap();
@@ -252,6 +383,49 @@ mod tests {
         assert_eq!(tile.distinct_dst, 3);
         assert_eq!(tiling.src_touched(), 1.0);
         assert_eq!(tiling.dst_touched(), 3.0);
+    }
+
+    fn assert_identical(a: &EdgeTiling, b: &EdgeTiling) {
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.span, b.span);
+        assert_eq!(a.num_tiles(), b.num_tiles());
+        assert_eq!(a.src_touched(), b.src_touched());
+        assert_eq!(a.dst_touched(), b.dst_touched());
+        for (ta, tb) in a.runs().zip(b.runs()) {
+            assert_eq!((ta.row, ta.col), (tb.row, tb.col));
+            assert_eq!(ta.edges, tb.edges, "tile ({},{}) edge order", ta.row, ta.col);
+            assert_eq!(ta.distinct_src, tb.distinct_src);
+            assert_eq!(ta.distinct_dst, tb.distinct_dst);
+        }
+    }
+
+    #[test]
+    fn counting_sort_matches_reference_build() {
+        let g = rmat::generate(500, 3_000, RmatParams::default(), 17);
+        for q in [1usize, 2, 5, 9, 16] {
+            let span = ceil_div(500, q);
+            assert_identical(
+                &EdgeTiling::build(&g.edges, span, q),
+                &EdgeTiling::build_reference(&g.edges, span, q),
+            );
+        }
+    }
+
+    #[test]
+    fn ragged_last_interval_exceeding_span_is_counted_correctly() {
+        // span * q < max vertex id: the clamped last row/column covers
+        // more than `span` vertices, exercising the mark-array growth.
+        let edges = vec![
+            Edge::new(9, 9),
+            Edge::new(8, 9),
+            Edge::new(9, 8),
+            Edge::new(0, 9),
+            Edge::new(9, 0),
+        ];
+        let fast = EdgeTiling::build(&edges, 3, 2);
+        let slow = EdgeTiling::build_reference(&edges, 3, 2);
+        assert_identical(&fast, &slow);
+        assert_eq!(fast.src_touched(), slow.src_touched());
     }
 
     #[test]

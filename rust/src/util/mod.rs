@@ -1,8 +1,9 @@
 //! Shared utilities: deterministic RNG, property-test harness, JSON,
-//! human-readable unit formatting.
+//! the scoped worker pool, human-readable unit formatting.
 
 pub mod fxhash;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 

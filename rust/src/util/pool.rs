@@ -1,0 +1,253 @@
+//! A zero-dependency scoped worker pool for the crate's embarrassingly
+//! parallel outer loops: design-space sweep points, the per-layer
+//! executions of a [`crate::sim::SimSession`] pass, speculative tiling
+//! pre-builds, report-figure evaluation and serving sim batches.
+//!
+//! Determinism rule (see DESIGN.md §7): results are collected **by item
+//! index**, never by completion order, so a parallel map is bit-identical
+//! to the serial loop it replaces regardless of thread count. The pool is
+//! built on [`std::thread::scope`], so tasks may borrow from the caller's
+//! stack and a panicking task propagates to the caller after every worker
+//! has joined — no detached threads, no poisoned global state.
+//!
+//! Thread-count policy: [`configured_threads`] answers an explicit
+//! process-wide override (the CLI's `--threads` flag via [`set_threads`])
+//! or falls back to `std::thread::available_parallelism()`, min 1.
+//! `--threads 1` is the escape hatch that forces every parallel path in
+//! the crate back to serial execution.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide thread-count override; 0 means "auto" (use
+/// `available_parallelism`).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True while this thread is a pool worker. Nested parallel maps
+    /// (a sweep point's session fanning out its layers, a plan warming
+    /// tilings) run inline instead of multiplying OS threads — the
+    /// outermost fan-out already owns the cores, and N_outer × N_inner
+    /// scoped spawns would oversubscribe the host on exactly the hot
+    /// paths this pool exists to speed up. Results are unchanged (the
+    /// inline path is the serial path).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+
+    /// How many sibling executor threads this thread shares the machine
+    /// with (the serving coordinator's N workers each execute batches
+    /// concurrently). Parallel maps issued from such a thread use
+    /// `configured_threads() / share` so N workers × their fan-outs
+    /// never oversubscribe the host. 1 everywhere else.
+    static WIDTH_SHARE: Cell<usize> = const { Cell::new(1) };
+}
+
+/// Declare that the current thread is one of `n` sibling executors
+/// (e.g. a serving worker): parallel maps issued from it get an equal
+/// `1/n` share of the configured pool width, min 1. Results never
+/// change — only how many scoped workers a map spawns.
+pub fn set_thread_width_share(n: usize) {
+    WIDTH_SHARE.with(|s| s.set(n.max(1)));
+}
+
+/// Override the pool width for every subsequent [`parallel_map`] /
+/// [`parallel_map_ref`] call (the CLI's `--threads N`). `set_threads(0)`
+/// restores the automatic default. `set_threads(1)` forces serial
+/// execution everywhere.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The pool width parallel maps use: the [`set_threads`] override if
+/// one is active, else `available_parallelism()`; divided by this
+/// thread's [`set_thread_width_share`] (serving workers split the
+/// machine evenly); min 1.
+pub fn configured_threads() -> usize {
+    let over = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    let base = if over > 0 {
+        over
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    };
+    (base / WIDTH_SHARE.with(|s| s.get())).max(1)
+}
+
+/// Map `f` over `items` on up to `threads` scoped workers, returning the
+/// results in item order. With `threads <= 1` (or fewer than two items)
+/// the map runs inline on the caller's thread — same results, no spawn.
+///
+/// Work is distributed dynamically (workers pull the next un-started
+/// item), so uneven item costs balance automatically; the output vector
+/// is indexed by input position, so completion order never leaks into
+/// the result. A panic in `f` propagates to the caller once all workers
+/// have joined.
+pub fn parallel_map_with<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = threads.max(1).min(n);
+    if workers <= 1 || IN_POOL_WORKER.with(|w| w.get()) {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    // Dynamic work queue: workers pull `(index, item)` pairs; the lock
+    // is held only to pop, never while `f` runs.
+    let queue = Mutex::new(items.into_iter().enumerate());
+    let results: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                IN_POOL_WORKER.with(|w| w.set(true));
+                loop {
+                    let next = queue.lock().unwrap().next();
+                    let Some((i, item)) = next else { break };
+                    let r = f(i, item);
+                    results.lock().unwrap()[i] = Some(r);
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|slot| slot.expect("scoped workers fill every slot"))
+        .collect()
+}
+
+/// [`parallel_map_with`] at the configured pool width.
+pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    parallel_map_with(configured_threads(), items, f)
+}
+
+/// Borrowing variant: map over a slice without moving the items.
+pub fn parallel_map_ref<'a, T, R, F>(items: &'a [T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &'a T) -> R + Sync,
+{
+    parallel_map_with(configured_threads(), items.iter().collect(), |i, t| f(i, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn zero_tasks_yield_empty_result() {
+        let out: Vec<u32> = parallel_map_with(4, Vec::<u32>::new(), |_, x| x);
+        assert!(out.is_empty());
+        let out: Vec<usize> = parallel_map(Vec::<usize>::new(), |i, _: usize| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_tasks_than_threads_collect_in_index_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map_with(3, items, |i, x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2, "slot {i} out of order");
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline_and_matches_parallel() {
+        let items: Vec<u64> = (0..64).collect();
+        let serial = parallel_map_with(1, items.clone(), |_, x| x * x + 1);
+        let parallel = parallel_map_with(8, items, |_, x| x * x + 1);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn tasks_actually_run_once_each() {
+        let calls = AtomicU64::new(0);
+        let out = parallel_map_with(4, (0..100u64).collect(), |_, x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn borrowing_map_keeps_order() {
+        let items: Vec<String> = (0..10).map(|i| format!("s{i}")).collect();
+        let out = parallel_map_ref(&items, |i, s| format!("{i}:{s}"));
+        assert_eq!(out[7], "7:s7");
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn panic_in_a_task_propagates_to_the_caller() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map_with(4, (0..16i32).collect(), |_, x| {
+                if x == 9 {
+                    panic!("task 9 exploded");
+                }
+                x
+            })
+        }));
+        assert!(result.is_err(), "worker panic must propagate");
+        // The pool must stay usable after a propagated panic (no
+        // poisoned global state).
+        let ok = parallel_map_with(4, vec![1, 2, 3], |_, x| x + 1);
+        assert_eq!(ok, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn nested_parallel_maps_run_inline_in_workers() {
+        // A parallel map issued from inside a pool worker must not
+        // spawn again (thread multiplication); it runs inline with
+        // identical, index-ordered results.
+        let out = parallel_map_with(4, (0..8usize).collect(), |_, x| {
+            let inner = parallel_map_with(4, (0..4usize).collect(), |i, y| {
+                assert!(
+                    IN_POOL_WORKER.with(|w| w.get()),
+                    "inner map should be on a pool worker"
+                );
+                i + y
+            });
+            inner.iter().sum::<usize>() + x
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 12 + i); // inner sums (0+0)+(1+1)+(2+2)+(3+3)
+        }
+    }
+
+    #[test]
+    fn thread_override_round_trips() {
+        let before = configured_threads();
+        assert!(before >= 1);
+        set_threads(3);
+        assert_eq!(configured_threads(), 3);
+        set_threads(0);
+        assert!(configured_threads() >= 1);
+    }
+
+    #[test]
+    fn width_share_divides_the_pool_floor_one() {
+        // On a fresh thread (share untouched elsewhere), a huge share
+        // floors the width at 1 without touching the global override.
+        let h = std::thread::spawn(|| {
+            set_thread_width_share(usize::MAX);
+            configured_threads()
+        });
+        assert_eq!(h.join().unwrap(), 1);
+    }
+}

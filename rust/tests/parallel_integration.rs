@@ -1,0 +1,192 @@
+//! Parallel-engine integration: the counting-sort tiling is pinned
+//! bit-identical to the comparison-sort reference over random graphs,
+//! and every parallel fan-out (config sweep, session layers, serving
+//! sim batches) is pinned bit-identical to serial execution. CI runs
+//! this file with `--test-threads 1` and the default harness width to
+//! catch order-dependence (see .github/workflows/ci.yml).
+
+use engn::config::AcceleratorConfig;
+use engn::coordinator::{Backend, JobPayload, SimBackend, SimJob};
+use engn::graph::datasets::{self, ScalePolicy};
+use engn::graph::rmat::{self, RmatParams};
+use engn::model::{GnnKind, GnnModel};
+use engn::sim::{sweep_with, EdgeTiling, PreparedGraph, SimReport, SimSession};
+use engn::util::ceil_div;
+use engn::util::prop::prop_check;
+use std::sync::Arc;
+
+fn tilings_identical(a: &EdgeTiling, b: &EdgeTiling) -> Result<(), String> {
+    if a.q != b.q || a.span != b.span {
+        return Err(format!("shape mismatch: q {} vs {}, span {} vs {}", a.q, b.q, a.span, b.span));
+    }
+    if a.num_tiles() != b.num_tiles() {
+        return Err(format!("tile count {} vs {}", a.num_tiles(), b.num_tiles()));
+    }
+    if a.src_touched() != b.src_touched() || a.dst_touched() != b.dst_touched() {
+        return Err(format!(
+            "touched sums differ: src {} vs {}, dst {} vs {}",
+            a.src_touched(),
+            b.src_touched(),
+            a.dst_touched(),
+            b.dst_touched()
+        ));
+    }
+    for (ta, tb) in a.runs().zip(b.runs()) {
+        if (ta.row, ta.col) != (tb.row, tb.col) {
+            return Err(format!(
+                "tile key mismatch: ({},{}) vs ({},{})",
+                ta.row, ta.col, tb.row, tb.col
+            ));
+        }
+        if ta.edges != tb.edges {
+            return Err(format!(
+                "tile ({},{}) edges differ (count {} vs {}, or order within tile)",
+                ta.row,
+                ta.col,
+                ta.edges.len(),
+                tb.edges.len()
+            ));
+        }
+        if ta.distinct_src != tb.distinct_src || ta.distinct_dst != tb.distinct_dst {
+            return Err(format!(
+                "tile ({},{}) distinct counts differ: src {} vs {}, dst {} vs {}",
+                ta.row, ta.col, ta.distinct_src, tb.distinct_src, ta.distinct_dst, tb.distinct_dst
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Property: over seeded R-MAT graphs and random Q, the O(E + Q²)
+/// counting-sort build is bit-identical to the stable comparison-sort
+/// reference — edges per tile, order within tile, distinct counts, and
+/// the src/dst touched sums.
+#[test]
+fn prop_counting_sort_tiling_matches_reference() {
+    prop_check(30, 0x7117_0002, |rng| {
+        let n = rng.gen_usize(8, 600);
+        let e = rng.gen_usize(1, 5 * n);
+        let q = rng.gen_usize(1, 14);
+        let g = rmat::generate(n, e, RmatParams::default(), rng.next_u64());
+        let span = ceil_div(n.max(1), q);
+        tilings_identical(
+            &EdgeTiling::build(&g.edges, span, q),
+            &EdgeTiling::build_reference(&g.edges, span, q),
+        )
+    });
+}
+
+/// The same pin at realistic scale, over several fixed Q values
+/// (including Q = 1 and a Q that leaves the last interval ragged).
+#[test]
+fn counting_sort_tiling_matches_reference_at_fixed_qs() {
+    let g = rmat::generate(9_000, 70_000, RmatParams::default(), 0xE16A);
+    for q in [1usize, 2, 7, 16, 33, 100] {
+        let span = ceil_div(9_000, q);
+        tilings_identical(
+            &EdgeTiling::build(&g.edges, span, q),
+            &EdgeTiling::build_reference(&g.edges, span, q),
+        )
+        .unwrap_or_else(|msg| panic!("Q={q}: {msg}"));
+    }
+}
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.config_name, b.config_name);
+    assert_eq!(a.total_cycles(), b.total_cycles());
+    assert_eq!(a.total_ops(), b.total_ops());
+    assert_eq!(a.chip_energy_j, b.chip_energy_j);
+    assert_eq!(a.hbm_energy_j, b.hbm_energy_j);
+    assert_eq!(a.power_w, b.power_w);
+    assert_eq!(a.traffic().hbm_read_bytes, b.traffic().hbm_read_bytes);
+    assert_eq!(a.traffic().hbm_write_bytes, b.traffic().hbm_write_bytes);
+    assert_eq!(a.davc().accesses, b.davc().accesses);
+    assert_eq!(a.davc().hits, b.davc().hits);
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+        assert_eq!(la.layer_idx, lb.layer_idx);
+        assert_eq!(la.q, lb.q);
+        assert_eq!(la.aggregate.cycles, lb.aggregate.cycles);
+        assert_eq!(la.feature_extraction.cycles, lb.feature_extraction.cycles);
+        assert_eq!(la.update.cycles, lb.update.cycles);
+        assert_eq!(la.total_cycles, lb.total_cycles);
+    }
+}
+
+fn sweep_variants() -> Vec<AcceleratorConfig> {
+    let mut v = vec![
+        AcceleratorConfig::engn(),
+        AcceleratorConfig::with_array(32, 16),
+        AcceleratorConfig::with_array(64, 16),
+        AcceleratorConfig::engn_22mb(),
+    ];
+    let mut davc = AcceleratorConfig::engn().named("EnGN_davc16K");
+    davc.davc_bytes = 16 * 1024;
+    v.push(davc);
+    v
+}
+
+/// Determinism: a parallel design-space sweep's `SimReport`s are
+/// bit-identical to the serial run — outputs are collected by
+/// configuration index, never completion order.
+#[test]
+fn parallel_sweep_bit_identical_to_serial() {
+    let spec = datasets::by_code("PB").unwrap();
+    let prepared =
+        PreparedGraph::from_arc(Arc::new(spec.instantiate(ScalePolicy::Factor(64), 9)));
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let variants = sweep_variants();
+    let serial = sweep_with(1, &variants, &prepared, &model, "PB");
+    let parallel = sweep_with(8, &variants, &prepared, &model, "PB");
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_reports_identical(a, b);
+    }
+}
+
+/// Determinism through the serving plane: a sim batch fanned out by the
+/// backend answers bit-identically to sessions run serially by hand.
+#[test]
+fn sim_backend_parallel_batch_matches_serial_sessions() {
+    let be = SimBackend::new();
+    let jobs: Vec<JobPayload> = sweep_variants()
+        .into_iter()
+        .map(|cfg| JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA").with_config(cfg)))
+        .collect();
+    let results = be.execute_batch(jobs.clone());
+    assert_eq!(results.len(), jobs.len());
+
+    // Serial ground truth: same dataset instantiation (SimJob's default
+    // policy and seed), same prepared graph, one session per config.
+    let spec = datasets::by_code("CA").unwrap();
+    let prepared =
+        PreparedGraph::from_arc(Arc::new(spec.instantiate(ScalePolicy::Capped, 0xE16A)));
+    for (job, result) in jobs.iter().zip(&results) {
+        let JobPayload::Sim(j) = job else { panic!("sim job") };
+        let model = GnnModel::for_dataset(j.model, &spec);
+        let want = SimSession::new(&j.config, &prepared, &model).run(spec.code);
+        let got = result.as_ref().expect("sim ok").as_sim().expect("sim output");
+        assert_eq!(got.config, j.config.name);
+        assert_eq!(got.cycles, want.total_cycles());
+        assert_eq!(got.seconds, want.seconds());
+        assert_eq!(got.energy_j, want.energy_j());
+        assert_eq!(got.power_w, want.power_w);
+        assert_eq!(got.gops, want.gops());
+    }
+}
+
+/// A session's per-layer parallel execution is invisible in the report:
+/// two runs of the same session (layers fanned out across the pool,
+/// tiling cache warm on the second) are bit-identical.
+#[test]
+fn repeated_parallel_session_runs_are_bit_identical() {
+    let spec = datasets::by_code("NE").unwrap();
+    let prepared =
+        PreparedGraph::from_arc(Arc::new(spec.instantiate(ScalePolicy::Factor(128), 5)));
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let cfg = AcceleratorConfig::engn();
+    let session = SimSession::new(&cfg, &prepared, &model);
+    let first = session.run("NE");
+    let second = session.run("NE");
+    assert_reports_identical(&first, &second);
+}

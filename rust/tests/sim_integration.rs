@@ -128,11 +128,11 @@ fn ops_match_descriptors_for_all_models() {
 #[test]
 fn prepared_session_bit_identical_to_fresh_run() {
     let spec = datasets::by_code("PB").unwrap();
-    let g = spec.instantiate(ScalePolicy::Capped, 21);
+    let g = std::sync::Arc::new(spec.instantiate(ScalePolicy::Capped, 21));
     let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
     let cfg = AcceleratorConfig::engn();
     let fresh = Simulator::new(cfg.clone()).run(&model, &g, "PB");
-    let prepared = PreparedGraph::new(&g);
+    let prepared = PreparedGraph::from_arc(g.clone());
     let session = SimSession::new(&cfg, &prepared, &model);
     let first = session.run("PB");
     let reused = session.run("PB");
@@ -163,7 +163,7 @@ fn dense_systolic_no_faster_than_rer_on_power_law() {
     let g = rmat::generate(20_000, 120_000, RmatParams::default(), 13);
     let spec = datasets::by_code("PB").unwrap();
     let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
-    let prepared = PreparedGraph::new(&g);
+    let prepared = PreparedGraph::from_arc(std::sync::Arc::new(g));
     let rer_cfg = AcceleratorConfig::engn();
     let dense_cfg = AcceleratorConfig::engn()
         .with_dataflow(DataflowKind::DenseSystolic)

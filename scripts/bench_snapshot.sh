@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Snapshot the hotpath micro-bench medians into BENCH_hotpath.json at
+# the repository root, giving future PRs a perf trajectory to compare
+# against (group name -> median nanoseconds).
+#
+#   scripts/bench_snapshot.sh [extra cargo-bench args...]
+#
+# The JSON is written by the bench binary itself (BENCH_JSON env var),
+# so the numbers are exactly the medians it printed — no log scraping.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+BENCH_JSON="$(pwd)/BENCH_hotpath.json" \
+  cargo bench --manifest-path rust/Cargo.toml --bench hotpath "$@"
+echo "snapshot: $(pwd)/BENCH_hotpath.json"
