@@ -13,7 +13,11 @@
 //! * prepared-vs-cold configuration sweep — the amortization win of
 //!   sharing one `PreparedGraph` across N design points;
 //! * `sweep:serial` vs `sweep:parallel` — the same design-point sweep
-//!   on one thread vs the full worker pool (`util::pool`).
+//!   on one thread vs the full worker pool (`util::pool`);
+//! * `partition:{range,hash,degree}` — sharding a 1 M-edge graph
+//!   across 4 chips (assignment + relabeling + per-chip preparation);
+//! * `scaleout:4chip` — a full 4-chip `MultiChipSession` pass (per-chip
+//!   sessions + halo-exchange costing) on the prepared partition.
 //!
 //! Set `BENCH_JSON=/path/to/BENCH_hotpath.json` (or run
 //! `scripts/bench_snapshot.sh`) to also write every group's median
@@ -27,9 +31,10 @@ use engn::config::AcceleratorConfig;
 use engn::graph::datasets::{self, ScalePolicy};
 use engn::graph::rmat::{self, RmatParams};
 use engn::model::{GnnKind, GnnModel};
+use engn::partition::{PartitionedGraph, PartitionerKind};
 use engn::sim::davc::Davc;
 use engn::sim::ring;
-use engn::sim::{sweep_with, EdgeTiling, PreparedGraph, SimSession, Simulator};
+use engn::sim::{sweep_with, EdgeTiling, MultiChipSession, PreparedGraph, SimSession, Simulator};
 use engn::util::pool;
 use std::sync::Arc;
 use std::time::Duration;
@@ -59,7 +64,7 @@ fn main() {
     }
 
     section("DAVC replay");
-    let g = rmat::generate(65_536, 1_000_000, RmatParams::default(), 3);
+    let g = Arc::new(rmat::generate(65_536, 1_000_000, RmatParams::default(), 3));
     let ranked = g.vertices_by_in_degree_desc();
     let r = bench("davc:access:1M", budget, || {
         let mut davc = Davc::new(1024, 1.0, &ranked);
@@ -90,6 +95,17 @@ fn main() {
     });
     record(&r, &mut medians);
     println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
+
+    section("graph partitioning (1M edges across 4 chips)");
+    // Assignment + relabeling + per-chip preparation, per strategy —
+    // the scale-out plane's analogue of the tiling build above.
+    for kind in PartitionerKind::all() {
+        let r = bench(&format!("partition:{}", kind.name()), budget, || {
+            black_box(PartitionedGraph::build(g.clone(), kind, 4));
+        });
+        record(&r, &mut medians);
+        println!("    -> {:.1} M edges/s", r.per_second(1e6) / 1e6);
+    }
 
     section("whole simulator (GCN on PubMed)");
     let spec = datasets::by_code("PB").unwrap();
@@ -161,6 +177,18 @@ fn main() {
         r.per_second(points),
         threads
     );
+
+    section("multi-chip scale-out (GCN on PubMed, 4 chips, degree partition)");
+    // The partition is built once outside the timer (its cost is the
+    // partition:* groups above); the group times the per-chip session
+    // fan-out plus halo-exchange costing.
+    let parts = PartitionedGraph::build(pb.clone(), PartitionerKind::Degree, 4);
+    let cfg = AcceleratorConfig::engn();
+    let r = bench("scaleout:4chip", budget, || {
+        black_box(MultiChipSession::new(&cfg, &parts, &model).run("PB"));
+    });
+    record(&r, &mut medians);
+    println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
 
     if let Ok(path) = std::env::var("BENCH_JSON") {
         let obj = engn::util::json::Json::Obj(

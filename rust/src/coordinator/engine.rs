@@ -7,7 +7,7 @@
 //! A [`JobPayload`] names its plane ([`JobKind`]) and its batching key
 //! ([`JobPayload::batch_key`]): tensor jobs stack per artifact, sim jobs
 //! group per (accelerator config, dataset) so a formed batch amortizes
-//! one graph instantiation *and* preparation (the [`PreparedGraph`]
+//! one graph instantiation *and* preparation (the [`crate::sim::PreparedGraph`]
 //! cache of edge tilings / degree ranking), and cost jobs group per
 //! platform. The service routes a whole formed batch to one backend
 //! with a single [`Backend::execute_batch`] call.
@@ -16,11 +16,11 @@ use crate::baselines::{self, PlatformId, Workload};
 use crate::config::{AcceleratorConfig, DataflowKind};
 use crate::graph::datasets::{self, ScalePolicy};
 use crate::model::{GnnKind, GnnModel};
+use crate::partition::PartitionerKind;
 use crate::runtime::HostTensor;
-use crate::sim::{PreparedGraph, SimSession};
+use crate::sim::{graph_cache, MultiChipSession, SimSession};
 use crate::util::pool;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
 
 /// Anything that can execute a named tensor artifact. Implemented by
 /// [`crate::runtime::Runtime`]; tests use mocks.
@@ -97,8 +97,12 @@ pub struct SimJob {
     pub policy: ScalePolicy,
     pub config: AcceleratorConfig,
     /// Graph-synthesis seed; jobs sharing (dataset, policy, seed) share
-    /// one instantiated graph inside the backend.
+    /// one instantiated graph through [`crate::sim::graph_cache`].
     pub seed: u64,
+    /// Number of chips to shard the graph across (1 = single-chip).
+    pub chips: usize,
+    /// Partitioning strategy used when `chips > 1`.
+    pub partitioner: PartitionerKind,
 }
 
 impl SimJob {
@@ -110,11 +114,22 @@ impl SimJob {
             policy: ScalePolicy::Capped,
             config: AcceleratorConfig::engn(),
             seed: 0xE16A,
+            chips: 1,
+            partitioner: PartitionerKind::Degree,
         }
     }
 
     pub fn with_config(mut self, config: AcceleratorConfig) -> Self {
         self.config = config;
+        self
+    }
+
+    /// Scale-out what-if: shard across `chips` with `partitioner`.
+    /// `chips = 1` keeps the job on the single-chip path (and its
+    /// batch key), whatever the partitioner.
+    pub fn with_chips(mut self, chips: usize, partitioner: PartitionerKind) -> Self {
+        self.chips = chips.max(1);
+        self.partitioner = partitioner;
         self
     }
 
@@ -178,11 +193,19 @@ impl JobPayload {
     /// The batching key: jobs with equal keys may be served by one
     /// [`Backend::execute_batch`] call. Tensor jobs stack per artifact;
     /// sim jobs group per (config, dataset) so one formed batch shares a
-    /// graph instantiation; cost jobs group per platform.
+    /// graph instantiation — scale-out jobs additionally per
+    /// (chips, partitioner), since they share a partition too; cost
+    /// jobs group per platform.
     pub fn batch_key(&self) -> String {
         match self {
             JobPayload::Tensor { artifact, .. } => format!("tensor:{artifact}"),
-            JobPayload::Sim(j) => format!("sim:{}:{}", j.config.name, j.dataset),
+            JobPayload::Sim(j) => {
+                let mut key = format!("sim:{}:{}", j.config.name, j.dataset);
+                if j.chips > 1 {
+                    key.push_str(&format!(":x{}:{}", j.chips, j.partitioner.name()));
+                }
+                key
+            }
             JobPayload::Cost(j) => format!("cost:{}", j.platform.name()),
         }
     }
@@ -315,66 +338,21 @@ impl Backend for TensorBackend {
     }
 }
 
-/// Cache key for an instantiated dataset graph.
-type GraphKey = (String, u8, usize, u64);
-
-fn policy_key(p: ScalePolicy) -> (u8, usize) {
-    match p {
-        ScalePolicy::Capped => (0, 0),
-        ScalePolicy::Full => (1, 0),
-        ScalePolicy::Factor(f) => (2, f),
-    }
-}
-
-/// Prepared graphs kept per backend instance. The key is
-/// client-controlled (dataset, policy, seed), so the cache must be
-/// bounded or a request stream varying the seed would grow memory
-/// without limit.
-const GRAPH_CACHE_CAP: usize = 8;
-
 /// The simulation plane: answers [`SimJob`]s with the cycle/energy
 /// simulator. Graphs are instantiated AND prepared once per (dataset,
-/// policy, seed) — bounded FIFO of [`GRAPH_CACHE_CAP`] — so a formed
-/// batch, and any later batch over the same dataset, amortizes both the
-/// synthesis and the derived state (edge tilings, degree ranking); per
-/// job only the session itself runs.
+/// policy, seed) in the **process-wide** [`graph_cache`] (bounded FIFO
+/// of [`graph_cache::CAP`]), so a formed batch, any later batch over
+/// the same dataset, *and any other backend instance* — serving workers
+/// each construct their own — amortize both the synthesis and the
+/// derived state (edge tilings, degree ranking); per job only the
+/// session itself runs. Scale-out jobs (`chips > 1`) partition the
+/// cached graph and run a [`MultiChipSession`].
 #[derive(Default)]
-pub struct SimBackend {
-    graphs: Mutex<Vec<(GraphKey, Arc<PreparedGraph>)>>,
-}
+pub struct SimBackend;
 
 impl SimBackend {
     pub fn new() -> Self {
-        Self::default()
-    }
-
-    fn prepared_for(
-        &self,
-        spec: &datasets::DatasetSpec,
-        policy: ScalePolicy,
-        seed: u64,
-    ) -> Arc<PreparedGraph> {
-        let (pk, pf) = policy_key(policy);
-        let key: GraphKey = (spec.code.to_string(), pk, pf, seed);
-        if let Some((_, g)) = self.graphs.lock().unwrap().iter().find(|(k, _)| *k == key) {
-            return g.clone();
-        }
-        // Synthesize + prepare outside the lock: instantiation dominates
-        // and other keys' batches must not serialize behind it. A racing
-        // duplicate build is benign (both graphs answer identically),
-        // but re-check under the lock so racing builders collapse to
-        // ONE entry — duplicate pushes would shrink the FIFO cache and
-        // evict graphs sibling jobs still need mid-batch.
-        let g = Arc::new(PreparedGraph::from_arc(Arc::new(spec.instantiate(policy, seed))));
-        let mut cache = self.graphs.lock().unwrap();
-        if let Some((_, cached)) = cache.iter().find(|(k, _)| *k == key) {
-            return cached.clone();
-        }
-        if cache.len() >= GRAPH_CACHE_CAP {
-            cache.remove(0);
-        }
-        cache.push((key, g.clone()));
-        g
+        Self
     }
 
     fn run_job(&self, job: &SimJob) -> Result<SimSummary, String> {
@@ -387,8 +365,32 @@ impl SimBackend {
                 spec.code
             ));
         }
-        let prepared = self.prepared_for(&spec, job.policy, job.seed);
         let model = GnnModel::for_dataset(job.model, &spec);
+        if job.chips > 1 {
+            // Shared per (graph key, partitioner, chips): every job of a
+            // formed scale-out batch — the batch key pins exactly that
+            // triple — reuses one partition and its prepared subgraphs.
+            let parts = graph_cache::partitioned_for(
+                &spec,
+                job.policy,
+                job.seed,
+                job.partitioner,
+                job.chips,
+            );
+            let report = MultiChipSession::new(&job.config, &parts, &model).run(spec.code);
+            return Ok(SimSummary {
+                config: format!("{}@x{}:{}", job.config.name, job.chips, job.partitioner.name()),
+                model: job.model.name().to_string(),
+                dataset: spec.code.to_string(),
+                cycles: report.total_cycles(),
+                seconds: report.seconds(),
+                energy_j: report.energy_j(),
+                power_w: report.energy_j() / report.seconds().max(1e-12),
+                gops: report.gops(),
+                gops_per_watt: report.gops_per_watt(),
+            });
+        }
+        let prepared = graph_cache::prepared_for(&spec, job.policy, job.seed);
         let report = SimSession::new(&job.config, &prepared, &model).run(spec.code);
         Ok(SimSummary {
             config: job.config.name.clone(),
@@ -410,24 +412,25 @@ impl Backend for SimBackend {
     }
 
     /// A formed sim batch fans out across the worker pool instead of
-    /// draining serially: the jobs share one cached [`PreparedGraph`]
+    /// draining serially: the jobs share one cached [`crate::sim::PreparedGraph`]
     /// (same batch key ⇒ same dataset), and results are collected by
     /// job index, so the answers are bit-identical to a serial loop at
     /// any thread count (`--threads 1` forces serial).
     fn execute_batch(&self, jobs: Vec<JobPayload>) -> Vec<Result<JobOutput, String>> {
         // Warm the graph cache once per distinct (dataset, policy,
-        // seed) first: a cold-cache fan-out would otherwise race
-        // batch-size duplicate instantiations of the same graph (the
+        // seed) first: the cache's coalescing slots already collapse
+        // racing builders, but warming distinct keys from pool workers
+        // builds them in parallel instead of first-use order (the
         // batch key pins the dataset but not policy or seed).
-        let mut distinct: Vec<(GraphKey, (datasets::DatasetSpec, ScalePolicy, u64))> = Vec::new();
+        let mut distinct: Vec<(graph_cache::GraphKey, (datasets::DatasetSpec, ScalePolicy, u64))> =
+            Vec::new();
         for job in &jobs {
             if let JobPayload::Sim(j) = job {
                 if let Some(spec) = datasets::by_code(&j.dataset) {
                     if !j.model.runs_on(&spec) {
                         continue; // run_job rejects it without a graph
                     }
-                    let (pk, pf) = policy_key(j.policy);
-                    let key: GraphKey = (spec.code.to_string(), pk, pf, j.seed);
+                    let key = graph_cache::key_for(&spec, j.policy, j.seed);
                     if !distinct.iter().any(|(k, _)| *k == key) {
                         distinct.push((key, (spec, j.policy, j.seed)));
                     }
@@ -437,9 +440,9 @@ impl Backend for SimBackend {
         // Never warm more keys than the cache can hold: past the cap,
         // FIFO eviction would evict graphs this very pass inserted and
         // the fan-out would rebuild them anyway.
-        distinct.truncate(GRAPH_CACHE_CAP);
+        distinct.truncate(graph_cache::CAP);
         let _ = pool::parallel_map(distinct, |_, (_, (spec, policy, seed))| {
-            self.prepared_for(&spec, policy, seed);
+            graph_cache::prepared_for(&spec, policy, seed);
         });
         pool::parallel_map(jobs, |_, job| match job {
             JobPayload::Sim(j) => self.run_job(&j).map(JobOutput::Sim),
@@ -575,7 +578,26 @@ mod tests {
     }
 
     #[test]
+    fn scaleout_sim_jobs_get_their_own_batch_key() {
+        let single = JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA"));
+        // chips = 1 stays on the single-chip key, whatever partitioner.
+        let one = JobPayload::Sim(
+            SimJob::new(GnnKind::Gcn, "CA").with_chips(1, PartitionerKind::Hash),
+        );
+        assert_eq!(single.batch_key(), one.batch_key());
+        let four = JobPayload::Sim(
+            SimJob::new(GnnKind::Gcn, "CA").with_chips(4, PartitionerKind::Degree),
+        );
+        assert_eq!(four.batch_key(), "sim:EnGN:CA:x4:degree");
+        let four_range = JobPayload::Sim(
+            SimJob::new(GnnKind::Gcn, "CA").with_chips(4, PartitionerKind::Range),
+        );
+        assert_ne!(four.batch_key(), four_range.batch_key());
+    }
+
+    #[test]
     fn sim_backend_answers_and_caches_graphs() {
+        let _serial = graph_cache::test_guard();
         let be = SimBackend::new();
         let jobs = vec![
             JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA")),
@@ -589,8 +611,26 @@ mod tests {
             assert_eq!(s.dataset, "CA");
             assert!(s.seconds > 0.0 && s.energy_j > 0.0 && s.cycles > 0.0);
         }
-        // Both jobs share (dataset, policy, seed): one cached graph.
-        assert_eq!(be.graphs.lock().unwrap().len(), 1);
+        // Both jobs share (dataset, policy, seed): one cached graph,
+        // now resident process-wide for every backend instance.
+        let spec = datasets::by_code("CA").unwrap();
+        assert!(graph_cache::is_cached(&spec, ScalePolicy::Capped, 0xE16A));
+    }
+
+    #[test]
+    fn sim_backend_runs_scaleout_jobs_faster_than_single_chip() {
+        let be = SimBackend::new();
+        let jobs = vec![
+            JobPayload::Sim(SimJob::new(GnnKind::Gcn, "PB")),
+            JobPayload::Sim(
+                SimJob::new(GnnKind::Gcn, "PB").with_chips(4, PartitionerKind::Degree),
+            ),
+        ];
+        let results = be.execute_batch(jobs);
+        let single = results[0].as_ref().unwrap().as_sim().unwrap().clone();
+        let multi = results[1].as_ref().unwrap().as_sim().unwrap().clone();
+        assert_eq!(multi.config, "EnGN@x4:degree");
+        assert!(multi.cycles > 0.0 && multi.cycles < single.cycles);
     }
 
     #[test]
@@ -613,13 +653,14 @@ mod tests {
 
     #[test]
     fn sim_graph_cache_is_bounded() {
+        let _serial = graph_cache::test_guard();
         let be = SimBackend::new();
-        for seed in 0..(GRAPH_CACHE_CAP as u64 + 3) {
+        for seed in 0..(graph_cache::CAP as u64 + 3) {
             let mut job = SimJob::new(GnnKind::Gcn, "CA");
             job.seed = seed;
             be.run_job(&job).expect("sim ok");
         }
-        assert!(be.graphs.lock().unwrap().len() <= GRAPH_CACHE_CAP);
+        assert!(graph_cache::cached_count() <= graph_cache::CAP);
     }
 
     #[test]

@@ -24,6 +24,10 @@
 //!   [`coordinator::Ticket`] handles with optional deadlines;
 //! * [`xla`] — offline stub of the PJRT bindings the runtime codes
 //!   against (swap in the real `xla` crate to execute artifacts);
+//! * [`partition`] — scale-out graph partitioning: [`partition::Partitioner`]
+//!   strategies (range / hash / degree-aware) producing the per-chip
+//!   [`partition::PartitionedGraph`] the multi-chip simulator
+//!   ([`sim::multichip`]) runs;
 //! * [`report`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 
@@ -32,6 +36,7 @@ pub mod config;
 pub mod coordinator;
 pub mod graph;
 pub mod model;
+pub mod partition;
 pub mod report;
 pub mod runtime;
 pub mod sim;

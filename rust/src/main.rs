@@ -11,9 +11,16 @@
 //!                                      multi-worker batched execution,
 //!                                      deadline-aware shedding)
 //!   whatif --model M --dataset D [--platforms P,..] [--workers W]
-//!          [--dataflow rer|dense]      capacity planning through the
+//!          [--dataflow rer|dense] [--explain]
+//!                                      capacity planning through the
 //!                                      serving coordinator: sim + cost
-//!                                      jobs on the analytic backends
+//!                                      jobs on the analytic backends;
+//!                                      --explain prints each layer's
+//!                                      LayerPlan first
+//!   scaleout --model M --dataset D [--chips K] [--partitioner P]
+//!            [--topology ring|all2all] [--link-gbps G] [--explain]
+//!                                      multi-chip EnGN×K simulation
+//!                                      over a partitioned graph
 
 use engn::config::{AcceleratorConfig, DataflowKind, Fidelity};
 use engn::coordinator::{
@@ -22,10 +29,12 @@ use engn::coordinator::{
 };
 use engn::baselines::PlatformId;
 use engn::graph::datasets::{self, ScalePolicy};
+use engn::model::ops::ExecOrder;
 use engn::model::{GnnKind, GnnModel};
+use engn::partition::{PartitionedGraph, PartitionerKind};
 use engn::report::experiments::{self, Eval};
 use engn::runtime::{HostTensor, Runtime};
-use engn::sim::{PreparedGraph, SimSession};
+use engn::sim::{ChipLink, ChipTopology, LayerPlan, MultiChipSession, PreparedGraph, SimSession};
 use engn::util::rng::Xoshiro256StarStar;
 use engn::util::{fmt_bytes, fmt_time, si};
 use std::collections::HashMap;
@@ -58,16 +67,18 @@ fn main() {
         Some("infer") => cmd_infer(&parse_flags(&args[1..])),
         Some("serve") => cmd_serve(&parse_flags(&args[1..])),
         Some("whatif") => cmd_whatif(&parse_flags(&args[1..])),
+        Some("scaleout") => cmd_scaleout(&parse_flags(&args[1..])),
         _ => {
             eprintln!(
-                "usage: engn <datasets|run|bench|infer|serve|whatif> [--threads N] [flags]\n\
+                "usage: engn <datasets|run|bench|infer|serve|whatif|scaleout> [--threads N] [flags]\n\
                  examples:\n\
                  \u{20}  engn run --model gcn --dataset CA\n\
                  \u{20}  engn bench --exp fig9 --out reports\n\
                  \u{20}  engn bench --exp all --out reports [--full]\n\
                  \u{20}  engn infer --artifacts artifacts --name gcn_forward\n\
                  \u{20}  engn serve --artifacts artifacts --requests 32 --workers 4 --queue 256\n\
-                 \u{20}  engn whatif --model gcn --dataset CA --platforms cpu-dgl,gpu-dgl,hygcn"
+                 \u{20}  engn whatif --model gcn --dataset CA --platforms cpu-dgl,gpu-dgl,hygcn\n\
+                 \u{20}  engn scaleout --model gcn --dataset RD --chips 4 --partitioner degree"
             );
             2
         }
@@ -439,8 +450,12 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
         eprintln!("unknown model {model_name:?} (gcn|gspool|rgcn|gatedgcn|grn)");
         return 2;
     };
-    if datasets::by_code(code).is_none() {
+    let Some(spec) = datasets::by_code(code) else {
         eprintln!("unknown dataset {code:?} — see `engn datasets`");
+        return 2;
+    };
+    if !kind.runs_on(&spec) {
+        eprintln!("{} does not run on {} in the paper's suite", kind.name(), spec.code);
         return 2;
     }
     let platforms: Vec<PlatformId> = match flags.get("platforms") {
@@ -464,6 +479,21 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
             return 2;
         };
         sim_job = sim_job.with_dataflow(df);
+    }
+    // --explain: print every layer's plan (stage order, grid Q, tile
+    // schedule) before asking the backends. The graph comes from the
+    // process-wide cache, so the sim backend below reuses it.
+    if flags.contains_key("explain") {
+        let prepared = engn::sim::graph_cache::prepared_for(&spec, sim_job.policy, sim_job.seed);
+        let model = GnnModel::for_dataset(kind, &spec);
+        let session = SimSession::new(&sim_job.config, &prepared, &model);
+        let plans = session.plan();
+        print_layer_plans(
+            &format!("plan: {} on {} under {}", kind.name(), spec.code, sim_job.config.name),
+            &session,
+            &plans,
+        );
+        println!();
     }
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
     let svc = InferenceService::start(
@@ -530,4 +560,183 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
     } else {
         1
     }
+}
+
+/// Print a session's per-layer [`LayerPlan`]s — stage order, grid Q,
+/// tile-schedule choice, tile count — so scheduling and partitioning
+/// decisions are inspectable (`whatif --explain`, `scaleout --explain`).
+fn print_layer_plans(label: &str, session: &SimSession, plans: &[LayerPlan]) {
+    println!("{label} (dataflow {})", session.dataflow_name());
+    println!(
+        "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7}",
+        "layer", "F", "H", "order", "Q", "span", "sched", "tiles"
+    );
+    for p in plans {
+        let order = match p.order {
+            ExecOrder::FeatureFirst => "FAU",
+            ExecOrder::AggregateFirst => "AFU",
+        };
+        println!(
+            "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7}",
+            p.layer_idx,
+            p.dims.f_in,
+            p.dims.f_out,
+            order,
+            p.q,
+            p.span,
+            format!("{:?}", p.choice).to_lowercase(),
+            p.tiling.num_tiles()
+        );
+    }
+}
+
+/// Multi-chip EnGN×K simulation: partition the graph, run one session
+/// per chip, and report the combined scale-out numbers (speedup,
+/// efficiency, cut ratio, communication share). `--chips 1` reproduces
+/// `engn run`'s report bit-identically.
+fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("gcn");
+    let code = flags.get("dataset").map(String::as_str).unwrap_or("RD");
+    let Some(kind) = GnnKind::by_name(model_name) else {
+        eprintln!("unknown model {model_name:?} (gcn|gspool|rgcn|gatedgcn|grn)");
+        return 2;
+    };
+    let Some(spec) = datasets::by_code(code) else {
+        eprintln!("unknown dataset {code:?} — see `engn datasets`");
+        return 2;
+    };
+    if !kind.runs_on(&spec) {
+        eprintln!("{} does not run on {} in the paper's suite", kind.name(), spec.code);
+        return 2;
+    }
+    let chips: usize = flags
+        .get("chips")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4)
+        .max(1);
+    let partitioner = match flags.get("partitioner") {
+        Some(s) => match PartitionerKind::parse(s) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown partitioner {s:?} (range|hash|degree)");
+                return 2;
+            }
+        },
+        None => PartitionerKind::Degree,
+    };
+    let topology = match flags.get("topology") {
+        Some(s) => match ChipTopology::parse(s) {
+            Some(t) => t,
+            None => {
+                eprintln!("unknown topology {s:?} (ring|all2all)");
+                return 2;
+            }
+        },
+        None => ChipTopology::Ring,
+    };
+    let mut link = ChipLink::for_topology(topology);
+    if let Some(g) = flags.get("link-gbps").and_then(|s| s.parse::<f64>().ok()) {
+        link.gbps = g;
+    }
+    let mut cfg = AcceleratorConfig::engn();
+    if flags.contains_key("cycle") {
+        cfg.fidelity = Fidelity::Cycle;
+    }
+    if let Some(s) = flags.get("dataflow") {
+        let Some(df) = DataflowKind::parse(s) else {
+            eprintln!("unknown dataflow {s:?} (rer|dense)");
+            return 2;
+        };
+        cfg.dataflow = df;
+    }
+    let policy = if flags.contains_key("full") {
+        ScalePolicy::Full
+    } else {
+        ScalePolicy::Capped
+    };
+    let (v, e, factor) = spec.scaled_sizes(policy);
+    println!(
+        "synthesizing {} ({} vertices, {} edges{}) ...",
+        spec.name,
+        v,
+        e,
+        if factor > 1 { format!(", scaled 1/{factor}") } else { String::new() }
+    );
+    let graph = std::sync::Arc::new(spec.instantiate(policy, 0xE16A));
+    let model = GnnModel::for_dataset(kind, &spec);
+
+    let t0 = std::time::Instant::now();
+    let parts = PartitionedGraph::build(graph.clone(), partitioner, chips);
+    let part_wall = t0.elapsed();
+    let prepared = PreparedGraph::from_arc(graph);
+    let single = SimSession::new(&cfg, &prepared, &model).run(spec.code);
+    let session = MultiChipSession::new(&cfg, &parts, &model).with_link(link);
+    let r = session.run(spec.code);
+
+    println!(
+        "\nEnGN x{} — {} on {} ({} partition, {} link @ {} GB/s, partitioned in {})",
+        r.chips,
+        kind.name(),
+        spec.name,
+        r.partitioner,
+        r.topology,
+        link.gbps,
+        fmt_time(part_wall.as_secs_f64())
+    );
+    println!(
+        "  {:<5} {:>9} {:>10} {:>9} {:>9} {:>10} {:>6}",
+        "chip", "owned V", "edges", "halo-in", "cut-in", "cycles", "util"
+    );
+    for (c, chip) in parts.chips.iter().enumerate() {
+        println!(
+            "  {:<5} {:>9} {:>10} {:>9} {:>9} {:>10} {:>5.0}%",
+            c,
+            chip.num_owned(),
+            chip.edge_load(),
+            chip.num_halo(),
+            parts.cut_list(c).len(),
+            si(r.per_chip[c].total_cycles()),
+            100.0 * r.chip_utilization(c)
+        );
+    }
+    println!("\n  cycles       : {} (1-chip: {})", si(r.total_cycles()), si(single.total_cycles()));
+    println!("  latency      : {}", fmt_time(r.seconds()));
+    println!(
+        "  speedup      : {:.2}x over 1 chip (efficiency {:.0}%)",
+        r.speedup_vs(&single),
+        100.0 * r.efficiency_vs(&single)
+    );
+    println!(
+        "  comm         : {} cycles ({:.1}% of total), {} over links",
+        si(r.comm_cycles()),
+        100.0 * r.comm_fraction(),
+        fmt_bytes(r.comm_bytes)
+    );
+    println!(
+        "  cut          : {} / {} edges ({:.1}%), {} halo vertices",
+        r.cut_edges,
+        r.total_edges,
+        100.0 * r.cut_ratio(),
+        r.halo_vertices
+    );
+    println!("  load balance : max/min edge load {:.2}", r.max_min_load_ratio());
+    println!(
+        "  energy       : {:.2e} J (chips {:.2e} + links {:.2e})",
+        r.energy_j(),
+        r.energy_j() - r.link_energy_j,
+        r.link_energy_j
+    );
+    println!("  throughput   : {}OP/s aggregate", si(r.gops() * 1e9));
+    if flags.contains_key("explain") {
+        println!();
+        let single_session = SimSession::new(&cfg, &prepared, &model);
+        let single_plans = single_session.plan();
+        print_layer_plans("single-chip plan", &single_session, &single_plans);
+        for (c, chip) in parts.chips.iter().enumerate() {
+            let s = SimSession::new(&cfg, &chip.prepared, &model);
+            let plans = s.plan();
+            print_layer_plans(&format!("chip {c} plan"), &s, &plans);
+        }
+    }
+    0
 }

@@ -1,0 +1,505 @@
+//! Scale-out graph partitioning: split one graph across K chips.
+//!
+//! EnGN evaluates a single 32×16 accelerator, but the Table-5 graphs it
+//! targets (Reddit 114 M edges, Enwiki 276 M, Synthetic D 268 M) exceed
+//! any single chip's on-chip capacity. This module owns the *partition*
+//! side of the scale-out model (DESIGN.md §8): a [`Partitioner`] maps
+//! every vertex to a chip, and [`PartitionedGraph`] materializes the
+//! per-chip subgraphs the multi-chip simulator
+//! ([`crate::sim::multichip`]) runs.
+//!
+//! Ownership model: a chip owns the vertices assigned to it and
+//! executes **every edge destined to an owned vertex** — aggregation
+//! happens where the destination partial lives, exactly as in the
+//! single-chip grid schedule. An edge whose source lives on another
+//! chip is a *cut edge*: it still runs on the destination's chip, but
+//! the source property must be fetched over the inter-chip link first
+//! (a *halo* vertex). Each chip's subgraph is therefore its owned
+//! vertices plus the halo vertices its cut edges name, relabeled to a
+//! dense local id space and wrapped as its own
+//! [`Arc<PreparedGraph>`] — existing [`crate::sim::SimSession`]s run on
+//! it unchanged.
+//!
+//! Invariants (pinned by `tests/partition_integration.rs`):
+//! * every global edge lands in exactly one chip's subgraph; the
+//!   cross-chip ones additionally appear in exactly one cut list;
+//! * local edge order within a chip preserves global edge order, and
+//!   owned vertices are relabeled in ascending global-id order, so a
+//!   K = 1 partition reproduces the input graph bit-identically;
+//! * a chip's edge load equals the in-degree sum of its owned vertices.
+
+use crate::graph::{Edge, Graph};
+use crate::sim::PreparedGraph;
+use crate::util::ceil_div;
+use std::sync::Arc;
+
+/// A vertex-to-chip assignment strategy. Implementations must be
+/// deterministic in (graph, k) — partitions are part of the simulation
+/// contract, so two runs must shard identically.
+pub trait Partitioner {
+    fn name(&self) -> &'static str;
+
+    /// Map every vertex to a chip id in `0..k`.
+    fn assign(&self, graph: &Graph, k: usize) -> Vec<u32>;
+}
+
+/// The built-in partitioning strategies, CLI/serving-selectable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionerKind {
+    /// Contiguous vertex ranges (GridGraph-style interval split).
+    Range,
+    /// Deterministic hash of the vertex id (destination shuffling).
+    Hash,
+    /// Degree-aware greedy balancer: high-degree (DAVC-resident) hub
+    /// vertices are placed first, each on the chip with the smallest
+    /// accumulated edge load, equalizing per-chip edge counts on
+    /// skewed graphs.
+    Degree,
+}
+
+impl PartitionerKind {
+    pub fn all() -> [PartitionerKind; 3] {
+        [
+            PartitionerKind::Range,
+            PartitionerKind::Hash,
+            PartitionerKind::Degree,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionerKind::Range => "range",
+            PartitionerKind::Hash => "hash",
+            PartitionerKind::Degree => "degree",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PartitionerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "range" | "contiguous" => Some(PartitionerKind::Range),
+            "hash" => Some(PartitionerKind::Hash),
+            "degree" | "degree-aware" | "greedy" => Some(PartitionerKind::Degree),
+            _ => None,
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Partitioner + Send + Sync> {
+        match self {
+            PartitionerKind::Range => Box::new(RangePartitioner),
+            PartitionerKind::Hash => Box::new(HashPartitioner),
+            PartitionerKind::Degree => Box::new(DegreePartitioner),
+        }
+    }
+}
+
+/// Contiguous vertex ranges: chip `c` owns interval
+/// `[c * span, (c+1) * span)` with `span = ceil(n / k)`. Cheapest to
+/// compute and locality-friendly, but R-MAT graphs concentrate hubs at
+/// low vertex ids, so the first range soaks up most of the edge load.
+pub struct RangePartitioner;
+
+impl Partitioner for RangePartitioner {
+    fn name(&self) -> &'static str {
+        "range"
+    }
+
+    fn assign(&self, graph: &Graph, k: usize) -> Vec<u32> {
+        let n = graph.num_vertices;
+        let span = ceil_div(n.max(1), k);
+        (0..n).map(|v| ((v / span).min(k - 1)) as u32).collect()
+    }
+}
+
+/// SplitMix64 finalizer: a stable, well-mixed integer hash (the hand-
+/// rolled analogue of `util::fxhash` for partition placement, where
+/// avalanche quality matters more than speed).
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Hash placement: chip = mix(v) mod k. Destroys range locality (every
+/// chip sees a slice of the hubs) at the price of a near-maximal cut.
+pub struct HashPartitioner;
+
+impl Partitioner for HashPartitioner {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn assign(&self, graph: &Graph, k: usize) -> Vec<u32> {
+        (0..graph.num_vertices as u64)
+            .map(|v| (mix64(v) % k as u64) as u32)
+            .collect()
+    }
+}
+
+/// Degree-aware greedy balancer. Vertices are placed in descending
+/// in-degree order (the DAVC reservation ranking): each goes to the
+/// chip with the smallest accumulated in-degree sum — which *is* the
+/// chip's eventual edge load, since a chip executes exactly the edges
+/// destined to its owned vertices. Ties break toward fewer owned
+/// vertices, then the lower chip id, so zero-degree vertices spread
+/// evenly instead of piling onto chip 0.
+pub struct DegreePartitioner;
+
+impl Partitioner for DegreePartitioner {
+    fn name(&self) -> &'static str {
+        "degree"
+    }
+
+    fn assign(&self, graph: &Graph, k: usize) -> Vec<u32> {
+        let deg = graph.in_degrees();
+        let mut load = vec![0u64; k];
+        let mut count = vec![0u64; k];
+        let mut assignment = vec![0u32; graph.num_vertices];
+        for &v in &graph.vertices_by_in_degree_desc() {
+            let mut best = 0usize;
+            for c in 1..k {
+                if (load[c], count[c]) < (load[best], count[best]) {
+                    best = c;
+                }
+            }
+            assignment[v as usize] = best as u32;
+            load[best] += deg[v as usize] as u64;
+            count[best] += 1;
+        }
+        assignment
+    }
+}
+
+/// One chip's share of a partitioned graph: the owned + halo vertex
+/// sets, the relabeled subgraph, and its prepared derived state.
+pub struct ChipGraph {
+    pub chip: usize,
+    /// Global ids of the vertices this chip owns, ascending; global
+    /// vertex `owned[i]` has local id `i`.
+    pub owned: Vec<u32>,
+    /// Global ids of the halo (ghost) vertices — remote sources named
+    /// by this chip's cut edges — ascending; global vertex `halo[j]`
+    /// has local id `owned.len() + j`.
+    pub halo: Vec<u32>,
+    /// Edges with both endpoints owned here (the rest of the subgraph's
+    /// edges are this chip's cut edges, sources relabeled to halo ids).
+    pub internal_edges: usize,
+    /// The relabeled subgraph, prepared for simulation: sessions run on
+    /// it exactly as on a whole graph.
+    pub prepared: Arc<PreparedGraph>,
+}
+
+impl ChipGraph {
+    pub fn num_owned(&self) -> usize {
+        self.owned.len()
+    }
+
+    pub fn num_halo(&self) -> usize {
+        self.halo.len()
+    }
+
+    /// Edges this chip executes (internal + cut-in).
+    pub fn edge_load(&self) -> usize {
+        self.prepared.graph().num_edges()
+    }
+
+    /// Map a local vertex id back to its global id.
+    pub fn global_of(&self, local: u32) -> u32 {
+        let l = local as usize;
+        if l < self.owned.len() {
+            self.owned[l]
+        } else {
+            self.halo[l - self.owned.len()]
+        }
+    }
+}
+
+/// A graph sharded across `k` chips: per-chip induced subgraphs (with
+/// halo sources) plus the cut-edge lists the inter-chip traffic model
+/// costs halo exchange from.
+pub struct PartitionedGraph {
+    pub k: usize,
+    /// Name of the strategy that produced the assignment.
+    pub partitioner: &'static str,
+    /// Vertex-to-chip map, `assignment[v] < k`.
+    pub assignment: Vec<u32>,
+    pub chips: Vec<ChipGraph>,
+    /// `cut[c]` = global edges destined to chip `c` whose source lives
+    /// on another chip, in global edge order.
+    cut: Vec<Vec<Edge>>,
+    pub total_edges: usize,
+}
+
+impl PartitionedGraph {
+    /// Partition `graph` across `k` chips with a named strategy.
+    pub fn build(graph: Arc<Graph>, kind: PartitionerKind, k: usize) -> Self {
+        Self::build_with(graph, kind.build().as_ref(), k)
+    }
+
+    /// Partition with any [`Partitioner`] implementation.
+    pub fn build_with(graph: Arc<Graph>, partitioner: &dyn Partitioner, k: usize) -> Self {
+        let k = k.max(1);
+        let n = graph.num_vertices;
+        let assignment = partitioner.assign(&graph, k);
+        assert_eq!(assignment.len(), n, "assignment must cover every vertex");
+        assert!(
+            assignment.iter().all(|&c| (c as usize) < k),
+            "assignment names a chip >= k"
+        );
+
+        // Owned vertex lists + local ids, ascending global order per
+        // chip (K = 1 relabeling is therefore the identity).
+        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); k];
+        let mut local = vec![0u32; n];
+        for v in 0..n {
+            let c = assignment[v] as usize;
+            local[v] = owned[c].len() as u32;
+            owned[c].push(v as u32);
+        }
+
+        // Cut lists and halo sets: a cut edge runs on its destination's
+        // chip but needs the remote source property first. The halo set
+        // is the distinct cut sources — the same distinct-endpoint
+        // semantics `EdgeTiling` counts per tile, here per chip.
+        let mut cut: Vec<Vec<Edge>> = vec![Vec::new(); k];
+        let mut halo: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for e in &graph.edges {
+            let c = assignment[e.dst as usize] as usize;
+            if assignment[e.src as usize] as usize != c {
+                cut[c].push(*e);
+                halo[c].push(e.src);
+            }
+        }
+        for h in &mut halo {
+            h.sort_unstable();
+            h.dedup();
+        }
+
+        // Relabel every edge into its destination chip's subgraph, in
+        // global edge order (tile grouping is stable and the DAVC
+        // replays the stream in order, so order is part of the
+        // contract). Relation ids ride along for R-GCN graphs.
+        let has_rel = !graph.relations.is_empty();
+        let mut chip_edges: Vec<Vec<Edge>> = vec![Vec::new(); k];
+        let mut chip_rels: Vec<Vec<u16>> = vec![Vec::new(); k];
+        let mut internal = vec![0usize; k];
+        for (i, e) in graph.edges.iter().enumerate() {
+            let c = assignment[e.dst as usize] as usize;
+            let src_local = if assignment[e.src as usize] as usize == c {
+                internal[c] += 1;
+                local[e.src as usize]
+            } else {
+                let h = halo[c]
+                    .binary_search(&e.src)
+                    .expect("halo set contains every cut source");
+                (owned[c].len() + h) as u32
+            };
+            chip_edges[c].push(Edge::new(src_local, local[e.dst as usize]));
+            if has_rel {
+                chip_rels[c].push(graph.relations[i]);
+            }
+        }
+
+        let chips: Vec<ChipGraph> = owned
+            .into_iter()
+            .zip(halo)
+            .zip(chip_edges.into_iter().zip(chip_rels))
+            .enumerate()
+            .map(|(c, ((owned, halo), (edges, rels)))| {
+                let nv = owned.len() + halo.len();
+                let sub = Graph::from_edges_with_relations(
+                    nv,
+                    edges,
+                    rels,
+                    graph.num_relations,
+                );
+                ChipGraph {
+                    chip: c,
+                    owned,
+                    halo,
+                    internal_edges: internal[c],
+                    prepared: Arc::new(PreparedGraph::from_arc(Arc::new(sub))),
+                }
+            })
+            .collect();
+
+        Self {
+            k,
+            partitioner: partitioner.name(),
+            assignment,
+            chips,
+            cut,
+            total_edges: graph.num_edges(),
+        }
+    }
+
+    /// Cut edges destined to chip `c`, in global edge order.
+    pub fn cut_list(&self, c: usize) -> &[Edge] {
+        &self.cut[c]
+    }
+
+    /// Total cross-chip edges.
+    pub fn cut_edges(&self) -> usize {
+        self.cut.iter().map(Vec::len).sum()
+    }
+
+    /// Fraction of all edges that cross chips.
+    pub fn cut_ratio(&self) -> f64 {
+        if self.total_edges == 0 {
+            0.0
+        } else {
+            self.cut_edges() as f64 / self.total_edges as f64
+        }
+    }
+
+    /// Total halo (ghost) vertices across chips — the per-layer
+    /// exchange volume is this count × property bytes.
+    pub fn halo_vertices(&self) -> usize {
+        self.chips.iter().map(ChipGraph::num_halo).sum()
+    }
+
+    /// How many of chip `c`'s halo vertices each source chip owns:
+    /// `halo_counts(c)[p]` distinct vertices must be shipped p → c per
+    /// layer. `halo_counts(c)[c]` is always 0.
+    pub fn halo_counts(&self, c: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; self.k];
+        for &v in &self.chips[c].halo {
+            counts[self.assignment[v as usize] as usize] += 1;
+        }
+        counts
+    }
+
+    /// Per-chip edge loads (edges each chip executes).
+    pub fn edge_loads(&self) -> Vec<usize> {
+        self.chips.iter().map(ChipGraph::edge_load).collect()
+    }
+
+    /// Load-balance quality: max over min per-chip edge load (empty
+    /// chips count as load 1 to keep the ratio finite).
+    pub fn max_min_load_ratio(&self) -> f64 {
+        let loads = self.edge_loads();
+        let max = loads.iter().copied().max().unwrap_or(0);
+        let min = loads.iter().copied().min().unwrap_or(0);
+        max.max(1) as f64 / min.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{self, RmatParams};
+
+    fn sample() -> Arc<Graph> {
+        Arc::new(rmat::generate(600, 4_000, RmatParams::default(), 11))
+    }
+
+    #[test]
+    fn parse_round_trips_and_build_dispatches() {
+        for kind in PartitionerKind::all() {
+            assert_eq!(PartitionerKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        assert_eq!(PartitionerKind::parse("degree-aware"), Some(PartitionerKind::Degree));
+        assert_eq!(PartitionerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn every_partitioner_covers_edges_exactly_once() {
+        let g = sample();
+        for kind in PartitionerKind::all() {
+            for k in [1usize, 2, 3, 5] {
+                let p = PartitionedGraph::build(g.clone(), kind, k);
+                let internal: usize = p.chips.iter().map(|c| c.internal_edges).sum();
+                let cut = p.cut_edges();
+                assert_eq!(internal + cut, g.num_edges(), "{} k={k}", kind.name());
+                let sub_total: usize = p.chips.iter().map(ChipGraph::edge_load).sum();
+                assert_eq!(sub_total, g.num_edges(), "{} k={k}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn k1_partition_is_the_identity() {
+        let g = sample();
+        for kind in PartitionerKind::all() {
+            let p = PartitionedGraph::build(g.clone(), kind, 1);
+            assert_eq!(p.chips.len(), 1);
+            let chip = &p.chips[0];
+            assert_eq!(chip.num_owned(), g.num_vertices);
+            assert_eq!(chip.num_halo(), 0);
+            assert_eq!(p.cut_edges(), 0);
+            assert_eq!(chip.prepared.graph().edges, g.edges, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn cut_edges_cross_chips_and_halo_is_distinct() {
+        let g = sample();
+        let p = PartitionedGraph::build(g.clone(), PartitionerKind::Hash, 4);
+        assert!(p.cut_edges() > 0, "hash split of an R-MAT graph must cut");
+        for c in 0..p.k {
+            for e in p.cut_list(c) {
+                assert_eq!(p.assignment[e.dst as usize] as usize, c);
+                assert_ne!(p.assignment[e.src as usize] as usize, c);
+            }
+            let chip = &p.chips[c];
+            let mut sorted = chip.halo.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted, chip.halo, "halo must be ascending + distinct");
+            let counts = p.halo_counts(c);
+            assert_eq!(counts[c], 0);
+            assert_eq!(counts.iter().sum::<usize>(), chip.num_halo());
+        }
+    }
+
+    #[test]
+    fn relabeling_round_trips_to_global_ids() {
+        let g = sample();
+        let p = PartitionedGraph::build(g.clone(), PartitionerKind::Degree, 3);
+        let mut recovered: Vec<Edge> = Vec::new();
+        for chip in &p.chips {
+            for e in &chip.prepared.graph().edges {
+                recovered.push(Edge::new(chip.global_of(e.src), chip.global_of(e.dst)));
+            }
+        }
+        let key = |e: &Edge| (e.src, e.dst);
+        let mut want: Vec<Edge> = g.edges.clone();
+        want.sort_unstable_by_key(key);
+        recovered.sort_unstable_by_key(key);
+        assert_eq!(recovered, want);
+    }
+
+    #[test]
+    fn degree_balancer_beats_range_on_skewed_graphs() {
+        // R-MAT default skew concentrates hubs at low ids: range
+        // partitioning overloads chip 0, the greedy balancer does not.
+        let g = Arc::new(rmat::generate(2_000, 16_000, RmatParams::default(), 5));
+        let range = PartitionedGraph::build(g.clone(), PartitionerKind::Range, 4);
+        let degree = PartitionedGraph::build(g.clone(), PartitionerKind::Degree, 4);
+        let range_max = *range.edge_loads().iter().max().unwrap();
+        let degree_max = *degree.edge_loads().iter().max().unwrap();
+        assert!(
+            degree_max < range_max,
+            "degree max load {degree_max} !< range max load {range_max}"
+        );
+        assert!(degree.max_min_load_ratio() < range.max_min_load_ratio());
+    }
+
+    #[test]
+    fn relations_ride_along_per_chip() {
+        let g = {
+            let spec = crate::graph::datasets::by_code("AF").unwrap();
+            Arc::new(spec.instantiate(crate::graph::datasets::ScalePolicy::Capped, 3))
+        };
+        let p = PartitionedGraph::build(g.clone(), PartitionerKind::Hash, 3);
+        let mut rel_total = 0usize;
+        for chip in &p.chips {
+            let sub = chip.prepared.graph();
+            assert_eq!(sub.relations.len(), sub.num_edges());
+            assert_eq!(sub.num_relations, g.num_relations);
+            rel_total += sub.relations.len();
+        }
+        assert_eq!(rel_total, g.num_edges());
+    }
+}

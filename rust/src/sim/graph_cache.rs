@@ -1,0 +1,196 @@
+//! Process-wide [`PreparedGraph`] cache, keyed by (dataset, policy,
+//! seed).
+//!
+//! Serving backends are constructed once per worker thread, and a
+//! restarted or parallel backend used to re-synthesize and re-tile the
+//! exact graph a sibling had just prepared (the cache lived per
+//! `SimBackend` instance). This module lifts it to the process: every
+//! backend instance — and the CLI's `whatif --explain`, which wants the
+//! same graph the service will simulate — shares one bounded FIFO of
+//! prepared graphs.
+//!
+//! Concurrency: the map holds coalescing slots (`Arc<OnceLock<..>>`),
+//! so concurrent misses on one key block on a single synthesis +
+//! preparation instead of racing duplicates; distinct keys build in
+//! parallel. The key is client-controlled, so the cache is bounded
+//! ([`CAP`], FIFO eviction) — an evicted entry simply drops once its
+//! last user releases the `Arc`.
+
+use crate::graph::datasets::{DatasetSpec, ScalePolicy};
+use crate::partition::{PartitionedGraph, PartitionerKind};
+use crate::sim::PreparedGraph;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Maximum distinct (dataset, policy, seed) graphs kept alive (the
+/// partition cache is bounded to the same depth).
+pub const CAP: usize = 8;
+
+/// Cache key for an instantiated dataset graph.
+pub type GraphKey = (String, u8, usize, u64);
+
+/// Cache key for a partition of a cached graph.
+pub type PartKey = (GraphKey, &'static str, usize);
+
+/// Coalescing slot: concurrent misses on one key block on ONE build.
+type Slot<T> = Arc<OnceLock<Arc<T>>>;
+
+fn cache() -> &'static Mutex<Vec<(GraphKey, Slot<PreparedGraph>)>> {
+    static CACHE: OnceLock<Mutex<Vec<(GraphKey, Slot<PreparedGraph>)>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn part_cache() -> &'static Mutex<Vec<(PartKey, Slot<PartitionedGraph>)>> {
+    static CACHE: OnceLock<Mutex<Vec<(PartKey, Slot<PartitionedGraph>)>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Stable encoding of a [`ScalePolicy`] for keying.
+pub fn policy_key(p: ScalePolicy) -> (u8, usize) {
+    match p {
+        ScalePolicy::Capped => (0, 0),
+        ScalePolicy::Full => (1, 0),
+        ScalePolicy::Factor(f) => (2, f),
+    }
+}
+
+/// The cache key a (spec, policy, seed) triple maps to.
+pub fn key_for(spec: &DatasetSpec, policy: ScalePolicy, seed: u64) -> GraphKey {
+    let (pk, pf) = policy_key(policy);
+    (spec.code.to_string(), pk, pf, seed)
+}
+
+/// The prepared graph for (dataset, policy, seed): synthesized and
+/// prepared on first use, shared by every later caller process-wide.
+pub fn prepared_for(spec: &DatasetSpec, policy: ScalePolicy, seed: u64) -> Arc<PreparedGraph> {
+    let key = key_for(spec, policy, seed);
+    let slot = {
+        let mut cache = cache().lock().unwrap();
+        if let Some((_, s)) = cache.iter().find(|(k, _)| *k == key) {
+            s.clone()
+        } else {
+            if cache.len() >= CAP {
+                cache.remove(0);
+            }
+            let s: Slot<PreparedGraph> = Slot::default();
+            cache.push((key, s.clone()));
+            s
+        }
+    };
+    // Build outside the map lock: other keys must not serialize behind
+    // a multi-second synthesis; same-key callers block here, on the
+    // slot, and all receive the one built graph.
+    slot.get_or_init(|| {
+        Arc::new(PreparedGraph::from_arc(Arc::new(spec.instantiate(policy, seed))))
+    })
+    .clone()
+}
+
+/// The partitioned form of a cached graph, shared per (graph key,
+/// partitioner, chips): a formed scale-out batch — whose batch key pins
+/// exactly this triple — partitions once, and later batches over the
+/// same shard layout reuse it (each chip's prepared subgraph keeps its
+/// tilings warm across batches, like the single-chip cache above).
+pub fn partitioned_for(
+    spec: &DatasetSpec,
+    policy: ScalePolicy,
+    seed: u64,
+    kind: PartitionerKind,
+    chips: usize,
+) -> Arc<PartitionedGraph> {
+    let key: PartKey = (key_for(spec, policy, seed), kind.name(), chips);
+    let slot = {
+        let mut cache = part_cache().lock().unwrap();
+        if let Some((_, s)) = cache.iter().find(|(k, _)| *k == key) {
+            s.clone()
+        } else {
+            if cache.len() >= CAP {
+                cache.remove(0);
+            }
+            let s: Slot<PartitionedGraph> = Slot::default();
+            cache.push((key, s.clone()));
+            s
+        }
+    };
+    slot.get_or_init(|| {
+        Arc::new(PartitionedGraph::build(
+            prepared_for(spec, policy, seed).graph_arc(),
+            kind,
+            chips,
+        ))
+    })
+    .clone()
+}
+
+/// Whether a key is currently resident (tests / metrics).
+pub fn is_cached(spec: &DatasetSpec, policy: ScalePolicy, seed: u64) -> bool {
+    let key = key_for(spec, policy, seed);
+    cache().lock().unwrap().iter().any(|(k, _)| *k == key)
+}
+
+/// Number of resident entries (always ≤ [`CAP`]).
+pub fn cached_count() -> usize {
+    cache().lock().unwrap().len()
+}
+
+/// The cache is process-wide, so tests that churn many keys (driving
+/// FIFO eviction) would race tests asserting a key stays resident.
+/// Those few tests serialize on this lock; everything else runs freely
+/// (a freshly pushed key survives the ≤ CAP−1 pushes the unguarded
+/// tests can produce).
+#[cfg(test)]
+pub(crate) static TEST_SERIAL: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    TEST_SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    #[test]
+    fn same_key_shares_one_prepared_graph() {
+        let _serial = test_guard();
+        let spec = datasets::by_code("CA").unwrap();
+        let a = prepared_for(&spec, ScalePolicy::Capped, 0xCAFE);
+        let b = prepared_for(&spec, ScalePolicy::Capped, 0xCAFE);
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one graph");
+        assert!(is_cached(&spec, ScalePolicy::Capped, 0xCAFE));
+    }
+
+    #[test]
+    fn distinct_policies_and_seeds_get_distinct_entries() {
+        let spec = datasets::by_code("CA").unwrap();
+        let a = prepared_for(&spec, ScalePolicy::Factor(2), 0xBEE0);
+        let b = prepared_for(&spec, ScalePolicy::Factor(2), 0xBEE1);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_ne!(
+            key_for(&spec, ScalePolicy::Capped, 1),
+            key_for(&spec, ScalePolicy::Full, 1)
+        );
+    }
+
+    #[test]
+    fn partitions_are_shared_per_layout() {
+        let _serial = test_guard();
+        let spec = datasets::by_code("CA").unwrap();
+        let a = partitioned_for(&spec, ScalePolicy::Capped, 0xAB, PartitionerKind::Degree, 4);
+        let b = partitioned_for(&spec, ScalePolicy::Capped, 0xAB, PartitionerKind::Degree, 4);
+        assert!(Arc::ptr_eq(&a, &b), "same layout must share one partition");
+        assert_eq!(a.k, 4);
+        let c = partitioned_for(&spec, ScalePolicy::Capped, 0xAB, PartitionerKind::Range, 4);
+        assert!(!Arc::ptr_eq(&a, &c), "different partitioner, different partition");
+    }
+
+    #[test]
+    fn cache_stays_bounded_under_key_churn() {
+        let _serial = test_guard();
+        let spec = datasets::by_code("CA").unwrap();
+        for seed in 0..(CAP as u64 + 4) {
+            let _ = prepared_for(&spec, ScalePolicy::Factor(4), 0x5EED_0000 + seed);
+        }
+        assert!(cached_count() <= CAP, "cache grew past CAP");
+    }
+}

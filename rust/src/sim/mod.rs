@@ -14,12 +14,20 @@
 //! * [`dataflow`] — the pluggable [`Dataflow`] trait
 //!   ([`RingEdgeReduce`] default, [`DenseSystolic`] baseline);
 //! * [`engine`] — [`SimSession`] planning/executing [`LayerPlan`]s into
-//!   a [`stats::SimReport`], with [`Simulator`] as the one-shot wrapper.
+//!   a [`stats::SimReport`], with [`Simulator`] as the one-shot wrapper;
+//! * [`graph_cache`] — the process-wide (dataset, policy, seed) →
+//!   [`PreparedGraph`] cache serving backends share;
+//! * [`multichip`] — the scale-out plane (DESIGN.md §8):
+//!   [`MultiChipSession`] runs one session per chip of a
+//!   [`crate::partition::PartitionedGraph`] and folds the reports with
+//!   the [`ChipLink`] halo-exchange model into a [`ScaleOutReport`].
 
 pub mod dataflow;
 pub mod davc;
 pub mod energy;
 pub mod engine;
+pub mod graph_cache;
+pub mod multichip;
 pub mod pe_array;
 pub mod prepared;
 pub mod ring;
@@ -28,6 +36,7 @@ pub mod tiles;
 
 pub use dataflow::{Dataflow, DenseSystolic, TileOutcome, TileView};
 pub use engine::{sweep, sweep_with, LayerPlan, SimSession, Simulator};
+pub use multichip::{ChipLink, ChipTopology, MultiChipSession, ScaleOutReport};
 pub use prepared::{EdgeTiling, PreparedGraph, TileEdges};
 pub use ring::RingEdgeReduce;
 pub use stats::SimReport;

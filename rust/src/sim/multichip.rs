@@ -1,0 +1,500 @@
+//! Multi-chip EnGN simulation: run one model pass over a
+//! [`PartitionedGraph`] — one [`SimSession`] per chip, fanned across the
+//! worker pool — and combine the per-chip reports with an inter-chip
+//! halo-exchange traffic model into a [`ScaleOutReport`].
+//!
+//! Execution model (DESIGN.md §8): layers are bulk-synchronous across
+//! chips. Within a layer every chip runs its own single-chip schedule
+//! (dense stages, tile loop, DAVC) over its subgraph; between layers
+//! each chip must receive the current property of every *halo* vertex —
+//! the distinct remote sources its cut edges name — before its
+//! aggregation can complete. The exchange is costed by a [`ChipLink`]
+//! (bandwidth / latency / topology: a ring mirroring EnGN's RER at chip
+//! granularity, or all-to-all), and the layer's cycles are
+//! `max_chip(compute) + comm_stall` — communication is not overlapped,
+//! which is the conservative bound.
+
+use crate::config::AcceleratorConfig;
+use crate::model::GnnModel;
+use crate::partition::PartitionedGraph;
+use crate::sim::engine::{LayerPlan, SimSession};
+use crate::sim::stats::SimReport;
+use crate::util::pool;
+
+/// Inter-chip interconnect shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipTopology {
+    /// Bidirectional ring — EnGN's ring-edge-reduce at chip
+    /// granularity; traffic routes the shorter direction.
+    Ring,
+    /// A direct link per chip pair.
+    AllToAll,
+}
+
+impl ChipTopology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChipTopology::Ring => "ring",
+            ChipTopology::AllToAll => "all-to-all",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ChipTopology> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Some(ChipTopology::Ring),
+            "all-to-all" | "all2all" | "a2a" | "full" => Some(ChipTopology::AllToAll),
+            _ => None,
+        }
+    }
+}
+
+/// The inter-chip link model: per-link bandwidth, per-hop latency and
+/// transfer energy. Defaults are SerDes-class (100 GB/s per direction,
+/// 50 ns per hop, 10 pJ/B) — an order of magnitude below HBM bandwidth,
+/// which is exactly why the cut ratio, not compute, bounds scale-out.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipLink {
+    pub topology: ChipTopology,
+    /// Per-directed-link bandwidth, GB/s.
+    pub gbps: f64,
+    /// Per-hop latency, ns.
+    pub latency_ns: f64,
+    /// Transfer energy, pJ per byte moved over a link.
+    pub pj_per_byte: f64,
+}
+
+impl ChipLink {
+    pub fn ring() -> Self {
+        Self {
+            topology: ChipTopology::Ring,
+            gbps: 100.0,
+            latency_ns: 50.0,
+            pj_per_byte: 10.0,
+        }
+    }
+
+    pub fn all_to_all() -> Self {
+        Self {
+            topology: ChipTopology::AllToAll,
+            ..Self::ring()
+        }
+    }
+
+    pub fn for_topology(t: ChipTopology) -> Self {
+        match t {
+            ChipTopology::Ring => Self::ring(),
+            ChipTopology::AllToAll => Self::all_to_all(),
+        }
+    }
+
+    /// Bytes one directed link moves per accelerator cycle.
+    fn bytes_per_cycle(&self, freq_ghz: f64) -> f64 {
+        self.gbps / freq_ghz
+    }
+
+    /// Cost one layer's halo exchange. `pair_bytes[c][p]` is the bytes
+    /// chip `c` must receive from chip `p`. Returns
+    /// `(stall_cycles, total_bytes)`: the stall is the bottleneck
+    /// link's serialization plus the longest routed hop chain's
+    /// latency (one exposed chain per layer; pipelining hides the
+    /// rest).
+    pub fn exchange_cost(&self, pair_bytes: &[Vec<f64>], freq_ghz: f64) -> (f64, f64) {
+        let k = pair_bytes.len();
+        if k <= 1 {
+            return (0.0, 0.0);
+        }
+        let mut total = 0.0f64;
+        let mut bottleneck = 0.0f64;
+        let mut max_hops = 0usize;
+        match self.topology {
+            ChipTopology::AllToAll => {
+                for row in pair_bytes {
+                    for &b in row {
+                        total += b;
+                        bottleneck = bottleneck.max(b);
+                    }
+                }
+                if total > 0.0 {
+                    max_hops = 1;
+                }
+            }
+            ChipTopology::Ring => {
+                // Route each pair the shorter way (ties clockwise) and
+                // accumulate load per directed link: cw[i] is i → i+1,
+                // ccw[i] is i → i-1 (indices mod k).
+                let mut cw = vec![0.0f64; k];
+                let mut ccw = vec![0.0f64; k];
+                for (c, row) in pair_bytes.iter().enumerate() {
+                    for (p, &b) in row.iter().enumerate() {
+                        if b == 0.0 || p == c {
+                            continue;
+                        }
+                        total += b;
+                        let d_cw = (c + k - p) % k;
+                        let d_ccw = (p + k - c) % k;
+                        if d_cw <= d_ccw {
+                            for step in 0..d_cw {
+                                cw[(p + step) % k] += b;
+                            }
+                            max_hops = max_hops.max(d_cw);
+                        } else {
+                            for step in 0..d_ccw {
+                                ccw[(p + k - step) % k] += b;
+                            }
+                            max_hops = max_hops.max(d_ccw);
+                        }
+                    }
+                }
+                bottleneck = cw
+                    .iter()
+                    .chain(ccw.iter())
+                    .fold(0.0f64, |m, &b| m.max(b));
+            }
+        }
+        let stall = bottleneck / self.bytes_per_cycle(freq_ghz)
+            + max_hops as f64 * self.latency_ns * freq_ghz;
+        (stall, total)
+    }
+}
+
+/// The combined result of a multi-chip pass: per-chip single-chip
+/// reports plus the communication stalls that glue them together.
+#[derive(Debug, Clone)]
+pub struct ScaleOutReport {
+    pub chips: usize,
+    pub partitioner: String,
+    pub topology: &'static str,
+    pub config_name: String,
+    pub model_name: String,
+    pub dataset_code: String,
+    pub freq_ghz: f64,
+    /// One full [`SimReport`] per chip.
+    pub per_chip: Vec<SimReport>,
+    /// Edges each chip executes.
+    pub edge_loads: Vec<usize>,
+    /// Per layer: `max_chip(compute) + comm`.
+    pub layer_cycles: Vec<f64>,
+    /// Per layer: the communication stall alone.
+    pub layer_comm_cycles: Vec<f64>,
+    /// Halo bytes moved over inter-chip links, whole pass.
+    pub comm_bytes: f64,
+    /// Link transfer energy, joules.
+    pub link_energy_j: f64,
+    pub cut_edges: usize,
+    pub total_edges: usize,
+    pub halo_vertices: usize,
+}
+
+impl ScaleOutReport {
+    pub fn total_cycles(&self) -> f64 {
+        self.layer_cycles.iter().sum()
+    }
+
+    pub fn comm_cycles(&self) -> f64 {
+        self.layer_comm_cycles.iter().sum()
+    }
+
+    /// End-to-end latency in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.total_cycles() / (self.freq_ghz * 1e9)
+    }
+
+    /// Share of total cycles spent stalled on halo exchange.
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total_cycles();
+        if t > 0.0 {
+            self.comm_cycles() / t
+        } else {
+            0.0
+        }
+    }
+
+    pub fn cut_ratio(&self) -> f64 {
+        if self.total_edges == 0 {
+            0.0
+        } else {
+            self.cut_edges as f64 / self.total_edges as f64
+        }
+    }
+
+    /// Fraction of the pass chip `c` spends computing (vs waiting on
+    /// stragglers and halo exchange).
+    pub fn chip_utilization(&self, c: usize) -> f64 {
+        let t = self.total_cycles();
+        if t > 0.0 {
+            (self.per_chip[c].total_cycles() / t).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Total ops *executed* across chips. Edges run exactly once (on
+    /// their destination chip), but under the halo-staging model each
+    /// chip also performs the per-vertex dense-stage work of its halo
+    /// vertices — replicated compute, PowerGraph-style — so for K > 1
+    /// this exceeds the single-chip op count; [`ScaleOutReport::gops`]
+    /// is therefore *executed* throughput, not useful-work throughput
+    /// (speedup/efficiency are cycle-based and unaffected).
+    pub fn total_ops(&self) -> f64 {
+        self.per_chip.iter().map(SimReport::total_ops).sum()
+    }
+
+    /// Total energy: per-chip (dynamic + static + HBM) plus link.
+    pub fn energy_j(&self) -> f64 {
+        self.per_chip.iter().map(SimReport::energy_j).sum::<f64>() + self.link_energy_j
+    }
+
+    /// Aggregate throughput, GOP/s.
+    pub fn gops(&self) -> f64 {
+        let s = self.seconds();
+        if s > 0.0 {
+            self.total_ops() / s / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    pub fn gops_per_watt(&self) -> f64 {
+        let e = self.energy_j();
+        if e > 0.0 {
+            self.total_ops() / e / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Speedup over a single-chip run of the same workload.
+    pub fn speedup_vs(&self, single: &SimReport) -> f64 {
+        single.total_cycles() / self.total_cycles().max(1e-12)
+    }
+
+    /// Parallel efficiency: speedup / chips (1.0 = perfect scaling).
+    pub fn efficiency_vs(&self, single: &SimReport) -> f64 {
+        self.speedup_vs(single) / self.chips as f64
+    }
+
+    /// Load-balance quality of the underlying partition.
+    pub fn max_min_load_ratio(&self) -> f64 {
+        let max = self.edge_loads.iter().copied().max().unwrap_or(0);
+        let min = self.edge_loads.iter().copied().min().unwrap_or(0);
+        max.max(1) as f64 / min.max(1) as f64
+    }
+}
+
+/// One multi-chip pass of a model over a partitioned graph: plans and
+/// executes a [`SimSession`] per chip across the worker pool, then
+/// folds the per-chip layer reports with the halo-exchange stalls.
+pub struct MultiChipSession<'a> {
+    cfg: &'a AcceleratorConfig,
+    parts: &'a PartitionedGraph,
+    model: &'a GnnModel,
+    link: ChipLink,
+}
+
+impl<'a> MultiChipSession<'a> {
+    /// Every chip runs `cfg` (a homogeneous EnGN×K system) over its
+    /// shard, linked by the default chip-granularity ring.
+    pub fn new(cfg: &'a AcceleratorConfig, parts: &'a PartitionedGraph, model: &'a GnnModel) -> Self {
+        Self {
+            cfg,
+            parts,
+            model,
+            link: ChipLink::ring(),
+        }
+    }
+
+    /// Swap the interconnect model (builder style).
+    pub fn with_link(mut self, link: ChipLink) -> Self {
+        self.link = link;
+        self
+    }
+
+    pub fn link(&self) -> &ChipLink {
+        &self.link
+    }
+
+    /// The per-layer plan of one chip's session — `engn scaleout
+    /// --explain` prints these next to the single-chip plan.
+    pub fn plan_chip(&self, chip: usize) -> Vec<LayerPlan> {
+        SimSession::new(self.cfg, &self.parts.chips[chip].prepared, self.model).plan()
+    }
+
+    /// Run the pass. Chips fan out across the worker pool (each chip's
+    /// session runs its layers inline on that worker); reports are
+    /// collected by chip index, so the result is deterministic at any
+    /// thread count, and a K = 1 partition reproduces the single-chip
+    /// [`SimReport`] bit-identically (no halo → zero comm, and the
+    /// subgraph is the input graph).
+    pub fn run(&self, dataset_code: &str) -> ScaleOutReport {
+        let per_chip: Vec<SimReport> = pool::parallel_map_ref(&self.parts.chips, |_, chip| {
+            SimSession::new(self.cfg, &chip.prepared, self.model).run(dataset_code)
+        });
+
+        // The property dimension exchanged per layer is the dimension
+        // the aggregate stage reduces — take it from a chip-0 plan
+        // (agg_dim is dimension-only, identical on every chip; the
+        // tilings this builds are cache hits for chip 0's run).
+        let agg_dims: Vec<usize> = self.plan_chip(0).iter().map(|p| p.agg_dim).collect();
+
+        // Distinct remote sources per (receiver, sender) pair — counted
+        // once; each layer scales them by its property bytes.
+        let pair_counts: Vec<Vec<usize>> =
+            (0..self.parts.k).map(|c| self.parts.halo_counts(c)).collect();
+
+        let mut layer_cycles = Vec::with_capacity(agg_dims.len());
+        let mut layer_comm_cycles = Vec::with_capacity(agg_dims.len());
+        let mut comm_bytes = 0.0f64;
+        for (l, &agg_dim) in agg_dims.iter().enumerate() {
+            let max_compute = per_chip
+                .iter()
+                .map(|r| r.layers[l].total_cycles)
+                .fold(0.0f64, f64::max);
+            let dw = (agg_dim * self.cfg.word_bytes) as f64;
+            let pair_bytes: Vec<Vec<f64>> = pair_counts
+                .iter()
+                .map(|row| row.iter().map(|&n| n as f64 * dw).collect())
+                .collect();
+            let (stall, bytes) = self.link.exchange_cost(&pair_bytes, self.cfg.freq_ghz);
+            comm_bytes += bytes;
+            layer_comm_cycles.push(stall);
+            layer_cycles.push(max_compute + stall);
+        }
+
+        ScaleOutReport {
+            chips: self.parts.k,
+            partitioner: self.parts.partitioner.to_string(),
+            topology: self.link.topology.name(),
+            config_name: self.cfg.name.clone(),
+            model_name: self.model.kind.name().to_string(),
+            dataset_code: dataset_code.to_string(),
+            freq_ghz: self.cfg.freq_ghz,
+            edge_loads: self.parts.edge_loads(),
+            layer_cycles,
+            layer_comm_cycles,
+            comm_bytes,
+            link_energy_j: comm_bytes * self.link.pj_per_byte * 1e-12,
+            cut_edges: self.parts.cut_edges(),
+            total_edges: self.parts.total_edges,
+            halo_vertices: self.parts.halo_vertices(),
+            per_chip,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{self, RmatParams};
+    use crate::model::{GnnKind, GnnModel};
+    use crate::partition::PartitionerKind;
+    use std::sync::Arc;
+
+    fn setup() -> (AcceleratorConfig, Arc<crate::graph::Graph>, GnnModel) {
+        // SD dims (F = 50): edge-heavy relative to its feature reads,
+        // so sharding the edge stream pays off unambiguously.
+        let spec = crate::graph::datasets::by_code("SD").unwrap();
+        let g = Arc::new(rmat::generate(8_000, 200_000, RmatParams::default(), 13));
+        let m = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+        (AcceleratorConfig::engn(), g, m)
+    }
+
+    #[test]
+    fn topology_parse_round_trips() {
+        for t in [ChipTopology::Ring, ChipTopology::AllToAll] {
+            assert_eq!(ChipTopology::parse(t.name()), Some(t));
+        }
+        assert_eq!(ChipTopology::parse("a2a"), Some(ChipTopology::AllToAll));
+        assert_eq!(ChipTopology::parse("mesh"), None);
+    }
+
+    #[test]
+    fn exchange_cost_zero_for_one_chip_or_no_halo() {
+        let link = ChipLink::ring();
+        assert_eq!(link.exchange_cost(&[vec![0.0]], 1.0), (0.0, 0.0));
+        let empty = vec![vec![0.0; 3]; 3];
+        let (stall, bytes) = link.exchange_cost(&empty, 1.0);
+        assert_eq!(stall, 0.0);
+        assert_eq!(bytes, 0.0);
+    }
+
+    #[test]
+    fn ring_routes_shortest_direction_and_bounds_all_to_all() {
+        // 4 chips, chip 0 receives 1000 B from each other chip.
+        let mut pair = vec![vec![0.0; 4]; 4];
+        pair[0][1] = 1000.0;
+        pair[0][2] = 1000.0;
+        pair[0][3] = 1000.0;
+        let freq = 1.0;
+        let ring = ChipLink::ring();
+        let a2a = ChipLink::all_to_all();
+        let (ring_stall, ring_bytes) = ring.exchange_cost(&pair, freq);
+        let (a2a_stall, a2a_bytes) = a2a.exchange_cost(&pair, freq);
+        assert_eq!(ring_bytes, 3000.0);
+        assert_eq!(a2a_bytes, 3000.0);
+        // Ring routing: 1→0 goes ccw over link 1→0; 2→0 ties clockwise
+        // over 2→3→0; 3→0 goes cw over 3→0 — so link 3→0 carries
+        // 2000 B, a bottleneck ≥ the all-to-all per-pair max of 1000 B.
+        assert!(ring_stall >= a2a_stall, "ring {ring_stall} < a2a {a2a_stall}");
+        assert!(a2a_stall > 0.0);
+    }
+
+    #[test]
+    fn k1_multichip_is_bit_identical_to_single_chip() {
+        let (cfg, g, m) = setup();
+        let parts = PartitionedGraph::build(g.clone(), PartitionerKind::Degree, 1);
+        let multi = MultiChipSession::new(&cfg, &parts, &m).run("PB");
+        let prepared = crate::sim::PreparedGraph::from_arc(g);
+        let single = SimSession::new(&cfg, &prepared, &m).run("PB");
+        assert_eq!(multi.chips, 1);
+        assert_eq!(multi.comm_cycles(), 0.0);
+        assert_eq!(multi.comm_bytes, 0.0);
+        assert_eq!(multi.total_cycles(), single.total_cycles());
+        assert_eq!(multi.energy_j(), single.energy_j());
+        assert_eq!(multi.total_ops(), single.total_ops());
+        assert_eq!(multi.per_chip[0].power_w, single.power_w);
+    }
+
+    #[test]
+    fn four_chips_beat_one_and_account_communication() {
+        let (cfg, g, m) = setup();
+        let parts = PartitionedGraph::build(g.clone(), PartitionerKind::Degree, 4);
+        let multi = MultiChipSession::new(&cfg, &parts, &m).run("PB");
+        let prepared = crate::sim::PreparedGraph::from_arc(g);
+        let single = SimSession::new(&cfg, &prepared, &m).run("PB");
+        assert!(multi.cut_edges > 0);
+        assert!(multi.comm_cycles() > 0.0);
+        assert!(multi.comm_bytes > 0.0);
+        assert!(multi.link_energy_j > 0.0);
+        assert!(
+            multi.total_cycles() < single.total_cycles(),
+            "4-chip {} !< 1-chip {}",
+            multi.total_cycles(),
+            single.total_cycles()
+        );
+        assert!(multi.speedup_vs(&single) > 1.0);
+        let eff = multi.efficiency_vs(&single);
+        assert!(eff > 0.0 && eff <= 1.5, "efficiency {eff}");
+        for c in 0..4 {
+            let u = multi.chip_utilization(c);
+            assert!(u > 0.0 && u <= 1.0, "chip {c} utilization {u}");
+        }
+    }
+
+    #[test]
+    fn report_totals_are_consistent() {
+        let (cfg, g, m) = setup();
+        let parts = PartitionedGraph::build(g, PartitionerKind::Range, 3);
+        let r = MultiChipSession::new(&cfg, &parts, &m)
+            .with_link(ChipLink::all_to_all())
+            .run("PB");
+        assert_eq!(r.topology, "all-to-all");
+        assert_eq!(r.layer_cycles.len(), m.layers.len());
+        assert_eq!(r.per_chip.len(), 3);
+        assert_eq!(r.edge_loads.iter().sum::<usize>(), r.total_edges);
+        assert!(r.comm_fraction() >= 0.0 && r.comm_fraction() < 1.0);
+        assert!(r.cut_ratio() > 0.0 && r.cut_ratio() < 1.0);
+        assert!(r.gops() > 0.0 && r.gops_per_watt() > 0.0);
+        assert!(r.seconds() > 0.0);
+        assert!(r.max_min_load_ratio() >= 1.0);
+    }
+}
