@@ -61,14 +61,20 @@ fn main() {
     let mut v = AcceleratorConfig::engn().named("EnGN_noreorg");
     v.edge_reorganization = false;
     variants.push(v);
-    // Dataflow ablation: HyGCN/VersaGNN-style dense systolic aggregation
-    // (no ring, no DAVC) — the poor-locality baseline the RER dataflow
-    // is compared against.
-    variants.push(
-        AcceleratorConfig::engn()
-            .with_dataflow(DataflowKind::DenseSystolic)
-            .named("EnGN_densesys"),
-    );
+    // Dataflow ablation: every alternative to the default RER — dense
+    // systolic (HyGCN-style), SpMM row-splitting (VersaGNN-style),
+    // hash-decoupled spreading (NeuraChip-style), and the per-layer
+    // adaptive planner that picks among all of them (DESIGN.md §9).
+    for &df in DataflowKind::all() {
+        if df == DataflowKind::RingEdgeReduce {
+            continue;
+        }
+        variants.push(
+            AcceleratorConfig::engn()
+                .with_dataflow(df)
+                .named(&format!("EnGN_{}", df.name())),
+        );
+    }
     // Buffer scaling (Table 4's EnGN_22MB).
     variants.push(AcceleratorConfig::engn_22mb());
 

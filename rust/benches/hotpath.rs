@@ -17,7 +17,10 @@
 //! * `partition:{range,hash,degree}` — sharding a 1 M-edge graph
 //!   across 4 chips (assignment + relabeling + per-chip preparation);
 //! * `scaleout:4chip` — a full 4-chip `MultiChipSession` pass (per-chip
-//!   sessions + halo-exchange costing) on the prepared partition.
+//!   sessions + halo-exchange costing) on the prepared partition;
+//! * `dataflow:{spmm,hash,adaptive}` — the alternative aggregation
+//!   dataflows and the per-layer adaptive planner (DESIGN.md §9) on the
+//!   same prepared PubMed graph the `sim:gcn:PB` group runs under RER.
 //!
 //! Set `BENCH_JSON=/path/to/BENCH_hotpath.json` (or run
 //! `scripts/bench_snapshot.sh`) to also write every group's median
@@ -177,6 +180,29 @@ fn main() {
         r.per_second(points),
         threads
     );
+
+    section("alternative dataflows + adaptive planner (GCN on PubMed)");
+    // Same prepared graph as sim:gcn:PB (which times RER): the two new
+    // aggregation dataflows, plus the adaptive planner — whose cost is
+    // dominated by charging every fixed kind per layer at plan time.
+    for df in [
+        engn::config::DataflowKind::SpmmSystolic,
+        engn::config::DataflowKind::HashDecoupled,
+        engn::config::DataflowKind::Adaptive,
+    ] {
+        let mut cfg = AcceleratorConfig::engn();
+        cfg.dataflow = df;
+        let label = match df {
+            engn::config::DataflowKind::SpmmSystolic => "dataflow:spmm",
+            engn::config::DataflowKind::HashDecoupled => "dataflow:hash",
+            _ => "dataflow:adaptive",
+        };
+        let r = bench(label, budget, || {
+            black_box(SimSession::new(&cfg, &prepared, &model).run("PB"));
+        });
+        record(&r, &mut medians);
+        println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
+    }
 
     section("multi-chip scale-out (GCN on PubMed, 4 chips, degree partition)");
     // The partition is built once outside the timer (its cost is the

@@ -27,28 +27,60 @@ pub enum StageOrder {
     Dasr,
 }
 
-/// Aggregation dataflow the simulator models (see DESIGN.md §6). The
-/// paper's claims are comparative — RER vs poor-locality dense arrays —
-/// so the engine executes either through one pluggable trait.
+/// Aggregation dataflow the simulator models (see DESIGN.md §6/§9).
+/// The paper's claims are comparative — RER vs poor-locality dense
+/// arrays — so the engine executes every kind through one pluggable
+/// trait; `Adaptive` defers the choice to the per-layer planner.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DataflowKind {
     /// EnGN's ring-edge-reduce PE array: ring multicast, DAVC,
     /// edge-bounded gather prefetching (the paper's design).
     RingEdgeReduce,
-    /// HyGCN/VersaGNN-style dense systolic aggregation: no ring, no
-    /// vertex cache, interval-granular streaming.
+    /// HyGCN-style dense systolic aggregation: no ring, no vertex
+    /// cache, interval-granular streaming.
     DenseSystolic,
+    /// VersaGNN-style SpMM systolic array: the tile's nonzero rows are
+    /// split and balanced across the array rows, sources load through a
+    /// wide injection port, split-row partials merge at drain.
+    SpmmSystolic,
+    /// NeuraChip-style hash-spread decoupled aggregation: updates hash
+    /// onto on-chip accumulator banks; throughput pays a collision term
+    /// and an occupancy-dependent probe factor.
+    HashDecoupled,
+    /// Not a dataflow: the planner picks one of the fixed kinds per
+    /// layer from `LayerPlan` statistics (DESIGN.md §9).
+    Adaptive,
 }
 
+/// The canonical kind list — every surface that enumerates dataflows
+/// (config tests, `examples/design_space.rs`, the report harness)
+/// iterates this one slice, so a new kind cannot silently skip one.
+const ALL_KINDS: [DataflowKind; 5] = [
+    DataflowKind::RingEdgeReduce,
+    DataflowKind::DenseSystolic,
+    DataflowKind::SpmmSystolic,
+    DataflowKind::HashDecoupled,
+    DataflowKind::Adaptive,
+];
+
 impl DataflowKind {
-    pub fn all() -> [DataflowKind; 2] {
-        [DataflowKind::RingEdgeReduce, DataflowKind::DenseSystolic]
+    pub fn all() -> &'static [DataflowKind] {
+        &ALL_KINDS
+    }
+
+    /// The executable kinds — everything except `Adaptive`, in the
+    /// canonical order the per-layer selector breaks ties by.
+    pub fn fixed() -> &'static [DataflowKind] {
+        &ALL_KINDS[..4]
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             DataflowKind::RingEdgeReduce => "rer",
             DataflowKind::DenseSystolic => "dense",
+            DataflowKind::SpmmSystolic => "spmm",
+            DataflowKind::HashDecoupled => "hash",
+            DataflowKind::Adaptive => "adaptive",
         }
     }
 
@@ -56,6 +88,9 @@ impl DataflowKind {
         match s.to_ascii_lowercase().as_str() {
             "rer" | "ring" | "ring-edge-reduce" => Some(DataflowKind::RingEdgeReduce),
             "dense" | "systolic" | "dense-systolic" => Some(DataflowKind::DenseSystolic),
+            "spmm" | "spmm-systolic" | "versa" | "versagnn" => Some(DataflowKind::SpmmSystolic),
+            "hash" | "hash-decoupled" | "neurachip" => Some(DataflowKind::HashDecoupled),
+            "adaptive" | "auto" => Some(DataflowKind::Adaptive),
             _ => None,
         }
     }
@@ -238,15 +273,32 @@ mod tests {
 
     #[test]
     fn dataflow_kind_parse_round_trips() {
-        for df in DataflowKind::all() {
+        for &df in DataflowKind::all() {
             assert_eq!(DataflowKind::parse(df.name()), Some(df));
         }
         assert_eq!(DataflowKind::parse("ring"), Some(DataflowKind::RingEdgeReduce));
         assert_eq!(DataflowKind::parse("systolic"), Some(DataflowKind::DenseSystolic));
+        assert_eq!(DataflowKind::parse("versagnn"), Some(DataflowKind::SpmmSystolic));
+        assert_eq!(DataflowKind::parse("neurachip"), Some(DataflowKind::HashDecoupled));
+        assert_eq!(DataflowKind::parse("auto"), Some(DataflowKind::Adaptive));
         assert_eq!(DataflowKind::parse("nope"), None);
         assert_eq!(AcceleratorConfig::engn().dataflow, DataflowKind::RingEdgeReduce);
         let dense = AcceleratorConfig::engn().with_dataflow(DataflowKind::DenseSystolic);
         assert_eq!(dense.dataflow, DataflowKind::DenseSystolic);
+    }
+
+    #[test]
+    fn dataflow_fixed_slice_excludes_adaptive() {
+        assert_eq!(DataflowKind::fixed().len(), DataflowKind::all().len() - 1);
+        assert!(!DataflowKind::fixed().contains(&DataflowKind::Adaptive));
+        assert!(DataflowKind::all().contains(&DataflowKind::Adaptive));
+        // Canonical tie-break order: the paper's design first.
+        assert_eq!(DataflowKind::fixed()[0], DataflowKind::RingEdgeReduce);
+        // Names are unique (batch keys, bench groups, CLI flags rely on it).
+        let mut names: Vec<&str> = DataflowKind::all().iter().map(|d| d.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), DataflowKind::all().len());
     }
 
     #[test]

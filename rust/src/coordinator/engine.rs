@@ -649,6 +649,21 @@ mod tests {
         let s = res[0].as_ref().expect("sim ok").as_sim().expect("sim output").clone();
         assert_eq!(s.config, "EnGN@dense");
         assert!(s.cycles > 0.0);
+        // Every non-default kind — the two sparse baselines and the
+        // adaptive planner included — keys and runs under its own name.
+        for kind in [
+            DataflowKind::SpmmSystolic,
+            DataflowKind::HashDecoupled,
+            DataflowKind::Adaptive,
+        ] {
+            let job = SimJob::new(GnnKind::Gcn, "CA").with_dataflow(kind);
+            let key = format!("sim:EnGN@{}:CA", kind.name());
+            assert_eq!(JobPayload::Sim(job.clone()).batch_key(), key);
+            let res = be.execute_batch(vec![JobPayload::Sim(job)]);
+            let s = res[0].as_ref().expect("sim ok").as_sim().expect("sim output").clone();
+            assert_eq!(s.config, format!("EnGN@{}", kind.name()));
+            assert!(s.cycles > 0.0);
+        }
     }
 
     #[test]

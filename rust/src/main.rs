@@ -2,8 +2,11 @@
 //!
 //! Subcommands:
 //!   datasets                         list the Table-5 dataset suite
-//!   run    --model M --dataset D [--dataflow rer|dense]
-//!                                    simulate one inference pass
+//!   run    --model M --dataset D [--dataflow rer|dense|spmm|hash|adaptive]
+//!          [--explain]              simulate one inference pass;
+//!                                      --explain prints the per-layer
+//!                                      plan (and, under adaptive, why
+//!                                      each dataflow was chosen)
 //!   bench  --exp <id|all> [--out D]  regenerate paper tables/figures
 //!   infer  --artifacts DIR [--name N]  functional inference via PJRT
 //!   serve  --artifacts DIR [--requests N] [--workers W] [--queue C]
@@ -11,7 +14,7 @@
 //!                                      multi-worker batched execution,
 //!                                      deadline-aware shedding)
 //!   whatif --model M --dataset D [--platforms P,..] [--workers W]
-//!          [--dataflow rer|dense] [--explain]
+//!          [--dataflow rer|dense|spmm|hash|adaptive] [--explain]
 //!                                      capacity planning through the
 //!                                      serving coordinator: sim + cost
 //!                                      jobs on the analytic backends;
@@ -19,6 +22,7 @@
 //!                                      LayerPlan first
 //!   scaleout --model M --dataset D [--chips K] [--partitioner P]
 //!            [--topology ring|all2all] [--link-gbps G] [--explain]
+//!            [--dataflow rer|dense|spmm|hash|adaptive]
 //!                                      multi-chip EnGN×K simulation
 //!                                      over a partitioned graph
 
@@ -138,7 +142,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
     }
     if let Some(s) = flags.get("dataflow") {
         let Some(df) = DataflowKind::parse(s) else {
-            eprintln!("unknown dataflow {s:?} (rer|dense)");
+            eprintln!("unknown dataflow {s:?} (rer|dense|spmm|hash|adaptive)");
             return 2;
         };
         cfg.dataflow = df;
@@ -207,6 +211,15 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
     let prepared = PreparedGraph::from_arc(std::sync::Arc::new(spec.instantiate(policy, 0xE16A)));
     let model = GnnModel::for_dataset(kind, &spec);
     let session = SimSession::new(&cfg, &prepared, &model);
+    if flags.contains_key("explain") {
+        let plans = session.plan();
+        print_layer_plans(
+            &format!("plan: {} on {} under {}", kind.name(), spec.code, cfg.name),
+            cfg.dataflow,
+            &plans,
+        );
+        println!();
+    }
     let r = session.run(spec.code);
     println!(
         "\n{} on {} under {} ({:?} fidelity, {} dataflow)",
@@ -214,7 +227,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         spec.name,
         cfg.name,
         cfg.fidelity,
-        session.dataflow_name()
+        cfg.dataflow.name()
     );
     println!("  cycles       : {}", si(r.total_cycles()));
     println!("  latency      : {}", fmt_time(r.seconds()));
@@ -475,7 +488,7 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
     let mut sim_job = SimJob::new(kind, code);
     if let Some(s) = flags.get("dataflow") {
         let Some(df) = DataflowKind::parse(s) else {
-            eprintln!("unknown dataflow {s:?} (rer|dense)");
+            eprintln!("unknown dataflow {s:?} (rer|dense|spmm|hash|adaptive)");
             return 2;
         };
         sim_job = sim_job.with_dataflow(df);
@@ -490,7 +503,7 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
         let plans = session.plan();
         print_layer_plans(
             &format!("plan: {} on {} under {}", kind.name(), spec.code, sim_job.config.name),
-            &session,
+            sim_job.config.dataflow,
             &plans,
         );
         println!();
@@ -562,14 +575,17 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
     }
 }
 
-/// Print a session's per-layer [`LayerPlan`]s — stage order, grid Q,
-/// tile-schedule choice, tile count — so scheduling and partitioning
-/// decisions are inspectable (`whatif --explain`, `scaleout --explain`).
-fn print_layer_plans(label: &str, session: &SimSession, plans: &[LayerPlan]) {
-    println!("{label} (dataflow {})", session.dataflow_name());
+/// Print a session's per-layer [`LayerPlan`]s — dataflow, stage order,
+/// grid Q, tile-schedule choice, tile count — so scheduling and
+/// partitioning decisions are inspectable (`run --explain`,
+/// `whatif --explain`, `scaleout --explain`). Under the adaptive
+/// planner each layer also prints its [`engn::sim::Selection`]
+/// rationale.
+fn print_layer_plans(label: &str, configured: DataflowKind, plans: &[LayerPlan]) {
+    println!("{label} (dataflow {})", configured.name());
     println!(
-        "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7}",
-        "layer", "F", "H", "order", "Q", "span", "sched", "tiles"
+        "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9}",
+        "layer", "F", "H", "order", "Q", "span", "sched", "tiles", "dataflow"
     );
     for p in plans {
         let order = match p.order {
@@ -577,7 +593,7 @@ fn print_layer_plans(label: &str, session: &SimSession, plans: &[LayerPlan]) {
             ExecOrder::AggregateFirst => "AFU",
         };
         println!(
-            "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7}",
+            "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9}",
             p.layer_idx,
             p.dims.f_in,
             p.dims.f_out,
@@ -585,8 +601,12 @@ fn print_layer_plans(label: &str, session: &SimSession, plans: &[LayerPlan]) {
             p.q,
             p.span,
             format!("{:?}", p.choice).to_lowercase(),
-            p.tiling.num_tiles()
+            p.tiling.num_tiles(),
+            p.dataflow.name()
         );
+        if let Some(sel) = &p.selection {
+            println!("        layer {}: {}", p.layer_idx, sel.why);
+        }
     }
 }
 
@@ -644,7 +664,7 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
     }
     if let Some(s) = flags.get("dataflow") {
         let Some(df) = DataflowKind::parse(s) else {
-            eprintln!("unknown dataflow {s:?} (rer|dense)");
+            eprintln!("unknown dataflow {s:?} (rer|dense|spmm|hash|adaptive)");
             return 2;
         };
         cfg.dataflow = df;
@@ -731,11 +751,11 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
         println!();
         let single_session = SimSession::new(&cfg, &prepared, &model);
         let single_plans = single_session.plan();
-        print_layer_plans("single-chip plan", &single_session, &single_plans);
+        print_layer_plans("single-chip plan", cfg.dataflow, &single_plans);
         for (c, chip) in parts.chips.iter().enumerate() {
             let s = SimSession::new(&cfg, &chip.prepared, &model);
             let plans = s.plan();
-            print_layer_plans(&format!("chip {c} plan"), &s, &plans);
+            print_layer_plans(&format!("chip {c} plan"), cfg.dataflow, &plans);
         }
     }
     0

@@ -12,7 +12,7 @@ use crate::baselines::cpu::{CpuModel, Framework};
 use crate::baselines::gpu::GpuModel;
 use crate::baselines::hygcn::HygcnModel;
 use crate::baselines::{BaselineReport, Workload};
-use crate::config::{AcceleratorConfig, StageOrder, TileOrder};
+use crate::config::{AcceleratorConfig, DataflowKind, StageOrder, TileOrder};
 use crate::graph::datasets::{self, DatasetSpec, ScalePolicy};
 use crate::model::{GnnKind, GnnModel, LayerDims};
 use crate::partition::{PartitionedGraph, PartitionerKind};
@@ -877,6 +877,64 @@ pub fn scaleout(eval: &Eval) -> Table {
 
 // ---------------------------------------------------------------------------
 
+/// Per-layer dataflow planning (DESIGN.md §9): the adaptive planner vs
+/// every fixed dataflow across the full Table-5 suite. Not a paper
+/// figure — this is the acceptance view of `DataflowKind::Adaptive`:
+/// the planner charges every fixed kind per layer through the executor
+/// and keeps the argmin, so the adaptive column can never exceed any
+/// fixed column.
+pub fn adaptive(eval: &Eval) -> Table {
+    let mut cols: Vec<&str> = vec!["model", "dataset"];
+    cols.extend(DataflowKind::fixed().iter().map(|df| df.name()));
+    cols.extend(["adaptive", "best fixed/adaptive", "per-layer picks"]);
+    let mut t = Table::new(
+        "adaptive",
+        "Per-layer adaptive dataflow vs every fixed dataflow (total cycles)",
+        &cols,
+    );
+    eval.warm_suite();
+    let points = pool::parallel_map(eval.suite(), |_, (kind, spec)| {
+        let fixed: Vec<f64> = DataflowKind::fixed()
+            .iter()
+            .map(|&df| {
+                let mut cfg = AcceleratorConfig::engn();
+                cfg.dataflow = df;
+                eval.engn_with(cfg, kind, &spec).total_cycles()
+            })
+            .collect();
+        let mut cfg = AcceleratorConfig::engn();
+        cfg.dataflow = DataflowKind::Adaptive;
+        let total = eval.engn_with(cfg.clone(), kind, &spec).total_cycles();
+        let prepared = eval.prepared(&spec);
+        let model = GnnModel::for_dataset(kind, &spec);
+        let picks: Vec<&'static str> = SimSession::new(&cfg, &prepared, &model)
+            .plan()
+            .iter()
+            .map(|p| p.dataflow.name())
+            .collect();
+        (kind, spec, fixed, total, picks.join(","))
+    });
+    let mut ratios = Vec::new();
+    for (kind, spec, fixed, total, picks) in points {
+        let best = fixed.iter().copied().fold(f64::INFINITY, f64::min);
+        ratios.push(best / total);
+        let mut row = vec![kind.name().to_string(), spec.code.into()];
+        row.extend(fixed.iter().map(|c| format!("{c:.3e}")));
+        row.push(format!("{total:.3e}"));
+        row.push(x(best / total));
+        row.push(picks);
+        t.row(row);
+    }
+    t.note(format!(
+        "adaptive never loses: best-fixed/adaptive >= 1.00x on every pair (geomean {}); \
+         the picks column lists the dataflow the planner resolved for each layer",
+        x(geomean(&ratios))
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------------
+
 /// Every experiment in paper order.
 pub fn all(eval: &Eval) -> Vec<Table> {
     vec![
@@ -895,6 +953,7 @@ pub fn all(eval: &Eval) -> Vec<Table> {
         fig16(eval),
         fig17(eval),
         scaleout(eval),
+        adaptive(eval),
     ]
 }
 
@@ -916,13 +975,14 @@ pub fn by_id(eval: &Eval, id: &str) -> Option<Table> {
         "fig16" => Some(fig16(eval)),
         "fig17" => Some(fig17(eval)),
         "scaleout" => Some(scaleout(eval)),
+        "adaptive" => Some(adaptive(eval)),
         _ => None,
     }
 }
 
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "fig2", "table2", "fig3", "table3", "table4", "fig9", "fig10", "fig11",
-    "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "scaleout",
+    "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "scaleout", "adaptive",
 ];
 
 #[cfg(test)]

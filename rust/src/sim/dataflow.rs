@@ -7,13 +7,26 @@
 //! * [`crate::sim::ring::RingEdgeReduce`] — EnGN's ring-edge-reduce PE
 //!   array (paper §4.1), with the DAVC hierarchy and edge-bounded
 //!   gather prefetching. The default.
-//! * [`DenseSystolic`] — a HyGCN/VersaGNN-style dense-array baseline:
-//!   the adjacency tile is processed as a dense block, every source row
+//! * [`DenseSystolic`] — a HyGCN-style dense-array baseline: the
+//!   adjacency tile is processed as a dense block, every source row
 //!   of the interval streams through the array regardless of occupancy,
 //!   there is no ring multicast and no vertex cache. This is the
 //!   poor-locality alternative the paper's comparisons are made
 //!   against, modeled inside the same engine so the claims are testable
 //!   side by side.
+//! * [`SpmmSystolic`] — VersaGNN's SpMM systolic array: the tile's
+//!   nonzeros are row-split and balanced across the array rows, so the
+//!   edge stream — not the interval — bounds the tile, at the price of
+//!   a source-injection bound, a split-row partial merge and a systolic
+//!   fill per tile. No vertex cache.
+//! * [`HashDecoupled`] — NeuraChip's hash-spread decoupled
+//!   aggregation: updates hash onto accumulator banks, so there is no
+//!   source-stream bound at all; throughput pays a bank-collision term
+//!   (balls-into-bins acceptance) and an occupancy-dependent probe
+//!   factor. No vertex cache.
+//!
+//! The per-layer planner picks among these under
+//! `DataflowKind::Adaptive` (see `sim/select.rs`, DESIGN.md §9).
 
 use crate::config::{AcceleratorConfig, DataflowKind};
 use crate::graph::Edge;
@@ -98,11 +111,36 @@ pub trait Dataflow: Send + Sync {
     }
 }
 
-/// Instantiate the dataflow a configuration names.
+/// The dataflow a fixed kind names, as a zero-allocation static
+/// reference (every implementation is a stateless unit struct). The
+/// engine dispatches each planned layer through this.
+///
+/// Panics on [`DataflowKind::Adaptive`]: adaptive is a planner policy,
+/// not an executable dataflow — `SimSession::plan` resolves it to a
+/// fixed kind per layer before any tile is charged.
+pub fn for_kind_static(kind: DataflowKind) -> &'static dyn Dataflow {
+    match kind {
+        DataflowKind::RingEdgeReduce => &RingEdgeReduce,
+        DataflowKind::DenseSystolic => &DenseSystolic,
+        DataflowKind::SpmmSystolic => &SpmmSystolic,
+        DataflowKind::HashDecoupled => &HashDecoupled,
+        DataflowKind::Adaptive => {
+            panic!("DataflowKind::Adaptive resolves to a fixed kind per layer at planning time")
+        }
+    }
+}
+
+/// Boxed variant of [`for_kind_static`], kept for callers that want an
+/// owned trait object. Same `Adaptive` panic.
 pub fn for_kind(kind: DataflowKind) -> Box<dyn Dataflow> {
     match kind {
         DataflowKind::RingEdgeReduce => Box::new(RingEdgeReduce),
         DataflowKind::DenseSystolic => Box::new(DenseSystolic),
+        DataflowKind::SpmmSystolic => Box::new(SpmmSystolic),
+        DataflowKind::HashDecoupled => Box::new(HashDecoupled),
+        DataflowKind::Adaptive => {
+            panic!("DataflowKind::Adaptive resolves to a fixed kind per layer at planning time")
+        }
     }
 }
 
@@ -144,6 +182,104 @@ impl Dataflow for DenseSystolic {
         TileOutcome {
             cycles,
             ideal_cycles: cycles,
+            edges: tile.edges.len() as u64,
+            sources: tile.distinct_src as u64,
+        }
+    }
+}
+
+/// VersaGNN-style SpMM systolic aggregation: the tile's nonzeros are
+/// split by row and balanced across the `pe_rows` array rows, so the
+/// edge stream bounds the tile instead of the interval — the fix for
+/// `DenseSystolic`'s sparse-tile waste. The costs that remain honest:
+/// distinct source vectors load through the `pe_cols`-wide injection
+/// port (double-buffered against compute, so it binds as a max), rows
+/// split across PEs merge their partials at drain, and every tile pays
+/// one systolic fill. No vertex cache: partials live in the array and
+/// spill through the result bank at interval granularity.
+pub struct SpmmSystolic;
+
+impl Dataflow for SpmmSystolic {
+    fn name(&self) -> &'static str {
+        "spmm-systolic"
+    }
+
+    fn uses_davc(&self) -> bool {
+        false
+    }
+
+    fn edge_bounded_gather(&self) -> bool {
+        true
+    }
+
+    fn aggregate_tile(&self, cfg: &AcceleratorConfig, tile: &TileView<'_>) -> TileOutcome {
+        if tile.edges.is_empty() {
+            return TileOutcome::default();
+        }
+        let rows = cfg.pe_rows.max(1) as u64;
+        let e = tile.edges.len() as u64;
+        // Balanced row-splitting: each array row reduces ~e/rows
+        // nonzeros, one multiply-accumulate per cycle.
+        let stream = e.div_ceil(rows);
+        // Distinct source vectors injected through the pe_cols-wide
+        // port; overlapped with compute, so the slower of the two binds.
+        let load = (tile.distinct_src as u64).div_ceil(cfg.pe_cols.max(1) as u64);
+        // Split rows merge their partials at drain, rows in parallel.
+        let merge = (tile.distinct_dst as u64).div_ceil(rows);
+        let cycles = stream.max(load) + merge + rows;
+        TileOutcome {
+            cycles,
+            // Ideal topology: perfectly overlapped load, free fill.
+            ideal_cycles: stream + merge,
+            edges: e,
+            sources: tile.distinct_src as u64,
+        }
+    }
+}
+
+/// NeuraChip-style hash-spread decoupled aggregation: a dispatcher
+/// hashes each update onto one of the on-chip accumulator banks, so
+/// there is no per-tile source-stream bound at all — the win on tiles
+/// whose distinct-source count exceeds the edge budget. Throughput is
+/// bounded by bank acceptance: `lanes` updates issue per cycle into
+/// `banks` single-ported banks, and the balls-into-bins expectation
+/// `banks·(1 − (1 − 1/banks)^lanes)` of them land collision-free
+/// (≈ 63% of peak when lanes = banks). Each update additionally pays an
+/// open-addressing probe factor that grows with the hash table's
+/// occupancy (distinct destinations / interval span), capped at 2×.
+pub struct HashDecoupled;
+
+impl Dataflow for HashDecoupled {
+    fn name(&self) -> &'static str {
+        "hash-decoupled"
+    }
+
+    fn uses_davc(&self) -> bool {
+        false
+    }
+
+    fn edge_bounded_gather(&self) -> bool {
+        true
+    }
+
+    fn aggregate_tile(&self, cfg: &AcceleratorConfig, tile: &TileView<'_>) -> TileOutcome {
+        if tile.edges.is_empty() {
+            return TileOutcome::default();
+        }
+        let lanes = cfg.pe_rows.max(1) as f64;
+        let e = tile.edges.len() as f64;
+        let d = tile.distinct_dst.max(1) as f64;
+        // Fewer distinct destinations than lanes leaves banks idle and
+        // collisions certain — the hash spread cannot beat d banks.
+        let banks = lanes.min(d);
+        let accepted = banks * (1.0 - (1.0 - 1.0 / banks).powf(lanes));
+        let occupancy = (d / tile.span.max(1) as f64).min(1.0);
+        let probe = 1.0 / (1.0 - 0.5 * occupancy);
+        let cycles = (e * probe / accepted).ceil() as u64;
+        TileOutcome {
+            cycles,
+            // Ideal topology: collision-free banks at full occupancy.
+            ideal_cycles: (e / lanes).ceil() as u64,
             edges: tile.edges.len() as u64,
             sources: tile.distinct_src as u64,
         }
@@ -203,6 +339,91 @@ mod tests {
     fn for_kind_matches_names() {
         assert_eq!(for_kind(DataflowKind::RingEdgeReduce).name(), "ring-edge-reduce");
         assert_eq!(for_kind(DataflowKind::DenseSystolic).name(), "dense-systolic");
+        assert_eq!(for_kind(DataflowKind::SpmmSystolic).name(), "spmm-systolic");
+        assert_eq!(for_kind(DataflowKind::HashDecoupled).name(), "hash-decoupled");
+        // Static and boxed dispatch agree on every fixed kind.
+        for &k in DataflowKind::fixed() {
+            assert_eq!(for_kind_static(k).name(), for_kind(k).name());
+            assert_eq!(for_kind_static(k).uses_davc(), for_kind(k).uses_davc());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "Adaptive")]
+    fn adaptive_is_not_an_executable_dataflow() {
+        let _ = for_kind_static(DataflowKind::Adaptive);
+    }
+
+    #[test]
+    fn spmm_systolic_row_splitting_contract() {
+        let cfg = AcceleratorConfig::engn(); // 128 x 16
+        let edges: Vec<Edge> = (0..12_800u32).map(|i| Edge::new(i % 200, i % 100)).collect();
+        let mut view = tile(&edges, 1024);
+        view.distinct_src = 200;
+        view.distinct_dst = 100;
+        let o = SpmmSystolic.aggregate_tile(&cfg, &view);
+        // stream = ceil(12800/128) = 100 binds over load = ceil(200/16)
+        // = 13; merge = ceil(100/128) = 1; fill = 128.
+        assert_eq!(o.cycles, 100 + 1 + 128);
+        assert_eq!(o.sources, 200);
+        // Nonzero-bounded, not interval-bounded: a near-empty tile in a
+        // huge interval is cheap where DenseSystolic pays full sweeps.
+        let one = [Edge::new(0, 0)];
+        let mut sparse = tile(&one, 4096);
+        sparse.distinct_src = 1;
+        sparse.distinct_dst = 1;
+        let spmm = SpmmSystolic.aggregate_tile(&cfg, &sparse);
+        let dense = DenseSystolic.aggregate_tile(&cfg, &sparse);
+        assert!(spmm.cycles < dense.cycles);
+        assert_eq!(SpmmSystolic.aggregate_tile(&cfg, &tile(&[], 4096)), TileOutcome::default());
+        // Honest contracts: no DAVC, bounded gather, edge-driven cycles.
+        assert!(!SpmmSystolic.uses_davc());
+        assert!(SpmmSystolic.edge_bounded_gather());
+        assert!(SpmmSystolic.cycles_scale_with_edges());
+    }
+
+    #[test]
+    fn hash_decoupled_collision_and_occupancy_contract() {
+        let cfg = AcceleratorConfig::engn(); // 128 lanes
+        let edges: Vec<Edge> = (0..12_800u32).map(|i| Edge::new(i % 997, i % 512)).collect();
+        let mut view = tile(&edges, 4096);
+        view.distinct_src = 997;
+        view.distinct_dst = 512;
+        let o = HashDecoupled.aggregate_tile(&cfg, &view);
+        // Collisions cap acceptance below the lane count, so the tile
+        // must cost more than the ideal e/lanes...
+        assert!(o.cycles > o.ideal_cycles);
+        // ...but acceptance ≈ 63% of peak and probe ≤ 2x bound it.
+        let floor = (12_800.0 / 128.0).ceil() as u64;
+        assert!(o.cycles <= floor * 4, "cycles {} vs floor {floor}", o.cycles);
+        // Higher occupancy (same edges, tighter span) costs more probes.
+        let mut packed = view;
+        packed.span = 512;
+        let worse = HashDecoupled.aggregate_tile(&cfg, &packed);
+        assert!(worse.cycles > o.cycles);
+        assert_eq!(HashDecoupled.aggregate_tile(&cfg, &tile(&[], 64)), TileOutcome::default());
+        assert!(!HashDecoupled.uses_davc());
+        assert!(HashDecoupled.edge_bounded_gather());
+        assert!(HashDecoupled.cycles_scale_with_edges());
+    }
+
+    #[test]
+    fn hash_decoupled_has_no_source_stream_bound() {
+        // A tile whose distinct-source count dwarfs its edge budget per
+        // row: SpMM binds on injection, hash does not care.
+        let cfg = AcceleratorConfig::engn();
+        let edges: Vec<Edge> = (0..4096u32).map(|i| Edge::new(i, i)).collect();
+        let mut view = tile(&edges, 4096);
+        view.distinct_src = 4096;
+        view.distinct_dst = 4096;
+        let spmm = SpmmSystolic.aggregate_tile(&cfg, &view);
+        let hash = HashDecoupled.aggregate_tile(&cfg, &view);
+        assert!(
+            hash.cycles < spmm.cycles,
+            "hash {} >= spmm {}",
+            hash.cycles,
+            spmm.cycles
+        );
     }
 
     #[test]

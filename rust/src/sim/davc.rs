@@ -99,6 +99,17 @@ impl Lru {
     fn len(&self) -> usize {
         self.map.len()
     }
+
+    /// Empty the cache and resize it to `capacity`, keeping the map and
+    /// slab allocations. Behaviorally identical to `Lru::new(capacity)`.
+    fn reset(&mut self, capacity: usize) {
+        self.capacity = capacity;
+        self.map.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
 }
 
 /// The degree-aware vertex cache.
@@ -127,6 +138,22 @@ impl Davc {
             lru: Lru::new(capacity_entries - reserved_n),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Re-initialize an existing cache in place — same partitioning
+    /// rule as [`Davc::new`], but the reserved map, LRU map and slab
+    /// keep their allocations. The engine's per-layer scratch reuses
+    /// one `Davc` across `execute_layer` calls through this; a reset
+    /// cache replays any stream exactly like a fresh one (pinned by
+    /// `reset_matches_fresh_construction`).
+    pub fn reset(&mut self, capacity_entries: usize, reserved_frac: f64, degree_ranked: &[u32]) {
+        let reserved_n = ((capacity_entries as f64 * reserved_frac).round() as usize)
+            .min(capacity_entries)
+            .min(degree_ranked.len());
+        self.reserved.clear();
+        self.reserved.extend(degree_ranked[..reserved_n].iter().map(|&v| (v, ())));
+        self.lru.reset(capacity_entries - reserved_n);
+        self.stats = CacheStats::default();
     }
 
     /// Line capacity for a buffer size and property dimension.
@@ -295,6 +322,42 @@ mod tests {
         assert_eq!(out.hits, 5);
         // Cache state itself advanced unscaled.
         assert_eq!(c.stats.accesses, 5);
+    }
+
+    /// A reset cache is indistinguishable from a freshly constructed
+    /// one on the same replay — the invariant that lets the engine keep
+    /// one scratch `Davc` across layers without changing any report.
+    #[test]
+    fn reset_matches_fresh_construction() {
+        prop_check(10, 0xDA7C_5E7, |rng| {
+            let n = rng.gen_usize(128, 1024);
+            let e = rng.gen_usize(n, 5 * n);
+            let g = rmat::generate(n, e, rmat::RmatParams::default(), rng.next_u64());
+            let ranked = g.vertices_by_in_degree_desc();
+            let cap = rng.gen_usize(1, 256);
+            let frac = rng.gen_usize(0, 100) as f64 / 100.0;
+            // Dirty the scratch with a different shape and stream first.
+            let mut scratch = Davc::new(512, 0.25, &ranked);
+            for v in 0..600u32 {
+                scratch.access(v % 301);
+            }
+            scratch.reset(cap, frac, &ranked);
+            let mut fresh = Davc::new(cap, frac, &ranked);
+            for edge in &g.edges {
+                let a = scratch.access(edge.dst);
+                let b = fresh.access(edge.dst);
+                if a != b {
+                    return Err(format!("reset/fresh diverged on v{} (cap {cap})", edge.dst));
+                }
+            }
+            if scratch.stats != fresh.stats || scratch.resident() != fresh.resident() {
+                return Err(format!(
+                    "stats diverged: reset {:?} vs fresh {:?}",
+                    scratch.stats, fresh.stats
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -4,10 +4,11 @@
 //!   (degree ranking, relation histogram, per-Q edge tilings) built
 //!   once and shared across layers, runs, sweeps and serving batches;
 //! * [`SimSession`] — plans one pass of a model over a prepared graph
-//!   as per-layer [`LayerPlan`]s (stage order, tiling, schedule choice)
-//!   and executes them through a pluggable
-//!   [`crate::sim::Dataflow`] (ring-edge-reduce by default, dense
-//!   systolic for the paper's comparison baselines);
+//!   as per-layer [`LayerPlan`]s (stage order, tiling, schedule choice,
+//!   **and the dataflow**: each plan names the
+//!   [`crate::sim::Dataflow`] it executes through — the configured kind
+//!   for fixed configurations, or the per-layer winner chosen by the
+//!   `sim::select` planner under `DataflowKind::Adaptive`);
 //! * [`Simulator`] — the original convenience entry points, kept as
 //!   thin compatibility wrappers that prepare-and-run in one call.
 //!
@@ -16,18 +17,20 @@
 //! * `Phase` — replay a bounded sample per tile and extrapolate
 //!   (validated against `Cycle` by integration tests; see DESIGN.md §5).
 
-use crate::config::{AcceleratorConfig, Fidelity, StageOrder};
+use crate::config::{AcceleratorConfig, DataflowKind, Fidelity, StageOrder};
 use crate::graph::Graph;
 use crate::model::ops::{self, ExecOrder, StageWork, Work};
 use crate::model::{GnnModel, LayerDims};
-use crate::sim::dataflow::{self, Dataflow, TileOutcome, TileView};
+use crate::sim::dataflow::{self, TileOutcome, TileView};
 use crate::sim::davc::Davc;
 use crate::sim::energy::{self, EnergyBreakdown};
 use crate::sim::pe_array;
 use crate::sim::prepared::{EdgeTiling, PreparedGraph};
+use crate::sim::select::{self, LayerFeatures};
 use crate::sim::stats::{CacheStats, LayerReport, SimReport, StageStats, TrafficStats};
 use crate::sim::tiles;
 use crate::util::{ceil_div, pool};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// Edge-sample budget per layer in `Phase` fidelity. Sampling keeps the
@@ -104,7 +107,8 @@ pub fn sweep_with(
 
 /// Execution plan for one layer: everything decided before a cycle is
 /// charged — stage order, work decomposition, grid partition, the
-/// shared tiling, and the tile-schedule choice.
+/// shared tiling, the tile-schedule choice, and the dataflow the layer
+/// executes through.
 pub struct LayerPlan {
     pub layer_idx: usize,
     pub dims: LayerDims,
@@ -114,8 +118,15 @@ pub struct LayerPlan {
     pub agg_dim: usize,
     pub q: usize,
     pub span: usize,
+    /// The fixed dataflow this layer executes through. Fixed
+    /// configurations plan every layer to `cfg.dataflow`; under
+    /// `DataflowKind::Adaptive` the planner picks per layer.
+    pub dataflow: DataflowKind,
     pub choice: tiles::ScheduleChoice,
     pub tiling: Arc<EdgeTiling>,
+    /// Present only when the planner made the choice (`Adaptive`):
+    /// the features, measured candidate costs, and rationale.
+    pub selection: Option<select::Selection>,
 }
 
 /// One simulation pass of a model over a prepared graph under one
@@ -125,40 +136,44 @@ pub struct SimSession<'a> {
     cfg: &'a AcceleratorConfig,
     prepared: &'a PreparedGraph,
     model: &'a GnnModel,
-    dataflow: Box<dyn Dataflow>,
+}
+
+thread_local! {
+    /// Per-thread DAVC scratch reused across `execute_layer` calls
+    /// (the replay allocation hot spot): `Davc::reset` re-partitions it
+    /// in place, keeping the reserved-map/LRU allocations. A reset
+    /// cache replays identically to a fresh one (pinned in davc.rs),
+    /// so reports are unchanged at any thread count.
+    static DAVC_SCRATCH: RefCell<Option<Davc>> = const { RefCell::new(None) };
 }
 
 impl<'a> SimSession<'a> {
-    /// A session executing through the dataflow `cfg.dataflow` names.
+    /// A session executing through the dataflow(s) `cfg.dataflow`
+    /// names — a fixed kind for every layer, or per-layer choices
+    /// under [`DataflowKind::Adaptive`].
     pub fn new(
         cfg: &'a AcceleratorConfig,
         prepared: &'a PreparedGraph,
         model: &'a GnnModel,
     ) -> Self {
-        Self {
-            cfg,
-            prepared,
-            model,
-            dataflow: dataflow::for_kind(cfg.dataflow),
-        }
+        Self { cfg, prepared, model }
     }
 
-    /// Swap in a custom dataflow implementation (builder style).
-    pub fn with_dataflow(mut self, dataflow: Box<dyn Dataflow>) -> Self {
-        self.dataflow = dataflow;
-        self
-    }
-
-    pub fn dataflow_name(&self) -> &'static str {
-        self.dataflow.name()
-    }
-
-    /// Plan every layer of the pass without executing anything. The
-    /// distinct tiling Qs the plan needs are speculatively pre-built
-    /// across the worker pool (the `PreparedGraph` cache tolerates
-    /// racing builds), so a multi-Q pass pays max(build) instead of
-    /// sum(build) wall time; the plans themselves are assembled
-    /// serially, in layer order, from cache hits.
+    /// Plan every layer of the pass. The distinct tiling Qs the plan
+    /// needs are speculatively pre-built across the worker pool (the
+    /// `PreparedGraph` cache tolerates racing builds), so a multi-Q
+    /// pass pays max(build) instead of sum(build) wall time; the plans
+    /// themselves are assembled serially, in layer order, from cache
+    /// hits.
+    ///
+    /// Fixed configurations execute nothing here. Under `Adaptive`,
+    /// every fixed dataflow candidate is charged through
+    /// [`Self::execute_layer`] — the same accounting `run()` uses — and
+    /// the per-layer argmin wins (ties to the canonical order). Layer
+    /// costs are independent (fresh DAVC, per-layer traffic and
+    /// energy), so per-layer argmins compose: the adaptive pass totals
+    /// Σᵢ minₖ cost(i, k) ≤ minₖ Σᵢ cost(i, k), i.e. it can never lose
+    /// to a fixed kind.
     pub fn plan(&self) -> Vec<LayerPlan> {
         let n = self.prepared.graph().num_vertices;
         let e = self.prepared.graph().num_edges();
@@ -185,9 +200,14 @@ impl<'a> SimSession<'a> {
                 let tiling = self.prepared.tiling(q);
                 let span = tiling.span;
                 // Tile-schedule choice, compared by the same stream
-                // model the executor charges traffic with.
-                let choice = self.stream_model(&tiling, agg_dim).choose(self.cfg.tile_order);
-                LayerPlan {
+                // model the executor charges traffic with. It depends
+                // on the dataflow's gather contract, so it is resolved
+                // per candidate kind.
+                let choice_for = |kind: DataflowKind| {
+                    let edge_bounded = dataflow::for_kind_static(kind).edge_bounded_gather();
+                    self.stream_model(&tiling, agg_dim, edge_bounded).choose(self.cfg.tile_order)
+                };
+                let mut plan = LayerPlan {
                     layer_idx: idx,
                     dims: layer,
                     order,
@@ -195,9 +215,33 @@ impl<'a> SimSession<'a> {
                     agg_dim,
                     q,
                     span,
-                    choice,
-                    tiling,
+                    dataflow: DataflowKind::RingEdgeReduce,
+                    choice: tiles::ScheduleChoice::Column,
+                    tiling: Arc::clone(&tiling),
+                    selection: None,
+                };
+                match self.cfg.dataflow {
+                    DataflowKind::Adaptive => {
+                        let mut measured = Vec::with_capacity(DataflowKind::fixed().len());
+                        for &kind in DataflowKind::fixed() {
+                            plan.dataflow = kind;
+                            plan.choice = choice_for(kind);
+                            let (report, _) = self.execute_layer(&plan);
+                            measured.push((kind, report.total_cycles));
+                        }
+                        let features =
+                            LayerFeatures::from_tiling(n, e, &plan.tiling, agg_dim);
+                        let sel = select::choose(features, &measured);
+                        plan.dataflow = sel.kind;
+                        plan.choice = choice_for(sel.kind);
+                        plan.selection = Some(sel);
+                    }
+                    kind => {
+                        plan.dataflow = kind;
+                        plan.choice = choice_for(kind);
+                    }
                 }
+                plan
             })
             .collect()
     }
@@ -228,7 +272,12 @@ impl<'a> SimSession<'a> {
         (order, work, agg_dim, q)
     }
 
-    fn stream_model(&self, tiling: &EdgeTiling, agg_dim: usize) -> tiles::StreamModel {
+    fn stream_model(
+        &self,
+        tiling: &EdgeTiling,
+        agg_dim: usize,
+        edge_bounded: bool,
+    ) -> tiles::StreamModel {
         tiles::StreamModel {
             q: tiling.q,
             span: tiling.span,
@@ -237,7 +286,7 @@ impl<'a> SimSession<'a> {
             word_bytes: self.cfg.word_bytes,
             src_touched: tiling.src_touched(),
             dst_touched: tiling.dst_touched(),
-            edge_bounded: self.dataflow.edge_bounded_gather(),
+            edge_bounded,
         }
     }
 
@@ -275,8 +324,8 @@ impl<'a> SimSession<'a> {
     }
 
     /// Execute one planned layer: dense stages on the PE array, the
-    /// aggregation tile loop through the dataflow, then traffic and
-    /// energy accounting.
+    /// aggregation tile loop through the plan's dataflow, then traffic
+    /// and energy accounting.
     fn execute_layer(&self, plan: &LayerPlan) -> (LayerReport, EnergyBreakdown) {
         let cfg = self.cfg;
         let n = self.prepared.graph().num_vertices;
@@ -285,10 +334,11 @@ impl<'a> SimSession<'a> {
         let agg_dim = plan.agg_dim;
         let q = plan.q;
         let span = plan.span;
+        let df = dataflow::for_kind_static(plan.dataflow);
 
         // --- Dense stages (PE array) ----------------------------------
-        let (fe_cycles, fe_util) = self.dataflow.dense_stage(&work.feature_extraction, e, cfg);
-        let (upd_cycles, upd_util) = self.dataflow.dense_stage(&work.update, e, cfg);
+        let (fe_cycles, fe_util) = df.dense_stage(&work.feature_extraction, e, cfg);
+        let (upd_cycles, upd_util) = df.dense_stage(&work.update, e, cfg);
 
         // --- Aggregation (tile loop through the dataflow) -------------
         let sample_frac = if cfg.fidelity == Fidelity::Cycle || e <= PHASE_SAMPLE_BUDGET {
@@ -296,46 +346,65 @@ impl<'a> SimSession<'a> {
         } else {
             PHASE_SAMPLE_BUDGET as f64 / e as f64
         };
-        let use_davc = self.dataflow.uses_davc();
-        let davc_entries = Davc::entries_for(cfg.davc_bytes, agg_dim, cfg.word_bytes);
-        let ranked = self.prepared.degree_ranked();
-        let mut davc = Davc::new(davc_entries, cfg.davc_reserved_frac, ranked);
-        let mut agg_total = TileOutcome::default();
-        let mut agg_cycles_scaled = 0.0f64;
-        let mut davc_scaled = CacheStats::default();
-        // Result-bank line accesses: DAVC misses for cached dataflows,
-        // one interval spill per tile otherwise.
-        let mut bank_line_accesses = 0.0f64;
-        for tile in plan.tiling.runs() {
-            let take = if sample_frac >= 1.0 {
-                tile.edges.len()
-            } else {
-                ((tile.edges.len() as f64 * sample_frac).ceil() as usize)
-                    .clamp(1, tile.edges.len())
-            };
-            let scale = tile.edges.len() as f64 / take as f64;
-            let view = TileView {
-                edges: &tile.edges[..take],
-                grid_row: tile.row,
-                grid_col: tile.col,
-                src_start: tile.row * span as u32,
-                dst_start: tile.col * span as u32,
-                span,
-                distinct_src: tile.distinct_src,
-                distinct_dst: tile.distinct_dst,
-            };
-            let outcome = self.dataflow.aggregate_tile(cfg, &view);
-            agg_total.add(&outcome);
-            // Interval-shaped dataflows charge the full tile even from
-            // a sampled slice; only edge-driven schedules extrapolate.
-            let cycle_scale = if self.dataflow.cycles_scale_with_edges() { scale } else { 1.0 };
-            agg_cycles_scaled += outcome.cycles as f64 * cycle_scale;
-            if use_davc {
-                davc.replay_scaled(view.edges.iter().map(|edge| edge.dst), scale, &mut davc_scaled);
-            } else {
-                bank_line_accesses += span as f64;
+        let use_davc = df.uses_davc();
+        let run_tiles = |davc: Option<&mut Davc>| {
+            let mut agg_total = TileOutcome::default();
+            let mut agg_cycles_scaled = 0.0f64;
+            let mut davc_scaled = CacheStats::default();
+            // Result-bank line accesses: DAVC misses for cached
+            // dataflows, one interval spill per tile otherwise.
+            let mut bank_line_accesses = 0.0f64;
+            let mut davc = davc;
+            for tile in plan.tiling.runs() {
+                let take = if sample_frac >= 1.0 {
+                    tile.edges.len()
+                } else {
+                    ((tile.edges.len() as f64 * sample_frac).ceil() as usize)
+                        .clamp(1, tile.edges.len())
+                };
+                let scale = tile.edges.len() as f64 / take as f64;
+                let view = TileView {
+                    edges: &tile.edges[..take],
+                    grid_row: tile.row,
+                    grid_col: tile.col,
+                    src_start: tile.row * span as u32,
+                    dst_start: tile.col * span as u32,
+                    span,
+                    distinct_src: tile.distinct_src,
+                    distinct_dst: tile.distinct_dst,
+                };
+                let outcome = df.aggregate_tile(cfg, &view);
+                agg_total.add(&outcome);
+                // Interval-shaped dataflows charge the full tile even
+                // from a sampled slice; only edge-driven schedules
+                // extrapolate.
+                let cycle_scale = if df.cycles_scale_with_edges() { scale } else { 1.0 };
+                agg_cycles_scaled += outcome.cycles as f64 * cycle_scale;
+                match davc.as_deref_mut() {
+                    Some(davc) => davc.replay_scaled(
+                        view.edges.iter().map(|edge| edge.dst),
+                        scale,
+                        &mut davc_scaled,
+                    ),
+                    None => bank_line_accesses += span as f64,
+                }
             }
-        }
+            (agg_total, agg_cycles_scaled, davc_scaled, bank_line_accesses)
+        };
+        let (agg_total, agg_cycles_scaled, davc_scaled, mut bank_line_accesses) = if use_davc {
+            DAVC_SCRATCH.with(|cell| {
+                let mut slot = cell.borrow_mut();
+                let davc_entries = Davc::entries_for(cfg.davc_bytes, agg_dim, cfg.word_bytes);
+                let ranked = self.prepared.degree_ranked();
+                match slot.as_mut() {
+                    Some(d) => d.reset(davc_entries, cfg.davc_reserved_frac, ranked),
+                    None => *slot = Some(Davc::new(davc_entries, cfg.davc_reserved_frac, ranked)),
+                }
+                run_tiles(slot.as_mut())
+            })
+        } else {
+            run_tiles(None)
+        };
         let dim_groups = ceil_div(agg_dim, cfg.pe_cols) as f64;
         let davc_misses = (davc_scaled.accesses - davc_scaled.hits) as f64;
         // Result-bank fills stall the consuming row ~2 cycles; rows
@@ -379,7 +448,7 @@ impl<'a> SimSession<'a> {
         // write when the extracted features spill off-chip (Q > 1).
         let one_time_read = nf * plan.dims.f_in as f64 * wb;
         let temp_write = if q > 1 { nf * d_agg_f * wb } else { 0.0 };
-        let stream = self.stream_model(&plan.tiling, agg_dim);
+        let stream = self.stream_model(&plan.tiling, agg_dim, df.edge_bounded_gather());
         let (src_stream, dst_read, dst_write) = stream.stream_bytes(plan.choice);
         let out_write = nf * plan.dims.f_out as f64 * wb;
         let hbm_read = one_time_read + src_stream + dst_read + edge_bytes;
@@ -489,7 +558,6 @@ mod tests {
         let cfg = AcceleratorConfig::engn();
         let prepared = PreparedGraph::from_arc(Arc::new(g));
         let session = SimSession::new(&cfg, &prepared, &m);
-        assert_eq!(session.dataflow_name(), "ring-edge-reduce");
         let plans = session.plan();
         assert_eq!(plans.len(), m.layers.len());
         for (i, p) in plans.iter().enumerate() {
@@ -497,6 +565,10 @@ mod tests {
             assert_eq!(p.tiling.q, p.q);
             assert_eq!(p.tiling.span, p.span);
             assert!(p.agg_dim >= 1);
+            // A fixed configuration plans every layer to its kind, with
+            // no selection record.
+            assert_eq!(p.dataflow, DataflowKind::RingEdgeReduce);
+            assert!(p.selection.is_none());
         }
         // Planning must not build more tilings than distinct Qs.
         let distinct_qs: std::collections::HashSet<usize> = plans.iter().map(|p| p.q).collect();
@@ -509,11 +581,59 @@ mod tests {
         let cfg = AcceleratorConfig::engn().with_dataflow(DataflowKind::DenseSystolic);
         let prepared = PreparedGraph::from_arc(Arc::new(g));
         let session = SimSession::new(&cfg, &prepared, &m);
-        assert_eq!(session.dataflow_name(), "dense-systolic");
+        assert!(session.plan().iter().all(|p| p.dataflow == DataflowKind::DenseSystolic));
         let r = session.run(spec.code);
         // No DAVC in the dense-array baseline.
         assert_eq!(r.davc().accesses, 0);
         assert!(r.total_cycles() > 0.0);
+    }
+
+    #[test]
+    fn cacheless_dataflow_sessions_run_sane() {
+        let (m, g, spec) = cora();
+        let prepared = PreparedGraph::from_arc(Arc::new(g));
+        for kind in [DataflowKind::SpmmSystolic, DataflowKind::HashDecoupled] {
+            let cfg = AcceleratorConfig::engn().with_dataflow(kind);
+            let session = SimSession::new(&cfg, &prepared, &m);
+            assert!(session.plan().iter().all(|p| p.dataflow == kind));
+            let r = session.run(spec.code);
+            assert_eq!(r.davc().accesses, 0, "{kind:?} must not touch the DAVC");
+            assert!(r.total_cycles() > 0.0);
+            assert!(r.energy_j() > 0.0);
+        }
+    }
+
+    #[test]
+    fn adaptive_session_plans_per_layer_and_never_loses() {
+        let (m, g, spec) = cora();
+        let prepared = PreparedGraph::from_arc(Arc::new(g));
+        let cfg = AcceleratorConfig::engn().with_dataflow(DataflowKind::Adaptive);
+        let session = SimSession::new(&cfg, &prepared, &m);
+        let plans = session.plan();
+        for p in &plans {
+            // Every layer resolved to an executable kind, with the
+            // measured candidate record behind the decision.
+            assert_ne!(p.dataflow, DataflowKind::Adaptive);
+            let sel = p.selection.as_ref().expect("adaptive plans carry a selection");
+            assert_eq!(sel.kind, p.dataflow);
+            assert_eq!(sel.measured.len(), DataflowKind::fixed().len());
+            assert!(!sel.why.is_empty());
+            // The chosen kind is the measured argmin.
+            let best = sel.measured.iter().map(|&(_, c)| c).fold(f64::INFINITY, f64::min);
+            let chosen = sel.measured.iter().find(|(k, _)| *k == sel.kind).unwrap().1;
+            assert_eq!(chosen, best);
+        }
+        // Per-layer argmin composes: adaptive ≤ every fixed kind.
+        let adaptive = session.run(spec.code).total_cycles();
+        for &kind in DataflowKind::fixed() {
+            let fixed_cfg = AcceleratorConfig::engn().with_dataflow(kind);
+            let fixed = SimSession::new(&fixed_cfg, &prepared, &m).run(spec.code).total_cycles();
+            assert!(
+                adaptive <= fixed,
+                "adaptive {adaptive} > {} {fixed}",
+                kind.name()
+            );
+        }
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! * [`prepared`] — [`PreparedGraph`]: shared, immutable derived graph
 //!   state (degree ranking, relation histogram, per-Q edge tilings);
 //! * [`dataflow`] — the pluggable [`Dataflow`] trait
-//!   ([`RingEdgeReduce`] default, [`DenseSystolic`] baseline);
+//!   ([`RingEdgeReduce`] default; [`DenseSystolic`], [`SpmmSystolic`]
+//!   and [`HashDecoupled`] baselines);
+//! * [`select`] — per-layer dataflow selection under
+//!   `DataflowKind::Adaptive` (DESIGN.md §9);
 //! * [`engine`] — [`SimSession`] planning/executing [`LayerPlan`]s into
 //!   a [`stats::SimReport`], with [`Simulator`] as the one-shot wrapper;
 //! * [`graph_cache`] — the process-wide (dataset, policy, seed) →
@@ -31,12 +34,14 @@ pub mod multichip;
 pub mod pe_array;
 pub mod prepared;
 pub mod ring;
+pub mod select;
 pub mod stats;
 pub mod tiles;
 
-pub use dataflow::{Dataflow, DenseSystolic, TileOutcome, TileView};
+pub use dataflow::{Dataflow, DenseSystolic, HashDecoupled, SpmmSystolic, TileOutcome, TileView};
 pub use engine::{sweep, sweep_with, LayerPlan, SimSession, Simulator};
 pub use multichip::{ChipLink, ChipTopology, MultiChipSession, ScaleOutReport};
 pub use prepared::{EdgeTiling, PreparedGraph, TileEdges};
 pub use ring::RingEdgeReduce;
+pub use select::{LayerFeatures, Selection};
 pub use stats::SimReport;

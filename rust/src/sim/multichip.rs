@@ -481,6 +481,44 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_multichip_plans_per_chip_and_never_loses() {
+        use crate::config::DataflowKind;
+        let spec = crate::graph::datasets::by_code("SD").unwrap();
+        let g = Arc::new(rmat::generate(4_000, 80_000, RmatParams::default(), 29));
+        let m = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+        let mut cfg = AcceleratorConfig::engn();
+        cfg.dataflow = DataflowKind::Adaptive;
+        let parts = PartitionedGraph::build(g, PartitionerKind::Degree, 2);
+        let session = MultiChipSession::new(&cfg, &parts, &m);
+        // Each chip plans its own shard: every layer resolves to a fixed
+        // kind with a selection record.
+        for c in 0..2 {
+            let plans = session.plan_chip(c);
+            assert_eq!(plans.len(), m.layers.len());
+            for p in &plans {
+                assert_ne!(p.dataflow, DataflowKind::Adaptive);
+                assert!(p.selection.is_some());
+            }
+        }
+        // Halo-exchange stalls depend only on the partition and layer
+        // dims, so the per-chip per-layer argmin carries to the
+        // scale-out total: adaptive never loses to any fixed kind.
+        let adaptive = session.run("SD");
+        for &kind in DataflowKind::fixed() {
+            let mut fixed_cfg = AcceleratorConfig::engn();
+            fixed_cfg.dataflow = kind;
+            let fixed = MultiChipSession::new(&fixed_cfg, &parts, &m).run("SD");
+            assert!(
+                adaptive.total_cycles() <= fixed.total_cycles(),
+                "adaptive {} > {} {}",
+                adaptive.total_cycles(),
+                kind.name(),
+                fixed.total_cycles()
+            );
+        }
+    }
+
+    #[test]
     fn report_totals_are_consistent() {
         let (cfg, g, m) = setup();
         let parts = PartitionedGraph::build(g, PartitionerKind::Range, 3);

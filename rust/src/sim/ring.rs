@@ -34,10 +34,31 @@ use crate::config::AcceleratorConfig;
 use crate::graph::Edge;
 use crate::sim::dataflow::{Dataflow, TileOutcome, TileView};
 use crate::util::fxhash::IntMap;
+use std::cell::RefCell;
 
 /// Edge-parser lookahead per bank (entries it can pick among while
 /// decoding the control bit-stream).
 pub const PARSER_WINDOW: usize = 2;
+
+/// Per-thread scheduling scratch reused across tiles and layers (the
+/// RER replay allocation hot spot): the distinct-source list, the
+/// stream-rank map, and the per-bank batch-count map keep their
+/// allocations between [`schedule_tile`] calls. Clearing instead of
+/// reallocating changes no result — every structure is fully rebuilt
+/// per use and read order-independently.
+struct TileScratch {
+    srcs: Vec<u32>,
+    rank: IntMap<u32, u32>,
+    counts: IntMap<u64, u64>,
+}
+
+thread_local! {
+    static TILE_SCRATCH: RefCell<TileScratch> = RefCell::new(TileScratch {
+        srcs: Vec::new(),
+        rank: IntMap::default(),
+        counts: IntMap::default(),
+    });
+}
 
 /// Outcome of scheduling one tile's aggregation on the ring.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -82,71 +103,74 @@ pub fn schedule_tile(
     if edges.is_empty() {
         return RingOutcome::default();
     }
-    let r = rows as u64;
-    // Stream order: distinct sources sorted by id (sequential prefetch).
-    let mut srcs: Vec<u32> = edges.iter().map(|e| e.src - src_start).collect();
-    srcs.sort_unstable();
-    srcs.dedup();
-    let s = srcs.len() as u64;
-    // Rank = position in the sorted distinct-source list (the stream
-    // order), via a fast-hash map (§Perf: binary search was tried and
-    // lost ~40% on dense tiles; the IntMap build amortizes).
-    let rank_map: IntMap<u32, u32> = srcs
-        .iter()
-        .enumerate()
-        .map(|(i, &v)| (v, i as u32))
-        .collect();
-    let rank = |v: u32| -> u64 { rank_map[&v] as u64 };
+    TILE_SCRATCH.with(|cell| {
+        let scratch = &mut *cell.borrow_mut();
+        let TileScratch { srcs, rank: rank_map, counts } = scratch;
+        let r = rows as u64;
+        // Stream order: distinct sources sorted by id (sequential
+        // prefetch).
+        srcs.clear();
+        srcs.extend(edges.iter().map(|e| e.src - src_start));
+        srcs.sort_unstable();
+        srcs.dedup();
+        let s = srcs.len() as u64;
+        // Rank = position in the sorted distinct-source list (the stream
+        // order), via a fast-hash map (§Perf: binary search was tried and
+        // lost ~40% on dense tiles; the IntMap build amortizes).
+        rank_map.clear();
+        rank_map.extend(srcs.iter().enumerate().map(|(i, &v)| (v, i as u32)));
+        let rank = |v: u32| -> u64 { rank_map[&v] as u64 };
 
-    // Balanced bank assignment: contiguous chunks of the input-order
-    // edge list (the hashed layout's equal spread).
-    let chunk = edges.len().div_ceil(rows);
-    let mut tile_last = 0u64;
-    let mut tile_ideal = 0u64;
-    for (bank_idx, bank) in edges.chunks(chunk).enumerate() {
-        let rr = (bank_idx as u64) % r;
-        let len = bank.len() as u64;
-        let last = if reorganize {
-            // Sorted banks make both modes available; the compiler picks
-            // the cheaper one per tile. Only per-batch counts are needed
-            // here (no arrival lists — §Perf).
-            let mut counts: IntMap<u64, u64> = IntMap::default();
-            let mut j_max = 0u64;
-            for e in bank {
-                let s_off = (e.src - src_start) as u64;
-                *counts.entry(s_off / r).or_insert(0) += 1;
-                j_max = j_max.max(rank(e.src - src_start));
-            }
-            let stream = len.max(j_max + rr + 1);
-            // Sorted circulation: one pass per batch, extended when the
-            // shadow-RF chain outlasts the circulation.
-            let circ: u64 = counts.values().map(|&c| c.max(r)).sum();
-            stream.min(circ)
-        } else {
-            // Disordered banks cannot stream one-shot: batch circulation
-            // with the edge parser's lookahead window. Bank entries are
-            // grouped by source batch (the circulation unit), in input
-            // order within a batch.
-            let mut by_batch: IntMap<u64, Vec<u64>> = IntMap::default();
-            for e in bank {
-                let s_off = (e.src - src_start) as u64;
-                by_batch.entry(s_off / r).or_default().push(s_off % r);
-            }
-            by_batch
-                .values()
-                .map(|a| circulation_cycles(a, PARSER_WINDOW, r))
-                .sum::<u64>()
-                .max(len)
-        };
-        tile_last = tile_last.max(last);
-        tile_ideal = tile_ideal.max(len);
-    }
-    RingOutcome {
-        cycles: tile_last,
-        ideal_cycles: tile_ideal,
-        edges: edges.len() as u64,
-        sources: s,
-    }
+        // Balanced bank assignment: contiguous chunks of the input-order
+        // edge list (the hashed layout's equal spread).
+        let chunk = edges.len().div_ceil(rows);
+        let mut tile_last = 0u64;
+        let mut tile_ideal = 0u64;
+        for (bank_idx, bank) in edges.chunks(chunk).enumerate() {
+            let rr = (bank_idx as u64) % r;
+            let len = bank.len() as u64;
+            let last = if reorganize {
+                // Sorted banks make both modes available; the compiler picks
+                // the cheaper one per tile. Only per-batch counts are needed
+                // here (no arrival lists — §Perf).
+                counts.clear();
+                let mut j_max = 0u64;
+                for e in bank {
+                    let s_off = (e.src - src_start) as u64;
+                    *counts.entry(s_off / r).or_insert(0) += 1;
+                    j_max = j_max.max(rank(e.src - src_start));
+                }
+                let stream = len.max(j_max + rr + 1);
+                // Sorted circulation: one pass per batch, extended when the
+                // shadow-RF chain outlasts the circulation.
+                let circ: u64 = counts.values().map(|&c| c.max(r)).sum();
+                stream.min(circ)
+            } else {
+                // Disordered banks cannot stream one-shot: batch circulation
+                // with the edge parser's lookahead window. Bank entries are
+                // grouped by source batch (the circulation unit), in input
+                // order within a batch.
+                let mut by_batch: IntMap<u64, Vec<u64>> = IntMap::default();
+                for e in bank {
+                    let s_off = (e.src - src_start) as u64;
+                    by_batch.entry(s_off / r).or_default().push(s_off % r);
+                }
+                by_batch
+                    .values()
+                    .map(|a| circulation_cycles(a, PARSER_WINDOW, r))
+                    .sum::<u64>()
+                    .max(len)
+            };
+            tile_last = tile_last.max(last);
+            tile_ideal = tile_ideal.max(len);
+        }
+        RingOutcome {
+            cycles: tile_last,
+            ideal_cycles: tile_ideal,
+            edges: edges.len() as u64,
+            sources: s,
+        }
+    })
 }
 
 /// Circulations needed to drain one batch's arrival queue with a

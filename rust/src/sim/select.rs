@@ -1,0 +1,211 @@
+//! Per-layer dataflow selection (DESIGN.md §9).
+//!
+//! Under `DataflowKind::Adaptive`, `SimSession::plan` resolves each
+//! layer to one of the fixed dataflows. The decision is grounded in the
+//! executor's own accounting: the planner charges every fixed candidate
+//! through `execute_layer` and keeps the per-layer argmin, so the
+//! adaptive pass can never total more cycles than any fixed kind (per
+//! layer costs are independent — fresh DAVC, per-layer traffic — so the
+//! per-layer argmin composes to the global optimum). This module owns
+//! the planner-visible *features* of a layer (density, degree skew,
+//! aggregated feature width, tile occupancy from the prepared tiling's
+//! distinct counts), a closed-form [`estimate`] of each kind used to
+//! sanity-rank candidates, and the [`Selection`] record `--explain`
+//! prints.
+
+use crate::config::{AcceleratorConfig, DataflowKind};
+use crate::sim::prepared::EdgeTiling;
+use crate::util::ceil_div;
+
+/// Planner-visible statistics of one layer's aggregation workload, all
+/// derived from the prepared tiling's per-tile distinct counts — no
+/// edge replay needed.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerFeatures {
+    pub edges: usize,
+    pub vertices: usize,
+    /// Grid partition factor and vertex-interval length of the tiling.
+    pub q: usize,
+    pub span: usize,
+    /// Width of the property the aggregate stage reduces.
+    pub agg_dim: usize,
+    /// Adjacency density e / n².
+    pub density: f64,
+    /// Mean fraction of a tile's source interval its edges touch.
+    pub src_occupancy: f64,
+    /// Mean fraction of a tile's destination interval its edges touch.
+    pub dst_occupancy: f64,
+    /// In-degree concentration: n / Σ(per-tile distinct destinations),
+    /// ≈ mean in-degree of touched vertices over the graph mean. > 1
+    /// means updates concentrate on few destinations (skewed graphs,
+    /// where a vertex cache earns its keep).
+    pub degree_skew: f64,
+}
+
+impl LayerFeatures {
+    pub fn from_tiling(
+        num_vertices: usize,
+        num_edges: usize,
+        tiling: &EdgeTiling,
+        agg_dim: usize,
+    ) -> Self {
+        let tiles = tiling.num_tiles().max(1) as f64;
+        let interval = (tiles * tiling.span.max(1) as f64).max(1.0);
+        let nf = num_vertices.max(1) as f64;
+        Self {
+            edges: num_edges,
+            vertices: num_vertices,
+            q: tiling.q,
+            span: tiling.span,
+            agg_dim,
+            density: num_edges as f64 / (nf * nf),
+            src_occupancy: tiling.src_touched() / interval,
+            dst_occupancy: tiling.dst_touched() / interval,
+            degree_skew: nf / tiling.dst_touched().max(1.0),
+        }
+    }
+}
+
+/// Closed-form aggregate-stage cycle estimate for one fixed kind — the
+/// analytic shadow of each dataflow's per-tile model, collapsed over
+/// the whole layer. Used to rank candidates for the `--explain` story;
+/// the planner's actual choice comes from measured executor costs, so a
+/// coarse estimate can never cost the adaptive pass cycles.
+pub fn estimate(kind: DataflowKind, f: &LayerFeatures, cfg: &AcceleratorConfig) -> f64 {
+    let rows = cfg.pe_rows.max(1) as f64;
+    let cols = cfg.pe_cols.max(1) as f64;
+    let e = f.edges as f64;
+    let tiles = (f.q * f.q).max(1) as f64;
+    let span = f.span.max(1) as f64;
+    let src_touched = f.src_occupancy * tiles * span;
+    let dst_touched = f.dst_occupancy * tiles * span;
+    let dim_groups = ceil_div(f.agg_dim, cfg.pe_cols) as f64;
+    let base = match kind {
+        // Edge stream vs source circulation, whichever binds.
+        DataflowKind::RingEdgeReduce => (e / rows).max(src_touched),
+        // Full interval sweeps per tile, occupancy-blind.
+        DataflowKind::DenseSystolic => tiles * (span / rows).ceil() * span,
+        // Row-split stream vs injection load, plus merge and fills.
+        DataflowKind::SpmmSystolic => {
+            (e / rows).max(src_touched / cols) + dst_touched / rows + tiles * rows
+        }
+        // Collision-capped acceptance (~63% of the lanes at best).
+        DataflowKind::HashDecoupled => e / (rows * (1.0 - (-1.0f64).exp())),
+        DataflowKind::Adaptive => f64::INFINITY,
+    };
+    base * dim_groups
+}
+
+/// The planner's decision for one layer, kept on the `LayerPlan` so
+/// `--explain` and the report harness can say *why*.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    pub kind: DataflowKind,
+    pub features: LayerFeatures,
+    /// (kind, total layer cycles as charged by the executor), in
+    /// canonical `DataflowKind::fixed()` order.
+    pub measured: Vec<(DataflowKind, f64)>,
+    /// One-line human rationale.
+    pub why: String,
+}
+
+/// Pick the measured argmin (first in canonical order wins ties) and
+/// render the rationale from the features.
+pub fn choose(features: LayerFeatures, measured: &[(DataflowKind, f64)]) -> Selection {
+    debug_assert!(!measured.is_empty());
+    let (mut kind, mut best) = measured[0];
+    for &(k, c) in &measured[1..] {
+        if c < best {
+            kind = k;
+            best = c;
+        }
+    }
+    let runner_up = measured
+        .iter()
+        .filter(|(k, _)| *k != kind)
+        .map(|&(_, c)| c)
+        .fold(f64::INFINITY, f64::min);
+    let margin = if best > 0.0 { runner_up / best } else { 1.0 };
+    let why = format!(
+        "{}: {:.3e} cycles, next-best {:.2}x; density {:.2e}, src-occ {:.1}%, \
+         dst-occ {:.1}%, skew {:.2}x, agg width {}",
+        kind.name(),
+        best,
+        margin,
+        features.density,
+        100.0 * features.src_occupancy,
+        100.0 * features.dst_occupancy,
+        features.degree_skew,
+        features.agg_dim,
+    );
+    Selection {
+        kind,
+        features,
+        measured: measured.to_vec(),
+        why,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{self, RmatParams};
+
+    fn features(n: usize, e: usize, q: usize, agg_dim: usize, seed: u64) -> LayerFeatures {
+        let g = rmat::generate(n, e, RmatParams::default(), seed);
+        let span = n.div_ceil(q);
+        let tiling = EdgeTiling::build(&g.edges, span, q);
+        LayerFeatures::from_tiling(n, g.num_edges(), &tiling, agg_dim)
+    }
+
+    #[test]
+    fn features_are_sane() {
+        let f = features(4096, 40_000, 4, 16, 11);
+        assert!(f.density > 0.0 && f.density < 1.0);
+        assert!(f.src_occupancy > 0.0 && f.src_occupancy <= 1.0);
+        assert!(f.dst_occupancy > 0.0 && f.dst_occupancy <= 1.0);
+        // Q > 1 counts boundary-crossing vertices once per tile, so the
+        // skew proxy can only shrink; it stays positive.
+        assert!(f.degree_skew > 0.0);
+        assert_eq!(f.q, 4);
+        assert_eq!(f.agg_dim, 16);
+    }
+
+    #[test]
+    fn estimate_prefers_sparse_aware_kinds_on_sparse_graphs() {
+        // A very sparse tile grid: dense sweeps are interval-shaped and
+        // must estimate far above the edge-bounded kinds.
+        let cfg = AcceleratorConfig::engn();
+        let f = features(65_536, 130_000, 1, 16, 3);
+        let dense = estimate(DataflowKind::DenseSystolic, &f, &cfg);
+        for k in [
+            DataflowKind::RingEdgeReduce,
+            DataflowKind::SpmmSystolic,
+            DataflowKind::HashDecoupled,
+        ] {
+            assert!(estimate(k, &f, &cfg) < dense, "{:?} not below dense", k);
+        }
+        assert!(estimate(DataflowKind::Adaptive, &f, &cfg).is_infinite());
+    }
+
+    #[test]
+    fn choose_is_argmin_with_canonical_tie_break() {
+        let f = features(1024, 4000, 1, 16, 5);
+        let measured = vec![
+            (DataflowKind::RingEdgeReduce, 100.0),
+            (DataflowKind::DenseSystolic, 100.0),
+            (DataflowKind::SpmmSystolic, 250.0),
+            (DataflowKind::HashDecoupled, 90.0),
+        ];
+        let s = choose(f, &measured);
+        assert_eq!(s.kind, DataflowKind::HashDecoupled);
+        assert!(s.why.contains("hash"));
+        assert_eq!(s.measured.len(), 4);
+        // Tie: first in canonical order wins.
+        let tied = vec![
+            (DataflowKind::RingEdgeReduce, 90.0),
+            (DataflowKind::HashDecoupled, 90.0),
+        ];
+        assert_eq!(choose(f, &tied).kind, DataflowKind::RingEdgeReduce);
+    }
+}

@@ -64,7 +64,7 @@ impl TrafficStats {
 }
 
 /// DAVC behaviour for one layer.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub accesses: u64,
     pub hits: u64,

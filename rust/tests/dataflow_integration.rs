@@ -1,0 +1,228 @@
+//! Per-layer dataflow planning invariants (DESIGN.md §9): property
+//! tests pin (1) fixed-kind planning is stable — the one-shot
+//! `Simulator` path, the `SimSession` path and repeated runs agree
+//! bit-identically for every fixed dataflow, at any sweep width,
+//! (2) the adaptive planner never totals more cycles than ANY fixed
+//! dataflow — on seeded R-MAT graphs and on every Table-5 suite pair,
+//! (3) parse/name round-trips for all kinds and the sampling-
+//! extrapolation contract of the two sparse dataflows. CI runs this
+//! file at both test-harness widths (see .github/workflows/ci.yml),
+//! like partition_integration.
+
+use engn::config::{AcceleratorConfig, DataflowKind};
+use engn::graph::datasets::ScalePolicy;
+use engn::graph::rmat::{self, RmatParams};
+use engn::graph::Edge;
+use engn::model::{GnnKind, GnnModel};
+use engn::report::experiments::Eval;
+use engn::sim::dataflow::{self, TileView};
+use engn::sim::{sweep_with, PreparedGraph, SimSession, Simulator};
+use engn::util::prop::prop_check;
+use std::sync::Arc;
+
+fn assert_reports_identical(a: &engn::sim::SimReport, b: &engn::sim::SimReport, ctx: &str) {
+    assert_eq!(a.total_cycles(), b.total_cycles(), "{ctx}: cycles");
+    assert_eq!(a.total_ops(), b.total_ops(), "{ctx}: ops");
+    assert_eq!(a.chip_energy_j, b.chip_energy_j, "{ctx}: chip energy");
+    assert_eq!(a.hbm_energy_j, b.hbm_energy_j, "{ctx}: hbm energy");
+    assert_eq!(a.power_w, b.power_w, "{ctx}: power");
+    assert_eq!(a.davc().accesses, b.davc().accesses, "{ctx}: davc accesses");
+    assert_eq!(a.davc().hits, b.davc().hits, "{ctx}: davc hits");
+    assert_eq!(a.layers.len(), b.layers.len(), "{ctx}: layer count");
+    for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+        assert_eq!(la.q, lb.q, "{ctx}: layer {} Q", la.layer_idx);
+        assert_eq!(la.total_cycles, lb.total_cycles, "{ctx}: layer {}", la.layer_idx);
+        assert_eq!(la.traffic.hbm_read_bytes, lb.traffic.hbm_read_bytes, "{ctx}");
+        assert_eq!(la.traffic.hbm_write_bytes, lb.traffic.hbm_write_bytes, "{ctx}");
+    }
+}
+
+/// Property (1a): every fixed kind plans every layer to itself (no
+/// selection record), and the one-shot `Simulator` wrapper reproduces
+/// the `SimSession` report bit-identically — the refactor moved the
+/// dataflow decision into the plan without changing fixed-kind output.
+#[test]
+fn prop_fixed_kinds_plan_uniformly_and_paths_agree() {
+    prop_check(6, 0xDF_0001, |rng| {
+        let n = rng.gen_usize(64, 1_500);
+        let e = rng.gen_usize(n, 6 * n);
+        let g = Arc::new(rmat::generate(n, e, RmatParams::default(), rng.next_u64()));
+        let spec = engn::graph::datasets::by_code("PB").unwrap();
+        let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+        let prepared = PreparedGraph::from_arc(g.clone());
+        for &kind in DataflowKind::fixed() {
+            let mut cfg = AcceleratorConfig::engn();
+            cfg.dataflow = kind;
+            let session = SimSession::new(&cfg, &prepared, &model);
+            for p in session.plan() {
+                if p.dataflow != kind || p.selection.is_some() {
+                    return Err(format!("{}: layer not planned to itself", kind.name()));
+                }
+            }
+            let a = session.run("PB");
+            let b = Simulator::new(cfg.clone()).run(&model, &g, "PB");
+            let c = session.run("PB");
+            assert_reports_identical(&a, &b, kind.name());
+            assert_reports_identical(&a, &c, kind.name());
+        }
+        Ok(())
+    });
+}
+
+/// Property (1b): a sweep over one config per kind (adaptive included)
+/// is bit-identical serial vs parallel — per-layer planning keeps the
+/// scratch-buffer reuse (DAVC, ring tile scratch) thread-confined.
+#[test]
+fn sweep_width_does_not_change_any_dataflow_report() {
+    let spec = engn::graph::datasets::by_code("PB").unwrap();
+    let g = Arc::new(spec.instantiate(ScalePolicy::Factor(8), 0xE16A));
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let prepared = PreparedGraph::from_arc(g);
+    let variants: Vec<AcceleratorConfig> = DataflowKind::all()
+        .iter()
+        .map(|&df| {
+            let mut cfg = AcceleratorConfig::engn().named(&format!("EnGN_{}", df.name()));
+            cfg.dataflow = df;
+            cfg
+        })
+        .collect();
+    let serial = sweep_with(1, &variants, &prepared, &model, "PB");
+    let parallel = sweep_with(8, &variants, &prepared, &model, "PB");
+    assert_eq!(serial.len(), variants.len());
+    for ((cfg, a), b) in variants.iter().zip(&serial).zip(&parallel) {
+        assert_reports_identical(a, b, &cfg.name);
+    }
+}
+
+/// Property (2a): on seeded R-MAT graphs the adaptive planner's total
+/// cycles never exceed any fixed dataflow's. Exact `<=` is safe: the
+/// planner picks the per-layer argmin of the executor's own charges,
+/// layer costs are independent, and termwise-`<=` float sums stay `<=`.
+#[test]
+fn prop_adaptive_never_loses_on_rmat() {
+    prop_check(6, 0xDF_0002, |rng| {
+        let n = rng.gen_usize(64, 1_500);
+        let e = rng.gen_usize(n, 6 * n);
+        let g = Arc::new(rmat::generate(n, e, RmatParams::default(), rng.next_u64()));
+        let spec = engn::graph::datasets::by_code("PB").unwrap();
+        let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+        let prepared = PreparedGraph::from_arc(g);
+        let mut cfg = AcceleratorConfig::engn();
+        cfg.dataflow = DataflowKind::Adaptive;
+        let session = SimSession::new(&cfg, &prepared, &model);
+        for p in session.plan() {
+            if p.dataflow == DataflowKind::Adaptive {
+                return Err("a layer stayed Adaptive after planning".into());
+            }
+            let Some(sel) = &p.selection else {
+                return Err("adaptive layer lost its selection record".into());
+            };
+            if sel.measured.len() != DataflowKind::fixed().len() || sel.why.is_empty() {
+                return Err("selection record incomplete".into());
+            }
+        }
+        let adaptive = session.run("PB").total_cycles();
+        for &kind in DataflowKind::fixed() {
+            let mut fixed_cfg = AcceleratorConfig::engn();
+            fixed_cfg.dataflow = kind;
+            let fixed = SimSession::new(&fixed_cfg, &prepared, &model).run("PB").total_cycles();
+            if adaptive > fixed {
+                return Err(format!(
+                    "adaptive {adaptive} > {} {fixed} (n={n} e={e})",
+                    kind.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property (2b): the same guarantee on every Table-5 suite pair (the
+/// report harness's `adaptive` table is the full-scale view of this).
+#[test]
+fn adaptive_never_loses_on_any_table5_pair() {
+    // Scaled hard so all 15 pairs stay test-fast; the argmin guarantee
+    // is scale-free.
+    let eval = Eval::new(ScalePolicy::Factor(64), 7);
+    for (kind, spec) in eval.suite() {
+        let mut cfg = AcceleratorConfig::engn();
+        cfg.dataflow = DataflowKind::Adaptive;
+        let adaptive = eval.engn_with(cfg, kind, &spec).total_cycles();
+        for &df in DataflowKind::fixed() {
+            let mut fixed_cfg = AcceleratorConfig::engn();
+            fixed_cfg.dataflow = df;
+            let fixed = eval.engn_with(fixed_cfg, kind, &spec).total_cycles();
+            assert!(
+                adaptive <= fixed,
+                "{} on {}: adaptive {adaptive} > {} {fixed}",
+                kind.name(),
+                spec.code,
+                df.name()
+            );
+        }
+    }
+}
+
+/// Property (3a): kind names parse back to themselves, the CLI aliases
+/// resolve, and the canonical slices agree with the trait objects.
+#[test]
+fn parse_name_round_trips_and_canonical_slices() {
+    for &df in DataflowKind::all() {
+        assert_eq!(DataflowKind::parse(df.name()), Some(df), "{}", df.name());
+    }
+    for (alias, want) in [
+        ("versagnn", DataflowKind::SpmmSystolic),
+        ("spmm-systolic", DataflowKind::SpmmSystolic),
+        ("neurachip", DataflowKind::HashDecoupled),
+        ("hash-decoupled", DataflowKind::HashDecoupled),
+        ("auto", DataflowKind::Adaptive),
+    ] {
+        assert_eq!(DataflowKind::parse(alias), Some(want), "{alias}");
+    }
+    assert_eq!(DataflowKind::fixed().len() + 1, DataflowKind::all().len());
+    assert!(!DataflowKind::fixed().contains(&DataflowKind::Adaptive));
+    for &df in DataflowKind::fixed() {
+        // Every fixed kind resolves to an executable dataflow.
+        let _ = dataflow::for_kind_static(df);
+    }
+}
+
+/// Property (3b): the sampling-extrapolation contract of the two new
+/// dataflows — both declare edge-driven cycles, and rescaling a sampled
+/// prefix by the sampling factor approximates the full tile on
+/// edge-dominated tiles (the premise Phase-fidelity sampling relies
+/// on).
+#[test]
+fn sparse_dataflow_sampling_extrapolation_contract() {
+    let cfg = AcceleratorConfig::engn();
+    // Edge-dominated tile: the stream term binds both in the full tile
+    // and in the quarter sample (distinct counts describe the full tile
+    // either way, mirroring how the engine builds sampled TileViews).
+    let edges: Vec<Edge> = (0..204_800u32).map(|i| Edge::new(i % 400, i % 2000)).collect();
+    let view = TileView {
+        edges: &edges,
+        grid_row: 0,
+        grid_col: 0,
+        src_start: 0,
+        dst_start: 0,
+        span: 4096,
+        distinct_src: 400,
+        distinct_dst: 2000,
+    };
+    let mut sampled_view = view;
+    sampled_view.edges = &edges[..edges.len() / 4];
+    for &kind in &[DataflowKind::SpmmSystolic, DataflowKind::HashDecoupled] {
+        let df = dataflow::for_kind_static(kind);
+        assert!(df.cycles_scale_with_edges(), "{}", df.name());
+        let full = df.aggregate_tile(&cfg, &view);
+        let sampled = df.aggregate_tile(&cfg, &sampled_view);
+        let extrapolated = sampled.cycles * 4;
+        assert!(
+            extrapolated >= full.cycles / 2 && extrapolated <= full.cycles * 2,
+            "{}: extrapolated {} vs full {}",
+            df.name(),
+            extrapolated,
+            full.cycles
+        );
+    }
+}

@@ -11,9 +11,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 BENCH_JSON="$(pwd)/BENCH_hotpath.json" \
   cargo bench --manifest-path rust/Cargo.toml --bench hotpath "$@"
-# The snapshot must track the scale-out plane: fail loudly if the
-# partition/scaleout groups ever drop out of the hotpath bench.
-for group in "partition:range" "partition:hash" "partition:degree" "scaleout:4chip"; do
+# The snapshot must track the scale-out and dataflow planes: fail
+# loudly if the partition/scaleout/dataflow groups ever drop out of the
+# hotpath bench.
+for group in "partition:range" "partition:hash" "partition:degree" "scaleout:4chip" \
+             "dataflow:spmm" "dataflow:hash" "dataflow:adaptive"; do
   grep -q "\"$group\"" BENCH_hotpath.json \
     || { echo "missing bench group $group in BENCH_hotpath.json" >&2; exit 1; }
 done
