@@ -20,7 +20,13 @@
 //!   sessions + halo-exchange costing) on the prepared partition;
 //! * `dataflow:{spmm,hash,adaptive}` — the alternative aggregation
 //!   dataflows and the per-layer adaptive planner (DESIGN.md §9) on the
-//!   same prepared PubMed graph the `sim:gcn:PB` group runs under RER.
+//!   same prepared PubMed graph the `sim:gcn:PB` group runs under RER;
+//! * `mem:spill` — the same PubMed session under a shrunk tier 0 that
+//!   forces the memory plane to place and price every layer's spill
+//!   (DESIGN.md §10) — vs `sim:gcn:PB`, this is the plane's overhead;
+//! * `csr:open` — reopening a persisted 1 M-edge binary CSR file and
+//!   preparing it for simulation (`open_csr` + `from_csr`), the warm
+//!   path `engn run --csr` takes instead of re-synthesizing.
 //!
 //! Set `BENCH_JSON=/path/to/BENCH_hotpath.json` (or run
 //! `scripts/bench_snapshot.sh`) to also write every group's median
@@ -203,6 +209,35 @@ fn main() {
         record(&r, &mut medians);
         println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
     }
+
+    section("memory hierarchy: spill placement (GCN on PubMed, shrunk HBM)");
+    // Same prepared graph and model as sim:gcn:PB, but tier 0 capped at
+    // 1 MB so every layer's working set pages to DRAM — the group times
+    // the full session WITH working-set placement and spill costing on
+    // the hot path (the zero-spill case is covered by sim:gcn:PB, where
+    // the plane's contribution must be exactly nothing).
+    let mut spill_cfg = AcceleratorConfig::engn();
+    spill_cfg.mem.name = "bench-tiny";
+    spill_cfg.mem.tiers[0].capacity_bytes = 1024.0 * 1024.0;
+    let r = bench("mem:spill", budget, || {
+        black_box(SimSession::new(&spill_cfg, &prepared, &model).run("PB"));
+    });
+    record(&r, &mut medians);
+    println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
+
+    section("binary CSR reopen (1M-edge R-MAT)");
+    // The artifact is written once outside the timer (synthesis cost is
+    // the rmat:* groups); the group times open_csr (header validation +
+    // chunked array reads) plus PreparedGraph::from_csr.
+    let csr_path = std::env::temp_dir().join("engn_bench_hotpath.csr");
+    engn::graph::io::save_csr(&g, &csr_path).expect("writing bench CSR");
+    let r = bench("csr:open", budget, || {
+        let csr = engn::graph::io::open_csr(&csr_path).expect("reopening bench CSR");
+        black_box(PreparedGraph::from_csr(csr));
+    });
+    record(&r, &mut medians);
+    println!("    -> {:.1} M edges/s", r.per_second(g.num_edges() as f64) / 1e6);
+    let _ = std::fs::remove_file(&csr_path);
 
     section("multi-chip scale-out (GCN on PubMed, 4 chips, degree partition)");
     // The partition is built once outside the timer (its cost is the

@@ -5,6 +5,8 @@ pub mod energy;
 
 pub use energy::{AreaModel, EnergyModel};
 
+use crate::mem::MemHierarchy;
+
 /// Tile-scheduling policy (paper §5.3, Fig 15).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TileOrder {
@@ -144,6 +146,12 @@ pub struct AcceleratorConfig {
     pub fidelity: Fidelity,
     /// Aggregation dataflow the engine executes layers through.
     pub dataflow: DataflowKind,
+    /// Off-chip memory hierarchy below HBM (`crate::mem`): working
+    /// sets that exceed tier-0 capacity spill to host DRAM / SSD and
+    /// pay stall cycles + transfer energy. The default `hbm4` preset
+    /// holds every capped Table-5 graph, so zero-spill runs are
+    /// bit-identical to the pre-mem-plane simulator.
+    pub mem: MemHierarchy,
     pub energy: EnergyModel,
     pub area: AreaModel,
 }
@@ -172,6 +180,7 @@ impl AcceleratorConfig {
             stage_order: StageOrder::Dasr,
             fidelity: Fidelity::Phase,
             dataflow: DataflowKind::RingEdgeReduce,
+            mem: MemHierarchy::hbm4(),
             energy: EnergyModel::tsmc14(),
             area: AreaModel::tsmc14(),
         }
@@ -205,6 +214,13 @@ impl AcceleratorConfig {
     /// Dataflow-variant helper (builder style).
     pub fn with_dataflow(mut self, dataflow: DataflowKind) -> Self {
         self.dataflow = dataflow;
+        self
+    }
+
+    /// Memory-hierarchy helper (builder style): run this configuration
+    /// against a different off-chip stack (`engn run --mem <preset>`).
+    pub fn with_mem(mut self, mem: MemHierarchy) -> Self {
+        self.mem = mem;
         self
     }
 
@@ -305,5 +321,16 @@ mod tests {
     fn hbm_bytes_per_cycle() {
         let c = AcceleratorConfig::engn();
         assert!((c.hbm_bytes_per_cycle() - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_mem_hierarchy_is_hbm4() {
+        let c = AcceleratorConfig::engn();
+        assert_eq!(c.mem, MemHierarchy::hbm4());
+        // Tier 0's bandwidth class matches the config's own HBM.
+        assert_eq!(c.mem.tiers[0].gbps, c.hbm_gbps);
+        let big = AcceleratorConfig::engn().with_mem(MemHierarchy::hbm16());
+        assert_eq!(big.mem.name, "hbm16");
+        assert_eq!(big.name, "EnGN"); // builder does not rename
     }
 }

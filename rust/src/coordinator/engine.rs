@@ -144,6 +144,19 @@ impl SimJob {
         }
         self
     }
+
+    /// What-if under an alternative memory hierarchy (`--mem` preset).
+    /// Same batching rule as [`SimJob::with_dataflow`]: a no-op when
+    /// the config already uses this hierarchy, otherwise the config
+    /// name gets an `@mem:<preset>` suffix so the job batches — and
+    /// reports — under its own hierarchy.
+    pub fn with_mem(mut self, mem: crate::mem::MemHierarchy) -> Self {
+        if self.config.mem != mem {
+            self.config.name = format!("{}@mem:{}", self.config.name, mem.name);
+            self.config.mem = mem;
+        }
+        self
+    }
 }
 
 /// A baseline cost-model query: what would `model` on `dataset` cost on
@@ -664,6 +677,32 @@ mod tests {
             assert_eq!(s.config, format!("EnGN@{}", kind.name()));
             assert!(s.cycles > 0.0);
         }
+    }
+
+    #[test]
+    fn sim_jobs_with_mem_get_their_own_batch_key_and_run() {
+        use crate::mem::MemHierarchy;
+        let be = SimBackend::new();
+        // Selecting the default hierarchy explicitly must not split the
+        // batch key; repeated selection is a no-op, not a second suffix.
+        let default = SimJob::new(GnnKind::Gcn, "CA").with_mem(MemHierarchy::hbm4());
+        assert_eq!(JobPayload::Sim(default).batch_key(), "sim:EnGN:CA");
+        let job = SimJob::new(GnnKind::Gcn, "CA")
+            .with_mem(MemHierarchy::edge1())
+            .with_mem(MemHierarchy::edge1());
+        assert_eq!(JobPayload::Sim(job.clone()).batch_key(), "sim:EnGN@mem:edge1:CA");
+        let res = be.execute_batch(vec![JobPayload::Sim(job)]);
+        let s = res[0].as_ref().expect("sim ok").as_sim().expect("sim output").clone();
+        assert_eq!(s.config, "EnGN@mem:edge1");
+        assert!(s.cycles > 0.0);
+        // Composes with dataflow suffixing: each knob contributes once.
+        let both = SimJob::new(GnnKind::Gcn, "CA")
+            .with_dataflow(DataflowKind::DenseSystolic)
+            .with_mem(MemHierarchy::unbounded());
+        assert_eq!(
+            JobPayload::Sim(both).batch_key(),
+            "sim:EnGN@dense@mem:unbounded:CA"
+        );
     }
 
     #[test]

@@ -1,16 +1,34 @@
-//! Edge-list file I/O: load real graphs into the simulator instead of
-//! synthetic stand-ins.
+//! Graph file I/O.
 //!
-//! Format: whitespace-separated `src dst [relation]` per line, `#` or
-//! `%` comment lines ignored (the common SNAP / KONECT / OGB-export
-//! convention). Vertex ids need not be contiguous — they are densely
-//! re-mapped, and the mapping is returned so callers can translate
-//! results back.
+//! Two formats:
+//!
+//! * **Text edge lists** — whitespace-separated `src dst [relation]`
+//!   per line, `#` or `%` comment lines ignored (the common SNAP /
+//!   KONECT / OGB-export convention). Vertex ids need not be
+//!   contiguous — they are densely re-mapped, and the mapping is
+//!   returned so callers can translate results back.
+//! * **Binary CSR** ([`save_csr`] / [`open_csr`]) — a compact,
+//!   mmap-able on-disk layout for synthesized-once, opened-per-process
+//!   graphs (`engn synth` → `engn run --csr`): a fixed 32-byte header,
+//!   then the `(V+1)` u64 offset prefix sums, the `E` u32 destination
+//!   ids grouped by source, and (relational graphs only) the `E` u16
+//!   relation ids — all little-endian at fixed strides, so a
+//!   memory-mapping reader can address any array without parsing.
+//!   This std-only build streams the arrays through a `BufReader`
+//!   instead of mmap, and [`Graph::from_csr_parts`] rebuilds degrees
+//!   straight from the offsets, skipping the per-edge validation loop
+//!   of `from_edges`.
 
 use super::{Edge, Graph};
 use crate::util::fxhash::IntMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
+
+/// Magic + version tag opening every binary CSR file.
+const CSR_MAGIC: [u8; 8] = *b"ENGNCSR\x01";
+
+/// Header flag bit: a per-edge relation array follows the dst array.
+const CSR_FLAG_RELATIONS: u32 = 1;
 
 /// A loaded graph plus the original-id → dense-id mapping.
 pub struct LoadedGraph {
@@ -108,6 +126,188 @@ pub fn save_edge_list(g: &Graph, path: impl AsRef<Path>) -> Result<(), String> {
     Ok(())
 }
 
+/// The parsed contents of a binary CSR file: the exact on-disk arrays,
+/// ready for [`Graph::from_csr_parts`] /
+/// `PreparedGraph::from_csr` without a full `Graph::from_edges`
+/// rebuild.
+#[derive(Debug, Clone)]
+pub struct CsrFile {
+    pub num_vertices: usize,
+    /// `(V+1)` prefix sums: vertex `v`'s out-edges are
+    /// `dst[offsets[v]..offsets[v+1]]`.
+    pub offsets: Vec<u64>,
+    /// Destination ids, grouped by ascending source (stable within a
+    /// source by original edge order).
+    pub dst: Vec<u32>,
+    /// Per-edge relation ids, aligned with `dst`; empty for
+    /// single-relation graphs.
+    pub relations: Vec<u16>,
+    pub num_relations: usize,
+}
+
+impl CsrFile {
+    pub fn num_edges(&self) -> usize {
+        self.dst.len()
+    }
+
+    /// Materialize a full in-memory [`Graph`], consuming the arrays.
+    pub fn into_graph(self) -> Graph {
+        Graph::from_csr_parts(
+            self.num_vertices,
+            &self.offsets,
+            &self.dst,
+            self.relations,
+            self.num_relations,
+        )
+    }
+}
+
+/// Persist a graph in the binary CSR format. Edges are grouped by
+/// source with the same stable counting scatter `Csx::build` uses, so
+/// the on-disk order is deterministic for a given graph.
+pub fn save_csr(g: &Graph, path: impl AsRef<Path>) -> Result<(), String> {
+    let n = g.num_vertices;
+    let e = g.num_edges();
+    let has_rel = !g.relations.is_empty();
+
+    // Counting scatter: offsets + source-grouped dst (and relations).
+    let mut counts = vec![0u64; n + 1];
+    for edge in &g.edges {
+        counts[edge.src as usize + 1] += 1;
+    }
+    for i in 0..n {
+        counts[i + 1] += counts[i];
+    }
+    let offsets = counts.clone();
+    let mut cursor = counts;
+    let mut dst = vec![0u32; e];
+    let mut rels = vec![0u16; if has_rel { e } else { 0 }];
+    for (i, edge) in g.edges.iter().enumerate() {
+        let slot = cursor[edge.src as usize] as usize;
+        dst[slot] = edge.dst;
+        if has_rel {
+            rels[slot] = g.relations[i];
+        }
+        cursor[edge.src as usize] += 1;
+    }
+
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(&path)
+            .map_err(|err| format!("creating {}: {err}", path.as_ref().display()))?,
+    );
+    let io = |err: std::io::Error| format!("writing {}: {err}", path.as_ref().display());
+    w.write_all(&CSR_MAGIC).map_err(io)?;
+    w.write_all(&(n as u64).to_le_bytes()).map_err(io)?;
+    w.write_all(&(e as u64).to_le_bytes()).map_err(io)?;
+    w.write_all(&(g.num_relations as u32).to_le_bytes()).map_err(io)?;
+    let flags = if has_rel { CSR_FLAG_RELATIONS } else { 0 };
+    w.write_all(&flags.to_le_bytes()).map_err(io)?;
+    for &o in &offsets {
+        w.write_all(&o.to_le_bytes()).map_err(io)?;
+    }
+    for &d in &dst {
+        w.write_all(&d.to_le_bytes()).map_err(io)?;
+    }
+    for &r in &rels {
+        w.write_all(&r.to_le_bytes()).map_err(io)?;
+    }
+    Ok(())
+}
+
+fn read_chunk(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<(), String> {
+    r.read_exact(buf).map_err(|e| format!("reading {what}: {e}"))
+}
+
+fn read_u64s(r: &mut impl Read, count: usize, what: &str) -> Result<Vec<u64>, String> {
+    let mut out = Vec::with_capacity(count);
+    let mut buf = [0u8; 8 * 8192];
+    let mut remaining = count;
+    while remaining > 0 {
+        let take = remaining.min(8192);
+        let bytes = &mut buf[..take * 8];
+        read_chunk(r, bytes, what)?;
+        for c in bytes.chunks_exact(8) {
+            out.push(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        remaining -= take;
+    }
+    Ok(out)
+}
+
+fn read_u32s(r: &mut impl Read, count: usize, what: &str) -> Result<Vec<u32>, String> {
+    let mut out = Vec::with_capacity(count);
+    let mut buf = [0u8; 4 * 16384];
+    let mut remaining = count;
+    while remaining > 0 {
+        let take = remaining.min(16384);
+        let bytes = &mut buf[..take * 4];
+        read_chunk(r, bytes, what)?;
+        for c in bytes.chunks_exact(4) {
+            out.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        remaining -= take;
+    }
+    Ok(out)
+}
+
+fn read_u16s(r: &mut impl Read, count: usize, what: &str) -> Result<Vec<u16>, String> {
+    let mut out = Vec::with_capacity(count);
+    let mut buf = [0u8; 2 * 32768];
+    let mut remaining = count;
+    while remaining > 0 {
+        let take = remaining.min(32768);
+        let bytes = &mut buf[..take * 2];
+        read_chunk(r, bytes, what)?;
+        for c in bytes.chunks_exact(2) {
+            out.push(u16::from_le_bytes(c.try_into().unwrap()));
+        }
+        remaining -= take;
+    }
+    Ok(out)
+}
+
+/// Open a binary CSR file, validating the header and every invariant
+/// that would otherwise corrupt the simulator: monotone offsets ending
+/// at E, in-range destination ids, in-range relation ids.
+pub fn open_csr(path: impl AsRef<Path>) -> Result<CsrFile, String> {
+    let label = path.as_ref().display().to_string();
+    let f = std::fs::File::open(&path).map_err(|e| format!("opening {label}: {e}"))?;
+    let mut r = BufReader::new(f);
+
+    let mut header = [0u8; 32];
+    read_chunk(&mut r, &mut header, &format!("{label} header"))?;
+    if header[..8] != CSR_MAGIC {
+        return Err(format!("{label}: not an EnGN CSR file (bad magic)"));
+    }
+    let n = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+    let e = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+    let num_relations = u32::from_le_bytes(header[24..28].try_into().unwrap()) as usize;
+    let flags = u32::from_le_bytes(header[28..32].try_into().unwrap());
+    let has_rel = flags & CSR_FLAG_RELATIONS != 0;
+
+    let offsets = read_u64s(&mut r, n + 1, &format!("{label} offsets"))?;
+    if offsets[0] != 0 || offsets[n] as usize != e {
+        return Err(format!("{label}: offsets do not span [0, {e}]"));
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        return Err(format!("{label}: offsets are not monotone"));
+    }
+    let dst = read_u32s(&mut r, e, &format!("{label} dst"))?;
+    if let Some(&bad) = dst.iter().find(|&&d| d as usize >= n) {
+        return Err(format!("{label}: destination id {bad} out of range for {n} vertices"));
+    }
+    let relations = if has_rel {
+        let rels = read_u16s(&mut r, e, &format!("{label} relations"))?;
+        if let Some(&bad) = rels.iter().find(|&&x| x as usize >= num_relations.max(1)) {
+            return Err(format!("{label}: relation id {bad} out of range"));
+        }
+        rels
+    } else {
+        Vec::new()
+    };
+    Ok(CsrFile { num_vertices: n, offsets, dst, relations, num_relations: num_relations.max(1) })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +361,82 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csr_round_trips_binary() {
+        let g = rmat::generate(300, 2000, RmatParams::default(), 6);
+        let dir = std::env::temp_dir().join("engn_csr_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.csr");
+        save_csr(&g, &path).unwrap();
+        let csr = open_csr(&path).unwrap();
+        assert_eq!(csr.num_vertices, g.num_vertices);
+        assert_eq!(csr.num_edges(), g.num_edges());
+        assert_eq!(csr.num_relations, 1);
+        assert!(csr.relations.is_empty());
+        let rebuilt = csr.into_graph();
+        assert_eq!(rebuilt.in_degrees(), g.in_degrees());
+        assert_eq!(rebuilt.out_degrees(), g.out_degrees());
+        let mut a = rebuilt.edges;
+        let mut b = g.edges.clone();
+        a.sort_unstable_by_key(|e| (e.src, e.dst));
+        b.sort_unstable_by_key(|e| (e.src, e.dst));
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csr_round_trips_relations_aligned_with_edges() {
+        // Relation ids must ride the same counting scatter as the dst
+        // array: after the round trip every (src, dst, rel) triple of
+        // the original multiset survives.
+        let edges = vec![
+            Edge::new(2, 0),
+            Edge::new(0, 1),
+            Edge::new(2, 1),
+            Edge::new(0, 2),
+            Edge::new(2, 0),
+        ];
+        let g = Graph::from_edges_with_relations(3, edges, vec![3, 0, 1, 2, 1], 4);
+        let dir = std::env::temp_dir().join("engn_csr_rel_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.csr");
+        save_csr(&g, &path).unwrap();
+        let csr = open_csr(&path).unwrap();
+        assert_eq!(csr.num_relations, 4);
+        let rebuilt = csr.into_graph();
+        let triples = |g: &Graph| {
+            let mut t: Vec<(u32, u32, u16)> = g
+                .edges
+                .iter()
+                .zip(&g.relations)
+                .map(|(e, &r)| (e.src, e.dst, r))
+                .collect();
+            t.sort_unstable();
+            t
+        };
+        assert_eq!(triples(&rebuilt), triples(&g));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csr_open_rejects_garbage_and_truncation() {
+        let dir = std::env::temp_dir().join("engn_csr_bad_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let garbage = dir.join("garbage.csr");
+        std::fs::write(&garbage, b"definitely not a CSR file").unwrap();
+        assert!(open_csr(&garbage).is_err());
+        // A valid file truncated mid-array must fail loudly, not load.
+        let g = rmat::generate(64, 500, RmatParams::default(), 8);
+        let path = dir.join("g.csr");
+        save_csr(&g, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.csr");
+        std::fs::write(&cut, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(open_csr(&cut).is_err());
+        assert!(open_csr(dir.join("missing.csr")).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -119,10 +119,82 @@ impl Graph {
 
     /// Vertex ids sorted by descending in-degree (the "high-radix" ranking
     /// the degree-aware vertex cache reserves entries for).
+    ///
+    /// Counting rank over the known degree range, O(V + max_degree) —
+    /// the same pattern that replaced the tiling build's comparison
+    /// sort: bucket by `max_degree - degree` and scatter vertices in
+    /// ascending id order, which reproduces the stable descending sort
+    /// exactly (ties ascending by id). Pinned bit-identical to
+    /// [`Self::vertices_by_in_degree_desc_reference`] by the tests.
     pub fn vertices_by_in_degree_desc(&self) -> Vec<u32> {
+        let n = self.num_vertices;
+        if n == 0 {
+            return Vec::new();
+        }
+        let max_d = self.in_degree.iter().copied().max().unwrap_or(0) as usize;
+        let mut counts = vec![0u32; max_d + 2];
+        for &d in &self.in_degree {
+            counts[max_d - d as usize + 1] += 1;
+        }
+        for i in 0..=max_d {
+            counts[i + 1] += counts[i];
+        }
+        let mut cursor = counts;
+        let mut out = vec![0u32; n];
+        for v in 0..n as u32 {
+            let key = max_d - self.in_degree[v as usize] as usize;
+            out[cursor[key] as usize] = v;
+            cursor[key] += 1;
+        }
+        out
+    }
+
+    /// The retired comparison-sort ranking (stable sort by descending
+    /// in-degree): kept as the independent implementation the property
+    /// tests pin [`Self::vertices_by_in_degree_desc`] against, exactly
+    /// like `EdgeTiling::build_reference`.
+    pub fn vertices_by_in_degree_desc_reference(&self) -> Vec<u32> {
         let mut ids: Vec<u32> = (0..self.num_vertices as u32).collect();
         ids.sort_by_key(|&v| std::cmp::Reverse(self.in_degree[v as usize]));
         ids
+    }
+
+    /// Rebuild a graph from on-disk CSR parts (`graph::io::open_csr`):
+    /// edges arrive grouped by ascending source, so the out-degrees
+    /// derive from the offset diffs and the in-degrees from one pass
+    /// over `dst` — no per-edge validation loop (the `in_degree`
+    /// indexing still panics loudly on a corrupt out-of-range id).
+    pub fn from_csr_parts(
+        num_vertices: usize,
+        offsets: &[u64],
+        dst: &[u32],
+        relations: Vec<u16>,
+        num_relations: usize,
+    ) -> Self {
+        assert_eq!(offsets.len(), num_vertices + 1, "offsets must have V+1 entries");
+        assert_eq!(
+            *offsets.last().unwrap() as usize,
+            dst.len(),
+            "offsets must end at E"
+        );
+        assert!(
+            relations.is_empty() || relations.len() == dst.len(),
+            "relations must be empty or per-edge"
+        );
+        let mut edges = Vec::with_capacity(dst.len());
+        let mut out_degree = vec![0u32; num_vertices];
+        for v in 0..num_vertices {
+            let (lo, hi) = (offsets[v] as usize, offsets[v + 1] as usize);
+            out_degree[v] = (hi - lo) as u32;
+            for &d in &dst[lo..hi] {
+                edges.push(Edge::new(v as u32, d));
+            }
+        }
+        let mut in_degree = vec![0u32; num_vertices];
+        for &d in dst {
+            in_degree[d as usize] += 1;
+        }
+        Self { num_vertices, edges, relations, num_relations, in_degree, out_degree }
     }
 }
 
@@ -224,6 +296,47 @@ mod tests {
         let ranked = g.vertices_by_in_degree_desc();
         assert_eq!(ranked[0], 3); // in-degree 2
         assert_eq!(g.in_degree(ranked[1]), 1);
+    }
+
+    #[test]
+    fn counting_rank_matches_sort_reference_bit_identically() {
+        // The counting rank must reproduce the stable descending sort
+        // exactly — ties broken by ascending id — on skewed R-MAT
+        // graphs and the degenerate shapes (no edges, single vertex,
+        // all-equal degrees, a hub plus isolated tails).
+        let cases: Vec<Graph> = vec![
+            crate::graph::rmat::generate(1000, 8000, crate::graph::rmat::RmatParams::default(), 11),
+            crate::graph::rmat::generate(257, 4000, crate::graph::rmat::RmatParams::mild(), 12),
+            Graph::from_edges(5, Vec::new()),
+            Graph::from_edges(1, vec![Edge::new(0, 0)]),
+            Graph::from_edges(4, vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(2, 3), Edge::new(3, 0)]),
+            Graph::from_edges(6, vec![Edge::new(1, 0), Edge::new(2, 0), Edge::new(3, 0), Edge::new(4, 0)]),
+        ];
+        for (i, g) in cases.iter().enumerate() {
+            assert_eq!(
+                g.vertices_by_in_degree_desc(),
+                g.vertices_by_in_degree_desc_reference(),
+                "case {i} diverged"
+            );
+        }
+        assert!(Graph::from_edges(0, Vec::new()).vertices_by_in_degree_desc().is_empty());
+    }
+
+    #[test]
+    fn from_csr_parts_matches_from_edges() {
+        let g = diamond();
+        let csr = g.build_csr();
+        let offsets: Vec<u64> = csr.offsets.iter().map(|&o| o as u64).collect();
+        let rebuilt = Graph::from_csr_parts(g.num_vertices, &offsets, &csr.neighbors, Vec::new(), 1);
+        assert_eq!(rebuilt.num_vertices, g.num_vertices);
+        assert_eq!(rebuilt.in_degrees(), g.in_degrees());
+        assert_eq!(rebuilt.out_degrees(), g.out_degrees());
+        // Edge multiset is preserved (order is CSR-grouped).
+        let mut a = rebuilt.edges.clone();
+        let mut b = g.edges.clone();
+        a.sort_unstable_by_key(|e| (e.src, e.dst));
+        b.sort_unstable_by_key(|e| (e.src, e.dst));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! degree distribution, not on payload values).
 
 use super::{Edge, Graph};
-use crate::util::rng::Xoshiro256StarStar;
+use crate::util::pool;
+use crate::util::rng::{SplitMix64, Xoshiro256StarStar};
 
 /// R-MAT quadrant probabilities. The classic skew (a,b,c,d) =
 /// (0.57, 0.19, 0.19, 0.05) produces web-like power-law graphs.
@@ -71,6 +72,78 @@ pub fn generate(
         }
     }
     Graph::from_edges(num_vertices, edges)
+}
+
+/// Chunked, pool-parallel R-MAT: `num_edges` is split into fixed
+/// `chunk_edges`-sized quotas, each chunk runs the same rejection loop
+/// as [`generate`] on its own seeded RNG stream, and the chunks are
+/// concatenated in index order. The result depends only on
+/// `(num_vertices, num_edges, params, seed, chunk_edges)` — NOT on the
+/// pool width (pinned by test at widths 1 and 8) — so billion-edge
+/// graphs synthesize across all cores and still reproduce exactly.
+///
+/// Note: the chunked edge stream intentionally differs from the serial
+/// [`generate`] stream for the same seed (each chunk owns an
+/// independent RNG); determinism is per-(seed, chunk_edges), not
+/// cross-variant.
+pub fn generate_chunked(
+    num_vertices: usize,
+    num_edges: usize,
+    params: RmatParams,
+    seed: u64,
+    chunk_edges: usize,
+) -> Graph {
+    generate_chunked_with(
+        pool::configured_threads(),
+        num_vertices,
+        num_edges,
+        params,
+        seed,
+        chunk_edges,
+    )
+}
+
+/// [`generate_chunked`] with an explicit worker count — lets callers
+/// (and the determinism tests) pick a width without mutating the global
+/// pool configuration.
+pub fn generate_chunked_with(
+    threads: usize,
+    num_vertices: usize,
+    num_edges: usize,
+    params: RmatParams,
+    seed: u64,
+    chunk_edges: usize,
+) -> Graph {
+    assert!(num_vertices > 0);
+    assert!(chunk_edges > 0, "chunk_edges must be positive");
+    let scale = (usize::BITS - (num_vertices - 1).leading_zeros()) as usize;
+    let side = 1usize << scale;
+    let num_chunks = num_edges.div_ceil(chunk_edges).max(1);
+    let chunks: Vec<usize> = (0..num_chunks).collect();
+    let parts = pool::parallel_map_with(threads, chunks, move |_, chunk| {
+        let quota = chunk_edges.min(num_edges - chunk * chunk_edges);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(chunk_seed(seed, chunk));
+        let mut edges = Vec::with_capacity(quota);
+        while edges.len() < quota {
+            let (src, dst) = sample_cell(scale, side, &params, &mut rng);
+            if src < num_vertices && dst < num_vertices {
+                edges.push(Edge::new(src as u32, dst as u32));
+            }
+        }
+        edges
+    });
+    let mut edges = Vec::with_capacity(num_edges);
+    for part in parts {
+        edges.extend(part);
+    }
+    Graph::from_edges(num_vertices, edges)
+}
+
+/// Decorrelated per-chunk RNG seed: mix the chunk index into the base
+/// seed through a SplitMix64 round so neighbouring chunks get unrelated
+/// streams even for small sequential seeds.
+fn chunk_seed(seed: u64, chunk: usize) -> u64 {
+    SplitMix64::new(seed ^ (chunk as u64).wrapping_mul(0xA076_1D64_78BD_642F)).next_u64()
 }
 
 fn sample_cell(
@@ -172,5 +245,44 @@ mod tests {
         let g = generate(3000, 9000, RmatParams::mild(), 5);
         assert_eq!(g.num_vertices, 3000);
         assert_eq!(g.num_edges(), 9000);
+    }
+
+    #[test]
+    fn chunked_is_deterministic_at_any_width() {
+        // Fixed per-chunk quotas + per-chunk RNG streams: the edge list
+        // depends only on (V, E, params, seed, chunk_edges), never on
+        // how many workers ran the chunks.
+        let serial = generate_chunked_with(1, 2000, 10_000, RmatParams::default(), 42, 1024);
+        let wide = generate_chunked_with(8, 2000, 10_000, RmatParams::default(), 42, 1024);
+        assert_eq!(serial.edges, wide.edges);
+        assert_eq!(serial.num_edges(), 10_000);
+        assert!(serial
+            .edges
+            .iter()
+            .all(|e| (e.src as usize) < 2000 && (e.dst as usize) < 2000));
+        // Different seed or chunk size → different stream.
+        let other_seed = generate_chunked_with(8, 2000, 10_000, RmatParams::default(), 43, 1024);
+        assert_ne!(serial.edges, other_seed.edges);
+    }
+
+    #[test]
+    fn chunked_single_chunk_and_ragged_tail() {
+        // chunk_edges >= E degenerates to one chunk; a non-dividing
+        // chunk size leaves a short final quota — both hit exactly E.
+        let one = generate_chunked_with(4, 500, 700, RmatParams::mild(), 9, 100_000);
+        assert_eq!(one.num_edges(), 700);
+        let ragged = generate_chunked_with(4, 500, 700, RmatParams::mild(), 9, 333);
+        assert_eq!(ragged.num_edges(), 700);
+        assert_eq!(
+            ragged.edges,
+            generate_chunked_with(1, 500, 700, RmatParams::mild(), 9, 333).edges
+        );
+    }
+
+    #[test]
+    fn chunked_output_is_still_skewed() {
+        let g = generate_chunked_with(4, 4096, 65536, RmatParams::default(), 3, 4096);
+        let s = GraphStats::compute(&g);
+        assert!(s.top20_edge_share > 0.45, "top20 share {}", s.top20_edge_share);
     }
 }

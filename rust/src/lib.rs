@@ -11,6 +11,9 @@
 //!   descriptors with operation accounting;
 //! * [`config`] — EnGN micro-architecture parameters and the 14 nm
 //!   energy/area model;
+//! * [`mem`] — the off-chip memory-hierarchy model (HBM / host DRAM /
+//!   SSD tiers): places a layer's working set across tiers and prices
+//!   the spill traffic of graphs that exceed HBM (DESIGN.md §10);
 //! * [`sim`] — the cycle-level EnGN simulator (RER PE array, ring-edge-
 //!   reduce dataflow, edge reorganization, DAVC, tiling, DASR);
 //! * [`baselines`] — CPU (DGL/PyG), GPU (DGL/PyG) and HyGCN cost models;
@@ -35,6 +38,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod graph;
+pub mod mem;
 pub mod model;
 pub mod partition;
 pub mod report;

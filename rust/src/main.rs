@@ -3,10 +3,19 @@
 //! Subcommands:
 //!   datasets                         list the Table-5 dataset suite
 //!   run    --model M --dataset D [--dataflow rer|dense|spmm|hash|adaptive]
+//!          [--mem hbm4|hbm16|edge1|unbounded] [--csr FILE]
 //!          [--explain]              simulate one inference pass;
 //!                                      --explain prints the per-layer
-//!                                      plan (and, under adaptive, why
-//!                                      each dataflow was chosen)
+//!                                      plan with working-set / spill
+//!                                      columns (and, under adaptive,
+//!                                      why each dataflow was chosen);
+//!                                      --csr opens a binary CSR file
+//!                                      written by `engn synth`
+//!   synth  [--dataset D [--full] | --vertices V --edges E]
+//!          [--seed S] [--chunk C] [--out FILE]
+//!                                      chunked pool-parallel R-MAT
+//!                                      synthesis persisted as binary
+//!                                      CSR (open with `run --csr`)
 //!   bench  --exp <id|all> [--out D]  regenerate paper tables/figures
 //!   infer  --artifacts DIR [--name N]  functional inference via PJRT
 //!   serve  --artifacts DIR [--requests N] [--workers W] [--queue C]
@@ -14,7 +23,8 @@
 //!                                      multi-worker batched execution,
 //!                                      deadline-aware shedding)
 //!   whatif --model M --dataset D [--platforms P,..] [--workers W]
-//!          [--dataflow rer|dense|spmm|hash|adaptive] [--explain]
+//!          [--dataflow rer|dense|spmm|hash|adaptive] [--mem PRESET]
+//!          [--explain]
 //!                                      capacity planning through the
 //!                                      serving coordinator: sim + cost
 //!                                      jobs on the analytic backends;
@@ -22,7 +32,7 @@
 //!                                      LayerPlan first
 //!   scaleout --model M --dataset D [--chips K] [--partitioner P]
 //!            [--topology ring|all2all] [--link-gbps G] [--explain]
-//!            [--dataflow rer|dense|spmm|hash|adaptive]
+//!            [--dataflow rer|dense|spmm|hash|adaptive] [--mem PRESET]
 //!                                      multi-chip EnGN×K simulation
 //!                                      over a partitioned graph
 
@@ -67,6 +77,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("datasets") => cmd_datasets(),
         Some("run") => cmd_run(&parse_flags(&args[1..])),
+        Some("synth") => cmd_synth(&parse_flags(&args[1..])),
         Some("bench") => cmd_bench(&parse_flags(&args[1..])),
         Some("infer") => cmd_infer(&parse_flags(&args[1..])),
         Some("serve") => cmd_serve(&parse_flags(&args[1..])),
@@ -74,9 +85,12 @@ fn main() {
         Some("scaleout") => cmd_scaleout(&parse_flags(&args[1..])),
         _ => {
             eprintln!(
-                "usage: engn <datasets|run|bench|infer|serve|whatif|scaleout> [--threads N] [flags]\n\
+                "usage: engn <datasets|run|synth|bench|infer|serve|whatif|scaleout> [--threads N] [flags]\n\
                  examples:\n\
                  \u{20}  engn run --model gcn --dataset CA\n\
+                 \u{20}  engn run --model gcn --dataset EN --full --mem hbm4\n\
+                 \u{20}  engn synth --vertices 1000000 --edges 16000000 --out big.csr\n\
+                 \u{20}  engn run --model gcn --csr big.csr\n\
                  \u{20}  engn bench --exp fig9 --out reports\n\
                  \u{20}  engn bench --exp all --out reports [--full]\n\
                  \u{20}  engn infer --artifacts artifacts --name gcn_forward\n\
@@ -129,6 +143,76 @@ fn cmd_datasets() -> i32 {
     0
 }
 
+/// Parse `--mem <preset>` into a hierarchy; `Err(exit_code)` on an
+/// unknown preset (the error text lists the valid names).
+fn parse_mem(flags: &HashMap<String, String>) -> Result<Option<engn::mem::MemHierarchy>, i32> {
+    match flags.get("mem") {
+        None => Ok(None),
+        Some(s) => match engn::mem::MemHierarchy::preset(s) {
+            Some(h) => Ok(Some(h)),
+            None => {
+                eprintln!(
+                    "unknown mem preset {s:?} (one of {})",
+                    engn::mem::MemHierarchy::preset_names().join("|")
+                );
+                Err(2)
+            }
+        },
+    }
+}
+
+/// Chunked R-MAT synthesis persisted as binary CSR: synthesize once
+/// (all cores, deterministic at any width), re-open per process with
+/// `engn run --csr`.
+fn cmd_synth(flags: &HashMap<String, String>) -> i32 {
+    use engn::graph::rmat::{self, RmatParams};
+    let (v, e, label) = if let Some(code) = flags.get("dataset") {
+        let Some(spec) = datasets::by_code(code) else {
+            eprintln!("unknown dataset {code:?} — see `engn datasets`");
+            return 2;
+        };
+        let policy = if flags.contains_key("full") {
+            ScalePolicy::Full
+        } else {
+            ScalePolicy::Capped
+        };
+        let (v, e, factor) = spec.scaled_sizes(policy);
+        let label = if factor > 1 {
+            format!("{} scaled 1/{factor}", spec.name)
+        } else {
+            spec.name.to_string()
+        };
+        (v, e, label)
+    } else {
+        let v = flags.get("vertices").and_then(|s| s.parse().ok()).unwrap_or(100_000);
+        let e = flags.get("edges").and_then(|s| s.parse().ok()).unwrap_or(1_000_000);
+        (v, e, "r-mat".to_string())
+    };
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0xE16A);
+    let chunk: usize = flags
+        .get("chunk")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 20);
+    let out = flags.get("out").map(String::as_str).unwrap_or("graph.csr");
+    println!("synthesizing {label}: {v} vertices, {e} edges (seed {seed}, chunk {chunk}) ...");
+    let t0 = std::time::Instant::now();
+    let g = rmat::generate_chunked(v, e, RmatParams::default(), seed, chunk);
+    let synth_wall = t0.elapsed();
+    if let Err(err) = engn::graph::io::save_csr(&g, out) {
+        eprintln!("{err}");
+        return 1;
+    }
+    let bytes = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {} ({}) in {} synth + {} total",
+        out,
+        fmt_bytes(bytes as f64),
+        fmt_time(synth_wall.as_secs_f64()),
+        fmt_time(t0.elapsed().as_secs_f64())
+    );
+    0
+}
+
 fn cmd_run(flags: &HashMap<String, String>) -> i32 {
     let model_name = flags.get("model").map(String::as_str).unwrap_or("gcn");
     let code = flags.get("dataset").map(String::as_str).unwrap_or("CA");
@@ -146,6 +230,51 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             return 2;
         };
         cfg.dataflow = df;
+    }
+    match parse_mem(flags) {
+        Ok(Some(m)) => cfg.mem = m,
+        Ok(None) => {}
+        Err(code) => return code,
+    }
+    // Binary CSR input (`engn synth` output): `--csr FILE
+    // [--feature-dim F] [--labels L]` — opened without a full
+    // `Graph::from_edges` rebuild.
+    if let Some(path) = flags.get("csr") {
+        let csr = match engn::graph::io::open_csr(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let spec = engn::graph::datasets::DatasetSpec {
+            code: "CSR",
+            name: "csr-file",
+            vertices: csr.num_vertices,
+            edges: csr.num_edges(),
+            feature_dim: flags
+                .get("feature-dim")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(64),
+            labels: flags.get("labels").and_then(|s| s.parse().ok()).unwrap_or(16),
+            num_relations: csr.num_relations,
+            group: engn::graph::datasets::DatasetGroup::Synthetic,
+        };
+        let model = GnnModel::for_dataset(kind, &spec);
+        let prepared = PreparedGraph::from_csr(csr);
+        let r = SimSession::new(&cfg, &prepared, &model).run("CSR");
+        println!(
+            "{} on {} ({} vertices, {} edges): {} | {} GOP/s | {:.2e} J | spill {}",
+            kind.name(),
+            path,
+            prepared.graph().num_vertices,
+            prepared.graph().num_edges(),
+            fmt_time(r.seconds()),
+            si(r.gops() * 1e9 / 1e9),
+            r.energy_j(),
+            fmt_bytes(r.spilled_bytes())
+        );
+        return 0;
     }
     // Real edge-list input: `--edges FILE [--feature-dim F] [--labels L]`.
     if let Some(path) = flags.get("edges") {
@@ -217,6 +346,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             &format!("plan: {} on {} under {}", kind.name(), spec.code, cfg.name),
             cfg.dataflow,
             &plans,
+            Some(MemExplain::new(&cfg, prepared.graph())),
         );
         println!();
     }
@@ -239,13 +369,24 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
     );
     println!("  chip power   : {:.2} W", r.power_w);
     println!(
-        "  energy       : {:.2e} J (chip {:.2e} + HBM {:.2e})",
+        "  energy       : {:.2e} J (chip {:.2e} + HBM {:.2e} + spill {:.2e})",
         r.energy_j(),
         r.chip_energy_j,
-        r.hbm_energy_j
+        r.hbm_energy_j,
+        r.ext_energy_j
     );
     println!("  GOPS/W       : {:.1}", r.gops_per_watt());
     println!("  HBM traffic  : {}", fmt_bytes(r.traffic().hbm_total()));
+    if r.spilled_bytes() > 0.0 {
+        println!(
+            "  spill        : {} off-HBM under {} ({} stall cycles)",
+            fmt_bytes(r.spilled_bytes()),
+            cfg.mem.name,
+            si(r.spill_stall_cycles())
+        );
+    } else {
+        println!("  spill        : none (fits {} tier 0)", cfg.mem.name);
+    }
     println!("  DAVC hit rate: {:.1}%", 100.0 * r.davc().hit_rate());
     let bd = r.stage_breakdown();
     println!(
@@ -493,9 +634,15 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
         };
         sim_job = sim_job.with_dataflow(df);
     }
+    match parse_mem(flags) {
+        Ok(Some(m)) => sim_job = sim_job.with_mem(m),
+        Ok(None) => {}
+        Err(code) => return code,
+    }
     // --explain: print every layer's plan (stage order, grid Q, tile
-    // schedule) before asking the backends. The graph comes from the
-    // process-wide cache, so the sim backend below reuses it.
+    // schedule, working set / spill) before asking the backends. The
+    // graph comes from the process-wide cache, so the sim backend below
+    // reuses it.
     if flags.contains_key("explain") {
         let prepared = engn::sim::graph_cache::prepared_for(&spec, sim_job.policy, sim_job.seed);
         let model = GnnModel::for_dataset(kind, &spec);
@@ -505,6 +652,7 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
             &format!("plan: {} on {} under {}", kind.name(), spec.code, sim_job.config.name),
             sim_job.config.dataflow,
             &plans,
+            Some(MemExplain::new(&sim_job.config, prepared.graph())),
         );
         println!();
     }
@@ -575,25 +723,70 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
     }
 }
 
+/// Graph-level context for the `--explain` spill columns: enough to
+/// derive each plan's analytic working set and place it on the
+/// configured hierarchy.
+struct MemExplain<'a> {
+    cfg: &'a AcceleratorConfig,
+    v: usize,
+    e: usize,
+    has_relations: bool,
+}
+
+impl<'a> MemExplain<'a> {
+    fn new(cfg: &'a AcceleratorConfig, g: &engn::graph::Graph) -> Self {
+        Self {
+            cfg,
+            v: g.num_vertices,
+            e: g.num_edges(),
+            has_relations: !g.relations.is_empty(),
+        }
+    }
+}
+
 /// Print a session's per-layer [`LayerPlan`]s — dataflow, stage order,
-/// grid Q, tile-schedule choice, tile count — so scheduling and
+/// grid Q, tile-schedule choice, tile count, and (when graph context is
+/// supplied) the analytic working set plus the bytes that land off-HBM
+/// under the configured `--mem` hierarchy — so scheduling and
 /// partitioning decisions are inspectable (`run --explain`,
 /// `whatif --explain`, `scaleout --explain`). Under the adaptive
 /// planner each layer also prints its [`engn::sim::Selection`]
 /// rationale.
-fn print_layer_plans(label: &str, configured: DataflowKind, plans: &[LayerPlan]) {
+fn print_layer_plans(
+    label: &str,
+    configured: DataflowKind,
+    plans: &[LayerPlan],
+    mem: Option<MemExplain<'_>>,
+) {
     println!("{label} (dataflow {})", configured.name());
     println!(
-        "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9}",
-        "layer", "F", "H", "order", "Q", "span", "sched", "tiles", "dataflow"
+        "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9} {:>9} {:>9}",
+        "layer", "F", "H", "order", "Q", "span", "sched", "tiles", "dataflow", "workset", "spill"
     );
     for p in plans {
         let order = match p.order {
             ExecOrder::FeatureFirst => "FAU",
             ExecOrder::AggregateFirst => "AFU",
         };
+        let (ws_col, spill_col) = match &mem {
+            Some(m) => {
+                let ws = engn::mem::approx_layer_working_set(
+                    m.v,
+                    m.e,
+                    m.has_relations,
+                    p.dims.f_in,
+                    p.dims.f_out,
+                    p.agg_dim,
+                    p.q,
+                    m.cfg.word_bytes,
+                );
+                let spill = m.cfg.mem.analyze(&ws, m.cfg.freq_ghz);
+                (fmt_bytes(ws.total_bytes()), fmt_bytes(spill.spilled_bytes()))
+            }
+            None => ("-".to_string(), "-".to_string()),
+        };
         println!(
-            "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9}",
+            "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9} {:>9} {:>9}",
             p.layer_idx,
             p.dims.f_in,
             p.dims.f_out,
@@ -602,7 +795,9 @@ fn print_layer_plans(label: &str, configured: DataflowKind, plans: &[LayerPlan])
             p.span,
             format!("{:?}", p.choice).to_lowercase(),
             p.tiling.num_tiles(),
-            p.dataflow.name()
+            p.dataflow.name(),
+            ws_col,
+            spill_col
         );
         if let Some(sel) = &p.selection {
             println!("        layer {}: {}", p.layer_idx, sel.why);
@@ -668,6 +863,11 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
             return 2;
         };
         cfg.dataflow = df;
+    }
+    match parse_mem(flags) {
+        Ok(Some(m)) => cfg.mem = m,
+        Ok(None) => {}
+        Err(code) => return code,
     }
     let policy = if flags.contains_key("full") {
         ScalePolicy::Full
@@ -747,15 +947,32 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
         r.link_energy_j
     );
     println!("  throughput   : {}OP/s aggregate", si(r.gops() * 1e9));
+    println!(
+        "  spill        : {} off-HBM across {} chips under {} (1-chip: {})",
+        fmt_bytes(r.spilled_bytes()),
+        r.chips,
+        cfg.mem.name,
+        fmt_bytes(single.spilled_bytes())
+    );
     if flags.contains_key("explain") {
         println!();
         let single_session = SimSession::new(&cfg, &prepared, &model);
         let single_plans = single_session.plan();
-        print_layer_plans("single-chip plan", cfg.dataflow, &single_plans);
+        print_layer_plans(
+            "single-chip plan",
+            cfg.dataflow,
+            &single_plans,
+            Some(MemExplain::new(&cfg, prepared.graph())),
+        );
         for (c, chip) in parts.chips.iter().enumerate() {
             let s = SimSession::new(&cfg, &chip.prepared, &model);
             let plans = s.plan();
-            print_layer_plans(&format!("chip {c} plan"), cfg.dataflow, &plans);
+            print_layer_plans(
+                &format!("chip {c} plan"),
+                cfg.dataflow,
+                &plans,
+                Some(MemExplain::new(&cfg, chip.prepared.graph())),
+            );
         }
     }
     0

@@ -236,75 +236,76 @@ pub fn layer_work(
     layer: LayerDims,
     order: ExecOrder,
 ) -> StageWork {
+    let mut out = StageWork::default();
+    layer_work_into(&mut out, model, n, e, rel_hist, layer, order);
+    out
+}
+
+/// Allocation-free variant of [`layer_work`]: clears and refills the
+/// caller's `StageWork`, retaining its vec capacities — the engine's
+/// dense-stage cost loop calls this once per layer through a
+/// thread-local scratch instead of allocating three fresh vecs
+/// (DESIGN.md §9 "Scratch reuse"). A reused scratch is bit-identical
+/// to a fresh build, pinned by `tests::scratch_reuse_matches_fresh`.
+pub fn layer_work_into(
+    out: &mut StageWork,
+    model: &GnnModel,
+    n: usize,
+    e: usize,
+    rel_hist: &[usize],
+    layer: LayerDims,
+    order: ExecOrder,
+) {
+    out.feature_extraction.clear();
+    out.aggregate.clear();
+    out.update.clear();
     let (f, h) = (layer.f_in, layer.f_out);
     let agg_dim = match order {
         ExecOrder::FeatureFirst => h,
         ExecOrder::AggregateFirst => f,
     };
     match model.kind {
-        GnnKind::Gcn => StageWork {
-            feature_extraction: vec![
-                Work::Elementwise { n, d: f },
-                Work::Matmul { n, f, h },
-            ],
-            aggregate: vec![Work::EdgeReduce { d: agg_dim }],
-            update: vec![Work::Elementwise { n, d: h }],
-        },
-        GnnKind::GsPool => StageWork {
-            feature_extraction: vec![
-                Work::Matmul { n, f, h },
-                Work::Elementwise { n, d: 2 * h },
-            ],
-            aggregate: vec![Work::EdgeReduce { d: h }],
-            update: vec![
-                Work::Matmul { n, f: f + h, h },
-                Work::Elementwise { n, d: h },
-            ],
-        },
+        GnnKind::Gcn => {
+            out.feature_extraction.push(Work::Elementwise { n, d: f });
+            out.feature_extraction.push(Work::Matmul { n, f, h });
+            out.aggregate.push(Work::EdgeReduce { d: agg_dim });
+            out.update.push(Work::Elementwise { n, d: h });
+        }
+        GnnKind::GsPool => {
+            out.feature_extraction.push(Work::Matmul { n, f, h });
+            out.feature_extraction.push(Work::Elementwise { n, d: 2 * h });
+            out.aggregate.push(Work::EdgeReduce { d: h });
+            out.update.push(Work::Matmul { n, f: f + h, h });
+            out.update.push(Work::Elementwise { n, d: h });
+        }
         GnnKind::Rgcn => {
-            let mut fe = vec![Work::Elementwise { n, d: f }];
+            out.feature_extraction.push(Work::Elementwise { n, d: f });
             for &er in rel_hist {
                 let active = er.min(n);
-                fe.push(Work::Matmul { n: active, f, h });
+                out.feature_extraction.push(Work::Matmul { n: active, f, h });
             }
-            StageWork {
-                feature_extraction: fe,
-                aggregate: vec![Work::EdgeReduce { d: agg_dim }],
-                update: vec![Work::Matmul { n, f, h }, Work::Elementwise { n, d: h }],
-            }
+            out.aggregate.push(Work::EdgeReduce { d: agg_dim });
+            out.update.push(Work::Matmul { n, f, h });
+            out.update.push(Work::Elementwise { n, d: h });
         }
-        GnnKind::GatedGcn => StageWork {
-            feature_extraction: vec![
-                Work::Matmul { n, f, h: f },
-                Work::Matmul { n, f, h: f },
-                Work::Elementwise { n, d: f },
-                Work::EdgeWise { e, d: f },
-            ],
-            aggregate: vec![Work::EdgeReduce { d: agg_dim }, Work::Matmul { n, f, h }],
-            update: vec![Work::Elementwise { n, d: h }],
-        },
+        GnnKind::GatedGcn => {
+            out.feature_extraction.push(Work::Matmul { n, f, h: f });
+            out.feature_extraction.push(Work::Matmul { n, f, h: f });
+            out.feature_extraction.push(Work::Elementwise { n, d: f });
+            out.feature_extraction.push(Work::EdgeWise { e, d: f });
+            out.aggregate.push(Work::EdgeReduce { d: agg_dim });
+            out.aggregate.push(Work::Matmul { n, f, h });
+            out.update.push(Work::Elementwise { n, d: h });
+        }
         GnnKind::Grn => {
             let w_matmul = Work::Matmul { n, f, h };
-            let gru = vec![
-                Work::Matmul { n, f: 2 * h, h: 3 * h },
-                Work::Elementwise { n, d: 10 * h },
-            ];
+            out.aggregate.push(Work::EdgeReduce { d: agg_dim });
             match order {
-                ExecOrder::FeatureFirst => StageWork {
-                    feature_extraction: vec![w_matmul],
-                    aggregate: vec![Work::EdgeReduce { d: agg_dim }],
-                    update: gru,
-                },
-                ExecOrder::AggregateFirst => StageWork {
-                    feature_extraction: vec![],
-                    aggregate: vec![Work::EdgeReduce { d: agg_dim }],
-                    update: {
-                        let mut u = vec![w_matmul];
-                        u.extend(gru);
-                        u
-                    },
-                },
+                ExecOrder::FeatureFirst => out.feature_extraction.push(w_matmul),
+                ExecOrder::AggregateFirst => out.update.push(w_matmul),
             }
+            out.update.push(Work::Matmul { n, f: 2 * h, h: 3 * h });
+            out.update.push(Work::Elementwise { n, d: 10 * h });
         }
     }
 }
@@ -476,6 +477,39 @@ mod tests {
                             kind.name(),
                             ops.update
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        // layer_work_into through a dirty, reused scratch must produce
+        // exactly what a fresh layer_work build does — the engine's
+        // thread-local Work scratch depends on it.
+        let mut scratch = StageWork::default();
+        for code in ["CA", "RD", "AF", "SC"] {
+            let d = datasets::by_code(code).unwrap();
+            for kind in GnnKind::all() {
+                if !kind.runs_on(&d) {
+                    continue;
+                }
+                let m = GnnModel::for_dataset(kind, &d);
+                let hist = if m.num_relations > 1 {
+                    vec![d.edges / m.num_relations; m.num_relations]
+                } else {
+                    vec![d.edges]
+                };
+                let e: usize = hist.iter().sum();
+                for &l in &m.layers {
+                    for order in [ExecOrder::FeatureFirst, ExecOrder::AggregateFirst] {
+                        let fresh = layer_work(&m, d.vertices, e, &hist, l, order);
+                        layer_work_into(&mut scratch, &m, d.vertices, e, &hist, l, order);
+                        assert_eq!(scratch.feature_extraction, fresh.feature_extraction);
+                        assert_eq!(scratch.aggregate, fresh.aggregate);
+                        assert_eq!(scratch.update, fresh.update);
+                        assert_eq!(scratch.agg_dim(), fresh.agg_dim());
                     }
                 }
             }

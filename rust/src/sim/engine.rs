@@ -19,6 +19,7 @@
 
 use crate::config::{AcceleratorConfig, DataflowKind, Fidelity, StageOrder};
 use crate::graph::Graph;
+use crate::mem;
 use crate::model::ops::{self, ExecOrder, StageWork, Work};
 use crate::model::{GnnModel, LayerDims};
 use crate::sim::dataflow::{self, TileOutcome, TileView};
@@ -42,6 +43,18 @@ const PHASE_SAMPLE_BUDGET: usize = 8_000_000;
 /// Result-bank share reserved for destination partials (the other half
 /// double-buffers source properties / temp features).
 const DST_BANK_SHARE: f64 = 0.5;
+
+/// Grid partition factor for a graph of `n` vertices aggregating
+/// `agg_dim`-word properties under `cfg`: destination intervals must
+/// fit their half of the result bank. Public so analytic callers (the
+/// `memory` report table, `--explain`) price the same Q the planner
+/// picks — [`crate::mem::planned_q`] re-exports it.
+pub fn grid_q(cfg: &AcceleratorConfig, n: usize, agg_dim: usize) -> usize {
+    let iv_cap = ((cfg.result_bank_bytes as f64 * DST_BANK_SHARE) as usize
+        / (agg_dim.max(1) * cfg.word_bytes))
+        .max(cfg.pe_rows);
+    ceil_div(n.max(1), iv_cap).max(1)
+}
 
 /// Compatibility wrapper: prepares the graph and runs a [`SimSession`]
 /// in one call. Callers that reuse a graph across configurations or
@@ -113,7 +126,6 @@ pub struct LayerPlan {
     pub layer_idx: usize,
     pub dims: LayerDims,
     pub order: ExecOrder,
-    pub work: StageWork,
     /// Dimension of the property the aggregate stage reduces (≥ 1).
     pub agg_dim: usize,
     pub q: usize,
@@ -145,6 +157,22 @@ thread_local! {
     /// cache replays identically to a fresh one (pinned in davc.rs),
     /// so reports are unchanged at any thread count.
     static DAVC_SCRATCH: RefCell<Option<Davc>> = const { RefCell::new(None) };
+
+    /// Per-thread `StageWork` scratch for the dense-stage cost loop
+    /// (the remaining per-layer allocation hot spot the ROADMAP named):
+    /// `ops::layer_work_into` clears and refills it, retaining the vec
+    /// capacities, so `execute_layer` allocates nothing for work items
+    /// after warm-up. `layer_work` is a pure function of the plan, so
+    /// recomputing it through dirty scratch is bit-identical to the
+    /// fresh build the old `LayerPlan.work` field carried (pinned by
+    /// `ops::tests::scratch_reuse_matches_fresh`).
+    static WORK_SCRATCH: RefCell<StageWork> = const {
+        RefCell::new(StageWork {
+            feature_extraction: Vec::new(),
+            aggregate: Vec::new(),
+            update: Vec::new(),
+        })
+    };
 }
 
 impl<'a> SimSession<'a> {
@@ -177,13 +205,13 @@ impl<'a> SimSession<'a> {
     pub fn plan(&self) -> Vec<LayerPlan> {
         let n = self.prepared.graph().num_vertices;
         let e = self.prepared.graph().num_edges();
-        let shapes: Vec<(ExecOrder, StageWork, usize, usize)> = self
+        let shapes: Vec<(ExecOrder, usize, usize)> = self
             .model
             .layers
             .iter()
             .map(|&layer| self.layer_shape(layer, n, e))
             .collect();
-        let mut qs: Vec<usize> = shapes.iter().map(|s| s.3).collect();
+        let mut qs: Vec<usize> = shapes.iter().map(|s| s.2).collect();
         qs.sort_unstable();
         qs.dedup();
         if qs.len() > 1 {
@@ -196,7 +224,7 @@ impl<'a> SimSession<'a> {
             .iter()
             .zip(shapes)
             .enumerate()
-            .map(|(idx, (&layer, (order, work, agg_dim, q)))| {
+            .map(|(idx, (&layer, (order, agg_dim, q)))| {
                 let tiling = self.prepared.tiling(q);
                 let span = tiling.span;
                 // Tile-schedule choice, compared by the same stream
@@ -211,7 +239,6 @@ impl<'a> SimSession<'a> {
                     layer_idx: idx,
                     dims: layer,
                     order,
-                    work,
                     agg_dim,
                     q,
                     span,
@@ -247,29 +274,33 @@ impl<'a> SimSession<'a> {
     }
 
     /// The cheap, tiling-free half of planning one layer: stage order,
-    /// work decomposition, aggregate dimension and grid partition Q.
-    fn layer_shape(
-        &self,
-        layer: LayerDims,
-        n: usize,
-        e: usize,
-    ) -> (ExecOrder, StageWork, usize, usize) {
+    /// aggregate dimension and grid partition Q. The work decomposition
+    /// itself is not retained — `execute_layer` recomputes it into the
+    /// thread-local scratch (it is a pure function of the plan).
+    fn layer_shape(&self, layer: LayerDims, n: usize, e: usize) -> (ExecOrder, usize, usize) {
         let cfg = self.cfg;
         let order = match cfg.stage_order {
             StageOrder::Fau => ExecOrder::FeatureFirst,
             StageOrder::Afu => ExecOrder::AggregateFirst,
             StageOrder::Dasr => ops::dasr_order(self.model, layer),
         };
-        let work = ops::layer_work(self.model, n, e, self.prepared.rel_hist(), layer, order);
-        let agg_dim = work.agg_dim().max(1);
-
-        // Grid partition: destination intervals must fit their half of
-        // the result bank.
-        let iv_cap = ((cfg.result_bank_bytes as f64 * DST_BANK_SHARE) as usize
-            / (agg_dim * cfg.word_bytes))
-            .max(cfg.pe_rows);
-        let q = ceil_div(n.max(1), iv_cap).max(1);
-        (order, work, agg_dim, q)
+        let agg_dim = WORK_SCRATCH
+            .with(|cell| {
+                let mut work = cell.borrow_mut();
+                ops::layer_work_into(
+                    &mut work,
+                    self.model,
+                    n,
+                    e,
+                    self.prepared.rel_hist(),
+                    layer,
+                    order,
+                );
+                work.agg_dim()
+            })
+            .max(1);
+        let q = grid_q(cfg, n, agg_dim);
+        (order, agg_dim, q)
     }
 
     fn stream_model(
@@ -310,6 +341,10 @@ impl<'a> SimSession<'a> {
         let seconds = total_cycles / (freq * 1e9);
         let static_j = self.cfg.energy.static_power_w(self.cfg.on_chip_bytes()) * seconds;
         let chip_energy_j = energy_total.chip_j() + static_j;
+        // Off-HBM spill transfer energy (crate::mem): 0.0 when every
+        // layer's working set fits HBM, so resident reports are
+        // bit-identical to the pre-mem-plane path.
+        let ext_energy_j: f64 = layers.iter().map(|l| l.spill.energy_j).sum();
         let power_w = if seconds > 0.0 { chip_energy_j / seconds } else { 0.0 };
         SimReport {
             config_name: self.cfg.name.clone(),
@@ -319,6 +354,7 @@ impl<'a> SimSession<'a> {
             freq_ghz: freq,
             chip_energy_j,
             hbm_energy_j: energy_total.hbm_j,
+            ext_energy_j,
             power_w,
         }
     }
@@ -330,7 +366,21 @@ impl<'a> SimSession<'a> {
         let cfg = self.cfg;
         let n = self.prepared.graph().num_vertices;
         let e = self.prepared.graph().num_edges();
-        let work = &plan.work;
+        // Work decomposition through the per-thread scratch: pure
+        // function of the plan, so the recomputation is bit-identical
+        // to the StageWork the plan used to carry — without the three
+        // per-layer vec allocations.
+        let mut work = WORK_SCRATCH.with(|cell| cell.take());
+        ops::layer_work_into(
+            &mut work,
+            self.model,
+            n,
+            e,
+            self.prepared.rel_hist(),
+            plan.dims,
+            plan.order,
+        );
+        let work = work; // freeze: read-only below, returned to scratch at the end
         let agg_dim = plan.agg_dim;
         let q = plan.q;
         let span = plan.span;
@@ -475,15 +525,52 @@ impl<'a> SimSession<'a> {
             schedule_bytes: src_stream + dst_read + dst_write + temp_write,
         };
 
+        // --- Off-HBM residency (crate::mem, DESIGN.md §10) ------------
+        // The layer's working set from the exact byte terms charged
+        // above: vertex features at the input / aggregate / output
+        // dimensions plus the edge arrays, each with the stream traffic
+        // that flows through its residence. Tiers below HBM serialize
+        // their share of that stream into stall cycles and transfer
+        // energy; a working set that fits HBM yields exactly 0.0 for
+        // both, keeping this path bit-identical to the resident-only
+        // model (the zero-spill identity `tests/mem_integration.rs`
+        // pins under every dataflow kind).
+        let ws = mem::WorkingSet {
+            components: vec![
+                mem::WsComponent {
+                    name: "in-feat",
+                    resident_bytes: one_time_read,
+                    streamed_bytes: one_time_read,
+                },
+                mem::WsComponent {
+                    name: "agg-feat",
+                    resident_bytes: nf * d_agg_f * wb,
+                    streamed_bytes: temp_write + src_stream + dst_read + dst_write,
+                },
+                mem::WsComponent {
+                    name: "out-feat",
+                    resident_bytes: out_write,
+                    streamed_bytes: out_write,
+                },
+                mem::WsComponent {
+                    name: "edges",
+                    resident_bytes: edge_bytes,
+                    streamed_bytes: edge_bytes,
+                },
+            ],
+        };
+        let spill = cfg.mem.analyze(&ws, cfg.freq_ghz);
+
         // --- Layer roll-up --------------------------------------------
         // FE and aggregation overlap batch-wise (Fig 8); update runs on
-        // the final aggregated values.
+        // the final aggregated values. Spill stalls are not overlapped:
+        // the lower tiers feed HBM, so their serialization adds on top.
         let compute_cycles = fe_cycles.max(agg_cycles)
             + upd_cycles
             + pe_array::pipeline_fill(cfg.pe_rows, cfg.pe_cols);
         let hbm_cycles = traffic.hbm_total() / cfg.hbm_bytes_per_cycle()
             + cfg.hbm_latency_ns * cfg.freq_ghz; // one exposed burst
-        let total_cycles = compute_cycles.max(hbm_cycles);
+        let total_cycles = compute_cycles.max(hbm_cycles) + spill.stall_cycles;
 
         let energy = energy::tally(cfg, mac_ops, alu_ops, &traffic);
         let report = LayerReport {
@@ -508,10 +595,12 @@ impl<'a> SimSession<'a> {
             },
             traffic,
             davc: davc_scaled,
+            spill,
             compute_cycles,
             total_cycles,
             ring_utilization: agg_util.min(1.0),
         };
+        WORK_SCRATCH.with(|cell| cell.replace(work));
         (report, energy)
     }
 }
@@ -724,6 +813,29 @@ mod tests {
             assert_eq!(a.hbm_energy_j, b.hbm_energy_j);
             assert_eq!(a.power_w, b.power_w);
         }
+    }
+
+    #[test]
+    fn spilling_hierarchy_adds_stall_and_energy() {
+        let (m, g, spec) = cora();
+        let prepared = PreparedGraph::from_arc(Arc::new(g));
+        let base_cfg = AcceleratorConfig::engn();
+        let base = SimSession::new(&base_cfg, &prepared, &m).run(spec.code);
+        assert_eq!(base.spilled_bytes(), 0.0, "capped Cora must fit the default HBM");
+        assert_eq!(base.spill_stall_cycles(), 0.0);
+        // Shrink tier 0 to 64 KB: even Cora's working set now spills.
+        let mut tiny = crate::mem::MemHierarchy::hbm4();
+        tiny.name = "tiny";
+        tiny.tiers[0].capacity_bytes = 64.0 * 1024.0;
+        let cfg = AcceleratorConfig::engn().with_mem(tiny);
+        let spilled = SimSession::new(&cfg, &prepared, &m).run(spec.code);
+        assert!(spilled.spilled_bytes() > 0.0);
+        assert!(spilled.spill_stall_cycles() > 0.0);
+        assert!(spilled.ext_energy_j > 0.0);
+        assert!(spilled.total_cycles() > base.total_cycles());
+        assert!(spilled.energy_j() > base.energy_j());
+        // Work accounting is unchanged — spill costs time, not ops.
+        assert_eq!(spilled.total_ops(), base.total_ops());
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub mod stats;
 pub mod tiles;
 
 pub use dataflow::{Dataflow, DenseSystolic, HashDecoupled, SpmmSystolic, TileOutcome, TileView};
-pub use engine::{sweep, sweep_with, LayerPlan, SimSession, Simulator};
+pub use engine::{grid_q, sweep, sweep_with, LayerPlan, SimSession, Simulator};
 pub use multichip::{ChipLink, ChipTopology, MultiChipSession, ScaleOutReport};
 pub use prepared::{EdgeTiling, PreparedGraph, TileEdges};
 pub use ring::RingEdgeReduce;

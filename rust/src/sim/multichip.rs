@@ -239,9 +239,22 @@ impl ScaleOutReport {
         self.per_chip.iter().map(SimReport::total_ops).sum()
     }
 
-    /// Total energy: per-chip (dynamic + static + HBM) plus link.
+    /// Total energy: per-chip (dynamic + static + HBM + off-HBM spill)
+    /// plus link.
     pub fn energy_j(&self) -> f64 {
         self.per_chip.iter().map(SimReport::energy_j).sum::<f64>() + self.link_energy_j
+    }
+
+    /// Bytes that streamed through tiers below HBM, summed over chips.
+    /// Sharding shrinks each chip's working set, so for a graph that
+    /// spills on one chip this drops — often to zero — as K grows.
+    pub fn spilled_bytes(&self) -> f64 {
+        self.per_chip.iter().map(SimReport::spilled_bytes).sum()
+    }
+
+    /// Off-HBM stall cycles, summed over chips.
+    pub fn spill_stall_cycles(&self) -> f64 {
+        self.per_chip.iter().map(SimReport::spill_stall_cycles).sum()
     }
 
     /// Aggregate throughput, GOP/s.
@@ -516,6 +529,39 @@ mod tests {
                 fixed.total_cycles()
             );
         }
+    }
+
+    #[test]
+    fn sharding_shrinks_per_chip_spill() {
+        // Shrink HBM so the whole graph's working set spills on one
+        // chip. Each chip's shard is strictly smaller (fewer edges, no
+        // more vertices even counting halo replication), so every
+        // chip's own spill must come in below the single-chip spill.
+        let (mut cfg, g, m) = setup();
+        cfg.mem.name = "tiny";
+        cfg.mem.tiers[0].capacity_bytes = 512.0 * 1024.0;
+        let prepared = crate::sim::PreparedGraph::from_arc(g.clone());
+        let single = SimSession::new(&cfg, &prepared, &m).run("PB");
+        assert!(single.spilled_bytes() > 0.0, "single chip must spill under tiny HBM");
+        let parts = PartitionedGraph::build(g, PartitionerKind::Degree, 4);
+        let multi = MultiChipSession::new(&cfg, &parts, &m).run("PB");
+        let worst_chip = multi
+            .per_chip
+            .iter()
+            .map(|r| r.spilled_bytes())
+            .fold(0.0f64, f64::max);
+        assert!(
+            worst_chip < single.spilled_bytes(),
+            "worst 4-chip spill {} !< 1-chip spill {}",
+            worst_chip,
+            single.spilled_bytes()
+        );
+        let worst_stall = multi
+            .per_chip
+            .iter()
+            .map(|r| r.spill_stall_cycles())
+            .fold(0.0f64, f64::max);
+        assert!(worst_stall < single.spill_stall_cycles());
     }
 
     #[test]

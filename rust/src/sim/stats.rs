@@ -2,6 +2,7 @@
 //! reported per stage, per layer, and for a whole model pass.
 
 use crate::config::AcceleratorConfig;
+use crate::mem::SpillStats;
 
 /// The three EnGN processing stages (paper §2.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,9 +99,13 @@ pub struct LayerReport {
     pub update: StageStats,
     pub traffic: TrafficStats,
     pub davc: CacheStats,
+    /// Off-HBM residency of this layer's working set (`crate::mem`):
+    /// per-tier placement, spill traffic, and the stall/energy it
+    /// costs. All-zero (`Default`) when the layer fits HBM.
+    pub spill: SpillStats,
     /// Compute cycles (serialized stages) before memory overlap.
     pub compute_cycles: f64,
-    /// Cycles the layer actually takes: max(compute, hbm) + serial tail.
+    /// Cycles the layer actually takes: max(compute, hbm) + spill stall.
     pub total_cycles: f64,
     /// Ring utilization during aggregation (consumed / offered PE-cycles).
     pub ring_utilization: f64,
@@ -131,6 +136,9 @@ pub struct SimReport {
     /// Dynamic energy (J), split chip vs HBM.
     pub chip_energy_j: f64,
     pub hbm_energy_j: f64,
+    /// Off-HBM spill transfer energy (J) — host DRAM / SSD traffic
+    /// below tier 0 (`crate::mem`); 0.0 for HBM-resident runs.
+    pub ext_energy_j: f64,
     /// Chip power (W) = dynamic chip energy / time + static.
     pub power_w: f64,
 }
@@ -154,9 +162,29 @@ impl SimReport {
         self.total_ops() / self.seconds() / 1e9
     }
 
-    /// Total energy (chip + HBM), joules.
+    /// Total energy (chip + HBM + off-HBM spill), joules.
     pub fn energy_j(&self) -> f64 {
-        self.chip_energy_j + self.hbm_energy_j
+        self.chip_energy_j + self.hbm_energy_j + self.ext_energy_j
+    }
+
+    /// Aggregate off-HBM residency across the pass: per-tier placement
+    /// folded tier-wise (max residence, summed traffic).
+    pub fn spill(&self) -> SpillStats {
+        let mut s = SpillStats::default();
+        for l in &self.layers {
+            s.add(&l.spill);
+        }
+        s
+    }
+
+    /// Bytes that streamed through tiers below HBM over the whole pass.
+    pub fn spilled_bytes(&self) -> f64 {
+        self.layers.iter().map(|l| l.spill.spilled_bytes()).sum()
+    }
+
+    /// Stall cycles the off-HBM tiers added over the whole pass.
+    pub fn spill_stall_cycles(&self) -> f64 {
+        self.layers.iter().map(|l| l.spill.stall_cycles).sum()
     }
 
     /// Energy efficiency, GOPS/W (ops over total energy).
@@ -210,6 +238,7 @@ mod tests {
             update: StageStats { cycles: cycles / 10.0, ops: ops / 10.0, utilization: 0.3 },
             traffic: TrafficStats::default(),
             davc: CacheStats { accesses: 100, hits: 80 },
+            spill: SpillStats::default(),
             compute_cycles: cycles * 1.6,
             total_cycles: cycles * 1.7,
             ring_utilization: 0.6,
@@ -226,6 +255,7 @@ mod tests {
             freq_ghz: 1.0,
             chip_energy_j: 1e-6,
             hbm_energy_j: 1e-6,
+            ext_energy_j: 0.0,
             power_w: 2.5,
         };
         assert!((r.total_cycles() - (1700.0 + 850.0)).abs() < 1e-9);
@@ -237,6 +267,36 @@ mod tests {
         let bd = r.stage_breakdown();
         assert!((bd[0] + bd[1] + bd[2] - 1.0).abs() < 1e-12);
         assert!(bd[0] > bd[1] && bd[1] > bd[2]);
+    }
+
+    #[test]
+    fn spill_accessors_aggregate_layers() {
+        use crate::mem::TierUse;
+        let mut l1 = dummy_layer(1000.0, 4000.0);
+        l1.spill.working_set_bytes = 1.2e6;
+        l1.spill.stall_cycles = 10.0;
+        l1.spill.energy_j = 1e-9;
+        l1.spill.tiers = vec![
+            TierUse { tier: "hbm", resident_bytes: 1e6, traffic_bytes: 1e6 },
+            TierUse { tier: "dram", resident_bytes: 2e5, traffic_bytes: 2e5 },
+        ];
+        let r = SimReport {
+            config_name: "EnGN".into(),
+            model_name: "GCN".into(),
+            dataset_code: "CA".into(),
+            layers: vec![l1, dummy_layer(500.0, 2000.0)],
+            freq_ghz: 1.0,
+            chip_energy_j: 1e-6,
+            hbm_energy_j: 1e-6,
+            ext_energy_j: 1e-9,
+            power_w: 2.5,
+        };
+        assert_eq!(r.spilled_bytes(), 2e5);
+        assert_eq!(r.spill_stall_cycles(), 10.0);
+        let folded = r.spill();
+        assert_eq!(folded.spilled_bytes(), 2e5);
+        assert_eq!(folded.working_set_bytes, 1.2e6);
+        assert!((r.energy_j() - (2e-6 + 1e-9)).abs() < 1e-18);
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Out-of-core plane invariants (DESIGN.md §10): property tests pin
+//! (1) the zero-spill identity — on a graph whose working set fits
+//! HBM, the default `hbm4` hierarchy produces bit-identical reports to
+//! the infinite-HBM `unbounded` preset under EVERY dataflow kind (the
+//! memory plane is strictly additive), (2) the binary CSR format
+//! round-trips graphs exactly — including relation-typed edges and
+//! isolated vertices — and `PreparedGraph::from_csr` simulates
+//! bit-identically to the in-memory prepare path, (3) chunked R-MAT
+//! synthesis is pool-width-invariant all the way down to the persisted
+//! CSR bytes, and (4) once a hierarchy does spill, sharding across
+//! chips shrinks the worst chip's spill. CI runs this file at both
+//! test-harness widths (see .github/workflows/ci.yml), like
+//! dataflow_integration.
+
+use engn::config::{AcceleratorConfig, DataflowKind};
+use engn::graph::datasets::{self, DatasetGroup, DatasetSpec, ScalePolicy};
+use engn::graph::io::{open_csr, save_csr};
+use engn::graph::rmat::{self, RmatParams};
+use engn::mem::MemHierarchy;
+use engn::model::{GnnKind, GnnModel};
+use engn::partition::{PartitionedGraph, PartitionerKind};
+use engn::sim::{MultiChipSession, PreparedGraph, SimSession};
+use engn::util::prop::prop_check;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn assert_reports_identical(a: &engn::sim::SimReport, b: &engn::sim::SimReport, ctx: &str) {
+    assert_eq!(a.total_cycles(), b.total_cycles(), "{ctx}: cycles");
+    assert_eq!(a.total_ops(), b.total_ops(), "{ctx}: ops");
+    assert_eq!(a.chip_energy_j, b.chip_energy_j, "{ctx}: chip energy");
+    assert_eq!(a.hbm_energy_j, b.hbm_energy_j, "{ctx}: hbm energy");
+    assert_eq!(a.ext_energy_j, b.ext_energy_j, "{ctx}: ext energy");
+    assert_eq!(a.power_w, b.power_w, "{ctx}: power");
+    assert_eq!(a.layers.len(), b.layers.len(), "{ctx}: layer count");
+    for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+        assert_eq!(la.q, lb.q, "{ctx}: layer {} Q", la.layer_idx);
+        assert_eq!(la.total_cycles, lb.total_cycles, "{ctx}: layer {}", la.layer_idx);
+        assert_eq!(la.spill, lb.spill, "{ctx}: layer {} spill", la.layer_idx);
+    }
+}
+
+/// Scratch path for a CSR artifact, unique per (test, case).
+fn scratch(tag: &str, case: u64) -> PathBuf {
+    std::env::temp_dir().join(format!("engn_mem_it_{tag}_{case}.csr"))
+}
+
+/// Property (1): the zero-spill identity. Small R-MAT graphs fit the
+/// 4 GB tier 0 with orders of magnitude to spare, so the default
+/// `hbm4` stack must behave exactly like infinite HBM — same cycles,
+/// same energy split, zero spill bytes/stalls — under every dataflow
+/// kind, adaptive included. This is the guarantee that lets the mem
+/// plane ship enabled by default without perturbing any existing
+/// number.
+#[test]
+fn prop_zero_spill_identity_under_every_dataflow() {
+    prop_check(4, 0x3E3_0001, |rng| {
+        let n = rng.gen_usize(64, 1_200);
+        let e = rng.gen_usize(n, 6 * n);
+        let g = Arc::new(rmat::generate(n, e, RmatParams::default(), rng.next_u64()));
+        let spec = datasets::by_code("PB").unwrap();
+        let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+        let prepared = PreparedGraph::from_arc(g);
+        for &kind in DataflowKind::all() {
+            let mut bounded = AcceleratorConfig::engn();
+            bounded.dataflow = kind;
+            assert_eq!(bounded.mem, MemHierarchy::hbm4(), "hbm4 is the default");
+            let mut infinite = bounded.clone();
+            infinite.mem = MemHierarchy::unbounded();
+            let a = SimSession::new(&bounded, &prepared, &model).run("PB");
+            let b = SimSession::new(&infinite, &prepared, &model).run("PB");
+            assert_reports_identical(&a, &b, kind.name());
+            if a.spilled_bytes() != 0.0 || a.spill_stall_cycles() != 0.0 {
+                return Err(format!("{}: resident graph spilled (n={n} e={e})", kind.name()));
+            }
+            if a.ext_energy_j != 0.0 {
+                return Err(format!("{}: nonzero ext energy while resident", kind.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property (2a): CSR round-trip preserves the graph exactly — vertex
+/// count, per-vertex out-neighbour multisets (the format groups by
+/// source; order within a source is stable), and in/out degrees —
+/// including graphs with isolated tail vertices.
+#[test]
+fn prop_csr_round_trip_preserves_graph() {
+    prop_check(5, 0x3E3_0002, |rng| {
+        let n = rng.gen_usize(10, 2_000);
+        // Leave a tail of isolated vertices sometimes: edges only touch
+        // the first `live` vertices but the header says `n`.
+        let live = rng.gen_usize(n.div_ceil(2), n);
+        let e = rng.gen_usize(1, 4 * live);
+        let g = rmat::generate(live, e, RmatParams::default(), rng.next_u64());
+        let g = engn::graph::Graph::from_edges(n, g.edges);
+        let path = scratch("roundtrip", rng.next_u64());
+        save_csr(&g, &path)?;
+        let csr = open_csr(&path)?;
+        let _ = std::fs::remove_file(&path);
+        if csr.num_vertices != n || csr.num_edges() != e {
+            return Err(format!("sizes: {}x{} vs {n}x{e}", csr.num_vertices, csr.num_edges()));
+        }
+        let h = csr.into_graph();
+        let mut want: Vec<(u32, u32)> = g.edges.iter().map(|ed| (ed.src, ed.dst)).collect();
+        let mut got: Vec<(u32, u32)> = h.edges.iter().map(|ed| (ed.src, ed.dst)).collect();
+        want.sort_unstable();
+        got.sort_unstable();
+        if want != got {
+            return Err(format!("edge multiset changed (n={n} live={live} e={e})"));
+        }
+        Ok(())
+    });
+}
+
+/// Property (2b): a relation-typed graph (R-GCN) keeps its (src, dst,
+/// relation) triples through the CSR file, and `from_csr` produces a
+/// simulation bit-identical to the in-memory prepare path — same
+/// degree ranking, same relation histogram, same report.
+#[test]
+fn csr_from_file_simulates_identically_with_relations() {
+    let spec = datasets::by_code("AF").unwrap();
+    assert!(spec.num_relations > 1, "AF is the R-GCN smoke dataset");
+    let g = spec.instantiate(ScalePolicy::Capped, 0xE16A);
+    let path = scratch("rgcn", 0);
+    save_csr(&g, &path).expect("writing CSR");
+    let csr = open_csr(&path).expect("reopening CSR");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(csr.num_relations, spec.num_relations);
+
+    let model = GnnModel::for_dataset(GnnKind::Rgcn, &spec);
+    let cfg = AcceleratorConfig::engn();
+    let via_file = PreparedGraph::from_csr(csr);
+    let in_memory = PreparedGraph::new(&g);
+    assert_eq!(via_file.graph().num_vertices, in_memory.graph().num_vertices);
+    assert_eq!(via_file.graph().num_edges(), in_memory.graph().num_edges());
+    let a = SimSession::new(&cfg, &via_file, &model).run("AF");
+    let b = SimSession::new(&cfg, &in_memory, &model).run("AF");
+    assert_reports_identical(&a, &b, "AF via CSR");
+}
+
+/// Property (3): chunked synthesis is width-invariant all the way to
+/// disk — the CSR files written from a 1-worker and an 8-worker
+/// generation are byte-for-byte identical.
+#[test]
+fn chunked_synthesis_is_width_invariant_down_to_csr_bytes() {
+    let serial = rmat::generate_chunked_with(1, 3_000, 24_000, RmatParams::default(), 0xC0FFEE, 1 << 12);
+    let wide = rmat::generate_chunked_with(8, 3_000, 24_000, RmatParams::default(), 0xC0FFEE, 1 << 12);
+    let pa = scratch("width1", 1);
+    let pb = scratch("width8", 8);
+    save_csr(&serial, &pa).expect("writing width-1 CSR");
+    save_csr(&wide, &pb).expect("writing width-8 CSR");
+    let ba = std::fs::read(&pa).expect("reading width-1 CSR");
+    let bb = std::fs::read(&pb).expect("reading width-8 CSR");
+    let _ = std::fs::remove_file(&pa);
+    let _ = std::fs::remove_file(&pb);
+    assert_eq!(ba, bb, "CSR bytes diverge with pool width");
+    assert_eq!(serial.num_edges(), 24_000);
+}
+
+/// Property (4): once the hierarchy is small enough to spill, (a) the
+/// stall and energy terms are strictly positive and the run is slower
+/// than the resident baseline, and (b) sharding across 4 chips leaves
+/// every chip with less spill than the single chip had — scale-out is
+/// the other way out of the spill regime.
+#[test]
+fn spilling_costs_and_sharding_recovers() {
+    let spec = DatasetSpec {
+        code: "OOC",
+        name: "mem-integration",
+        vertices: 6_000,
+        edges: 90_000,
+        feature_dim: 512,
+        labels: 16,
+        num_relations: 1,
+        group: DatasetGroup::Synthetic,
+    };
+    let g = Arc::new(rmat::generate(spec.vertices, spec.edges, RmatParams::default(), 0xBEEF));
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let mut cfg = AcceleratorConfig::engn();
+    cfg.mem.name = "tiny";
+    // ~12 MB in-features: cap tier 0 well below that.
+    cfg.mem.tiers[0].capacity_bytes = 1024.0 * 1024.0;
+
+    let prepared = PreparedGraph::from_arc(g.clone());
+    let single = SimSession::new(&cfg, &prepared, &model).run(spec.code);
+    let resident = SimSession::new(
+        &AcceleratorConfig::engn().with_mem(MemHierarchy::unbounded()),
+        &prepared,
+        &model,
+    )
+    .run(spec.code);
+    assert!(single.spilled_bytes() > 0.0, "tiny tier 0 must spill");
+    assert!(single.spill_stall_cycles() > 0.0);
+    assert!(single.ext_energy_j > 0.0);
+    assert!(single.total_cycles() > resident.total_cycles(), "spill must cost cycles");
+    assert!(single.energy_j() > resident.energy_j(), "spill must cost energy");
+
+    let parts = PartitionedGraph::build(g, PartitionerKind::Degree, 4);
+    let multi = MultiChipSession::new(&cfg, &parts, &model).run(spec.code);
+    // Worst chip, not the sum: halo replication can inflate aggregate
+    // bytes across chips, but each chip's own working set must shrink.
+    let worst = multi
+        .per_chip
+        .iter()
+        .map(engn::sim::SimReport::spilled_bytes)
+        .fold(0.0f64, f64::max);
+    assert!(
+        worst < single.spilled_bytes(),
+        "worst per-chip spill {worst} vs single {}",
+        single.spilled_bytes()
+    );
+}

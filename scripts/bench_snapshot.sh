@@ -11,11 +11,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 BENCH_JSON="$(pwd)/BENCH_hotpath.json" \
   cargo bench --manifest-path rust/Cargo.toml --bench hotpath "$@"
-# The snapshot must track the scale-out and dataflow planes: fail
-# loudly if the partition/scaleout/dataflow groups ever drop out of the
-# hotpath bench.
+# The snapshot must track the scale-out, dataflow and out-of-core
+# planes: fail loudly if the partition/scaleout/dataflow/mem/csr groups
+# ever drop out of the hotpath bench.
 for group in "partition:range" "partition:hash" "partition:degree" "scaleout:4chip" \
-             "dataflow:spmm" "dataflow:hash" "dataflow:adaptive"; do
+             "dataflow:spmm" "dataflow:hash" "dataflow:adaptive" \
+             "mem:spill" "csr:open"; do
   grep -q "\"$group\"" BENCH_hotpath.json \
     || { echo "missing bench group $group in BENCH_hotpath.json" >&2; exit 1; }
 done
