@@ -18,7 +18,7 @@
 use engn::baselines::PlatformId;
 use engn::config::DataflowKind;
 use engn::coordinator::{
-    Backends, BatchConfig, CostJob, InferenceService, JobError, JobOutput, JobPayload,
+    Backends, BatchConfig, CostJob, InferenceService, JobError, JobOutput, JobPayload, Priority,
     ServiceConfig, SimJob, SubmitError, TensorBackend, Ticket,
 };
 use engn::model::GnnKind;
@@ -73,6 +73,7 @@ fn main() {
             },
             workers,
             queue_capacity: 128,
+            ..Default::default()
         },
     );
 
@@ -122,12 +123,23 @@ fn main() {
                 JobPayload::Sim(job)
             }
         };
-        let label = format!("job-{i}:{}", payload.batch_key());
+        // A QoS mix: every fifth job is user-facing (served first at
+        // batch formation), every seventh is scavenger traffic (aged
+        // into service, never starved); the rest ride the default
+        // batch class.
+        let priority = if i % 5 == 0 {
+            Priority::Interactive
+        } else if i % 7 == 6 {
+            Priority::BestEffort
+        } else {
+            Priority::Batch
+        };
+        let label = format!("job-{i}:{}:{}", priority, payload.batch_key());
         // Bounded intake: a `Busy` rejection is the shed signal, so back
         // off and retry — bounded, so a wedged service fails the run
         // instead of spinning forever.
         for attempt in 0..500 {
-            match svc.submit(payload.clone()) {
+            match svc.submit_with_priority(payload.clone(), priority) {
                 Ok(ticket) => {
                     tickets.push((label, ticket));
                     break;
@@ -209,6 +221,18 @@ fn main() {
             fmt_time(s.p95_exec_s),
             fmt_time(s.mean_wait_s),
             s.mean_batch
+        );
+    }
+    println!("\nper-priority serving stats:");
+    for p in &metrics.per_priority {
+        println!(
+            "  {:<12} n={:<3} expired={} rejected={} mean={} p99={}",
+            p.priority.name(),
+            p.count,
+            p.expired,
+            p.rejected,
+            fmt_time(p.mean_latency_s),
+            fmt_time(p.p99_latency_s),
         );
     }
     svc.shutdown();

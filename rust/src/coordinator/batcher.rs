@@ -11,6 +11,7 @@
 //! * [`PendingQueues`] — per-key FIFO queues with a global-FIFO
 //!   fairness rule, which the multi-worker service's workers pull from.
 
+use super::qos::Priority;
 use super::service::Job;
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -58,15 +59,21 @@ pub fn form_batch(pending: &mut VecDeque<Job>, cfg: &BatchConfig) -> Vec<Job> {
     batch
 }
 
-/// Per-key FIFO queues with a global-FIFO fairness rule: the key owning
-/// the globally oldest queued job is served first, and a batch drains
-/// that key's queue in arrival order.
+/// Per-(priority, key) FIFO queues with strict-effective-priority
+/// scheduling over a global-FIFO tiebreak: batch formation serves the
+/// queue head with the best *effective* class — a head's class
+/// improves one level per [`crate::coordinator::qos::QosConfig::aging_step`]
+/// waited (anti-starvation) — and equal effective classes fall back to
+/// the globally oldest job. A batch drains one (priority, key) queue
+/// in arrival order, so classes never co-batch.
 ///
 /// Arrival order is tracked with an internal monotonic sequence number,
-/// so fairness does not depend on `Instant` resolution.
+/// so fairness does not depend on `Instant` resolution. With a single
+/// priority class in play the selection reduces to min-seq: exactly
+/// the pre-QoS global-FIFO scheduler.
 #[derive(Default)]
 pub struct PendingQueues {
-    queues: HashMap<String, VecDeque<(u64, Job)>>,
+    queues: HashMap<(Priority, String), VecDeque<(u64, Job)>>,
     next_seq: u64,
     len: usize,
 }
@@ -76,7 +83,7 @@ impl PendingQueues {
         Self::default()
     }
 
-    /// Total queued jobs across all keys.
+    /// Total queued jobs across all queues.
     pub fn len(&self) -> usize {
         self.len
     }
@@ -89,45 +96,71 @@ impl PendingQueues {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.queues
-            .entry(job.key.clone())
+            .entry((job.priority, job.key.clone()))
             .or_default()
             .push_back((seq, job));
         self.len += 1;
     }
 
-    /// The key whose head job is globally oldest, with that head's
-    /// enqueue time and the key's current queue depth. `None` when
-    /// nothing is queued.
-    pub fn oldest_head(&self) -> Option<(String, Instant, usize)> {
+    /// The queue whose head should be served next: minimum
+    /// (effective rank, sequence number) over heads whose batch key
+    /// passes `eligible` (the per-key concurrency-limit filter).
+    /// Returns the queue's priority and key, the head's enqueue time,
+    /// and the queue depth. `None` when nothing eligible is queued.
+    pub fn best_head(
+        &self,
+        now: Instant,
+        aging_step: Duration,
+        eligible: &dyn Fn(&str) -> bool,
+    ) -> Option<(Priority, String, Instant, usize)> {
         self.queues
             .iter()
-            .filter_map(|(name, q)| q.front().map(|(seq, r)| (*seq, name, r.enqueued, q.len())))
-            .min_by_key(|(seq, ..)| *seq)
-            .map(|(_, name, enqueued, depth)| (name.clone(), enqueued, depth))
+            .filter(|((_, key), _)| eligible(key))
+            .filter_map(|((prio, key), q)| {
+                q.front().map(|(seq, r)| {
+                    let waited = now.saturating_duration_since(r.enqueued);
+                    let rank = prio.effective_rank(waited, aging_step);
+                    ((rank, *seq), (*prio, key, r.enqueued, q.len()))
+                })
+            })
+            .min_by_key(|(order, _)| *order)
+            .map(|(_, (prio, key, enqueued, depth))| (prio, key.clone(), enqueued, depth))
     }
 
-    /// A key whose queue already holds a full batch (`depth >= max`),
-    /// oldest head first. Workers use this to stay busy while the
-    /// globally oldest job's batching window is still collecting.
-    pub fn full_key(&self, max: usize) -> Option<String> {
+    /// An eligible queue already holding a full batch (`depth >= max`),
+    /// best effective head first. Workers use this to stay busy while
+    /// the best head's batching window is still collecting.
+    pub fn full_key(
+        &self,
+        max: usize,
+        now: Instant,
+        aging_step: Duration,
+        eligible: &dyn Fn(&str) -> bool,
+    ) -> Option<(Priority, String)> {
         self.queues
             .iter()
-            .filter(|(_, q)| q.len() >= max)
-            .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |(seq, _)| *seq))
-            .map(|(name, _)| name.clone())
+            .filter(|((_, key), q)| q.len() >= max && eligible(key))
+            .filter_map(|((prio, key), q)| {
+                q.front().map(|(seq, r)| {
+                    let waited = now.saturating_duration_since(r.enqueued);
+                    ((prio.effective_rank(waited, aging_step), *seq), (*prio, key))
+                })
+            })
+            .min_by_key(|(order, _)| *order)
+            .map(|(_, (prio, key))| (prio, key.clone()))
     }
 
-    /// Drain up to `max` oldest jobs for `key`, in arrival order.
-    /// Empty when the key has no queue (e.g. another worker took it
-    /// between `oldest_head` and this call).
-    pub fn take_batch(&mut self, key: &str, max: usize) -> Vec<Job> {
-        let Some(q) = self.queues.get_mut(key) else {
+    /// Drain up to `max` oldest jobs for the (priority, key) queue, in
+    /// arrival order. Empty when the queue is gone (e.g. another worker
+    /// took it between `best_head` and this call).
+    pub fn take_batch(&mut self, priority: Priority, key: &str, max: usize) -> Vec<Job> {
+        let Some(q) = self.queues.get_mut(&(priority, key.to_string())) else {
             return Vec::new();
         };
         let take = q.len().min(max);
         let batch: Vec<Job> = q.drain(..take).map(|(_, r)| r).collect();
         if q.is_empty() {
-            self.queues.remove(key);
+            self.queues.remove(&(priority, key.to_string()));
         }
         self.len -= batch.len();
         batch
@@ -140,20 +173,30 @@ mod tests {
     use crate::coordinator::engine::JobPayload;
     use crate::coordinator::service::{Job, ResponseSlot};
 
-    fn job(id: u64, artifact: &str) -> Job {
+    fn pjob(id: u64, artifact: &str, priority: Priority) -> Job {
         Job::new(
             id,
             JobPayload::Tensor {
                 artifact: artifact.to_string(),
                 inputs: Vec::new(),
             },
+            priority,
             None,
             ResponseSlot::new(),
         )
     }
 
+    fn job(id: u64, artifact: &str) -> Job {
+        pjob(id, artifact, Priority::default())
+    }
+
     fn key(artifact: &str) -> String {
         format!("tensor:{artifact}")
+    }
+
+    /// FIFO-era head selection: aging off, every key eligible.
+    fn head(pq: &PendingQueues) -> Option<(Priority, String, Instant, usize)> {
+        pq.best_head(Instant::now(), Duration::ZERO, &|_| true)
     }
 
     #[test]
@@ -230,18 +273,19 @@ mod tests {
         }
         assert_eq!(pq.len(), 4);
         // gcn owns the oldest head and has depth 2.
-        let (name, _, depth) = pq.oldest_head().expect("head");
+        let (prio, name, _, depth) = head(&pq).expect("head");
+        assert_eq!(prio, Priority::Batch);
         assert_eq!(name, key("gcn"));
         assert_eq!(depth, 2);
-        let b = pq.take_batch(&key("gcn"), 8);
+        let b = pq.take_batch(Priority::Batch, &key("gcn"), 8);
         assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
         // grn (seq 1) now precedes rgcn (seq 3).
-        let (name, _, _) = pq.oldest_head().expect("head");
+        let (_, name, _, _) = head(&pq).expect("head");
         assert_eq!(name, key("grn"));
-        assert_eq!(pq.take_batch(&key("grn"), 8).len(), 1);
-        assert_eq!(pq.take_batch(&key("rgcn"), 8).len(), 1);
+        assert_eq!(pq.take_batch(Priority::Batch, &key("grn"), 8).len(), 1);
+        assert_eq!(pq.take_batch(Priority::Batch, &key("rgcn"), 8).len(), 1);
         assert!(pq.is_empty());
-        assert!(pq.oldest_head().is_none());
+        assert!(head(&pq).is_none());
     }
 
     #[test]
@@ -257,10 +301,21 @@ mod tests {
         ] {
             pq.push(r);
         }
-        assert_eq!(pq.full_key(2), Some(key("gcn")));
-        assert_eq!(pq.full_key(3), None);
-        pq.take_batch(&key("gcn"), 2);
-        assert_eq!(pq.full_key(2), Some(key("rgcn")));
+        let now = Instant::now();
+        let all = |_: &str| true;
+        assert_eq!(
+            pq.full_key(2, now, Duration::ZERO, &all),
+            Some((Priority::Batch, key("gcn")))
+        );
+        assert_eq!(pq.full_key(3, now, Duration::ZERO, &all), None);
+        pq.take_batch(Priority::Batch, &key("gcn"), 2);
+        assert_eq!(
+            pq.full_key(2, now, Duration::ZERO, &all),
+            Some((Priority::Batch, key("rgcn")))
+        );
+        // The concurrency filter hides a full queue.
+        let not_rgcn = |k: &str| k != key("rgcn");
+        assert_eq!(pq.full_key(2, now, Duration::ZERO, &not_rgcn), None);
     }
 
     #[test]
@@ -269,11 +324,12 @@ mod tests {
         for i in 0..5 {
             pq.push(job(i, "gcn"));
         }
-        let b = pq.take_batch(&key("gcn"), 2);
+        let b = pq.take_batch(Priority::Batch, &key("gcn"), 2);
         assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(pq.len(), 3);
-        assert!(pq.take_batch("unknown", 2).is_empty());
-        assert_eq!(pq.take_batch(&key("gcn"), 10).len(), 3);
+        assert!(pq.take_batch(Priority::Batch, "unknown", 2).is_empty());
+        assert!(pq.take_batch(Priority::Interactive, &key("gcn"), 2).is_empty());
+        assert_eq!(pq.take_batch(Priority::Batch, &key("gcn"), 10).len(), 3);
         assert!(pq.is_empty());
     }
 
@@ -289,6 +345,7 @@ mod tests {
         pq.push(Job::new(
             2,
             JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA")),
+            Priority::default(),
             None,
             ResponseSlot::new(),
         ));
@@ -299,14 +356,75 @@ mod tests {
                 GnnKind::Gcn,
                 "CA",
             )),
+            Priority::default(),
             None,
             ResponseSlot::new(),
         ));
         assert_eq!(pq.len(), 3);
-        assert_eq!(pq.oldest_head().unwrap().0, key("gcn"));
-        assert_eq!(pq.take_batch("sim:EnGN:CA", 8).len(), 1);
-        assert_eq!(pq.take_batch("cost:HyGCN", 8).len(), 1);
-        assert_eq!(pq.take_batch(&key("gcn"), 8).len(), 1);
+        assert_eq!(head(&pq).unwrap().1, key("gcn"));
+        assert_eq!(pq.take_batch(Priority::Batch, "sim:EnGN:CA", 8).len(), 1);
+        assert_eq!(pq.take_batch(Priority::Batch, "cost:HyGCN", 8).len(), 1);
+        assert_eq!(pq.take_batch(Priority::Batch, &key("gcn"), 8).len(), 1);
         assert!(pq.is_empty());
+    }
+
+    /// Strict priority at formation: a younger interactive head beats
+    /// an older batch head; same-key jobs in different classes live in
+    /// different queues and never co-batch.
+    #[test]
+    fn interactive_head_beats_older_batch_head() {
+        let mut pq = PendingQueues::new();
+        pq.push(pjob(1, "gcn", Priority::Batch));
+        pq.push(pjob(2, "gcn", Priority::Interactive));
+        let (prio, name, _, depth) = head(&pq).expect("head");
+        assert_eq!((prio, depth), (Priority::Interactive, 1));
+        let b = pq.take_batch(prio, &name, 8);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        let (prio, ..) = head(&pq).expect("head");
+        assert_eq!(prio, Priority::Batch);
+    }
+
+    /// The aging rule: a best-effort head that has waited two steps
+    /// reaches effective rank 0 and wins the seq tiebreak against a
+    /// fresh interactive arrival — bounded starvation.
+    #[test]
+    fn aged_best_effort_head_outranks_fresh_interactive() {
+        let step = Duration::from_millis(10);
+        let mut pq = PendingQueues::new();
+        pq.push(pjob(1, "gcn", Priority::BestEffort));
+        pq.push(pjob(2, "gcn", Priority::Interactive));
+        // "Now" barely after enqueue: strict priority, interactive wins.
+        let now = Instant::now();
+        let (prio, ..) = pq.best_head(now, step, &|_| true).expect("head");
+        assert_eq!(prio, Priority::Interactive);
+        // Two aging steps later the best-effort head has rank 0 and the
+        // older sequence number.
+        let later = now + Duration::from_millis(25);
+        let (prio, name, _, _) = pq.best_head(later, step, &|_| true).expect("head");
+        assert_eq!(prio, Priority::BestEffort);
+        assert_eq!(
+            pq.take_batch(prio, &name, 8)
+                .iter()
+                .map(|r| r.id)
+                .collect::<Vec<_>>(),
+            vec![1]
+        );
+    }
+
+    /// The eligibility filter (per-key concurrency limit) skips capped
+    /// keys instead of blocking behind them, and reports None when
+    /// everything queued is capped.
+    #[test]
+    fn best_head_honors_eligibility_filter() {
+        let mut pq = PendingQueues::new();
+        pq.push(pjob(1, "gcn", Priority::Interactive));
+        pq.push(pjob(2, "grn", Priority::Batch));
+        let not_gcn = |k: &str| k != key("gcn");
+        let (prio, name, _, _) = pq
+            .best_head(Instant::now(), Duration::ZERO, &not_gcn)
+            .expect("head");
+        assert_eq!((prio, name), (Priority::Batch, key("grn")));
+        let none = |_: &str| false;
+        assert!(pq.best_head(Instant::now(), Duration::ZERO, &none).is_none());
     }
 }

@@ -103,6 +103,10 @@ pub struct SimJob {
     pub chips: usize,
     /// Partitioning strategy used when `chips > 1`.
     pub partitioner: PartitionerKind,
+    /// Latency target (SLO): instead of a fixed `chips`, the backend
+    /// picks the smallest chip count from the scale-out model whose
+    /// simulated seconds meet the target. See [`SimJob::with_latency_target`].
+    pub latency_target_s: Option<f64>,
 }
 
 impl SimJob {
@@ -116,6 +120,7 @@ impl SimJob {
             seed: 0xE16A,
             chips: 1,
             partitioner: PartitionerKind::Degree,
+            latency_target_s: None,
         }
     }
 
@@ -130,6 +135,19 @@ impl SimJob {
     pub fn with_chips(mut self, chips: usize, partitioner: PartitionerKind) -> Self {
         self.chips = chips.max(1);
         self.partitioner = partitioner;
+        self
+    }
+
+    /// Latency-target (SLO) what-if, tying the serving and scale-out
+    /// planes together: the backend walks the chip-count ladder
+    /// (1, 2, 4, 8) through the scale-out model and answers with the
+    /// smallest K whose simulated seconds meet `seconds` — or the
+    /// fastest K tried when none does. Overrides any [`SimJob::with_chips`]
+    /// choice; `partitioner` still applies to the multi-chip rungs.
+    /// The batch key gains an `:slo<...>` suffix so these jobs batch —
+    /// and report — under their own group.
+    pub fn with_latency_target(mut self, seconds: f64) -> Self {
+        self.latency_target_s = Some(seconds.max(0.0));
         self
     }
 
@@ -214,7 +232,11 @@ impl JobPayload {
             JobPayload::Tensor { artifact, .. } => format!("tensor:{artifact}"),
             JobPayload::Sim(j) => {
                 let mut key = format!("sim:{}:{}", j.config.name, j.dataset);
-                if j.chips > 1 {
+                if let Some(t) = j.latency_target_s {
+                    // SLO jobs choose their own chip count, so they form
+                    // their own group per (target, partitioner).
+                    key.push_str(&format!(":slo{:.0}us:{}", t * 1e6, j.partitioner.name()));
+                } else if j.chips > 1 {
                     key.push_str(&format!(":x{}:{}", j.chips, j.partitioner.name()));
                 }
                 key
@@ -379,20 +401,35 @@ impl SimBackend {
             ));
         }
         let model = GnnModel::for_dataset(job.model, &spec);
+        if let Some(target) = job.latency_target_s {
+            return Ok(self.run_slo_job(job, &spec, &model, target));
+        }
         if job.chips > 1 {
-            // Shared per (graph key, partitioner, chips): every job of a
-            // formed scale-out batch — the batch key pins exactly that
-            // triple — reuses one partition and its prepared subgraphs.
-            let parts = graph_cache::partitioned_for(
-                &spec,
-                job.policy,
-                job.seed,
-                job.partitioner,
-                job.chips,
-            );
-            let report = MultiChipSession::new(&job.config, &parts, &model).run(spec.code);
-            return Ok(SimSummary {
-                config: format!("{}@x{}:{}", job.config.name, job.chips, job.partitioner.name()),
+            let mut s = self.eval_chips(job, &spec, &model, job.chips);
+            s.config = format!("{}@x{}:{}", job.config.name, job.chips, job.partitioner.name());
+            return Ok(s);
+        }
+        Ok(self.eval_chips(job, &spec, &model, 1))
+    }
+
+    /// One rung of the chip ladder: simulate `job` sharded across
+    /// `chips` (1 = the single-chip session). Scale-out state is shared
+    /// per (graph key, partitioner, chips) through [`graph_cache`], so
+    /// every job of a formed batch reuses one partition and its
+    /// prepared subgraphs.
+    fn eval_chips(
+        &self,
+        job: &SimJob,
+        spec: &datasets::DatasetSpec,
+        model: &GnnModel,
+        chips: usize,
+    ) -> SimSummary {
+        if chips > 1 {
+            let parts =
+                graph_cache::partitioned_for(spec, job.policy, job.seed, job.partitioner, chips);
+            let report = MultiChipSession::new(&job.config, &parts, model).run(spec.code);
+            return SimSummary {
+                config: job.config.name.clone(),
                 model: job.model.name().to_string(),
                 dataset: spec.code.to_string(),
                 cycles: report.total_cycles(),
@@ -401,11 +438,11 @@ impl SimBackend {
                 power_w: report.energy_j() / report.seconds().max(1e-12),
                 gops: report.gops(),
                 gops_per_watt: report.gops_per_watt(),
-            });
+            };
         }
-        let prepared = graph_cache::prepared_for(&spec, job.policy, job.seed);
-        let report = SimSession::new(&job.config, &prepared, &model).run(spec.code);
-        Ok(SimSummary {
+        let prepared = graph_cache::prepared_for(spec, job.policy, job.seed);
+        let report = SimSession::new(&job.config, &prepared, model).run(spec.code);
+        SimSummary {
             config: job.config.name.clone(),
             model: job.model.name().to_string(),
             dataset: spec.code.to_string(),
@@ -415,7 +452,39 @@ impl SimBackend {
             power_w: report.power_w,
             gops: report.gops(),
             gops_per_watt: report.gops_per_watt(),
-        })
+        }
+    }
+
+    /// The latency-target mode: walk the chip ladder through the
+    /// scale-out model and answer with the smallest K meeting the
+    /// target — or the fastest K tried when the target is out of reach
+    /// (reported honestly: the summary keeps the real seconds). The
+    /// chosen K is visible in the summary's config as `:x<K>`.
+    fn run_slo_job(
+        &self,
+        job: &SimJob,
+        spec: &datasets::DatasetSpec,
+        model: &GnnModel,
+        target: f64,
+    ) -> SimSummary {
+        const LADDER: [usize; 4] = [1, 2, 4, 8];
+        let mut fastest: Option<(usize, SimSummary)> = None;
+        let mut chosen: Option<(usize, SimSummary)> = None;
+        for k in LADDER {
+            let s = self.eval_chips(job, spec, model, k);
+            if s.seconds <= target {
+                chosen = Some((k, s));
+                break;
+            }
+            if fastest.as_ref().map_or(true, |(_, f)| s.seconds < f.seconds) {
+                fastest = Some((k, s));
+            }
+        }
+        let (k, mut summary) = chosen
+            .or(fastest)
+            .expect("non-empty ladder always yields a summary");
+        summary.config = format!("{}@slo{:.0}us:x{}", job.config.name, target * 1e6, k);
+        summary
     }
 }
 
@@ -606,6 +675,50 @@ mod tests {
             SimJob::new(GnnKind::Gcn, "CA").with_chips(4, PartitionerKind::Range),
         );
         assert_ne!(four.batch_key(), four_range.batch_key());
+    }
+
+    #[test]
+    fn slo_sim_jobs_get_their_own_batch_key() {
+        let plain = JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA"));
+        let slo = JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA").with_latency_target(0.005));
+        assert_ne!(plain.batch_key(), slo.batch_key());
+        assert_eq!(slo.batch_key(), "sim:EnGN:CA:slo5000us:degree");
+        // Same target, same partitioner => same group.
+        let slo2 = JobPayload::Sim(SimJob::new(GnnKind::Gcn, "CA").with_latency_target(0.005));
+        assert_eq!(slo.batch_key(), slo2.batch_key());
+        // The SLO suffix replaces any explicit chips suffix: the backend
+        // owns the chip choice.
+        let slo_chips = JobPayload::Sim(
+            SimJob::new(GnnKind::Gcn, "CA")
+                .with_chips(4, PartitionerKind::Degree)
+                .with_latency_target(0.005),
+        );
+        assert_eq!(slo.batch_key(), slo_chips.batch_key());
+    }
+
+    #[test]
+    fn slo_mode_picks_smallest_meeting_chip_count() {
+        let be = SimBackend::new();
+        // A sky-high target: one chip already meets it, so the ladder
+        // stops at K=1.
+        let easy = be.execute_batch(vec![JobPayload::Sim(
+            SimJob::new(GnnKind::Gcn, "PB").with_latency_target(1e3),
+        )]);
+        let s = easy[0].as_ref().expect("sim ok").as_sim().unwrap().clone();
+        assert!(s.config.ends_with(":x1"), "config {}", s.config);
+        assert!(s.seconds <= 1e3 && s.cycles > 0.0);
+        // An impossible target: answer with the fastest rung, honestly
+        // above the target. On PB the multi-chip rungs beat single-chip
+        // (pinned by `sim_backend_runs_scaleout_jobs_faster_than_single_chip`),
+        // so the choice must not be x1.
+        let hard = be.execute_batch(vec![JobPayload::Sim(
+            SimJob::new(GnnKind::Gcn, "PB").with_latency_target(1e-12),
+        )]);
+        let h = hard[0].as_ref().expect("sim ok").as_sim().unwrap().clone();
+        assert!(h.seconds > 1e-12);
+        assert!(h.config.contains("@slo0us:x"), "config {}", h.config);
+        assert!(!h.config.ends_with(":x1"), "config {}", h.config);
+        assert!(h.seconds <= s.seconds);
     }
 
     #[test]

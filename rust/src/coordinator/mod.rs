@@ -34,10 +34,17 @@
 //!   with ONE [`engine::Backend::execute_batch`] call;
 //! * **Per-worker metrics** — each worker accumulates privately;
 //!   [`InferenceService::metrics`] merges on snapshot, so the job
-//!   hot path never takes a global metrics mutex.
+//!   hot path never takes a global metrics mutex;
+//! * **QoS** ([`qos`]) — [`Priority`] classes honored at batch
+//!   formation (strict effective priority with an aging rule bounding
+//!   starvation), per-key in-flight batch limits (excess queued, not
+//!   shed), and an [`Autoscaler`] that resizes the active worker count
+//!   and each worker's pool width share from observed queue depth with
+//!   hysteresis.
 
 pub mod batcher;
 pub mod engine;
+pub mod qos;
 pub mod service;
 
 pub use batcher::{form_batch, BatchConfig, PendingQueues};
@@ -45,7 +52,8 @@ pub use engine::{
     Backend, Backends, CostBackend, CostJob, CostSummary, Executor, JobKind, JobOutput,
     JobPayload, SimBackend, SimJob, SimSummary, TensorBackend,
 };
+pub use qos::{AutoscaleConfig, Autoscaler, Priority, QosConfig, ScaleEvent, NUM_PRIORITIES};
 pub use service::{
-    InferenceService, Job, JobError, JobResponse, KeyStats, MetricsSnapshot, ServiceConfig,
-    SubmitError, Ticket,
+    InferenceService, Job, JobError, JobResponse, KeyStats, MetricsSnapshot, PriorityStats,
+    ServiceConfig, SubmitError, Ticket,
 };

@@ -1,0 +1,293 @@
+//! Serving quality-of-service: priority classes, the aging
+//! (anti-starvation) rule, per-key concurrency limits, and the
+//! autoscaler control law.
+//!
+//! The scheduler is strict-priority *with aging*: batch formation
+//! always serves the queue head with the best *effective* class, where
+//! a head's class improves one level for every [`QosConfig::aging_step`]
+//! it has waited. A `best_effort` job therefore outranks fresh
+//! `interactive` traffic after `2 × aging_step` of queueing — bounded
+//! starvation by construction. Ties between equal effective classes
+//! fall back to the existing global-FIFO rule (oldest sequence number
+//! wins), so a service that only ever uses one priority behaves
+//! bit-identically to the pre-QoS scheduler.
+//!
+//! The [`Autoscaler`] is deliberately a pure control law (`decide` is
+//! a function of observed depth and time) so hysteresis is unit-tested
+//! without threads; the service's supervisor thread owns the clock and
+//! the actual worker parking.
+
+use std::time::Duration;
+
+/// Number of priority classes (the length of [`Priority::all`]).
+pub const NUM_PRIORITIES: usize = 3;
+
+/// Job priority class, carried on every job and honored at batch
+/// formation. Declaration order is scheduling order: `Interactive`
+/// is served first. Jobs never co-batch across classes — a batch is
+/// formed from one (priority, batch-key) queue.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// User-facing requests: lowest latency target, served first.
+    Interactive,
+    /// Throughput traffic (the default): served when no interactive
+    /// work is runnable.
+    #[default]
+    Batch,
+    /// Scavenger traffic: only aged heads compete with the other
+    /// classes, but the aging rule guarantees eventual service.
+    BestEffort,
+}
+
+impl Priority {
+    /// All classes in scheduling order (best first).
+    pub const fn all() -> [Priority; NUM_PRIORITIES] {
+        [Priority::Interactive, Priority::Batch, Priority::BestEffort]
+    }
+
+    /// Scheduling rank: 0 is served first.
+    pub fn rank(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::BestEffort => "best_effort",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" | "int" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            "best_effort" | "best-effort" | "be" => Some(Priority::BestEffort),
+            _ => None,
+        }
+    }
+
+    /// The effective scheduling rank after waiting `waited`: one class
+    /// better per `aging_step`, saturating at `Interactive` (rank 0).
+    /// A zero `aging_step` disables aging (pure strict priority).
+    pub fn effective_rank(self, waited: Duration, aging_step: Duration) -> usize {
+        if aging_step.is_zero() {
+            return self.rank();
+        }
+        let boost = (waited.as_nanos() / aging_step.as_nanos()) as usize;
+        self.rank().saturating_sub(boost)
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Scheduling policy knobs, part of
+/// [`crate::coordinator::ServiceConfig`].
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// A queued head's class improves one level per `aging_step`
+    /// waited (anti-starvation). Zero disables aging.
+    pub aging_step: Duration,
+    /// At most this many in-flight (executing) batches per batch key;
+    /// excess stays *queued* — never shed — until a slot frees.
+    /// `None` means unlimited (the pre-QoS behavior).
+    pub per_key_inflight: Option<usize>,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        Self {
+            aging_step: Duration::from_millis(500),
+            per_key_inflight: None,
+        }
+    }
+}
+
+/// Autoscaler bounds and hysteresis, part of
+/// [`crate::coordinator::ServiceConfig`]. `None` there means a fixed
+/// worker count (the pre-QoS behavior).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Never park below this many active workers.
+    pub min_workers: usize,
+    /// Never activate more than this many workers (threads are spawned
+    /// eagerly up to this bound; inactive ones park on the condvar).
+    pub max_workers: usize,
+    /// Scale *up* one worker when queue depth reaches this watermark.
+    pub high_depth: usize,
+    /// Scale *down* one worker when queue depth is at or below this
+    /// watermark. Keep `low_depth < high_depth` — the gap is the
+    /// hysteresis band that stops the controller from oscillating on
+    /// a depth hovering at one threshold.
+    pub low_depth: usize,
+    /// Supervisor sampling period.
+    pub interval: Duration,
+    /// Minimum time between two scale events (the other half of the
+    /// hysteresis: a burst can add at most one worker per cooldown).
+    pub cooldown: Duration,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            min_workers: 1,
+            max_workers: 8,
+            high_depth: 32,
+            low_depth: 2,
+            interval: Duration::from_millis(20),
+            cooldown: Duration::from_millis(250),
+        }
+    }
+}
+
+/// One autoscaler decision, recorded for
+/// [`crate::coordinator::MetricsSnapshot::scale_events`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleEvent {
+    /// Seconds since the service started.
+    pub at_s: f64,
+    pub from: usize,
+    pub to: usize,
+    /// Queue depth observed at decision time.
+    pub queue_depth: usize,
+    /// Accepted-submission rate observed over the preceding interval.
+    pub arrivals_rps: f64,
+}
+
+/// The pure autoscaler control law: watermark comparison with min/max
+/// clamping and a cooldown between decisions. Owns no clock — callers
+/// pass monotonic seconds — so hysteresis is testable without threads.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    last_change_s: Option<f64>,
+}
+
+impl Autoscaler {
+    pub fn new(mut cfg: AutoscaleConfig) -> Self {
+        cfg.min_workers = cfg.min_workers.max(1);
+        cfg.max_workers = cfg.max_workers.max(cfg.min_workers);
+        cfg.low_depth = cfg.low_depth.min(cfg.high_depth.saturating_sub(1));
+        Self {
+            cfg,
+            last_change_s: None,
+        }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// The new active-worker target, or `None` to hold. At most one
+    /// step (±1 worker) per call, and never two changes within
+    /// [`AutoscaleConfig::cooldown`].
+    pub fn decide(&mut self, now_s: f64, queue_depth: usize, active: usize) -> Option<usize> {
+        let cooled = self
+            .last_change_s
+            .map_or(true, |t| now_s - t >= self.cfg.cooldown.as_secs_f64());
+        if !cooled {
+            return None;
+        }
+        if queue_depth >= self.cfg.high_depth && active < self.cfg.max_workers {
+            self.last_change_s = Some(now_s);
+            return Some(active + 1);
+        }
+        if queue_depth <= self.cfg.low_depth && active > self.cfg.min_workers {
+            self.last_change_s = Some(now_s);
+            return Some(active - 1);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_order_and_names_round_trip() {
+        assert!(Priority::Interactive < Priority::Batch);
+        assert!(Priority::Batch < Priority::BestEffort);
+        assert_eq!(Priority::default(), Priority::Batch);
+        for p in Priority::all() {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse("nope"), None);
+        assert_eq!(Priority::all().len(), NUM_PRIORITIES);
+    }
+
+    #[test]
+    fn aging_boosts_one_class_per_step() {
+        let step = Duration::from_millis(10);
+        let be = Priority::BestEffort;
+        assert_eq!(be.effective_rank(Duration::ZERO, step), 2);
+        assert_eq!(be.effective_rank(Duration::from_millis(9), step), 2);
+        assert_eq!(be.effective_rank(Duration::from_millis(10), step), 1);
+        assert_eq!(be.effective_rank(Duration::from_millis(25), step), 0);
+        // Saturates at the top class.
+        assert_eq!(be.effective_rank(Duration::from_secs(60), step), 0);
+        assert_eq!(
+            Priority::Interactive.effective_rank(Duration::from_secs(60), step),
+            0
+        );
+        // Zero step disables aging entirely.
+        assert_eq!(be.effective_rank(Duration::from_secs(60), Duration::ZERO), 2);
+    }
+
+    #[test]
+    fn autoscaler_scales_up_on_high_watermark() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            min_workers: 1,
+            max_workers: 4,
+            high_depth: 10,
+            low_depth: 2,
+            cooldown: Duration::from_millis(100),
+            ..Default::default()
+        });
+        assert_eq!(a.decide(0.0, 50, 1), Some(2));
+        // Cooldown holds the next step back…
+        assert_eq!(a.decide(0.05, 50, 2), None);
+        // …then a second step lands.
+        assert_eq!(a.decide(0.2, 50, 2), Some(3));
+        assert_eq!(a.decide(0.4, 50, 3), Some(4));
+        // Clamped at max_workers.
+        assert_eq!(a.decide(0.6, 50, 4), None);
+    }
+
+    #[test]
+    fn autoscaler_scales_down_with_hysteresis_band() {
+        let mut a = Autoscaler::new(AutoscaleConfig {
+            min_workers: 1,
+            max_workers: 4,
+            high_depth: 10,
+            low_depth: 2,
+            cooldown: Duration::from_millis(100),
+            ..Default::default()
+        });
+        // Depth inside the band (low < 5 < high): hold in both directions.
+        assert_eq!(a.decide(0.0, 5, 3), None);
+        assert_eq!(a.decide(0.1, 2, 3), Some(2));
+        assert_eq!(a.decide(0.15, 0, 2), None, "cooldown");
+        assert_eq!(a.decide(0.3, 0, 2), Some(1));
+        // Clamped at min_workers.
+        assert_eq!(a.decide(0.5, 0, 1), None);
+    }
+
+    #[test]
+    fn autoscaler_clamps_degenerate_config() {
+        let a = Autoscaler::new(AutoscaleConfig {
+            min_workers: 0,
+            max_workers: 0,
+            high_depth: 4,
+            low_depth: 9,
+            ..Default::default()
+        });
+        assert_eq!(a.config().min_workers, 1);
+        assert_eq!(a.config().max_workers, 1);
+        assert!(a.config().low_depth < a.config().high_depth);
+    }
+}

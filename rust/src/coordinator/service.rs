@@ -7,9 +7,10 @@
 
 use super::batcher::{BatchConfig, PendingQueues};
 use super::engine::{Backends, JobOutput, JobPayload};
+use super::qos::{AutoscaleConfig, Autoscaler, Priority, QosConfig, ScaleEvent, NUM_PRIORITIES};
 use crate::runtime::HostTensor;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -25,6 +26,9 @@ pub struct Job {
     /// Cached [`JobPayload::batch_key`] (the queue/metrics key).
     pub key: String,
     pub payload: JobPayload,
+    /// Scheduling class; batch formation serves better (effective)
+    /// classes first and never co-batches across classes.
+    pub priority: Priority,
     pub enqueued: Instant,
     /// Absolute deadline; batch formation sheds the job un-executed once
     /// this passes.
@@ -36,6 +40,7 @@ impl Job {
     pub(crate) fn new(
         id: u64,
         payload: JobPayload,
+        priority: Priority,
         deadline: Option<Instant>,
         slot: ResponseSlot,
     ) -> Self {
@@ -43,6 +48,7 @@ impl Job {
             id,
             key: payload.batch_key(),
             payload,
+            priority,
             enqueued: Instant::now(),
             deadline,
             slot,
@@ -237,11 +243,17 @@ pub struct ServiceConfig {
     pub batch: BatchConfig,
     /// Worker threads. Each constructs its own backends via the loader
     /// closure (PJRT handles are thread-local), so artifacts are
-    /// effectively sharded per worker.
+    /// effectively sharded per worker. With `autoscale` set this is the
+    /// *initial* active count (clamped into the autoscaler's bounds).
     pub workers: usize,
     /// Bounded intake: submissions past this depth are shed with
     /// [`SubmitError::Busy`].
     pub queue_capacity: usize,
+    /// Priority aging and per-key concurrency limits.
+    pub qos: QosConfig,
+    /// Resize the active worker count from observed queue depth;
+    /// `None` keeps `workers` fixed (the pre-QoS behavior).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -250,6 +262,8 @@ impl Default for ServiceConfig {
             batch: BatchConfig::default(),
             workers: 2,
             queue_capacity: 1024,
+            qos: QosConfig::default(),
+            autoscale: None,
         }
     }
 }
@@ -322,12 +336,41 @@ impl KeyMetrics {
     }
 }
 
+/// Per-priority accumulator, one array per worker (same privacy rule
+/// as [`KeyMetrics`]). Latency here is the full queue-wait + batch
+/// execution per job, the number a QoS report cares about.
+#[derive(Debug, Default, Clone)]
+struct PrioMetrics {
+    count: u64,
+    errors: u64,
+    /// Per-job total latency (ring window of the last [`MAX_SAMPLES`]).
+    latency_s: Vec<f64>,
+    cursor: usize,
+}
+
+impl PrioMetrics {
+    fn record(&mut self, latency_s: f64, is_err: bool) {
+        self.count += 1;
+        if is_err {
+            self.errors += 1;
+        }
+        if self.latency_s.len() < MAX_SAMPLES {
+            self.latency_s.push(latency_s);
+        } else {
+            self.latency_s[self.cursor % MAX_SAMPLES] = latency_s;
+        }
+        self.cursor += 1;
+    }
+}
+
 /// Aggregated service metrics.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     /// Stats per batch key (`tensor:<artifact>`, `sim:<config>:<dataset>`,
     /// `cost:<platform>`).
     pub per_key: HashMap<String, KeyStats>,
+    /// Stats per priority class, in [`Priority::all`] order.
+    pub per_priority: Vec<PriorityStats>,
     pub total_requests: u64,
     /// Submissions shed with [`SubmitError::Busy`].
     pub rejected: u64,
@@ -336,8 +379,36 @@ pub struct MetricsSnapshot {
     pub expired: u64,
     /// Jobs shed at batch formation after [`Ticket::cancel`].
     pub cancelled: u64,
-    /// Worker threads serving the queues.
+    /// Worker threads spawned (with autoscaling: the max bound).
     pub workers: usize,
+    /// Workers currently unparked and pulling batches.
+    pub active_workers: usize,
+    /// Jobs queued at snapshot time.
+    pub queue_depth: usize,
+    /// Every autoscaler resize so far, in decision order.
+    pub scale_events: Vec<ScaleEvent>,
+    /// Highest concurrent in-flight batch count observed per batch key
+    /// (the per-key concurrency limit's audit trail).
+    pub max_inflight: HashMap<String, usize>,
+}
+
+/// Aggregated per-priority latency stats for [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct PriorityStats {
+    pub priority: Priority,
+    /// Jobs executed (including failed ones).
+    pub count: u64,
+    pub errors: u64,
+    /// Jobs shed un-executed: deadline-expired at formation.
+    pub expired: u64,
+    /// Jobs shed un-executed: cancelled before formation.
+    pub cancelled: u64,
+    /// Submissions shed at intake with [`SubmitError::Busy`].
+    pub rejected: u64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub p999_latency_s: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -358,7 +429,7 @@ pub struct KeyStats {
 /// the max for some counts and a below-p element for others.) The
 /// round-to-nearest guard absorbs f64 noise: `0.95 * 20` lands a hair
 /// above 19 and must not ceil to 20.
-fn percentile(sorted: &[f64], p: f64) -> f64 {
+pub(crate) fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
@@ -408,11 +479,19 @@ fn merge_into(dst: &mut KeyMetrics, src: &KeyMetrics) {
     dst.batch_exec_s.extend_from_slice(&src.batch_exec_s);
 }
 
-/// Queue state guarded by one mutex: the per-key pending queues and
+/// Queue state guarded by one mutex: the per-key pending queues, the
+/// per-key in-flight batch counts (the concurrency-limit ledger), and
 /// the shutdown flag (inside the lock so submit/stop/drain can never
 /// race).
 struct QueueState {
     pending: PendingQueues,
+    /// Executing batches per bare batch key. A key at its
+    /// [`QosConfig::per_key_inflight`] cap is skipped by formation;
+    /// its jobs stay queued (never shed) until a batch completes.
+    inflight: HashMap<String, usize>,
+    /// Audit trail for the cap: the highest concurrent count ever
+    /// observed per key.
+    max_inflight_seen: HashMap<String, usize>,
     stop: bool,
 }
 
@@ -421,14 +500,43 @@ struct Shared {
     cv: Condvar,
 }
 
-/// Shed counters shared between the service handle and its workers.
+/// Counters shared between the service handle, its workers and the
+/// autoscale supervisor.
 #[derive(Default)]
 struct ShedCounters {
     expired: AtomicU64,
     cancelled: AtomicU64,
+    /// Accepted submissions (the supervisor differences this to get an
+    /// arrival rate).
+    accepted: AtomicU64,
+    expired_by_prio: [AtomicU64; NUM_PRIORITIES],
+    cancelled_by_prio: [AtomicU64; NUM_PRIORITIES],
 }
 
-type WorkerMetrics = Arc<Mutex<HashMap<String, KeyMetrics>>>;
+/// Autoscaler state shared between the supervisor and the workers:
+/// workers with index `>= active` park until scaled back up (threads
+/// are spawned eagerly to the max bound; parking is cheaper and
+/// simpler than re-loading backends on every resize).
+struct ScaleState {
+    active: AtomicUsize,
+    events: Mutex<Vec<ScaleEvent>>,
+    started: Instant,
+}
+
+impl ScaleState {
+    fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+}
+
+/// Each worker's private accumulators: per batch key and per priority.
+#[derive(Default)]
+struct WorkerLocal {
+    keys: HashMap<String, KeyMetrics>,
+    prios: [PrioMetrics; NUM_PRIORITIES],
+}
+
+type WorkerMetrics = Arc<Mutex<WorkerLocal>>;
 
 /// The running service. Dropping it (or calling [`shutdown`]) stops
 /// intake, drains the queues and joins the workers.
@@ -437,10 +545,13 @@ type WorkerMetrics = Arc<Mutex<HashMap<String, KeyMetrics>>>;
 pub struct InferenceService {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
     worker_metrics: Vec<WorkerMetrics>,
     shed: Arc<ShedCounters>,
+    scale: Arc<ScaleState>,
     next_id: AtomicU64,
     rejected: AtomicU64,
+    rejected_by_prio: [AtomicU64; NUM_PRIORITIES],
     cfg: ServiceConfig,
 }
 
@@ -455,54 +566,96 @@ impl InferenceService {
     {
         let mut cfg = cfg.into();
         cfg.workers = cfg.workers.max(1);
+        // With autoscaling, spawn threads eagerly to the max bound and
+        // start with `workers` of them active (clamped into bounds);
+        // without, every spawned worker is always active.
+        let autoscaler = cfg.autoscale.clone().map(Autoscaler::new);
+        let (spawned, initial_active) = match &autoscaler {
+            Some(a) => {
+                let b = a.config();
+                (b.max_workers, cfg.workers.clamp(b.min_workers, b.max_workers))
+            }
+            None => (cfg.workers, cfg.workers),
+        };
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
                 pending: PendingQueues::new(),
+                inflight: HashMap::new(),
+                max_inflight_seen: HashMap::new(),
                 stop: false,
             }),
             cv: Condvar::new(),
         });
         let shed = Arc::new(ShedCounters::default());
+        let scale = Arc::new(ScaleState {
+            active: AtomicUsize::new(initial_active),
+            events: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        });
         let make_backends = Arc::new(make_backends);
-        let mut workers = Vec::with_capacity(cfg.workers);
-        let mut worker_metrics = Vec::with_capacity(cfg.workers);
-        for i in 0..cfg.workers {
-            let metrics: WorkerMetrics = Arc::new(Mutex::new(HashMap::new()));
+        let mut workers = Vec::with_capacity(spawned);
+        let mut worker_metrics = Vec::with_capacity(spawned);
+        for i in 0..spawned {
+            let metrics: WorkerMetrics = Arc::new(Mutex::new(WorkerLocal::default()));
             worker_metrics.push(metrics.clone());
             let shared = shared.clone();
             let shed = shed.clone();
+            let scale = scale.clone();
             let make = make_backends.clone();
-            let batch_cfg = cfg.batch.clone();
-            let n_workers = cfg.workers;
+            let params = WorkerParams {
+                batch: cfg.batch.clone(),
+                qos: cfg.qos.clone(),
+                idx: i,
+            };
             let handle = std::thread::Builder::new()
                 .name(format!("engn-worker-{i}"))
                 .spawn(move || {
-                    // N workers execute batches concurrently: each gets
-                    // an equal share of the machine so a backend's
-                    // parallel fan-out (e.g. SimBackend) never spawns
-                    // workers × cores threads.
-                    crate::util::pool::set_thread_width_share(n_workers);
                     let backends = (*make)();
-                    worker_loop(&shared, &backends, &batch_cfg, &metrics, &shed);
+                    worker_loop(&shared, &backends, &params, &scale, &metrics, &shed);
                 })
                 .expect("spawn serving worker");
             workers.push(handle);
         }
+        let supervisor = autoscaler.map(|autoscaler| {
+            let shared = shared.clone();
+            let scale = scale.clone();
+            let shed = shed.clone();
+            std::thread::Builder::new()
+                .name("engn-autoscaler".to_string())
+                .spawn(move || supervisor_loop(&shared, &scale, &shed, autoscaler))
+                .expect("spawn autoscale supervisor")
+        });
         Self {
             shared,
             workers,
+            supervisor,
             worker_metrics,
             shed,
+            scale,
             next_id: AtomicU64::new(1),
             rejected: AtomicU64::new(0),
+            rejected_by_prio: Default::default(),
             cfg,
         }
     }
 
-    /// Submit a job; returns a [`Ticket`] handle, or a typed rejection
-    /// when the intake queue is full or the service is draining.
+    /// Submit a job at the default [`Priority::Batch`]; returns a
+    /// [`Ticket`] handle, or a typed rejection when the intake queue is
+    /// full or the service is draining.
     pub fn submit(&self, payload: JobPayload) -> Result<Ticket, SubmitError> {
-        self.submit_inner(payload, None)
+        self.submit_with_opts(payload, Priority::default(), None)
+    }
+
+    /// Submit with an explicit scheduling class. Interactive jobs jump
+    /// ahead of queued batch/best-effort work at the next batch
+    /// formation; the aging rule bounds how long the lower classes can
+    /// be displaced.
+    pub fn submit_with_priority(
+        &self,
+        payload: JobPayload,
+        priority: Priority,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_with_opts(payload, priority, None)
     }
 
     /// Submit with a deadline relative to now: if the job is still
@@ -513,7 +666,18 @@ impl InferenceService {
         payload: JobPayload,
         deadline: Duration,
     ) -> Result<Ticket, SubmitError> {
-        self.submit_inner(payload, Some(Instant::now() + deadline))
+        self.submit_with_opts(payload, Priority::default(), Some(deadline))
+    }
+
+    /// Submit with both a scheduling class and an optional relative
+    /// deadline (deadline shedding composes with priorities).
+    pub fn submit_with_opts(
+        &self,
+        payload: JobPayload,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_inner(payload, priority, deadline.map(|d| Instant::now() + d))
     }
 
     /// Sugar for the tensor plane: submit an artifact inference job.
@@ -531,6 +695,7 @@ impl InferenceService {
     fn submit_inner(
         &self,
         payload: JobPayload,
+        priority: Priority,
         deadline: Option<Instant>,
     ) -> Result<Ticket, SubmitError> {
         let slot = ResponseSlot::new();
@@ -540,14 +705,17 @@ impl InferenceService {
         }
         if st.pending.len() >= self.cfg.queue_capacity {
             self.rejected.fetch_add(1, Ordering::Relaxed);
+            self.rejected_by_prio[priority.rank()].fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Busy {
                 queue_depth: st.pending.len(),
                 capacity: self.cfg.queue_capacity,
             });
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        st.pending.push(Job::new(id, payload, deadline, slot.clone()));
+        st.pending
+            .push(Job::new(id, payload, priority, deadline, slot.clone()));
         drop(st);
+        self.shed.accepted.fetch_add(1, Ordering::Relaxed);
         self.shared.cv.notify_all();
         Ok(Ticket { id, slot })
     }
@@ -564,10 +732,16 @@ impl InferenceService {
     /// Merge every worker's private accumulator into one snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut merged: HashMap<String, KeyMetrics> = HashMap::new();
+        let mut prio_merged: [PrioMetrics; NUM_PRIORITIES] = Default::default();
         for wm in &self.worker_metrics {
             let m = wm.lock().unwrap();
-            for (name, am) in m.iter() {
+            for (name, am) in m.keys.iter() {
                 merge_into(merged.entry(name.clone()).or_default(), am);
+            }
+            for (dst, src) in prio_merged.iter_mut().zip(m.prios.iter()) {
+                dst.count += src.count;
+                dst.errors += src.errors;
+                dst.latency_s.extend_from_slice(&src.latency_s);
             }
         }
         let mut per_key = HashMap::new();
@@ -576,13 +750,43 @@ impl InferenceService {
             total += am.count;
             per_key.insert(name.clone(), aggregate(am));
         }
+        let per_priority = Priority::all()
+            .iter()
+            .map(|&p| {
+                let pm = &prio_merged[p.rank()];
+                let mut sorted = pm.latency_s.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                PriorityStats {
+                    priority: p,
+                    count: pm.count,
+                    errors: pm.errors,
+                    expired: self.shed.expired_by_prio[p.rank()].load(Ordering::Relaxed),
+                    cancelled: self.shed.cancelled_by_prio[p.rank()].load(Ordering::Relaxed),
+                    rejected: self.rejected_by_prio[p.rank()].load(Ordering::Relaxed),
+                    mean_latency_s: pm.latency_s.iter().sum::<f64>()
+                        / pm.latency_s.len().max(1) as f64,
+                    p50_latency_s: percentile(&sorted, 0.50),
+                    p99_latency_s: percentile(&sorted, 0.99),
+                    p999_latency_s: percentile(&sorted, 0.999),
+                }
+            })
+            .collect();
+        let (queue_depth, max_inflight) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.pending.len(), st.max_inflight_seen.clone())
+        };
         MetricsSnapshot {
             per_key,
+            per_priority,
             total_requests: total,
             rejected: self.rejected.load(Ordering::Relaxed),
             expired: self.shed.expired.load(Ordering::Relaxed),
             cancelled: self.shed.cancelled.load(Ordering::Relaxed),
             workers: self.worker_metrics.len(),
+            active_workers: self.scale.active(),
+            queue_depth,
+            scale_events: self.scale.events.lock().unwrap().clone(),
+            max_inflight,
         }
     }
 
@@ -601,6 +805,9 @@ impl InferenceService {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -610,63 +817,195 @@ impl Drop for InferenceService {
     }
 }
 
-/// Block until a batch can be formed. FIFO-fair: the key owning the
-/// globally oldest job is served first; the batching window is
-/// anchored to that job's enqueue time. Returns `None` once the
-/// service is stopping and the queues are drained.
-fn next_batch(shared: &Shared, cfg: &BatchConfig) -> Option<Vec<Job>> {
-    let max_batch = cfg.max_batch.max(1);
+/// Per-worker scheduling parameters (bundled so the worker entry
+/// points stay at a sane arity).
+struct WorkerParams {
+    batch: BatchConfig,
+    qos: QosConfig,
+    /// This worker's index; workers with `idx >= active` park.
+    idx: usize,
+}
+
+/// What the formation scan under the lock decided; acted on after the
+/// immutable borrows of the queue state end.
+enum Formation {
+    /// Take this (priority, key) queue now.
+    Take(Priority, String),
+    /// The best head's batching window is still collecting.
+    WaitUntil(Instant),
+    /// Nothing runnable (idle, parked by the autoscaler, or every
+    /// queued key is at its concurrency cap): park on the condvar.
+    Park,
+    /// Stopping and fully drained: the worker exits.
+    Drained,
+}
+
+/// Block until a batch can be formed. Strict-effective-priority with
+/// aging over a global-FIFO tiebreak (see [`PendingQueues::best_head`]);
+/// the batching window is anchored to the chosen head's enqueue time.
+/// Keys at their per-key in-flight cap are skipped — their jobs stay
+/// queued — and the cap is released by the worker after the batch is
+/// served. Returns `None` once the service is stopping and the queues
+/// are drained.
+fn next_batch(shared: &Shared, params: &WorkerParams, scale: &ScaleState) -> Option<Vec<Job>> {
+    let max_batch = params.batch.max_batch.max(1);
+    let aging = params.qos.aging_step;
+    let limit = params.qos.per_key_inflight;
     let mut st = shared.state.lock().unwrap();
     loop {
-        if st.pending.is_empty() {
-            if st.stop {
-                return None;
-            }
-            // Idle: park on the condvar. Submissions and shutdown
-            // notify; the long tick is only lost-wakeup insurance.
-            st = shared.cv.wait_timeout(st, IDLE_FALLBACK).unwrap().0;
-            continue;
-        }
-        let (key, head_enqueued, depth) =
-            st.pending.oldest_head().expect("non-empty queue has a head");
-        // Hold the batching window open for co-batchable arrivals unless
-        // the batch is already full or the service is draining.
-        if depth < max_batch && !st.stop {
-            let deadline = head_enqueued + cfg.max_wait;
-            let now = Instant::now();
-            if now < deadline {
-                // While the oldest key is still collecting, serve
-                // any other key whose batch is already full rather
-                // than idling. Starvation-free: window expiry below
-                // always wins for the oldest head.
-                if let Some(ready) = st.pending.full_key(max_batch) {
-                    let batch = st.pending.take_batch(&ready, max_batch);
-                    if !batch.is_empty() {
-                        return Some(batch);
-                    }
-                    continue;
+        let decision = {
+            let QueueState {
+                pending,
+                inflight,
+                stop,
+                ..
+            } = &*st;
+            let stop = *stop;
+            if !stop && params.idx >= scale.active() {
+                // Parked by the autoscaler. During shutdown every
+                // spawned worker helps drain instead.
+                Formation::Park
+            } else if pending.is_empty() {
+                if stop {
+                    Formation::Drained
+                } else {
+                    Formation::Park
                 }
-                st = shared.cv.wait_timeout(st, deadline - now).unwrap().0;
-                continue;
+            } else {
+                let eligible = |key: &str| {
+                    limit.map_or(true, |c| inflight.get(key).copied().unwrap_or(0) < c)
+                };
+                let now = Instant::now();
+                match pending.best_head(now, aging, &eligible) {
+                    // Everything queued is at its concurrency cap: a
+                    // completing batch will notify.
+                    None => Formation::Park,
+                    Some((prio, key, head_enqueued, depth)) => {
+                        // Hold the batching window open for co-batchable
+                        // arrivals unless the batch is already full or
+                        // the service is draining.
+                        if depth < max_batch && !stop {
+                            let deadline = head_enqueued + params.batch.max_wait;
+                            if now < deadline {
+                                // While the best head is still collecting,
+                                // serve any eligible queue whose batch is
+                                // already full rather than idling.
+                                // Starvation-free: window expiry always
+                                // wins for the best head.
+                                match pending.full_key(max_batch, now, aging, &eligible) {
+                                    Some((fp, fk)) => Formation::Take(fp, fk),
+                                    None => Formation::WaitUntil(deadline),
+                                }
+                            } else {
+                                Formation::Take(prio, key)
+                            }
+                        } else {
+                            Formation::Take(prio, key)
+                        }
+                    }
+                }
+            }
+        };
+        match decision {
+            Formation::Drained => return None,
+            Formation::Park => {
+                // Submissions, completions, scale events and shutdown
+                // all notify; the long tick is lost-wakeup insurance.
+                st = shared.cv.wait_timeout(st, IDLE_FALLBACK).unwrap().0;
+            }
+            Formation::WaitUntil(deadline) => {
+                let now = Instant::now();
+                if now < deadline {
+                    st = shared.cv.wait_timeout(st, deadline - now).unwrap().0;
+                }
+            }
+            Formation::Take(prio, key) => {
+                let batch = st.pending.take_batch(prio, &key, max_batch);
+                if !batch.is_empty() {
+                    let n = st.inflight.entry(key.clone()).or_insert(0);
+                    *n += 1;
+                    let seen = st.max_inflight_seen.entry(key).or_insert(0);
+                    *seen = (*seen).max(*n);
+                    return Some(batch);
+                }
+                // Another worker drained the queue between checks; re-scan.
             }
         }
-        let batch = st.pending.take_batch(&key, max_batch);
-        if !batch.is_empty() {
-            return Some(batch);
-        }
-        // Another worker drained the key between checks; re-scan.
     }
+}
+
+/// Release a served batch's per-key concurrency slot and wake anyone
+/// blocked on the cap.
+fn release_inflight(shared: &Shared, key: &str) {
+    let mut st = shared.state.lock().unwrap();
+    if let Some(n) = st.inflight.get_mut(key) {
+        *n -= 1;
+        if *n == 0 {
+            st.inflight.remove(key);
+        }
+    }
+    drop(st);
+    shared.cv.notify_all();
 }
 
 fn worker_loop(
     shared: &Shared,
     backends: &Result<Backends, String>,
-    cfg: &BatchConfig,
-    metrics: &Mutex<HashMap<String, KeyMetrics>>,
+    params: &WorkerParams,
+    scale: &ScaleState,
+    metrics: &Mutex<WorkerLocal>,
     shed: &ShedCounters,
 ) {
-    while let Some(batch) = next_batch(shared, cfg) {
+    while let Some(batch) = next_batch(shared, params, scale) {
+        // Active workers execute batches concurrently: each takes an
+        // equal share of the machine so a backend's parallel fan-out
+        // (e.g. SimBackend) never spawns workers × cores threads. Set
+        // per batch so the share tracks the autoscaler's resizes.
+        crate::util::pool::set_thread_width_share(scale.active().max(1));
+        let key = batch[0].key.clone();
         serve_batch(backends, batch, metrics, shed);
+        release_inflight(shared, &key);
+    }
+}
+
+/// The autoscale supervisor: samples queue depth every `interval`,
+/// asks the pure [`Autoscaler`] control law for a target, and applies
+/// it by moving the active-worker watermark (parked workers hold no
+/// resources beyond their idle thread). Exits at shutdown.
+fn supervisor_loop(
+    shared: &Shared,
+    scale: &ScaleState,
+    shed: &ShedCounters,
+    mut autoscaler: Autoscaler,
+) {
+    let interval = autoscaler.config().interval.max(Duration::from_millis(1));
+    let mut last_accepted = shed.accepted.load(Ordering::Relaxed);
+    loop {
+        std::thread::sleep(interval);
+        let (depth, stop) = {
+            let st = shared.state.lock().unwrap();
+            (st.pending.len(), st.stop)
+        };
+        if stop {
+            return;
+        }
+        let accepted = shed.accepted.load(Ordering::Relaxed);
+        let arrivals_rps = (accepted - last_accepted) as f64 / interval.as_secs_f64();
+        last_accepted = accepted;
+        let now_s = scale.started.elapsed().as_secs_f64();
+        let active = scale.active();
+        if let Some(target) = autoscaler.decide(now_s, depth, active) {
+            scale.active.store(target, Ordering::Relaxed);
+            scale.events.lock().unwrap().push(ScaleEvent {
+                at_s: now_s,
+                from: active,
+                to: target,
+                queue_depth: depth,
+                arrivals_rps,
+            });
+            // Wake parked workers (scale-up) / let extras park (down).
+            shared.cv.notify_all();
+        }
     }
 }
 
@@ -683,11 +1022,11 @@ fn deliver_shed(job: Job, err: JobError, now: Instant) {
 
 /// Shed dead members, then execute the surviving batch with a single
 /// `execute_batch` call on the backend owning its kind, record metrics
-/// (per batch AND per job), and answer every member.
+/// (per batch, per job AND per priority), and answer every member.
 fn serve_batch(
     backends: &Result<Backends, String>,
     batch: Vec<Job>,
-    metrics: &Mutex<HashMap<String, KeyMetrics>>,
+    metrics: &Mutex<WorkerLocal>,
     shed: &ShedCounters,
 ) {
     // Deadline-aware shedding at batch formation: already-expired (or
@@ -698,9 +1037,11 @@ fn serve_batch(
     for job in batch {
         if job.slot.is_cancelled() {
             shed.cancelled.fetch_add(1, Ordering::Relaxed);
+            shed.cancelled_by_prio[job.priority.rank()].fetch_add(1, Ordering::Relaxed);
             deliver_shed(job, JobError::Cancelled, now);
         } else if job.expired(now) {
             shed.expired.fetch_add(1, Ordering::Relaxed);
+            shed.expired_by_prio[job.priority.rank()].fetch_add(1, Ordering::Relaxed);
             deliver_shed(job, JobError::Expired, now);
         } else {
             live.push(job);
@@ -711,6 +1052,9 @@ fn serve_batch(
     }
     let batch_size = live.len();
     let key = live[0].key.clone();
+    // Classes never co-batch (the queue key includes the priority), so
+    // one class describes the whole batch.
+    let priority = live[0].priority;
     let kind = live[0].payload.kind();
     let mut metas = Vec::with_capacity(batch_size);
     let mut payloads = Vec::with_capacity(batch_size);
@@ -754,7 +1098,7 @@ fn serve_batch(
     }
     {
         let mut m = metrics.lock().unwrap();
-        let am = m.entry(key).or_default();
+        let am = m.keys.entry(key).or_default();
         am.record_batch(batch_size, exec_time.as_secs_f64());
         for ((_, enqueued, _), result) in metas.iter().zip(&results) {
             am.record_request(
@@ -762,6 +1106,11 @@ fn serve_batch(
                 started.duration_since(*enqueued).as_secs_f64(),
                 result.is_err(),
             );
+        }
+        let pm = &mut m.prios[priority.rank()];
+        for ((_, enqueued, _), result) in metas.iter().zip(&results) {
+            let wait_s = started.duration_since(*enqueued).as_secs_f64();
+            pm.record(wait_s + exec_time.as_secs_f64(), result.is_err());
         }
     }
     for ((id, enqueued, slot), result) in metas.into_iter().zip(results) {
@@ -914,6 +1263,7 @@ mod tests {
                 },
                 workers: 1,
                 queue_capacity: 64,
+                ..Default::default()
             },
         );
         // Warmup request parks the single worker inside the mock's sleep…
@@ -1022,6 +1372,7 @@ mod tests {
                 },
                 workers: 1,
                 queue_capacity: 16,
+                ..Default::default()
             },
         );
         for _ in 0..2 {
@@ -1047,6 +1398,7 @@ mod tests {
                 batch: BatchConfig::default(),
                 workers: 1,
                 queue_capacity: 0,
+                ..Default::default()
             },
         );
         let err = svc.submit_tensor("gcn", vec![]).unwrap_err();
@@ -1113,6 +1465,7 @@ mod tests {
                 },
                 workers: 1,
                 queue_capacity: 16,
+                ..Default::default()
             },
         );
         let ticket = svc
@@ -1164,8 +1517,17 @@ mod tests {
         assert!(s.count == 10);
         assert!(s.throughput_rps > 0.0);
         assert_eq!(m.workers, 2);
+        assert_eq!(m.active_workers, 2, "no autoscaler: every worker active");
         assert_eq!(m.expired, 0);
         assert_eq!(m.cancelled, 0);
+        assert!(m.scale_events.is_empty());
+        // All 10 jobs ran at the default Batch class.
+        assert_eq!(m.per_priority.len(), 3);
+        let batch = &m.per_priority[Priority::Batch.rank()];
+        assert_eq!(batch.count, 10);
+        assert!(batch.p50_latency_s <= batch.p99_latency_s);
+        assert!(batch.p99_latency_s <= batch.p999_latency_s);
+        assert_eq!(m.per_priority[Priority::Interactive.rank()].count, 0);
     }
 
     // --- pure-function regression tests ---------------------------------

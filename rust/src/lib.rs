@@ -24,7 +24,12 @@
 //!   FIFO-fair per-key batching and N worker threads onto pluggable
 //!   [`coordinator::Backend`]s — tensor inference (PJRT), what-if
 //!   simulation and baseline cost models — answered via
-//!   [`coordinator::Ticket`] handles with optional deadlines;
+//!   [`coordinator::Ticket`] handles with optional deadlines, plus a
+//!   QoS plane ([`coordinator::qos`]): priority classes with aging,
+//!   per-key in-flight limits and a queue-depth autoscaler;
+//! * [`loadgen`] — deterministic closed/open-loop load generator for
+//!   the serving plane: seeded Poisson/bursty arrivals, mixed-plane
+//!   traffic, per-priority latency reports and saturation sweeps;
 //! * [`xla`] — offline stub of the PJRT bindings the runtime codes
 //!   against (swap in the real `xla` crate to execute artifacts);
 //! * [`partition`] — scale-out graph partitioning: [`partition::Partitioner`]
@@ -38,6 +43,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod graph;
+pub mod loadgen;
 pub mod mem;
 pub mod model;
 pub mod partition;

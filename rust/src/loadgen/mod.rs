@@ -1,0 +1,648 @@
+//! Closed/open-loop load generator for the serving plane.
+//!
+//! The harness splits cleanly into a *deterministic* half and a
+//! *measured* half:
+//!
+//! - [`LoadPlan`] is built serially from the seed before any traffic
+//!   flows: arrival times ([`ArrivalProcess::schedule`]), priorities
+//!   and payloads are all drawn from [`Xoshiro256StarStar`] streams, so
+//!   the same `(seed, config)` yields the byte-identical schedule
+//!   (pinned via [`LoadPlan::render_schedule`] / [`LoadPlan::digest`])
+//!   at any worker/thread width, on any machine.
+//! - [`run`] replays the plan against a live [`InferenceService`] and
+//!   produces a [`LoadReport`] with per-priority p50/p99/p999 latency,
+//!   throughput and shed rate. Latency figures are wall-clock
+//!   measurements and are *not* part of the pinned artifact; the
+//!   reported latency per job is service-side (`queue_wait +
+//!   exec_time` from [`JobResponse`]), so it excludes loadgen-side
+//!   scheduling jitter.
+//!
+//! Open loop (`closed_users: None`) sleeps to the schedule and submits
+//! regardless of completions — the right model for saturation sweeps,
+//! where [`SubmitError::Busy`] rejections are *counted as shed, never
+//! retried*. Closed loop (`closed_users: Some(u)`) runs `u` user
+//! threads that each submit, wait, think (the schedule gap), repeat —
+//! the classic closed-system model whose offered rate self-limits at
+//! saturation.
+//!
+//! [`saturation_sweep`] steps the arrival rate geometrically over
+//! fresh service instances until the shed rate crosses a threshold,
+//! and [`sweep_to_json`] renders the result in the shape
+//! `scripts/bench_snapshot.sh` pins as `BENCH_serving.json`.
+
+pub mod arrivals;
+
+pub use arrivals::ArrivalProcess;
+
+use crate::baselines::PlatformId;
+use crate::coordinator::service::percentile;
+use crate::coordinator::{
+    CostJob, InferenceService, JobError, JobPayload, Priority, SimJob, SubmitError, Ticket,
+    NUM_PRIORITIES,
+};
+use crate::model::GnnKind;
+use crate::util::json::Json;
+use crate::util::rng::{SplitMix64, Xoshiro256StarStar};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The sim-plane what-if mix: all group under one batch key per
+/// dataset, so bursts amortize graph preparation across the batch.
+const SIM_MODELS: [GnnKind; 3] = [GnnKind::Gcn, GnnKind::GsPool, GnnKind::GatedGcn];
+const COST_PLATFORMS: [PlatformId; 3] = [PlatformId::CpuDgl, PlatformId::GpuDgl, PlatformId::Hygcn];
+
+/// What traffic to offer and how. Everything here feeds the
+/// deterministic [`LoadPlan`]; nothing is drawn at drive time.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Master seed; mixed through [`SplitMix64`] into independent
+    /// streams for arrivals and payload/priority draws.
+    pub seed: u64,
+    /// Total requests to offer.
+    pub requests: usize,
+    /// Arrival process (open loop) / think-time source (closed loop).
+    pub arrivals: ArrivalProcess,
+    /// `None` = open loop; `Some(u)` = closed loop with `u` users.
+    pub closed_users: Option<usize>,
+    /// Dataset backing the analytic (sim + cost) planes.
+    pub dataset: String,
+    /// When set, a share of traffic targets this tensor artifact
+    /// (requires the runtime plane; integration tests use mocks).
+    pub tensor_artifact: Option<String>,
+    /// Relative weights for [interactive, batch, best_effort].
+    pub priority_weights: [u32; NUM_PRIORITIES],
+    /// Optional per-job deadline, composing QoS with deadline shedding.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            seed: 0xE16A,
+            requests: 200,
+            arrivals: ArrivalProcess::Poisson { rate_rps: 200.0 },
+            closed_users: None,
+            dataset: "CA".to_string(),
+            tensor_artifact: None,
+            priority_weights: [2, 5, 3],
+            deadline: None,
+        }
+    }
+}
+
+/// One planned request: when to offer it, at what class, with what
+/// payload. Fully determined by `(seed, config)`.
+#[derive(Debug, Clone)]
+pub struct PlannedJob {
+    pub at_s: f64,
+    pub priority: Priority,
+    pub payload: JobPayload,
+}
+
+/// The deterministic half of a loadgen run.
+#[derive(Debug, Clone)]
+pub struct LoadPlan {
+    pub cfg: LoadgenConfig,
+    pub jobs: Vec<PlannedJob>,
+}
+
+impl LoadPlan {
+    /// Build the full schedule serially. Two independent rng streams
+    /// (arrivals inside [`ArrivalProcess::schedule`], payload/priority
+    /// here) are both derived from `cfg.seed` via distinct SplitMix64
+    /// mixes, so they never correlate.
+    pub fn build(cfg: &LoadgenConfig) -> LoadPlan {
+        let times = cfg.arrivals.schedule(cfg.seed, cfg.requests);
+        let mut mix = SplitMix64::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(mix.next_u64());
+        // Plane weights: [sim, cost, tensor]. The tensor share is only
+        // offered when an artifact is configured.
+        let plane_weights: [u32; 3] = if cfg.tensor_artifact.is_some() {
+            [3, 2, 3]
+        } else {
+            [3, 2, 0]
+        };
+        let jobs = times
+            .into_iter()
+            .enumerate()
+            .map(|(i, at_s)| {
+                let priority = Priority::all()[pick_weighted(&mut rng, &cfg.priority_weights)];
+                let payload = match pick_weighted(&mut rng, &plane_weights) {
+                    0 => JobPayload::Sim(SimJob::new(SIM_MODELS[i % SIM_MODELS.len()], &cfg.dataset)),
+                    1 => JobPayload::Cost(CostJob::new(
+                        COST_PLATFORMS[i % COST_PLATFORMS.len()],
+                        GnnKind::Gcn,
+                        &cfg.dataset,
+                    )),
+                    _ => JobPayload::Tensor {
+                        artifact: cfg.tensor_artifact.clone().unwrap_or_default(),
+                        inputs: Vec::new(),
+                    },
+                };
+                PlannedJob { at_s, priority, payload }
+            })
+            .collect();
+        LoadPlan { cfg: cfg.clone(), jobs }
+    }
+
+    /// Requests per priority class, in `Priority::all()` order.
+    pub fn priority_counts(&self) -> [u64; NUM_PRIORITIES] {
+        let mut counts = [0u64; NUM_PRIORITIES];
+        for job in &self.jobs {
+            counts[self.index_of(job.priority)] += 1;
+        }
+        counts
+    }
+
+    fn index_of(&self, p: Priority) -> usize {
+        Priority::all().iter().position(|&q| q == p).unwrap_or(0)
+    }
+
+    /// The byte-identical pinned artifact: one line per planned job
+    /// with the arrival time's exact f64 bits (hex), the class and the
+    /// batch key. Any nondeterminism in plan building shows up here.
+    pub fn render_schedule(&self) -> String {
+        let mut out = String::with_capacity(self.jobs.len() * 48);
+        for (i, job) in self.jobs.iter().enumerate() {
+            out.push_str(&format!(
+                "{i:06} {:016x} {} {}\n",
+                job.at_s.to_bits(),
+                job.priority,
+                job.payload.batch_key()
+            ));
+        }
+        out
+    }
+
+    /// FNV-1a over [`render_schedule`](Self::render_schedule) — a
+    /// compact fingerprint for logs and the bench snapshot.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.render_schedule().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+}
+
+/// Weighted index pick in `0..weights.len()`; all-zero weights fall
+/// back to index 0.
+fn pick_weighted(rng: &mut Xoshiro256StarStar, weights: &[u32]) -> usize {
+    let total: u64 = weights.iter().map(|&w| w as u64).sum();
+    if total == 0 {
+        return 0;
+    }
+    let mut x = rng.gen_range(total);
+    for (i, &w) in weights.iter().enumerate() {
+        if x < w as u64 {
+            return i;
+        }
+        x -= w as u64;
+    }
+    weights.len() - 1
+}
+
+/// Per-class outcome tally plus raw latencies (service-side seconds).
+#[derive(Debug, Clone, Default)]
+struct PrioAccum {
+    busy: u64,
+    completed: u64,
+    failed: u64,
+    expired: u64,
+    cancelled: u64,
+    latencies: Vec<f64>,
+}
+
+impl PrioAccum {
+    fn merge(&mut self, other: &PrioAccum) {
+        self.busy += other.busy;
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.expired += other.expired;
+        self.cancelled += other.cancelled;
+        self.latencies.extend_from_slice(&other.latencies);
+    }
+
+    fn attempts(&self) -> u64 {
+        self.busy + self.completed + self.failed + self.expired + self.cancelled
+    }
+}
+
+/// Finished per-class stats in a [`LoadReport`].
+#[derive(Debug, Clone)]
+pub struct PriorityLoadStats {
+    pub priority: Priority,
+    /// Offered = accepted + busy-shed.
+    pub offered: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Shed at intake ([`SubmitError::Busy`], never retried).
+    pub busy: u64,
+    /// Shed at batch formation (deadline passed while queued).
+    pub expired: u64,
+    pub cancelled: u64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub p999_latency_s: f64,
+    pub max_latency_s: f64,
+}
+
+/// What a loadgen run measured. The *counts* here are deterministic in
+/// `(seed, config)` (they mirror the plan); the latency and rate
+/// figures are wall-clock and vary run to run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// "open" or "closed(u)".
+    pub mode: String,
+    pub arrivals: String,
+    pub offered_rps: f64,
+    pub requests: usize,
+    pub wall_s: f64,
+    /// Completed jobs per wall-clock second.
+    pub achieved_rps: f64,
+    /// (busy + expired) / offered, over all classes.
+    pub shed_rate: f64,
+    /// In `Priority::all()` order, always all classes (zeros included).
+    pub per_priority: Vec<PriorityLoadStats>,
+    /// Fingerprint of the plan this report measured.
+    pub plan_digest: u64,
+}
+
+impl LoadReport {
+    fn from_accums(plan: &LoadPlan, accums: &[PrioAccum; NUM_PRIORITIES], wall_s: f64) -> Self {
+        let mut per_priority = Vec::with_capacity(NUM_PRIORITIES);
+        let mut offered_total = 0u64;
+        let mut shed_total = 0u64;
+        let mut completed_total = 0u64;
+        for (i, &priority) in Priority::all().iter().enumerate() {
+            let a = &accums[i];
+            let mut lat = a.latencies.clone();
+            lat.sort_by(|x, y| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal));
+            let mean = if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<f64>() / lat.len() as f64
+            };
+            offered_total += a.attempts();
+            shed_total += a.busy + a.expired;
+            completed_total += a.completed;
+            per_priority.push(PriorityLoadStats {
+                priority,
+                offered: a.attempts(),
+                completed: a.completed,
+                failed: a.failed,
+                busy: a.busy,
+                expired: a.expired,
+                cancelled: a.cancelled,
+                mean_latency_s: mean,
+                p50_latency_s: percentile(&lat, 50.0),
+                p99_latency_s: percentile(&lat, 99.0),
+                p999_latency_s: percentile(&lat, 99.9),
+                max_latency_s: lat.last().copied().unwrap_or(0.0),
+            });
+        }
+        LoadReport {
+            mode: match plan.cfg.closed_users {
+                None => "open".to_string(),
+                Some(u) => format!("closed({u})"),
+            },
+            arrivals: plan.cfg.arrivals.name().to_string(),
+            offered_rps: plan.cfg.arrivals.rate_rps(),
+            requests: plan.jobs.len(),
+            wall_s,
+            achieved_rps: completed_total as f64 / wall_s.max(1e-9),
+            shed_rate: shed_total as f64 / (offered_total.max(1)) as f64,
+            per_priority,
+            plan_digest: plan.digest(),
+        }
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "loadgen {} {} @ {:.0} req/s: {} offered in {:.2}s, {:.1} done/s, shed {:.1}%\n",
+            self.mode,
+            self.arrivals,
+            self.offered_rps,
+            self.requests,
+            self.wall_s,
+            self.achieved_rps,
+            self.shed_rate * 100.0
+        ));
+        out.push_str(&format!("plan digest {:016x}\n", self.plan_digest));
+        out.push_str(
+            "  class        offered done  busy  exp  fail     p50     p99    p99.9\n",
+        );
+        for s in &self.per_priority {
+            out.push_str(&format!(
+                "  {:<12} {:>7} {:>4} {:>5} {:>4} {:>5} {:>7} {:>7} {:>8}\n",
+                s.priority.name(),
+                s.offered,
+                s.completed,
+                s.busy,
+                s.expired,
+                s.failed,
+                crate::util::fmt_time(s.p50_latency_s),
+                crate::util::fmt_time(s.p99_latency_s),
+                crate::util::fmt_time(s.p999_latency_s),
+            ));
+        }
+        out
+    }
+
+    /// JSON shape shared by the CLI `--out` and the sweep steps.
+    pub fn to_json(&self) -> Json {
+        let mut prio_pairs = Vec::new();
+        let per: Vec<(String, Json)> = self
+            .per_priority
+            .iter()
+            .map(|s| {
+                (
+                    s.priority.name().to_string(),
+                    Json::obj(vec![
+                        ("offered", Json::num(s.offered as f64)),
+                        ("completed", Json::num(s.completed as f64)),
+                        ("busy", Json::num(s.busy as f64)),
+                        ("expired", Json::num(s.expired as f64)),
+                        ("failed", Json::num(s.failed as f64)),
+                        ("mean_latency_s", Json::num(s.mean_latency_s)),
+                        ("p50_latency_s", Json::num(s.p50_latency_s)),
+                        ("p99_latency_s", Json::num(s.p99_latency_s)),
+                        ("p999_latency_s", Json::num(s.p999_latency_s)),
+                        ("max_latency_s", Json::num(s.max_latency_s)),
+                    ]),
+                )
+            })
+            .collect();
+        for (name, json) in &per {
+            prio_pairs.push((name.as_str(), json.clone()));
+        }
+        Json::obj(vec![
+            ("mode", Json::str(self.mode.clone())),
+            ("arrivals", Json::str(self.arrivals.clone())),
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("requests", Json::num(self.requests as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("achieved_rps", Json::num(self.achieved_rps)),
+            ("shed_rate", Json::num(self.shed_rate)),
+            ("plan_digest", Json::str(format!("{:016x}", self.plan_digest))),
+            ("per_priority", Json::obj(prio_pairs)),
+        ])
+    }
+}
+
+/// Drive the plan against a live service (dispatches on
+/// `cfg.closed_users`).
+pub fn run(svc: &InferenceService, plan: &LoadPlan) -> LoadReport {
+    match plan.cfg.closed_users {
+        None => run_open(svc, plan),
+        Some(users) => run_closed(svc, plan, users.max(1)),
+    }
+}
+
+fn record_response(acc: &mut PrioAccum, ticket: &Ticket) {
+    let resp = ticket.wait();
+    let latency = (resp.queue_wait + resp.exec_time).as_secs_f64();
+    match resp.result {
+        Ok(_) => {
+            acc.completed += 1;
+            acc.latencies.push(latency);
+        }
+        Err(JobError::Expired) => acc.expired += 1,
+        Err(JobError::Cancelled) => acc.cancelled += 1,
+        Err(JobError::Failed(_)) => acc.failed += 1,
+    }
+}
+
+/// Open loop: sleep to the schedule, submit, collect tickets; wait for
+/// everything at the end. `Busy` is shed, never retried.
+fn run_open(svc: &InferenceService, plan: &LoadPlan) -> LoadReport {
+    let mut accums: [PrioAccum; NUM_PRIORITIES] = Default::default();
+    let mut tickets: Vec<(usize, Ticket)> = Vec::with_capacity(plan.jobs.len());
+    let t0 = Instant::now();
+    for job in &plan.jobs {
+        let target = t0 + Duration::from_secs_f64(job.at_s.max(0.0));
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let idx = plan.index_of(job.priority);
+        match svc.submit_with_opts(job.payload.clone(), job.priority, plan.cfg.deadline) {
+            Ok(ticket) => tickets.push((idx, ticket)),
+            Err(SubmitError::Busy { .. }) | Err(SubmitError::ShuttingDown) => {
+                accums[idx].busy += 1;
+            }
+        }
+    }
+    for (idx, ticket) in &tickets {
+        record_response(&mut accums[*idx], ticket);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    LoadReport::from_accums(plan, &accums, wall_s)
+}
+
+/// Closed loop: `users` threads each own the jobs at indices
+/// `u, u+users, u+2*users, ...` in plan order, and use the gap between
+/// their consecutive arrival times as think time between
+/// submit-wait-repeat cycles. Offered rate self-limits at saturation —
+/// the defining property of closed systems.
+fn run_closed(svc: &InferenceService, plan: &LoadPlan, users: usize) -> LoadReport {
+    let merged: Mutex<[PrioAccum; NUM_PRIORITIES]> = Mutex::new(Default::default());
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for u in 0..users {
+            let merged = &merged;
+            let plan_ref = plan;
+            scope.spawn(move || {
+                let mut local: [PrioAccum; NUM_PRIORITIES] = Default::default();
+                let mut prev_at: Option<f64> = None;
+                let mut i = u;
+                while i < plan_ref.jobs.len() {
+                    let job = &plan_ref.jobs[i];
+                    if let Some(prev) = prev_at {
+                        let think = (job.at_s - prev).max(0.0);
+                        if think > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(think));
+                        }
+                    }
+                    prev_at = Some(job.at_s);
+                    let idx = plan_ref.index_of(job.priority);
+                    match svc.submit_with_opts(
+                        job.payload.clone(),
+                        job.priority,
+                        plan_ref.cfg.deadline,
+                    ) {
+                        Ok(ticket) => record_response(&mut local[idx], &ticket),
+                        Err(SubmitError::Busy { .. }) | Err(SubmitError::ShuttingDown) => {
+                            local[idx].busy += 1;
+                        }
+                    }
+                    i += users;
+                }
+                let mut m = merged.lock().unwrap();
+                for (dst, src) in m.iter_mut().zip(local.iter()) {
+                    dst.merge(src);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let accums = merged.into_inner().unwrap();
+    LoadReport::from_accums(plan, &accums, wall_s)
+}
+
+/// One rung of a saturation sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub rate_rps: f64,
+    pub shed_rate: f64,
+    pub report: LoadReport,
+}
+
+/// Step the offered rate geometrically (`factor` per rung, fresh
+/// service per rung via `make_service`) until the shed rate crosses
+/// `shed_threshold` or `max_steps` rungs ran. The knee — the last rung
+/// below threshold — is the service's saturation throughput.
+pub fn saturation_sweep<F>(
+    cfg: &LoadgenConfig,
+    make_service: F,
+    start_rps: f64,
+    factor: f64,
+    shed_threshold: f64,
+    max_steps: usize,
+) -> Vec<SweepPoint>
+where
+    F: Fn() -> InferenceService,
+{
+    let mut points = Vec::new();
+    let mut rate = start_rps.max(1.0);
+    let factor = factor.max(1.1);
+    for _ in 0..max_steps.max(1) {
+        let mut step_cfg = cfg.clone();
+        step_cfg.arrivals = cfg.arrivals.at_rate(rate);
+        let plan = LoadPlan::build(&step_cfg);
+        let svc = make_service();
+        let report = run(&svc, &plan);
+        svc.shutdown();
+        let shed = report.shed_rate;
+        points.push(SweepPoint { rate_rps: rate, shed_rate: shed, report });
+        if shed >= shed_threshold {
+            break;
+        }
+        rate *= factor;
+    }
+    points
+}
+
+/// Render sweep results in the `BENCH_serving.json` shape. The
+/// top-level `groups` map is what `scripts/bench_snapshot.sh` gates
+/// on: the per-class p99s come from the knee rung (the highest rate
+/// whose shed rate stayed below `threshold`, else the first rung).
+pub fn sweep_to_json(points: &[SweepPoint], shed_threshold: f64) -> Json {
+    let knee = points
+        .iter()
+        .rev()
+        .find(|p| p.shed_rate < shed_threshold)
+        .or_else(|| points.first());
+    let saturation_rps = knee.map(|p| p.rate_rps).unwrap_or(0.0);
+    let mut groups = vec![("serving:saturation_rps", Json::num(saturation_rps))];
+    let mut named: Vec<(String, Json)> = Vec::new();
+    if let Some(k) = knee {
+        for s in &k.report.per_priority {
+            named.push((
+                format!("serving:{}:p99_s", s.priority.name()),
+                Json::num(s.p99_latency_s),
+            ));
+        }
+    }
+    for (name, v) in &named {
+        groups.push((name.as_str(), v.clone()));
+    }
+    let steps = points.iter().map(|p| {
+        Json::obj(vec![
+            ("rate_rps", Json::num(p.rate_rps)),
+            ("shed_rate", Json::num(p.shed_rate)),
+            ("report", p.report.to_json()),
+        ])
+    });
+    Json::obj(vec![
+        ("_schema", Json::str("engn-serving-v1")),
+        ("shed_threshold", Json::num(shed_threshold)),
+        ("groups", Json::obj(groups)),
+        ("steps", Json::arr(steps)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(requests: usize) -> LoadgenConfig {
+        LoadgenConfig {
+            requests,
+            arrivals: ArrivalProcess::Poisson { rate_rps: 500.0 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plans_are_byte_identical_across_builds() {
+        let c = cfg(300);
+        let a = LoadPlan::build(&c);
+        let b = LoadPlan::build(&c);
+        assert_eq!(a.render_schedule(), b.render_schedule());
+        assert_eq!(a.digest(), b.digest());
+        let mut c2 = c.clone();
+        c2.seed ^= 1;
+        assert_ne!(LoadPlan::build(&c2).digest(), a.digest());
+    }
+
+    #[test]
+    fn plan_respects_priority_weights_roughly() {
+        let mut c = cfg(3_000);
+        c.priority_weights = [1, 1, 0];
+        let plan = LoadPlan::build(&c);
+        let counts = plan.priority_counts();
+        assert_eq!(counts[2], 0, "zero weight must draw zero jobs");
+        assert_eq!(counts[0] + counts[1], 3_000);
+        let ratio = counts[0] as f64 / counts[1].max(1) as f64;
+        assert!((0.8..1.25).contains(&ratio), "1:1 weights skewed: {counts:?}");
+    }
+
+    #[test]
+    fn plan_payloads_avoid_tensor_without_artifact() {
+        let plan = LoadPlan::build(&cfg(200));
+        assert!(plan
+            .jobs
+            .iter()
+            .all(|j| !matches!(j.payload, JobPayload::Tensor { .. })));
+        // With an artifact configured the tensor plane appears.
+        let mut c = cfg(200);
+        c.tensor_artifact = Some("gcn_forward".to_string());
+        let with_tensor = LoadPlan::build(&c);
+        assert!(with_tensor
+            .jobs
+            .iter()
+            .any(|j| matches!(j.payload, JobPayload::Tensor { .. })));
+    }
+
+    #[test]
+    fn render_schedule_has_one_line_per_job() {
+        let plan = LoadPlan::build(&cfg(50));
+        let text = plan.render_schedule();
+        assert_eq!(text.lines().count(), 50);
+        assert!(text.lines().all(|l| l.split_whitespace().count() >= 4));
+    }
+
+    #[test]
+    fn pick_weighted_covers_edges() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        assert_eq!(pick_weighted(&mut rng, &[0, 0, 0]), 0);
+        for _ in 0..100 {
+            assert_eq!(pick_weighted(&mut rng, &[0, 7, 0]), 1);
+        }
+    }
+}

@@ -35,6 +35,21 @@
 //!            [--dataflow rer|dense|spmm|hash|adaptive] [--mem PRESET]
 //!                                      multi-chip EnGN×K simulation
 //!                                      over a partitioned graph
+//!   loadgen [--rate R] [--requests N] [--arrivals poisson|bursty]
+//!           [--burst-on-ms MS] [--burst-off-ms MS] [--closed USERS]
+//!           [--seed S] [--dataset D] [--mix I,B,E] [--deadline-ms D]
+//!           [--workers W] [--queue C] [--inflight K]
+//!           [--autoscale] [--autoscale-max N] [--print-plan]
+//!           [--sweep] [--sweep-threshold T] [--sweep-steps N]
+//!           [--sweep-factor F] [--out FILE]
+//!                                      deterministic open/closed-loop
+//!                                      load generator over the
+//!                                      analytic serving planes, with
+//!                                      per-priority latency reports;
+//!                                      --sweep steps the offered rate
+//!                                      until the shed rate crosses the
+//!                                      threshold and writes the
+//!                                      BENCH_serving.json snapshot
 
 use engn::config::{AcceleratorConfig, DataflowKind, Fidelity};
 use engn::coordinator::{
@@ -83,9 +98,10 @@ fn main() {
         Some("serve") => cmd_serve(&parse_flags(&args[1..])),
         Some("whatif") => cmd_whatif(&parse_flags(&args[1..])),
         Some("scaleout") => cmd_scaleout(&parse_flags(&args[1..])),
+        Some("loadgen") => cmd_loadgen(&parse_flags(&args[1..])),
         _ => {
             eprintln!(
-                "usage: engn <datasets|run|synth|bench|infer|serve|whatif|scaleout> [--threads N] [flags]\n\
+                "usage: engn <datasets|run|synth|bench|infer|serve|whatif|scaleout|loadgen> [--threads N] [flags]\n\
                  examples:\n\
                  \u{20}  engn run --model gcn --dataset CA\n\
                  \u{20}  engn run --model gcn --dataset EN --full --mem hbm4\n\
@@ -96,7 +112,9 @@ fn main() {
                  \u{20}  engn infer --artifacts artifacts --name gcn_forward\n\
                  \u{20}  engn serve --artifacts artifacts --requests 32 --workers 4 --queue 256\n\
                  \u{20}  engn whatif --model gcn --dataset CA --platforms cpu-dgl,gpu-dgl,hygcn\n\
-                 \u{20}  engn scaleout --model gcn --dataset RD --chips 4 --partitioner degree"
+                 \u{20}  engn scaleout --model gcn --dataset RD --chips 4 --partitioner degree\n\
+                 \u{20}  engn loadgen --rate 200 --requests 400 --workers 2 --inflight 2\n\
+                 \u{20}  engn loadgen --sweep --arrivals bursty --autoscale --out BENCH_serving.json"
             );
             2
         }
@@ -509,6 +527,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             batch: BatchConfig::default(),
             workers,
             queue_capacity,
+            ..Default::default()
         },
     );
     // Shapes come from the manifest directly (cheap to parse).
@@ -593,6 +612,180 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     }
 }
 
+/// Deterministic open/closed-loop load generation over the analytic
+/// serving planes (sim + cost backends — no compiled artifacts
+/// needed). The plan (arrivals, classes, payloads) is pinned by
+/// `--seed`; the report carries per-priority p50/p99/p999 service-side
+/// latency, throughput and shed rate. `--sweep` steps the offered rate
+/// geometrically until the shed rate crosses the threshold and writes
+/// the `BENCH_serving.json` snapshot.
+fn cmd_loadgen(flags: &HashMap<String, String>) -> i32 {
+    use engn::coordinator::{AutoscaleConfig, QosConfig};
+    use engn::loadgen::{self, ArrivalProcess, LoadPlan, LoadgenConfig};
+
+    let rate: f64 = flags.get("rate").and_then(|s| s.parse().ok()).unwrap_or(200.0);
+    let requests: usize = flags
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0xE16A);
+    let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "CA".to_string());
+    if datasets::by_code(&dataset).is_none() {
+        eprintln!("unknown dataset {dataset:?} — see `engn datasets`");
+        return 2;
+    }
+    let arrivals = match flags.get("arrivals").map(String::as_str).unwrap_or("poisson") {
+        "poisson" => ArrivalProcess::Poisson { rate_rps: rate },
+        "bursty" => ArrivalProcess::Bursty {
+            rate_rps: rate,
+            on_s: flags
+                .get("burst-on-ms")
+                .and_then(|s| s.parse::<f64>().ok())
+                .unwrap_or(50.0)
+                / 1e3,
+            off_s: flags
+                .get("burst-off-ms")
+                .and_then(|s| s.parse::<f64>().ok())
+                .unwrap_or(150.0)
+                / 1e3,
+        },
+        other => {
+            eprintln!("unknown arrival process {other:?} (poisson|bursty)");
+            return 2;
+        }
+    };
+    // --mix I,B,E: relative interactive/batch/best_effort weights.
+    let priority_weights = match flags.get("mix") {
+        None => [2u32, 5, 3],
+        Some(s) => {
+            let parts: Vec<u32> = s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
+            match <[u32; 3]>::try_from(parts) {
+                Ok(w) if w.iter().sum::<u32>() > 0 => w,
+                _ => {
+                    eprintln!("--mix expects three non-negative integers, e.g. 2,5,3");
+                    return 2;
+                }
+            }
+        }
+    };
+    let cfg = LoadgenConfig {
+        seed,
+        requests,
+        arrivals,
+        closed_users: flags.get("closed").and_then(|s| s.parse().ok()),
+        dataset,
+        tensor_artifact: None,
+        priority_weights,
+        deadline: flags
+            .get("deadline-ms")
+            .and_then(|s| s.parse().ok())
+            .map(Duration::from_millis),
+    };
+
+    if flags.contains_key("print-plan") {
+        let plan = LoadPlan::build(&cfg);
+        print!("{}", plan.render_schedule());
+        println!("digest {:016x}", plan.digest());
+        return 0;
+    }
+
+    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let queue_capacity: usize = flags.get("queue").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let qos = QosConfig {
+        per_key_inflight: flags.get("inflight").and_then(|s| s.parse().ok()),
+        ..Default::default()
+    };
+    let autoscale = flags.contains_key("autoscale").then(|| AutoscaleConfig {
+        max_workers: flags
+            .get("autoscale-max")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(8),
+        ..Default::default()
+    });
+    let report_scaling = autoscale.is_some();
+    let make_service = move || {
+        InferenceService::start(
+            || Ok(Backends::analytic()),
+            ServiceConfig {
+                batch: BatchConfig::default(),
+                workers,
+                queue_capacity,
+                qos: qos.clone(),
+                autoscale: autoscale.clone(),
+            },
+        )
+    };
+
+    if flags.contains_key("sweep") {
+        let threshold: f64 = flags
+            .get("sweep-threshold")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.5);
+        let steps: usize = flags
+            .get("sweep-steps")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(5);
+        let factor: f64 = flags
+            .get("sweep-factor")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2.0);
+        let points = loadgen::saturation_sweep(&cfg, make_service, rate, factor, threshold, steps);
+        for p in &points {
+            println!(
+                "rate {:>8.0} req/s: shed {:>5.1}%  achieved {:>7.1} done/s",
+                p.rate_rps,
+                p.shed_rate * 100.0,
+                p.report.achieved_rps
+            );
+        }
+        let out = flags.get("out").map(String::as_str).unwrap_or("BENCH_serving.json");
+        let json = loadgen::sweep_to_json(&points, threshold);
+        if let Err(e) = std::fs::write(out, json.to_string_pretty() + "\n") {
+            eprintln!("writing {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+        return 0;
+    }
+
+    let plan = LoadPlan::build(&cfg);
+    println!(
+        "driving {} planned requests ({} {}, seed {seed:#x}) ...",
+        plan.jobs.len(),
+        cfg.arrivals.name(),
+        match cfg.closed_users {
+            None => "open loop".to_string(),
+            Some(u) => format!("closed loop, {u} users"),
+        }
+    );
+    let svc = make_service();
+    let report = loadgen::run(&svc, &plan);
+    let metrics = svc.metrics();
+    svc.shutdown();
+    print!("{}", report.render());
+    if report_scaling {
+        println!(
+            "autoscaler: {} resize events, {} workers active at snapshot",
+            metrics.scale_events.len(),
+            metrics.active_workers
+        );
+        for ev in &metrics.scale_events {
+            println!(
+                "  t={:>7.3}s {} -> {} (depth {}, {:.1} req/s arriving)",
+                ev.at_s, ev.from, ev.to, ev.queue_depth, ev.arrivals_rps
+            );
+        }
+    }
+    if let Some(out) = flags.get("out") {
+        if let Err(e) = std::fs::write(out, report.to_json().to_string_pretty() + "\n") {
+            eprintln!("writing {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    0
+}
+
 /// Capacity planning through the serving coordinator: what-if
 /// simulation and baseline cost-model jobs flow through the same
 /// bounded-intake, FIFO-fair, batched path as tensor inference — just
@@ -663,6 +856,7 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
             batch: BatchConfig::default(),
             workers,
             queue_capacity: 256,
+            ..Default::default()
         },
     );
     let mut tickets = Vec::new();

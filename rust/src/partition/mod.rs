@@ -237,6 +237,18 @@ impl PartitionedGraph {
     }
 
     /// Partition with any [`Partitioner`] implementation.
+    ///
+    /// The relabel is a counting pass, not a search: one stable
+    /// scatter buckets every edge under its destination chip (global
+    /// edge order preserved) while a (vertex, chip) seen-bitmask
+    /// collects each chip's *distinct* cut sources as they first
+    /// appear; then, per chip, the sorted halo set is stamped into an
+    /// epoch-tagged dense array so rewriting the chip's bucket is an
+    /// O(1) lookup per edge. The old per-cut-edge `binary_search`
+    /// (O(E log H) on hash partitions, where nearly every edge is
+    /// cut) survives as [`build_with_reference`](Self::build_with_reference)
+    /// and the two are pinned identical by
+    /// `tests/partition_integration.rs`.
     pub fn build_with(graph: Arc<Graph>, partitioner: &dyn Partitioner, k: usize) -> Self {
         let k = k.max(1);
         let n = graph.num_vertices;
@@ -248,7 +260,9 @@ impl PartitionedGraph {
         );
 
         // Owned vertex lists + local ids, ascending global order per
-        // chip (K = 1 relabeling is therefore the identity).
+        // chip (K = 1 relabeling is therefore the identity). Each
+        // vertex is owned by exactly one chip, so one dense array
+        // suffices for the owned side.
         let mut owned: Vec<Vec<u32>> = vec![Vec::new(); k];
         let mut local = vec![0u32; n];
         for v in 0..n {
@@ -257,10 +271,132 @@ impl PartitionedGraph {
             owned[c].push(v as u32);
         }
 
-        // Cut lists and halo sets: a cut edge runs on its destination's
-        // chip but needs the remote source property first. The halo set
-        // is the distinct cut sources — the same distinct-endpoint
-        // semantics `EdgeTiling` counts per tile, here per chip.
+        // One stable scatter over the edge stream: bucket each edge
+        // (and its relation id) under its destination chip, count
+        // internal edges, collect cut lists, and gather each chip's
+        // distinct halo sources via the seen-bitmask — no dedup pass.
+        // A cut edge runs on its destination's chip but needs the
+        // remote source property first; the halo set is the distinct
+        // cut sources — the same distinct-endpoint semantics
+        // `EdgeTiling` counts per tile, here per chip.
+        let words = ceil_div(k, 64);
+        let mut halo_seen = vec![0u64; n * words];
+        let has_rel = !graph.relations.is_empty();
+        let mut cut: Vec<Vec<Edge>> = vec![Vec::new(); k];
+        let mut halo: Vec<Vec<u32>> = vec![Vec::new(); k];
+        let mut chip_edges: Vec<Vec<Edge>> = vec![Vec::new(); k];
+        let mut chip_rels: Vec<Vec<u16>> = vec![Vec::new(); k];
+        let mut internal = vec![0usize; k];
+        for (i, e) in graph.edges.iter().enumerate() {
+            let c = assignment[e.dst as usize] as usize;
+            if assignment[e.src as usize] as usize == c {
+                internal[c] += 1;
+            } else {
+                cut[c].push(*e);
+                let w = e.src as usize * words + c / 64;
+                let bit = 1u64 << (c % 64);
+                if halo_seen[w] & bit == 0 {
+                    halo_seen[w] |= bit;
+                    halo[c].push(e.src);
+                }
+            }
+            chip_edges[c].push(*e);
+            if has_rel {
+                chip_rels[c].push(graph.relations[i]);
+            }
+        }
+        drop(halo_seen);
+
+        // Counting relabel, one chip at a time: sort the (already
+        // distinct) halo set ascending — part of the contract — then
+        // stamp each member's local id into an epoch-tagged dense
+        // array (a vertex may be halo on several chips, so the stamp
+        // says which chip's id is current) and rewrite the chip's
+        // bucket in place, in global edge order (tile grouping is
+        // stable and the DAVC replays the stream in order, so order
+        // is part of the contract).
+        let mut halo_local = vec![0u32; n];
+        let mut halo_stamp = vec![usize::MAX; n];
+        for c in 0..k {
+            halo[c].sort_unstable();
+            let base = owned[c].len() as u32;
+            for (j, &v) in halo[c].iter().enumerate() {
+                halo_local[v as usize] = base + j as u32;
+                halo_stamp[v as usize] = c;
+            }
+            for e in &mut chip_edges[c] {
+                let src_local = if assignment[e.src as usize] as usize == c {
+                    local[e.src as usize]
+                } else {
+                    debug_assert_eq!(halo_stamp[e.src as usize], c, "halo stamp is stale");
+                    halo_local[e.src as usize]
+                };
+                *e = Edge::new(src_local, local[e.dst as usize]);
+            }
+        }
+
+        let chips: Vec<ChipGraph> = owned
+            .into_iter()
+            .zip(halo)
+            .zip(chip_edges.into_iter().zip(chip_rels))
+            .enumerate()
+            .map(|(c, ((owned, halo), (edges, rels)))| {
+                let nv = owned.len() + halo.len();
+                let sub = Graph::from_edges_with_relations(
+                    nv,
+                    edges,
+                    rels,
+                    graph.num_relations,
+                );
+                ChipGraph {
+                    chip: c,
+                    owned,
+                    halo,
+                    internal_edges: internal[c],
+                    prepared: Arc::new(PreparedGraph::from_arc(Arc::new(sub))),
+                }
+            })
+            .collect();
+
+        Self {
+            k,
+            partitioner: partitioner.name(),
+            assignment,
+            chips,
+            cut,
+            total_edges: graph.num_edges(),
+        }
+    }
+
+    /// Reference partition builder by named strategy — see
+    /// [`build_with_reference`](Self::build_with_reference).
+    pub fn build_reference(graph: Arc<Graph>, kind: PartitionerKind, k: usize) -> Self {
+        Self::build_with_reference(graph, kind.build().as_ref(), k)
+    }
+
+    /// The original sort-dedup-and-binary-search relabel, kept as an
+    /// independent oracle: `tests/partition_integration.rs` pins
+    /// [`build_with`](Self::build_with) bit-identical to this across
+    /// partitioners × K. Slower — O(log halo) per cut edge — so
+    /// production paths use `build_with`.
+    pub fn build_with_reference(graph: Arc<Graph>, partitioner: &dyn Partitioner, k: usize) -> Self {
+        let k = k.max(1);
+        let n = graph.num_vertices;
+        let assignment = partitioner.assign(&graph, k);
+        assert_eq!(assignment.len(), n, "assignment must cover every vertex");
+        assert!(
+            assignment.iter().all(|&c| (c as usize) < k),
+            "assignment names a chip >= k"
+        );
+
+        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); k];
+        let mut local = vec![0u32; n];
+        for v in 0..n {
+            let c = assignment[v] as usize;
+            local[v] = owned[c].len() as u32;
+            owned[c].push(v as u32);
+        }
+
         let mut cut: Vec<Vec<Edge>> = vec![Vec::new(); k];
         let mut halo: Vec<Vec<u32>> = vec![Vec::new(); k];
         for e in &graph.edges {
@@ -275,10 +411,6 @@ impl PartitionedGraph {
             h.dedup();
         }
 
-        // Relabel every edge into its destination chip's subgraph, in
-        // global edge order (tile grouping is stable and the DAVC
-        // replays the stream in order, so order is part of the
-        // contract). Relation ids ride along for R-GCN graphs.
         let has_rel = !graph.relations.is_empty();
         let mut chip_edges: Vec<Vec<Edge>> = vec![Vec::new(); k];
         let mut chip_rels: Vec<Vec<u16>> = vec![Vec::new(); k];
@@ -484,6 +616,33 @@ mod tests {
             "degree max load {degree_max} !< range max load {range_max}"
         );
         assert!(degree.max_min_load_ratio() < range.max_min_load_ratio());
+    }
+
+    #[test]
+    fn counting_relabel_matches_reference_oracle() {
+        let g = sample();
+        for kind in PartitionerKind::all() {
+            for k in [1usize, 2, 5] {
+                let fast = PartitionedGraph::build(g.clone(), kind, k);
+                let slow = PartitionedGraph::build_reference(g.clone(), kind, k);
+                assert_eq!(fast.assignment, slow.assignment, "{} k={k}", kind.name());
+                for (a, b) in fast.chips.iter().zip(&slow.chips) {
+                    assert_eq!(a.owned, b.owned, "{} k={k}", kind.name());
+                    assert_eq!(a.halo, b.halo, "{} k={k}", kind.name());
+                    assert_eq!(a.internal_edges, b.internal_edges);
+                    assert_eq!(
+                        a.prepared.graph().edges,
+                        b.prepared.graph().edges,
+                        "{} k={k} chip {}",
+                        kind.name(),
+                        a.chip
+                    );
+                }
+                for c in 0..k {
+                    assert_eq!(fast.cut_list(c), slow.cut_list(c), "{} k={k}", kind.name());
+                }
+            }
+        }
     }
 
     #[test]

@@ -103,6 +103,46 @@ fn prop_every_edge_in_exactly_one_subgraph_or_cut_list() {
     });
 }
 
+/// The counting relabel (seen-bitmask halo gather + epoch-stamped
+/// dense local ids) is property-pinned bit-identical to the original
+/// sort-dedup-and-binary-search oracle, across every partitioner ×
+/// chip count — including a relational (R-GCN) dataset, so relation
+/// ids ride the same buckets in both implementations.
+#[test]
+fn counting_relabel_is_bit_identical_to_reference() {
+    let mut graphs: Vec<(&str, Arc<Graph>)> = vec![
+        (
+            "rmat",
+            Arc::new(rmat::generate(1_200, 9_000, RmatParams::default(), 0x51D)),
+        ),
+    ];
+    let af = datasets::by_code("AF").unwrap();
+    graphs.push(("AF", Arc::new(af.instantiate(ScalePolicy::Capped, 3))));
+    for (label, g) in &graphs {
+        for kind in PartitionerKind::all() {
+            for k in [1usize, 2, 4, 7] {
+                let fast = PartitionedGraph::build(g.clone(), kind, k);
+                let slow = PartitionedGraph::build_reference(g.clone(), kind, k);
+                let tag = format!("{label} {} k={k}", kind.name());
+                assert_eq!(fast.assignment, slow.assignment, "{tag}");
+                assert_eq!(fast.total_edges, slow.total_edges, "{tag}");
+                for (a, b) in fast.chips.iter().zip(&slow.chips) {
+                    assert_eq!(a.owned, b.owned, "{tag} chip {}", a.chip);
+                    assert_eq!(a.halo, b.halo, "{tag} chip {}", a.chip);
+                    assert_eq!(a.internal_edges, b.internal_edges, "{tag} chip {}", a.chip);
+                    let (ga, gb) = (a.prepared.graph(), b.prepared.graph());
+                    assert_eq!(ga.edges, gb.edges, "{tag} chip {}", a.chip);
+                    assert_eq!(ga.relations, gb.relations, "{tag} chip {}", a.chip);
+                    assert_eq!(ga.num_relations, gb.num_relations, "{tag} chip {}", a.chip);
+                }
+                for c in 0..k {
+                    assert_eq!(fast.cut_list(c), slow.cut_list(c), "{tag} chip {c}");
+                }
+            }
+        }
+    }
+}
+
 fn assert_reports_identical(a: &engn::sim::SimReport, b: &engn::sim::SimReport) {
     assert_eq!(a.total_cycles(), b.total_cycles());
     assert_eq!(a.total_ops(), b.total_ops());

@@ -75,6 +75,7 @@ fn two_workers_serve_distinct_artifacts_concurrently() {
             },
             workers: 2,
             queue_capacity: 64,
+            ..Default::default()
         },
     );
     let mut tickets = Vec::new();
@@ -143,6 +144,7 @@ fn gate_service(
             },
             workers: 1,
             queue_capacity,
+            ..Default::default()
         },
     )
 }
@@ -284,6 +286,7 @@ fn shutdown_drains_accepted_requests() {
             },
             workers: 2,
             queue_capacity: 64,
+            ..Default::default()
         },
     );
     let tickets: Vec<_> = (0..12)
@@ -315,6 +318,7 @@ fn mixed_tensor_and_sim_jobs_served_concurrently() {
             },
             workers: 3,
             queue_capacity: 1024,
+            ..Default::default()
         },
     ));
     let mut clients = Vec::new();
@@ -389,6 +393,7 @@ fn concurrent_clients_multi_artifact_soak() {
             },
             workers: 3,
             queue_capacity: 1024,
+            ..Default::default()
         },
     ));
     let ids = Arc::new(Mutex::new(std::collections::HashSet::new()));

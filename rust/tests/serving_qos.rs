@@ -1,0 +1,503 @@
+//! Serving QoS plane integration: priority classes honored at batch
+//! formation (strict effective priority with aging), per-key in-flight
+//! caps (excess queued, never shed), deadline × priority composition,
+//! the queue-depth autoscaler's resize events, and the load
+//! generator's width-invariant determinism. Tensor planes run against
+//! mock executors so no compiled artifacts are needed. CI runs this
+//! file at both test-harness widths (see .github/workflows/ci.yml).
+
+use engn::coordinator::{
+    AutoscaleConfig, Backends, BatchConfig, Executor, InferenceService, JobError, Priority,
+    QosConfig, ServiceConfig,
+};
+use engn::loadgen::{self, ArrivalProcess, LoadPlan, LoadgenConfig};
+use engn::runtime::HostTensor;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn ok_tensor(n: usize) -> Result<HostTensor, String> {
+    Ok(HostTensor::new(vec![1], vec![n as f32]))
+}
+
+/// Executor that logs each batch's artifact in execution order and
+/// blocks until released (so tests can queue traffic behind a held
+/// worker, then observe the exact order batch formation chose).
+struct OrderLog {
+    order: Arc<Mutex<Vec<String>>>,
+    entered: Arc<AtomicUsize>,
+    release: Arc<AtomicBool>,
+}
+
+impl Executor for OrderLog {
+    fn execute(&self, _artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
+        ok_tensor(inputs.len())
+    }
+
+    fn execute_batch(
+        &self,
+        artifact: &str,
+        batches: &[Vec<HostTensor>],
+    ) -> Vec<Result<HostTensor, String>> {
+        self.order.lock().unwrap().push(artifact.to_string());
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        while !self.release.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // A visible per-batch service time, so queue positions separate
+        // cleanly in the latency percentiles.
+        std::thread::sleep(Duration::from_millis(2));
+        batches.iter().map(|b| ok_tensor(b.len())).collect()
+    }
+}
+
+struct OrderedService {
+    svc: InferenceService,
+    order: Arc<Mutex<Vec<String>>>,
+    entered: Arc<AtomicUsize>,
+    release: Arc<AtomicBool>,
+}
+
+fn ordered_service(qos: QosConfig) -> OrderedService {
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Arc::new(AtomicBool::new(false));
+    let (o, e, r) = (order.clone(), entered.clone(), release.clone());
+    let svc = InferenceService::start(
+        move || {
+            Ok(Backends::tensor(Box::new(OrderLog {
+                order: o.clone(),
+                entered: e.clone(),
+                release: r.clone(),
+            })))
+        },
+        ServiceConfig {
+            batch: BatchConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            workers: 1,
+            queue_capacity: 64,
+            qos,
+            ..Default::default()
+        },
+    );
+    OrderedService { svc, order, entered, release }
+}
+
+/// Hold the single worker on a warm-up job so the queue builds, then
+/// wait until it is genuinely inside the executor.
+fn warm(h: &OrderedService) -> engn::coordinator::Ticket {
+    let t = h.svc.submit_tensor("warm", vec![]).expect("accepted");
+    let t0 = Instant::now();
+    while h.entered.load(Ordering::SeqCst) == 0 && t0.elapsed() < Duration::from_secs(2) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(h.entered.load(Ordering::SeqCst), 1, "worker never started");
+    t
+}
+
+/// Interactive jobs submitted *after* a backlog of batch jobs are
+/// still served first (strict priority, aging disabled), and their
+/// p99 latency is strictly below the batch class's.
+#[test]
+fn interactive_beats_batch_under_contention() {
+    let h = ordered_service(QosConfig {
+        aging_step: Duration::ZERO,
+        per_key_inflight: None,
+    });
+    let warm_ticket = warm(&h);
+    let mut tickets = Vec::new();
+    for _ in 0..6 {
+        tickets.push(
+            h.svc
+                .submit_with_priority(tensor_payload("bulk"), Priority::Batch)
+                .expect("accepted"),
+        );
+    }
+    for _ in 0..3 {
+        tickets.push(
+            h.svc
+                .submit_with_priority(tensor_payload("fast"), Priority::Interactive)
+                .expect("accepted"),
+        );
+    }
+    h.release.store(true, Ordering::SeqCst);
+    warm_ticket.wait();
+    for t in tickets {
+        assert!(t.wait().result.is_ok());
+    }
+    let order = h.order.lock().unwrap().clone();
+    assert_eq!(order[0], "warm");
+    let first_bulk = order.iter().position(|a| a == "bulk").unwrap();
+    let last_fast = order.iter().rposition(|a| a == "fast").unwrap();
+    assert!(
+        last_fast < first_bulk,
+        "interactive must all run before batch: {order:?}"
+    );
+    let m = h.svc.metrics();
+    let (int, bat) = (&m.per_priority[0], &m.per_priority[1]);
+    assert_eq!(int.count, 3);
+    assert_eq!(bat.count, 6);
+    assert!(
+        int.p99_latency_s < bat.p99_latency_s,
+        "interactive p99 {} !< batch p99 {}",
+        int.p99_latency_s,
+        bat.p99_latency_s
+    );
+    h.svc.shutdown();
+}
+
+fn tensor_payload(artifact: &str) -> engn::coordinator::JobPayload {
+    engn::coordinator::JobPayload::Tensor {
+        artifact: artifact.to_string(),
+        inputs: vec![],
+    }
+}
+
+/// Anti-starvation: a best-effort job that has waited past the aging
+/// horizon outranks interactive work submitted later (its effective
+/// rank saturates at Interactive and its sequence number is older), so
+/// scavenger traffic is never starved under sustained foreground load.
+#[test]
+fn aged_best_effort_is_not_starved_by_interactive_stream() {
+    let h = ordered_service(QosConfig {
+        aging_step: Duration::from_millis(5),
+        per_key_inflight: None,
+    });
+    let warm_ticket = warm(&h);
+    let scav = h
+        .svc
+        .submit_with_priority(tensor_payload("scav"), Priority::BestEffort)
+        .expect("accepted");
+    // Age past 2 steps: BestEffort (rank 2) reaches rank 0.
+    std::thread::sleep(Duration::from_millis(25));
+    let mut fast = Vec::new();
+    for _ in 0..3 {
+        fast.push(
+            h.svc
+                .submit_with_priority(tensor_payload("fast"), Priority::Interactive)
+                .expect("accepted"),
+        );
+    }
+    h.release.store(true, Ordering::SeqCst);
+    warm_ticket.wait();
+    assert!(scav.wait().result.is_ok());
+    for t in fast {
+        assert!(t.wait().result.is_ok());
+    }
+    let order = h.order.lock().unwrap().clone();
+    assert_eq!(
+        order[1], "scav",
+        "aged best-effort must be served before fresh interactive: {order:?}"
+    );
+    h.svc.shutdown();
+}
+
+/// Executor recording the highest concurrent `execute_batch` overlap.
+struct ConcurrencyProbe {
+    inflight: Arc<AtomicUsize>,
+    max_seen: Arc<AtomicUsize>,
+    hold: Duration,
+    rendezvous: usize,
+}
+
+impl Executor for ConcurrencyProbe {
+    fn execute(&self, _artifact: &str, inputs: &[HostTensor]) -> Result<HostTensor, String> {
+        ok_tensor(inputs.len())
+    }
+
+    fn execute_batch(
+        &self,
+        _artifact: &str,
+        batches: &[Vec<HostTensor>],
+    ) -> Vec<Result<HostTensor, String>> {
+        let now = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.max_seen.fetch_max(now, Ordering::SeqCst);
+        let t0 = Instant::now();
+        // With a rendezvous target, hold until that many executions
+        // overlap (or time out) — proves the *absence* of a cap.
+        while self.rendezvous > 1
+            && self.max_seen.load(Ordering::SeqCst) < self.rendezvous
+            && t0.elapsed() < Duration::from_millis(500)
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        std::thread::sleep(self.hold);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        batches.iter().map(|b| ok_tensor(b.len())).collect()
+    }
+}
+
+fn probe_service(
+    workers: usize,
+    qos: QosConfig,
+    hold: Duration,
+    rendezvous: usize,
+) -> (InferenceService, Arc<AtomicUsize>) {
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let max_seen = Arc::new(AtomicUsize::new(0));
+    let (infl, maxi) = (inflight.clone(), max_seen.clone());
+    let svc = InferenceService::start(
+        move || {
+            Ok(Backends::tensor(Box::new(ConcurrencyProbe {
+                inflight: infl.clone(),
+                max_seen: maxi.clone(),
+                hold,
+                rendezvous,
+            })))
+        },
+        ServiceConfig {
+            batch: BatchConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            workers,
+            queue_capacity: 64,
+            qos,
+            ..Default::default()
+        },
+    );
+    (svc, max_seen)
+}
+
+/// With `per_key_inflight: Some(1)` and three workers, batches on one
+/// hot key never overlap — and every capped job still completes
+/// (queued, not shed). The uncapped control run proves the probe can
+/// see overlap when the limiter is off.
+#[test]
+fn per_key_inflight_cap_is_never_exceeded() {
+    // Control: no cap, rendezvous forces two workers to overlap.
+    let (svc, max_seen) = probe_service(
+        3,
+        QosConfig::default(),
+        Duration::from_millis(1),
+        2,
+    );
+    let tickets: Vec<_> = (0..8)
+        .map(|_| svc.submit_tensor("hot", vec![]).expect("accepted"))
+        .collect();
+    for t in tickets {
+        assert!(t.wait().result.is_ok());
+    }
+    assert!(
+        max_seen.load(Ordering::SeqCst) >= 2,
+        "uncapped control never overlapped — probe is broken"
+    );
+    svc.shutdown();
+
+    // Capped: the same traffic may never overlap on the key.
+    let (svc, max_seen) = probe_service(
+        3,
+        QosConfig {
+            per_key_inflight: Some(1),
+            ..Default::default()
+        },
+        Duration::from_millis(2),
+        1,
+    );
+    let tickets: Vec<_> = (0..10)
+        .map(|_| svc.submit_tensor("hot", vec![]).expect("accepted"))
+        .collect();
+    for t in tickets {
+        assert!(t.wait().result.is_ok(), "capped jobs must queue, not shed");
+    }
+    let m = svc.metrics();
+    svc.shutdown();
+    assert_eq!(max_seen.load(Ordering::SeqCst), 1, "cap exceeded");
+    assert_eq!(m.max_inflight.get("tensor:hot"), Some(&1));
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.total_requests, 10);
+}
+
+/// Deadlines compose with priorities: an already-expired interactive
+/// job is shed at formation (counted in its class), while batch work
+/// and a generously-deadlined interactive job complete normally.
+#[test]
+fn deadline_shedding_composes_with_priorities() {
+    let svc = InferenceService::start(
+        || Ok(Backends::analytic()),
+        ServiceConfig {
+            batch: BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 1,
+            queue_capacity: 64,
+            ..Default::default()
+        },
+    );
+    let doomed = svc
+        .submit_with_opts(
+            engn::coordinator::JobPayload::Cost(engn::coordinator::CostJob::new(
+                engn::baselines::PlatformId::CpuDgl,
+                engn::model::GnnKind::Gcn,
+                "CA",
+            )),
+            Priority::Interactive,
+            Some(Duration::ZERO),
+        )
+        .expect("accepted");
+    let ok_int = svc
+        .submit_with_opts(
+            engn::coordinator::JobPayload::Cost(engn::coordinator::CostJob::new(
+                engn::baselines::PlatformId::GpuDgl,
+                engn::model::GnnKind::Gcn,
+                "CA",
+            )),
+            Priority::Interactive,
+            Some(Duration::from_secs(5)),
+        )
+        .expect("accepted");
+    let ok_batch = svc
+        .submit_with_priority(
+            engn::coordinator::JobPayload::Cost(engn::coordinator::CostJob::new(
+                engn::baselines::PlatformId::Hygcn,
+                engn::model::GnnKind::Gcn,
+                "CA",
+            )),
+            Priority::Batch,
+        )
+        .expect("accepted");
+    assert!(matches!(doomed.wait().result, Err(JobError::Expired)));
+    assert!(ok_int.wait().result.is_ok());
+    assert!(ok_batch.wait().result.is_ok());
+    let m = svc.metrics();
+    svc.shutdown();
+    let (int, bat) = (&m.per_priority[0], &m.per_priority[1]);
+    assert_eq!(int.expired, 1, "expiry must be attributed to the class");
+    assert_eq!(int.count, 1);
+    assert_eq!(bat.expired, 0);
+    assert_eq!(bat.count, 1);
+    assert_eq!(m.expired, 1);
+}
+
+/// The autoscaler scales up one worker at a time while the queue sits
+/// above the high watermark, then back down once it drains — every
+/// resize a ±1 step inside the configured bounds, timestamps
+/// non-decreasing.
+#[test]
+fn autoscaler_scales_up_under_load_and_down_when_idle() {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Arc::new(AtomicBool::new(false));
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let (o, e, r) = (order.clone(), entered.clone(), release.clone());
+    let svc = InferenceService::start(
+        move || {
+            Ok(Backends::tensor(Box::new(OrderLog {
+                order: o.clone(),
+                entered: e.clone(),
+                release: r.clone(),
+            })))
+        },
+        ServiceConfig {
+            batch: BatchConfig {
+                max_batch: 1,
+                max_wait: Duration::ZERO,
+            },
+            workers: 1,
+            queue_capacity: 128,
+            autoscale: Some(AutoscaleConfig {
+                min_workers: 1,
+                max_workers: 4,
+                high_depth: 4,
+                low_depth: 0,
+                interval: Duration::from_millis(5),
+                cooldown: Duration::from_millis(10),
+            }),
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<_> = (0..24)
+        .map(|_| svc.submit_tensor("a", vec![]).expect("accepted"))
+        .collect();
+    // Workers block in the executor, so the queue stays deep and the
+    // supervisor steps the active count toward the max bound.
+    let t0 = Instant::now();
+    while svc.metrics().scale_events.is_empty() && t0.elapsed() < Duration::from_secs(2) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    release.store(true, Ordering::SeqCst);
+    for t in tickets {
+        assert!(t.wait().result.is_ok());
+    }
+    // Drained: depth 0 <= low watermark, so it steps back down.
+    let t0 = Instant::now();
+    while !svc
+        .metrics()
+        .scale_events
+        .iter()
+        .any(|ev| ev.to < ev.from)
+        && t0.elapsed() < Duration::from_secs(2)
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let m = svc.metrics();
+    svc.shutdown();
+    let events = &m.scale_events;
+    assert!(
+        events.iter().any(|ev| ev.to > ev.from),
+        "never scaled up: {events:?}"
+    );
+    assert!(
+        events.iter().any(|ev| ev.to < ev.from),
+        "never scaled down: {events:?}"
+    );
+    for ev in events {
+        assert!(ev.to >= 1 && ev.to <= 4, "resize out of bounds: {ev:?}");
+        assert_eq!(
+            ev.to.abs_diff(ev.from),
+            1,
+            "resizes must be single steps: {ev:?}"
+        );
+    }
+    for pair in events.windows(2) {
+        assert!(pair[0].at_s <= pair[1].at_s, "event times must be ordered");
+    }
+    assert!(m.active_workers >= 1 && m.active_workers <= 4);
+}
+
+/// Loadgen determinism: the plan is byte-identical at any pool width,
+/// and driving it yields per-class offered counts that equal the
+/// plan's — twice over, across fresh services.
+#[test]
+fn loadgen_plan_is_width_invariant_and_counts_are_deterministic() {
+    let cfg = LoadgenConfig {
+        seed: 9,
+        requests: 60,
+        arrivals: ArrivalProcess::Poisson { rate_rps: 4_000.0 },
+        ..Default::default()
+    };
+    engn::util::pool::set_threads(1);
+    let narrow = LoadPlan::build(&cfg).render_schedule();
+    engn::util::pool::set_threads(8);
+    let wide = LoadPlan::build(&cfg).render_schedule();
+    engn::util::pool::set_threads(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
+    assert_eq!(narrow, wide, "plan must not depend on pool width");
+
+    let plan = LoadPlan::build(&cfg);
+    let counts = plan.priority_counts();
+    assert_eq!(counts.iter().sum::<u64>(), 60);
+    for round in 0..2 {
+        let svc = InferenceService::start(
+            || Ok(Backends::analytic()),
+            ServiceConfig {
+                workers: 2,
+                queue_capacity: 256,
+                ..Default::default()
+            },
+        );
+        let report = loadgen::run(&svc, &plan);
+        svc.shutdown();
+        assert_eq!(report.plan_digest, plan.digest());
+        for (i, stats) in report.per_priority.iter().enumerate() {
+            assert_eq!(
+                stats.offered, counts[i],
+                "round {round}: class {} offered drifted",
+                stats.priority
+            );
+        }
+    }
+}

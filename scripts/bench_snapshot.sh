@@ -21,3 +21,19 @@ for group in "partition:range" "partition:hash" "partition:degree" "scaleout:4ch
     || { echo "missing bench group $group in BENCH_hotpath.json" >&2; exit 1; }
 done
 echo "snapshot: $(pwd)/BENCH_hotpath.json"
+
+# Serving saturation sweep: `engn loadgen --sweep` steps the offered
+# rate over fresh services until the shed rate crosses the threshold
+# and writes BENCH_serving.json itself (per-priority p99s at the knee
+# plus every rung's full report). Gate the per-class groups the same
+# way as the hotpath groups above.
+cargo run --release --manifest-path rust/Cargo.toml -- \
+  loadgen --sweep --rate 100 --requests 120 --workers 2 \
+  --sweep-steps 4 --sweep-factor 3 --sweep-threshold 0.3 \
+  --out "$(pwd)/BENCH_serving.json"
+for group in "serving:saturation_rps" "serving:interactive:p99_s" \
+             "serving:batch:p99_s" "serving:best_effort:p99_s"; do
+  grep -q "\"$group\"" BENCH_serving.json \
+    || { echo "missing serving group $group in BENCH_serving.json" >&2; exit 1; }
+done
+echo "snapshot: $(pwd)/BENCH_serving.json"
