@@ -14,10 +14,13 @@
 //!   sharing one `PreparedGraph` across N design points;
 //! * `sweep:serial` vs `sweep:parallel` — the same design-point sweep
 //!   on one thread vs the full worker pool (`util::pool`);
-//! * `partition:{range,hash,degree}` — sharding a 1 M-edge graph
-//!   across 4 chips (assignment + relabeling + per-chip preparation);
+//! * `partition:{range,hash,degree,ldg,fennel}` — sharding a 1 M-edge
+//!   graph across 4 chips (assignment + relabeling + per-chip
+//!   preparation);
 //! * `scaleout:4chip` — a full 4-chip `MultiChipSession` pass (per-chip
 //!   sessions + halo-exchange costing) on the prepared partition;
+//! * `scaleout:overlap` — the same pass under double-buffered halo
+//!   overlap (residual per-link clipping on top of the exchange cost);
 //! * `dataflow:{spmm,hash,adaptive}` — the alternative aggregation
 //!   dataflows and the per-layer adaptive planner (DESIGN.md §9) on the
 //!   same prepared PubMed graph the `sim:gcn:PB` group runs under RER;
@@ -43,7 +46,9 @@ use engn::model::{GnnKind, GnnModel};
 use engn::partition::{PartitionedGraph, PartitionerKind};
 use engn::sim::davc::Davc;
 use engn::sim::ring;
-use engn::sim::{sweep_with, EdgeTiling, MultiChipSession, PreparedGraph, SimSession, Simulator};
+use engn::sim::{
+    sweep_with, EdgeTiling, MultiChipSession, OverlapMode, PreparedGraph, SimSession, Simulator,
+};
 use engn::util::pool;
 use std::sync::Arc;
 use std::time::Duration;
@@ -108,7 +113,7 @@ fn main() {
     section("graph partitioning (1M edges across 4 chips)");
     // Assignment + relabeling + per-chip preparation, per strategy —
     // the scale-out plane's analogue of the tiling build above.
-    for kind in PartitionerKind::all() {
+    for &kind in PartitionerKind::all() {
         let r = bench(&format!("partition:{}", kind.name()), budget, || {
             black_box(PartitionedGraph::build(g.clone(), kind, 4));
         });
@@ -247,6 +252,19 @@ fn main() {
     let cfg = AcceleratorConfig::engn();
     let r = bench("scaleout:4chip", budget, || {
         black_box(MultiChipSession::new(&cfg, &parts, &model).run("PB"));
+    });
+    record(&r, &mut medians);
+    println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
+    // Same partition under double-buffered halo overlap: the residual
+    // per-link clipping runs on top of the bulk-sync exchange costing,
+    // so this group prices the overlap model's overhead.
+    let r = bench("scaleout:overlap", budget, || {
+        black_box(
+            MultiChipSession::new(&cfg, &parts, &model)
+                .with_overlap(OverlapMode::DoubleBuffer)
+                .with_pipeline_depth(2)
+                .run("PB"),
+        );
     });
     record(&r, &mut medians);
     println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);

@@ -14,10 +14,10 @@
 //!   ids grouped by source, and (relational graphs only) the `E` u16
 //!   relation ids — all little-endian at fixed strides, so a
 //!   memory-mapping reader can address any array without parsing.
-//!   This std-only build streams the arrays through a `BufReader`
-//!   instead of mmap, and [`Graph::from_csr_parts`] rebuilds degrees
-//!   straight from the offsets, skipping the per-edge validation loop
-//!   of `from_edges`.
+//!   This std-only build reads each array in one exact-size pass
+//!   (pre-sized from the header) instead of mmap, and
+//!   [`Graph::from_csr_parts`] rebuilds degrees straight from the
+//!   offsets, skipping the per-edge validation loop of `from_edges`.
 
 use super::{Edge, Graph};
 use crate::util::fxhash::IntMap;
@@ -218,52 +218,39 @@ fn read_chunk(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<(), Strin
     r.read_exact(buf).map_err(|e| format!("reading {what}: {e}"))
 }
 
+/// One exact-size byte read for a whole on-disk array, pre-sized from
+/// the header. `BufReader::read_exact` forwards a request larger than
+/// its internal buffer straight to the file, so each array is one
+/// bulk read followed by one tight conversion pass into a pre-sized
+/// `Vec` — no fixed-size staging chunks, no per-element push loop.
+fn read_bytes(r: &mut impl Read, len: usize, what: &str) -> Result<Vec<u8>, String> {
+    let mut buf = vec![0u8; len];
+    read_chunk(r, &mut buf, what)?;
+    Ok(buf)
+}
+
 fn read_u64s(r: &mut impl Read, count: usize, what: &str) -> Result<Vec<u64>, String> {
-    let mut out = Vec::with_capacity(count);
-    let mut buf = [0u8; 8 * 8192];
-    let mut remaining = count;
-    while remaining > 0 {
-        let take = remaining.min(8192);
-        let bytes = &mut buf[..take * 8];
-        read_chunk(r, bytes, what)?;
-        for c in bytes.chunks_exact(8) {
-            out.push(u64::from_le_bytes(c.try_into().unwrap()));
-        }
-        remaining -= take;
-    }
-    Ok(out)
+    let buf = read_bytes(r, count * 8, what)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
 }
 
 fn read_u32s(r: &mut impl Read, count: usize, what: &str) -> Result<Vec<u32>, String> {
-    let mut out = Vec::with_capacity(count);
-    let mut buf = [0u8; 4 * 16384];
-    let mut remaining = count;
-    while remaining > 0 {
-        let take = remaining.min(16384);
-        let bytes = &mut buf[..take * 4];
-        read_chunk(r, bytes, what)?;
-        for c in bytes.chunks_exact(4) {
-            out.push(u32::from_le_bytes(c.try_into().unwrap()));
-        }
-        remaining -= take;
-    }
-    Ok(out)
+    let buf = read_bytes(r, count * 4, what)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
 }
 
 fn read_u16s(r: &mut impl Read, count: usize, what: &str) -> Result<Vec<u16>, String> {
-    let mut out = Vec::with_capacity(count);
-    let mut buf = [0u8; 2 * 32768];
-    let mut remaining = count;
-    while remaining > 0 {
-        let take = remaining.min(32768);
-        let bytes = &mut buf[..take * 2];
-        read_chunk(r, bytes, what)?;
-        for c in bytes.chunks_exact(2) {
-            out.push(u16::from_le_bytes(c.try_into().unwrap()));
-        }
-        remaining -= take;
-    }
-    Ok(out)
+    let buf = read_bytes(r, count * 2, what)?;
+    Ok(buf
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+        .collect())
 }
 
 /// Open a binary CSR file, validating the header and every invariant

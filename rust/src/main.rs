@@ -30,11 +30,17 @@
 //!                                      jobs on the analytic backends;
 //!                                      --explain prints each layer's
 //!                                      LayerPlan first
-//!   scaleout --model M --dataset D [--chips K] [--partitioner P]
-//!            [--topology ring|all2all] [--link-gbps G] [--explain]
+//!   scaleout --model M --dataset D [--chips K]
+//!            [--partitioner range|hash|degree|ldg|fennel]
+//!            [--topology ring|all2all] [--link-gbps G]
+//!            [--overlap none|double-buffer] [--pipeline-depth D]
 //!            [--dataflow rer|dense|spmm|hash|adaptive] [--mem PRESET]
+//!            [--explain]
 //!                                      multi-chip EnGN×K simulation
-//!                                      over a partitioned graph
+//!                                      over a partitioned graph;
+//!                                      --overlap double-buffer hides
+//!                                      halo exchange under the dense
+//!                                      feature-extraction stage
 //!   loadgen [--rate R] [--requests N] [--arrivals poisson|bursty]
 //!           [--burst-on-ms MS] [--burst-off-ms MS] [--closed USERS]
 //!           [--seed S] [--dataset D] [--mix I,B,E] [--deadline-ms D]
@@ -63,7 +69,9 @@ use engn::model::{GnnKind, GnnModel};
 use engn::partition::{PartitionedGraph, PartitionerKind};
 use engn::report::experiments::{self, Eval};
 use engn::runtime::{HostTensor, Runtime};
-use engn::sim::{ChipLink, ChipTopology, LayerPlan, MultiChipSession, PreparedGraph, SimSession};
+use engn::sim::{
+    ChipLink, ChipTopology, LayerPlan, MultiChipSession, OverlapMode, PreparedGraph, SimSession,
+};
 use engn::util::rng::Xoshiro256StarStar;
 use engn::util::{fmt_bytes, fmt_time, si};
 use std::collections::HashMap;
@@ -112,7 +120,7 @@ fn main() {
                  \u{20}  engn infer --artifacts artifacts --name gcn_forward\n\
                  \u{20}  engn serve --artifacts artifacts --requests 32 --workers 4 --queue 256\n\
                  \u{20}  engn whatif --model gcn --dataset CA --platforms cpu-dgl,gpu-dgl,hygcn\n\
-                 \u{20}  engn scaleout --model gcn --dataset RD --chips 4 --partitioner degree\n\
+                 \u{20}  engn scaleout --model gcn --dataset RD --chips 4 --partitioner ldg --overlap double-buffer\n\
                  \u{20}  engn loadgen --rate 200 --requests 400 --workers 2 --inflight 2\n\
                  \u{20}  engn loadgen --sweep --arrivals bursty --autoscale --out BENCH_serving.json"
             );
@@ -1027,12 +1035,27 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
         Some(s) => match PartitionerKind::parse(s) {
             Some(p) => p,
             None => {
-                eprintln!("unknown partitioner {s:?} (range|hash|degree)");
+                eprintln!("unknown partitioner {s:?} (range|hash|degree|ldg|fennel)");
                 return 2;
             }
         },
         None => PartitionerKind::Degree,
     };
+    let overlap = match flags.get("overlap") {
+        Some(s) => match OverlapMode::parse(s) {
+            Some(m) => m,
+            None => {
+                eprintln!("unknown overlap mode {s:?} (none|double-buffer)");
+                return 2;
+            }
+        },
+        None => OverlapMode::None,
+    };
+    let pipeline_depth: usize = flags
+        .get("pipeline-depth")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .max(1);
     let topology = match flags.get("topology") {
         Some(s) => match ChipTopology::parse(s) {
             Some(t) => t,
@@ -1084,17 +1107,21 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
     let part_wall = t0.elapsed();
     let prepared = PreparedGraph::from_arc(graph);
     let single = SimSession::new(&cfg, &prepared, &model).run(spec.code);
-    let session = MultiChipSession::new(&cfg, &parts, &model).with_link(link);
+    let session = MultiChipSession::new(&cfg, &parts, &model)
+        .with_link(link)
+        .with_overlap(overlap)
+        .with_pipeline_depth(pipeline_depth);
     let r = session.run(spec.code);
 
     println!(
-        "\nEnGN x{} — {} on {} ({} partition, {} link @ {} GB/s, partitioned in {})",
+        "\nEnGN x{} — {} on {} ({} partition, {} link @ {} GB/s, overlap {}, partitioned in {})",
         r.chips,
         kind.name(),
         spec.name,
         r.partitioner,
         r.topology,
         link.gbps,
+        r.overlap.name(),
         fmt_time(part_wall.as_secs_f64())
     );
     println!(
@@ -1126,6 +1153,14 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
         100.0 * r.comm_fraction(),
         fmt_bytes(r.comm_bytes)
     );
+    if r.overlap != OverlapMode::None {
+        println!(
+            "  comm hidden  : {} cycles behind compute ({:.0}% of stall recovered, depth {})",
+            si(r.comm_hidden_cycles()),
+            100.0 * r.comm_recovered_fraction(),
+            r.pipeline_depth
+        );
+    }
     println!(
         "  cut          : {} / {} edges ({:.1}%), {} halo vertices",
         r.cut_edges,
@@ -1149,6 +1184,26 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
         fmt_bytes(single.spilled_bytes())
     );
     if flags.contains_key("explain") {
+        if r.overlap != OverlapMode::None {
+            println!("\n  per-layer overlap ({}, depth {}):", r.overlap.name(), r.pipeline_depth);
+            println!(
+                "  {:<5} {:>12} {:>12} {:>12} {:>12} {:>12}",
+                "layer", "compute", "window", "comm full", "hidden", "charged"
+            );
+            for l in 0..r.layer_comm_cycles.len() {
+                let charged = r.layer_comm_cycles[l];
+                let hidden = r.layer_comm_hidden_cycles[l];
+                println!(
+                    "  {:<5} {:>12} {:>12} {:>12} {:>12} {:>12}",
+                    l,
+                    si(r.layer_cycles[l] - charged),
+                    si(r.layer_overlap_window[l]),
+                    si(charged + hidden),
+                    si(hidden),
+                    si(charged)
+                );
+            }
+        }
         println!();
         let single_session = SimSession::new(&cfg, &prepared, &model);
         let single_plans = single_session.plan();

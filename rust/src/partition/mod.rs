@@ -33,6 +33,10 @@ use crate::sim::PreparedGraph;
 use crate::util::ceil_div;
 use std::sync::Arc;
 
+mod streaming;
+
+pub use streaming::{FennelPartitioner, LdgPartitioner};
+
 /// A vertex-to-chip assignment strategy. Implementations must be
 /// deterministic in (graph, k) — partitions are part of the simulation
 /// contract, so two runs must shard identically.
@@ -55,15 +59,33 @@ pub enum PartitionerKind {
     /// accumulated edge load, equalizing per-chip edge counts on
     /// skewed graphs.
     Degree,
+    /// Streaming linear deterministic greedy (LDG): one pass over the
+    /// degree-ranked vertex stream, each vertex to the chip holding the
+    /// most of its already-placed neighbors, multiplicatively penalized
+    /// by remaining capacity. Trades some load balance for a much
+    /// smaller cut (see `partition::streaming`).
+    Ldg,
+    /// Streaming Fennel: like LDG but with the interpolated
+    /// cut-vs-balance objective `affinity − α·γ·load^(γ−1)` and a soft
+    /// (ν-slack) capacity bound.
+    Fennel,
 }
 
+/// Canonical enumeration order — the one slice every enumerating
+/// surface (tests, report tables, examples, benches) iterates, so a new
+/// partitioner added here shows up everywhere automatically. Same
+/// pattern as `DataflowKind::ALL_KINDS`.
+const ALL_KINDS: [PartitionerKind; 5] = [
+    PartitionerKind::Range,
+    PartitionerKind::Hash,
+    PartitionerKind::Degree,
+    PartitionerKind::Ldg,
+    PartitionerKind::Fennel,
+];
+
 impl PartitionerKind {
-    pub fn all() -> [PartitionerKind; 3] {
-        [
-            PartitionerKind::Range,
-            PartitionerKind::Hash,
-            PartitionerKind::Degree,
-        ]
+    pub fn all() -> &'static [PartitionerKind] {
+        &ALL_KINDS
     }
 
     pub fn name(&self) -> &'static str {
@@ -71,6 +93,8 @@ impl PartitionerKind {
             PartitionerKind::Range => "range",
             PartitionerKind::Hash => "hash",
             PartitionerKind::Degree => "degree",
+            PartitionerKind::Ldg => "ldg",
+            PartitionerKind::Fennel => "fennel",
         }
     }
 
@@ -79,6 +103,8 @@ impl PartitionerKind {
             "range" | "contiguous" => Some(PartitionerKind::Range),
             "hash" => Some(PartitionerKind::Hash),
             "degree" | "degree-aware" | "greedy" => Some(PartitionerKind::Degree),
+            "ldg" | "linear-greedy" => Some(PartitionerKind::Ldg),
+            "fennel" => Some(PartitionerKind::Fennel),
             _ => None,
         }
     }
@@ -88,6 +114,8 @@ impl PartitionerKind {
             PartitionerKind::Range => Box::new(RangePartitioner),
             PartitionerKind::Hash => Box::new(HashPartitioner),
             PartitionerKind::Degree => Box::new(DegreePartitioner),
+            PartitionerKind::Ldg => Box::new(LdgPartitioner),
+            PartitionerKind::Fennel => Box::new(FennelPartitioner),
         }
     }
 }
@@ -527,7 +555,7 @@ mod tests {
 
     #[test]
     fn parse_round_trips_and_build_dispatches() {
-        for kind in PartitionerKind::all() {
+        for &kind in PartitionerKind::all() {
             assert_eq!(PartitionerKind::parse(kind.name()), Some(kind));
             assert_eq!(kind.build().name(), kind.name());
         }
@@ -538,7 +566,7 @@ mod tests {
     #[test]
     fn every_partitioner_covers_edges_exactly_once() {
         let g = sample();
-        for kind in PartitionerKind::all() {
+        for &kind in PartitionerKind::all() {
             for k in [1usize, 2, 3, 5] {
                 let p = PartitionedGraph::build(g.clone(), kind, k);
                 let internal: usize = p.chips.iter().map(|c| c.internal_edges).sum();
@@ -553,7 +581,7 @@ mod tests {
     #[test]
     fn k1_partition_is_the_identity() {
         let g = sample();
-        for kind in PartitionerKind::all() {
+        for &kind in PartitionerKind::all() {
             let p = PartitionedGraph::build(g.clone(), kind, 1);
             assert_eq!(p.chips.len(), 1);
             let chip = &p.chips[0];
@@ -621,7 +649,7 @@ mod tests {
     #[test]
     fn counting_relabel_matches_reference_oracle() {
         let g = sample();
-        for kind in PartitionerKind::all() {
+        for &kind in PartitionerKind::all() {
             for k in [1usize, 2, 5] {
                 let fast = PartitionedGraph::build(g.clone(), kind, k);
                 let slow = PartitionedGraph::build_reference(g.clone(), kind, k);

@@ -1,0 +1,237 @@
+//! Streaming min-cut partitioners: LDG and Fennel (DESIGN.md §12).
+//!
+//! Both make one pass over the degree-ranked vertex stream
+//! ([`Graph::vertices_by_in_degree_desc`] — the same deterministic
+//! counting rank the DAVC and the degree balancer use) and place each
+//! vertex by *neighbor affinity*: how many of its already-placed
+//! neighbors (in- or out-, direction ignored) each chip holds. Placing
+//! hubs first means the dense core of a skewed graph co-locates early,
+//! which is exactly where most of the cut comes from — the degree
+//! balancer spreads those same hubs round-robin and pays a near-maximal
+//! cut for its perfect edge balance.
+//!
+//! The two differ only in how they trade cut against balance:
+//!
+//! * **LDG** (Stanton & Kliot, linear deterministic greedy) scores chip
+//!   `c` as `affinity(c) · (1 − load(c)/capacity)` with a hard vertex
+//!   capacity `ceil(n/k)` — the multiplicative penalty empties the
+//!   affinity term as a chip fills, and the hard cap guarantees no chip
+//!   exceeds one k-th of the vertices (rounded up).
+//! * **Fennel** (Tsourakakis et al.) scores `affinity(c) − α·γ·load(c)^(γ−1)`
+//!   with γ = 3/2 and α = √k·m / n^(3/2) (the paper's recommended
+//!   interpolation point), under a slack capacity `ceil(ν·n/k)`,
+//!   ν = 1.1 — the additive penalty lets a chip keep attracting its
+//!   community a little past perfect balance.
+//!
+//! Determinism: the stream order is deterministic, the affinity counts
+//! are integers, the score arithmetic is fixed-order IEEE, and ties
+//! break toward fewer owned vertices then the lower chip id — so the
+//! assignment is a pure function of (graph, k), as the [`Partitioner`]
+//! contract requires. Both emit only a vertex→chip map; relabeling,
+//! halo sets and caching are the shared machinery in the parent module.
+
+use super::Partitioner;
+use crate::graph::Graph;
+use crate::util::ceil_div;
+
+const UNPLACED: u32 = u32::MAX;
+
+/// Undirected adjacency in CSR form: `offsets[v]..offsets[v+1]` indexes
+/// `neighbors` with every edge contributing both directions (2E entries
+/// total; self-loops appear once under their own vertex and never score
+/// — the vertex is still unplaced when its own score is computed).
+fn undirected_adjacency(graph: &Graph) -> (Vec<u32>, Vec<u32>) {
+    let n = graph.num_vertices;
+    let mut counts = vec![0u32; n + 1];
+    for e in &graph.edges {
+        counts[e.src as usize + 1] += 1;
+        counts[e.dst as usize + 1] += 1;
+    }
+    for v in 0..n {
+        counts[v + 1] += counts[v];
+    }
+    let offsets = counts.clone();
+    let mut cursor = counts;
+    let mut neighbors = vec![0u32; graph.num_edges() * 2];
+    for e in &graph.edges {
+        neighbors[cursor[e.src as usize] as usize] = e.dst;
+        cursor[e.src as usize] += 1;
+        neighbors[cursor[e.dst as usize] as usize] = e.src;
+        cursor[e.dst as usize] += 1;
+    }
+    (offsets, neighbors)
+}
+
+/// Shared single-pass stream: place each vertex of the degree-ranked
+/// stream on the argmax of `score(affinity, load)` over chips with
+/// `load < capacity`, ties toward (fewer vertices, lower id). The
+/// affinity counts are gathered into a k-length scratch per vertex —
+/// O(deg(v) + k) per placement, O(2E + nk) total.
+fn stream_assign(
+    graph: &Graph,
+    k: usize,
+    capacity: u64,
+    score: impl Fn(u32, u64) -> f64,
+) -> Vec<u32> {
+    let n = graph.num_vertices;
+    if k <= 1 {
+        return vec![0u32; n];
+    }
+    debug_assert!(
+        capacity * k as u64 >= n as u64,
+        "capacity must admit every vertex"
+    );
+    let (offsets, neighbors) = undirected_adjacency(graph);
+    let mut assignment = vec![UNPLACED; n];
+    let mut load = vec![0u64; k];
+    let mut affinity = vec![0u32; k];
+    for &v in &graph.vertices_by_in_degree_desc() {
+        affinity.iter_mut().for_each(|a| *a = 0);
+        let (lo, hi) = (offsets[v as usize] as usize, offsets[v as usize + 1] as usize);
+        for &u in &neighbors[lo..hi] {
+            let c = assignment[u as usize];
+            if c != UNPLACED {
+                affinity[c as usize] += 1;
+            }
+        }
+        let mut best = usize::MAX;
+        let mut best_score = f64::NEG_INFINITY;
+        for c in 0..k {
+            if load[c] >= capacity {
+                continue;
+            }
+            let s = score(affinity[c], load[c]);
+            if best == usize::MAX
+                || s > best_score
+                || (s == best_score && load[c] < load[best])
+            {
+                best = c;
+                best_score = s;
+            }
+        }
+        debug_assert_ne!(best, usize::MAX, "some chip is always below capacity");
+        assignment[v as usize] = best as u32;
+        load[best] += 1;
+    }
+    assignment
+}
+
+/// Linear deterministic greedy: `affinity · (1 − load/capacity)` under
+/// a hard `ceil(n/k)` vertex capacity.
+pub struct LdgPartitioner;
+
+impl Partitioner for LdgPartitioner {
+    fn name(&self) -> &'static str {
+        "ldg"
+    }
+
+    fn assign(&self, graph: &Graph, k: usize) -> Vec<u32> {
+        let capacity = ceil_div(graph.num_vertices.max(1), k) as u64;
+        stream_assign(graph, k, capacity, |aff, load| {
+            aff as f64 * (1.0 - load as f64 / capacity as f64)
+        })
+    }
+}
+
+/// Fennel: `affinity − α·γ·load^(γ−1)` with γ = 3/2,
+/// α = √k·m/n^(3/2), under a ν = 1.1 slack capacity.
+pub struct FennelPartitioner;
+
+impl Partitioner for FennelPartitioner {
+    fn name(&self) -> &'static str {
+        "fennel"
+    }
+
+    fn assign(&self, graph: &Graph, k: usize) -> Vec<u32> {
+        let n = graph.num_vertices.max(1) as f64;
+        let m = graph.num_edges() as f64;
+        let alpha = (k as f64).sqrt() * m / (n * n.sqrt());
+        let gamma = 1.5;
+        // ceil(1.1 * n / k) in integer arithmetic, so the slack bound
+        // is exact and the capacity invariant (k·cap ≥ n) holds.
+        let capacity = ceil_div(graph.num_vertices.max(1) * 11, 10 * k) as u64;
+        stream_assign(graph, k, capacity, move |aff, load| {
+            aff as f64 - alpha * gamma * (load as f64).sqrt()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{self, RmatParams};
+    use crate::partition::{PartitionedGraph, PartitionerKind};
+    use std::sync::Arc;
+
+    fn sample() -> Arc<Graph> {
+        Arc::new(rmat::generate(600, 4_000, RmatParams::default(), 11))
+    }
+
+    #[test]
+    fn undirected_adjacency_counts_both_directions() {
+        let g = sample();
+        let (offsets, neighbors) = undirected_adjacency(&g);
+        assert_eq!(offsets.len(), g.num_vertices + 1);
+        assert_eq!(neighbors.len(), 2 * g.num_edges());
+        assert_eq!(offsets[g.num_vertices] as usize, neighbors.len());
+        // Spot-check: vertex 0's slot count equals in+out degree.
+        let d0 = (offsets[1] - offsets[0]) as u32;
+        assert_eq!(d0, g.in_degree(0) + g.out_degree(0));
+    }
+
+    #[test]
+    fn streaming_partitioners_cover_and_respect_capacity() {
+        let g = sample();
+        for kind in [PartitionerKind::Ldg, PartitionerKind::Fennel] {
+            for k in [1usize, 2, 4, 7] {
+                let assignment = kind.build().assign(&g, k);
+                assert_eq!(assignment.len(), g.num_vertices);
+                let mut counts = vec![0u64; k];
+                for &c in &assignment {
+                    assert!((c as usize) < k, "{} k={k}", kind.name());
+                    counts[c as usize] += 1;
+                }
+                let cap = match kind {
+                    PartitionerKind::Ldg => ceil_div(g.num_vertices, k),
+                    _ => ceil_div(g.num_vertices * 11, 10 * k),
+                } as u64;
+                assert!(
+                    counts.iter().all(|&c| c <= cap),
+                    "{} k={k}: counts {counts:?} exceed cap {cap}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_assignments_are_deterministic() {
+        let g = sample();
+        for kind in [PartitionerKind::Ldg, PartitionerKind::Fennel] {
+            let a = kind.build().assign(&g, 4);
+            let b = kind.build().assign(&g, 4);
+            assert_eq!(a, b, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn affinity_streaming_cuts_less_than_degree_balancing() {
+        // The property the scale-out acceptance test pins at full report
+        // scale (tests/partition_integration.rs), here on a small R-MAT
+        // sample: co-locating the hub core must beat spreading it.
+        let g = Arc::new(rmat::generate(2_000, 16_000, RmatParams::default(), 5));
+        for k in [4usize, 8] {
+            let degree = PartitionedGraph::build(g.clone(), PartitionerKind::Degree, k);
+            for kind in [PartitionerKind::Ldg, PartitionerKind::Fennel] {
+                let p = PartitionedGraph::build(g.clone(), kind, k);
+                assert!(
+                    p.cut_ratio() < degree.cut_ratio(),
+                    "{} k={k}: cut {} !< degree cut {}",
+                    kind.name(),
+                    p.cut_ratio(),
+                    degree.cut_ratio()
+                );
+            }
+        }
+    }
+}

@@ -40,7 +40,7 @@ pub mod tiles;
 
 pub use dataflow::{Dataflow, DenseSystolic, HashDecoupled, SpmmSystolic, TileOutcome, TileView};
 pub use engine::{grid_q, sweep, sweep_with, LayerPlan, SimSession, Simulator};
-pub use multichip::{ChipLink, ChipTopology, MultiChipSession, ScaleOutReport};
+pub use multichip::{ChipLink, ChipTopology, MultiChipSession, OverlapMode, ScaleOutReport};
 pub use prepared::{EdgeTiling, PreparedGraph, TileEdges};
 pub use ring::RingEdgeReduce;
 pub use select::{LayerFeatures, Selection};

@@ -10,9 +10,21 @@
 //! the distinct remote sources its cut edges name — before its
 //! aggregation can complete. The exchange is costed by a [`ChipLink`]
 //! (bandwidth / latency / topology: a ring mirroring EnGN's RER at chip
-//! granularity, or all-to-all), and the layer's cycles are
-//! `max_chip(compute) + comm_stall` — communication is not overlapped,
-//! which is the conservative bound.
+//! granularity, or all-to-all).
+//!
+//! How much of that exchange sits on the critical path is the
+//! [`OverlapMode`] (DESIGN.md §12). Under [`OverlapMode::None`] — the
+//! conservative bulk-synchronous bound, and the default — the layer's
+//! cycles are `max_chip(compute) + comm_stall` with nothing hidden.
+//! Under [`OverlapMode::DoubleBuffer`] the exchange ships *input*
+//! (pre-transform) halo properties while every chip runs its
+//! feature-extraction stage (halo FE is replicated locally — the
+//! PowerGraph-style staging [`ScaleOutReport::total_ops`] already
+//! accounts), so each directed link only charges
+//! `max(0, link_cycles − overlap_window)`; with a pipeline depth ≥ 2
+//! the window additionally absorbs the previous layer's straggler
+//! slack (exchange prefetch) and whole batch items overlap through
+//! [`ScaleOutReport::pipelined_cycles`].
 
 use crate::config::AcceleratorConfig;
 use crate::model::GnnModel;
@@ -43,6 +55,38 @@ impl ChipTopology {
         match s.to_ascii_lowercase().as_str() {
             "ring" => Some(ChipTopology::Ring),
             "all-to-all" | "all2all" | "a2a" | "full" => Some(ChipTopology::AllToAll),
+            _ => None,
+        }
+    }
+}
+
+/// How halo-exchange communication relates to compute on the critical
+/// path (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum OverlapMode {
+    /// Bulk-synchronous: every comm cycle is exposed
+    /// (`max_chip(compute) + comm_stall` per layer). The pre-overlap
+    /// model, pinned bit-identical — and the default.
+    #[default]
+    None,
+    /// Double-buffered halo exchange: the transfer of a layer's halo
+    /// inputs runs concurrently with that layer's feature-extraction
+    /// stage, so only the residual past the overlap window stalls.
+    DoubleBuffer,
+}
+
+impl OverlapMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::None => "none",
+            OverlapMode::DoubleBuffer => "double-buffer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "bulk" | "off" => Some(OverlapMode::None),
+            "double-buffer" | "double" | "db" | "overlap" => Some(OverlapMode::DoubleBuffer),
             _ => None,
         }
     }
@@ -92,31 +136,35 @@ impl ChipLink {
         self.gbps / freq_ghz
     }
 
-    /// Cost one layer's halo exchange. `pair_bytes[c][p]` is the bytes
-    /// chip `c` must receive from chip `p`. Returns
-    /// `(stall_cycles, total_bytes)`: the stall is the bottleneck
-    /// link's serialization plus the longest routed hop chain's
-    /// latency (one exposed chain per layer; pipelining hides the
-    /// rest).
-    pub fn exchange_cost(&self, pair_bytes: &[Vec<f64>], freq_ghz: f64) -> (f64, f64) {
+    /// Route one layer's halo exchange and expose the raw per-directed-
+    /// link byte loads — the material [`exchange_cost`](Self::exchange_cost)
+    /// and [`residual_stall`](Self::residual_stall) both reduce, so the
+    /// contention model (ring shortest-direction routing with clockwise
+    /// ties, all-to-all per-pair links) is computed exactly once.
+    /// Returns `(link_loads_bytes, max_hops, total_bytes)`; for a ring
+    /// the loads are the k clockwise links followed by the k
+    /// counter-clockwise ones, for all-to-all one entry per (c, p) pair
+    /// in row-major order.
+    pub fn link_loads(&self, pair_bytes: &[Vec<f64>]) -> (Vec<f64>, usize, f64) {
         let k = pair_bytes.len();
         if k <= 1 {
-            return (0.0, 0.0);
+            return (Vec::new(), 0, 0.0);
         }
         let mut total = 0.0f64;
-        let mut bottleneck = 0.0f64;
         let mut max_hops = 0usize;
-        match self.topology {
+        let loads = match self.topology {
             ChipTopology::AllToAll => {
+                let mut loads = Vec::with_capacity(k * k);
                 for row in pair_bytes {
                     for &b in row {
                         total += b;
-                        bottleneck = bottleneck.max(b);
+                        loads.push(b);
                     }
                 }
                 if total > 0.0 {
                     max_hops = 1;
                 }
+                loads
             }
             ChipTopology::Ring => {
                 // Route each pair the shorter way (ties clockwise) and
@@ -145,15 +193,42 @@ impl ChipLink {
                         }
                     }
                 }
-                bottleneck = cw
-                    .iter()
-                    .chain(ccw.iter())
-                    .fold(0.0f64, |m, &b| m.max(b));
+                cw.extend_from_slice(&ccw);
+                cw
             }
-        }
+        };
+        (loads, max_hops, total)
+    }
+
+    /// Cost one layer's halo exchange. `pair_bytes[c][p]` is the bytes
+    /// chip `c` must receive from chip `p`. Returns
+    /// `(stall_cycles, total_bytes)`: the stall is the bottleneck
+    /// link's serialization plus the longest routed hop chain's
+    /// latency (one exposed chain per layer; pipelining hides the
+    /// rest).
+    pub fn exchange_cost(&self, pair_bytes: &[Vec<f64>], freq_ghz: f64) -> (f64, f64) {
+        let (loads, max_hops, total) = self.link_loads(pair_bytes);
+        let bottleneck = loads.iter().fold(0.0f64, |m, &b| m.max(b));
         let stall = bottleneck / self.bytes_per_cycle(freq_ghz)
             + max_hops as f64 * self.latency_ns * freq_ghz;
         (stall, total)
+    }
+
+    /// The exchange stall left exposed after `window_cycles` of
+    /// concurrent compute: each directed link's serialization (plus the
+    /// hop-chain latency) is clipped by the window *individually*, then
+    /// the worst residual wins — so link contention is preserved, a
+    /// congested ring link can still stall a layer whose aggregate
+    /// traffic looks hideable, and the result is always within
+    /// `[0, exchange_cost]` (`window = 0` reproduces it exactly).
+    pub fn residual_stall(&self, pair_bytes: &[Vec<f64>], freq_ghz: f64, window_cycles: f64) -> f64 {
+        let (loads, max_hops, _) = self.link_loads(pair_bytes);
+        let bpc = self.bytes_per_cycle(freq_ghz);
+        let lat = max_hops as f64 * self.latency_ns * freq_ghz;
+        loads
+            .iter()
+            .map(|&b| (b / bpc + lat - window_cycles).max(0.0))
+            .fold(0.0f64, f64::max)
     }
 }
 
@@ -164,6 +239,11 @@ pub struct ScaleOutReport {
     pub chips: usize,
     pub partitioner: String,
     pub topology: &'static str,
+    /// How communication and compute overlap on the critical path.
+    pub overlap: OverlapMode,
+    /// In-flight depth for cross-layer exchange prefetch and
+    /// cross-batch-item pipelining (1 = no pipelining).
+    pub pipeline_depth: usize,
     pub config_name: String,
     pub model_name: String,
     pub dataset_code: String,
@@ -174,8 +254,15 @@ pub struct ScaleOutReport {
     pub edge_loads: Vec<usize>,
     /// Per layer: `max_chip(compute) + comm`.
     pub layer_cycles: Vec<f64>,
-    /// Per layer: the communication stall alone.
+    /// Per layer: the *charged* (exposed) communication stall alone.
     pub layer_comm_cycles: Vec<f64>,
+    /// Per layer: exchange cycles hidden under the overlap window
+    /// (all-zero under [`OverlapMode::None`]); charged + hidden is the
+    /// layer's full bulk-synchronous exchange cost.
+    pub layer_comm_hidden_cycles: Vec<f64>,
+    /// Per layer: the overlap window itself — the compute the exchange
+    /// may hide under (0 under [`OverlapMode::None`]).
+    pub layer_overlap_window: Vec<f64>,
     /// Halo bytes moved over inter-chip links, whole pass.
     pub comm_bytes: f64,
     /// Link transfer energy, joules.
@@ -190,8 +277,50 @@ impl ScaleOutReport {
         self.layer_cycles.iter().sum()
     }
 
+    /// Exposed (charged) communication stall, whole pass.
     pub fn comm_cycles(&self) -> f64 {
         self.layer_comm_cycles.iter().sum()
+    }
+
+    /// Exchange cycles hidden under compute, whole pass.
+    pub fn comm_hidden_cycles(&self) -> f64 {
+        self.layer_comm_hidden_cycles.iter().sum()
+    }
+
+    /// Fraction of the bulk-synchronous exchange cost the overlap
+    /// recovered: `hidden / (hidden + charged)` (0 when there is no
+    /// communication at all).
+    pub fn comm_recovered_fraction(&self) -> f64 {
+        let full = self.comm_hidden_cycles() + self.comm_cycles();
+        if full > 0.0 {
+            self.comm_hidden_cycles() / full
+        } else {
+            0.0
+        }
+    }
+
+    /// Cycles to run `items` back-to-back passes (batch items) of this
+    /// workload through the K-chip system. With pipelining off
+    /// (`pipeline_depth <= 1`, or bulk-synchronous mode) items
+    /// serialize: `items × total_cycles`. With depth ≥ 2 the chips and
+    /// the links are two pipeline resources filled by successive items,
+    /// so steady-state issue interval is whichever resource is busier
+    /// per item — total compute, or total link time (hidden + charged) —
+    /// floored by `latency / depth` (at most `depth` items in flight):
+    /// `latency + (items − 1) × interval`. Never exceeds the serial
+    /// cost, and equals it when there is no communication to hide.
+    pub fn pipelined_cycles(&self, items: usize) -> f64 {
+        let latency = self.total_cycles();
+        if items <= 1 || self.pipeline_depth <= 1 || self.overlap == OverlapMode::None {
+            return latency * items as f64;
+        }
+        let compute_busy = latency - self.comm_cycles();
+        let link_busy = self.comm_hidden_cycles() + self.comm_cycles();
+        let interval = compute_busy
+            .max(link_busy)
+            .max(latency / self.pipeline_depth as f64)
+            .min(latency);
+        latency + (items - 1) as f64 * interval
     }
 
     /// End-to-end latency in seconds.
@@ -302,17 +431,22 @@ pub struct MultiChipSession<'a> {
     parts: &'a PartitionedGraph,
     model: &'a GnnModel,
     link: ChipLink,
+    overlap: OverlapMode,
+    pipeline_depth: usize,
 }
 
 impl<'a> MultiChipSession<'a> {
     /// Every chip runs `cfg` (a homogeneous EnGN×K system) over its
-    /// shard, linked by the default chip-granularity ring.
+    /// shard, linked by the default chip-granularity ring, in
+    /// bulk-synchronous ([`OverlapMode::None`]) mode.
     pub fn new(cfg: &'a AcceleratorConfig, parts: &'a PartitionedGraph, model: &'a GnnModel) -> Self {
         Self {
             cfg,
             parts,
             model,
             link: ChipLink::ring(),
+            overlap: OverlapMode::None,
+            pipeline_depth: 1,
         }
     }
 
@@ -322,8 +456,24 @@ impl<'a> MultiChipSession<'a> {
         self
     }
 
+    /// Pick the comm/compute overlap model (builder style).
+    pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
+        self.overlap = overlap;
+        self
+    }
+
+    /// Set the in-flight pipeline depth (builder style; clamped ≥ 1).
+    pub fn with_pipeline_depth(mut self, depth: usize) -> Self {
+        self.pipeline_depth = depth.max(1);
+        self
+    }
+
     pub fn link(&self) -> &ChipLink {
         &self.link
+    }
+
+    pub fn overlap(&self) -> OverlapMode {
+        self.overlap
     }
 
     /// The per-layer plan of one chip's session — `engn scaleout
@@ -356,6 +506,8 @@ impl<'a> MultiChipSession<'a> {
 
         let mut layer_cycles = Vec::with_capacity(agg_dims.len());
         let mut layer_comm_cycles = Vec::with_capacity(agg_dims.len());
+        let mut layer_comm_hidden_cycles = Vec::with_capacity(agg_dims.len());
+        let mut layer_overlap_window = Vec::with_capacity(agg_dims.len());
         let mut comm_bytes = 0.0f64;
         for (l, &agg_dim) in agg_dims.iter().enumerate() {
             let max_compute = per_chip
@@ -369,14 +521,55 @@ impl<'a> MultiChipSession<'a> {
                 .collect();
             let (stall, bytes) = self.link.exchange_cost(&pair_bytes, self.cfg.freq_ghz);
             comm_bytes += bytes;
-            layer_comm_cycles.push(stall);
-            layer_cycles.push(max_compute + stall);
+            let (charged, hidden, window) = match self.overlap {
+                OverlapMode::None => (stall, 0.0, 0.0),
+                OverlapMode::DoubleBuffer => {
+                    // The exchange ships pre-transform halo inputs, so
+                    // it may run for as long as every chip is still in
+                    // its feature-extraction stage: the window is the
+                    // *minimum* FE time across chips (the first chip to
+                    // reach aggregation needs its halo data). Spill
+                    // stall is not part of the window — the mem plane
+                    // stays strictly additive inside per-chip totals.
+                    let fe_window = per_chip
+                        .iter()
+                        .map(|r| r.layers[l].feature_extraction.cycles)
+                        .fold(f64::INFINITY, f64::min);
+                    let mut window = if fe_window.is_finite() { fe_window } else { 0.0 };
+                    // Depth ≥ 2: the previous layer's halo payload is
+                    // ready as soon as its owner finishes, so the
+                    // exchange may also prefetch under the straggler
+                    // slack of layer l − 1.
+                    if self.pipeline_depth >= 2 && l > 0 {
+                        let prev_max = per_chip
+                            .iter()
+                            .map(|r| r.layers[l - 1].total_cycles)
+                            .fold(0.0f64, f64::max);
+                        let prev_min = per_chip
+                            .iter()
+                            .map(|r| r.layers[l - 1].total_cycles)
+                            .fold(f64::INFINITY, f64::min);
+                        if prev_min.is_finite() {
+                            window += prev_max - prev_min;
+                        }
+                    }
+                    let residual =
+                        self.link.residual_stall(&pair_bytes, self.cfg.freq_ghz, window);
+                    (residual, stall - residual, window)
+                }
+            };
+            layer_comm_cycles.push(charged);
+            layer_comm_hidden_cycles.push(hidden);
+            layer_overlap_window.push(window);
+            layer_cycles.push(max_compute + charged);
         }
 
         ScaleOutReport {
             chips: self.parts.k,
             partitioner: self.parts.partitioner.to_string(),
             topology: self.link.topology.name(),
+            overlap: self.overlap,
+            pipeline_depth: self.pipeline_depth,
             config_name: self.cfg.name.clone(),
             model_name: self.model.kind.name().to_string(),
             dataset_code: dataset_code.to_string(),
@@ -384,6 +577,8 @@ impl<'a> MultiChipSession<'a> {
             edge_loads: self.parts.edge_loads(),
             layer_cycles,
             layer_comm_cycles,
+            layer_comm_hidden_cycles,
+            layer_overlap_window,
             comm_bytes,
             link_energy_j: comm_bytes * self.link.pj_per_byte * 1e-12,
             cut_edges: self.parts.cut_edges(),
@@ -418,6 +613,106 @@ mod tests {
         }
         assert_eq!(ChipTopology::parse("a2a"), Some(ChipTopology::AllToAll));
         assert_eq!(ChipTopology::parse("mesh"), None);
+    }
+
+    #[test]
+    fn overlap_parse_round_trips() {
+        for m in [OverlapMode::None, OverlapMode::DoubleBuffer] {
+            assert_eq!(OverlapMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(OverlapMode::parse("db"), Some(OverlapMode::DoubleBuffer));
+        assert_eq!(OverlapMode::parse("bulk"), Some(OverlapMode::None));
+        assert_eq!(OverlapMode::parse("speculative"), None);
+        assert_eq!(OverlapMode::default(), OverlapMode::None);
+    }
+
+    #[test]
+    fn residual_stall_clips_per_link_and_brackets_exchange_cost() {
+        let mut pair = vec![vec![0.0; 4]; 4];
+        pair[0][1] = 1000.0;
+        pair[0][2] = 1000.0;
+        pair[0][3] = 1000.0;
+        let freq = 1.0;
+        for link in [ChipLink::ring(), ChipLink::all_to_all()] {
+            let (full, _) = link.exchange_cost(&pair, freq);
+            // Zero window reproduces the full stall exactly.
+            assert_eq!(link.residual_stall(&pair, freq, 0.0), full);
+            // The residual shrinks monotonically with the window and
+            // reaches zero once the window covers the bottleneck.
+            let half = link.residual_stall(&pair, freq, full / 2.0);
+            assert!(half > 0.0 && half < full, "{half} vs {full}");
+            assert_eq!(link.residual_stall(&pair, freq, full), 0.0);
+            assert_eq!(link.residual_stall(&pair, freq, 2.0 * full), 0.0);
+        }
+        // K = 1 and no-traffic cases are zero at any window.
+        let link = ChipLink::ring();
+        assert_eq!(link.residual_stall(&[vec![0.0]], freq, 0.0), 0.0);
+        assert_eq!(link.residual_stall(&vec![vec![0.0; 3]; 3], freq, 5.0), 0.0);
+    }
+
+    #[test]
+    fn double_buffer_hides_comm_and_never_beats_compute_bound() {
+        let (cfg, g, m) = setup();
+        let parts = PartitionedGraph::build(g, PartitionerKind::Degree, 4);
+        let bulk = MultiChipSession::new(&cfg, &parts, &m).run("PB");
+        let db = MultiChipSession::new(&cfg, &parts, &m)
+            .with_overlap(OverlapMode::DoubleBuffer)
+            .run("PB");
+        assert_eq!(bulk.overlap, OverlapMode::None);
+        assert_eq!(db.overlap, OverlapMode::DoubleBuffer);
+        assert_eq!(bulk.comm_hidden_cycles(), 0.0);
+        assert_eq!(bulk.comm_recovered_fraction(), 0.0);
+        // Per layer: charged + hidden reproduces the bulk stall (up to
+        // one rounding of the subtraction that split them), and the
+        // compute term is untouched.
+        let approx = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+        for l in 0..bulk.layer_cycles.len() {
+            let full = bulk.layer_comm_cycles[l];
+            let charged = db.layer_comm_cycles[l];
+            let hidden = db.layer_comm_hidden_cycles[l];
+            assert!(charged >= 0.0 && hidden >= 0.0, "layer {l}");
+            assert!(charged <= full, "layer {l}: charged {charged} > full {full}");
+            assert!(approx(charged + hidden, full), "layer {l}: {charged}+{hidden} vs {full}");
+            assert!(
+                approx(bulk.layer_cycles[l] - full, db.layer_cycles[l] - charged),
+                "layer {l} compute drifted"
+            );
+        }
+        assert!(db.total_cycles() <= bulk.total_cycles());
+        assert!(db.comm_hidden_cycles() > 0.0, "dense FE must hide some exchange");
+        // Per-chip reports are the same objects' worth of numbers: the
+        // overlap model only reinterprets the glue between chips.
+        for (a, b) in bulk.per_chip.iter().zip(&db.per_chip) {
+            assert_eq!(a.total_cycles(), b.total_cycles());
+        }
+    }
+
+    #[test]
+    fn deeper_pipeline_widens_the_window_and_amortizes_items() {
+        let (cfg, g, m) = setup();
+        let parts = PartitionedGraph::build(g, PartitionerKind::Hash, 4);
+        let db = MultiChipSession::new(&cfg, &parts, &m)
+            .with_overlap(OverlapMode::DoubleBuffer)
+            .run("PB");
+        let piped = MultiChipSession::new(&cfg, &parts, &m)
+            .with_overlap(OverlapMode::DoubleBuffer)
+            .with_pipeline_depth(2)
+            .run("PB");
+        // Prefetch windows only ever grow, so charged stall only shrinks.
+        assert!(piped.total_cycles() <= db.total_cycles());
+        for l in 0..db.layer_cycles.len() {
+            assert!(piped.layer_overlap_window[l] >= db.layer_overlap_window[l]);
+            assert!(piped.layer_comm_cycles[l] <= db.layer_comm_cycles[l]);
+        }
+        // Batch-item pipelining: depth 1 serializes; depth 2 amortizes
+        // but never below the busier resource, never above serial.
+        assert_eq!(db.pipelined_cycles(3), 3.0 * db.total_cycles());
+        let b = 4usize;
+        let amortized = piped.pipelined_cycles(b);
+        assert!(amortized <= b as f64 * piped.total_cycles());
+        assert!(amortized >= piped.total_cycles());
+        assert_eq!(piped.pipelined_cycles(1), piped.total_cycles());
+        assert_eq!(piped.pipelined_cycles(0), 0.0);
     }
 
     #[test]

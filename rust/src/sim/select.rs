@@ -96,14 +96,44 @@ pub fn estimate(kind: DataflowKind, f: &LayerFeatures, cfg: &AcceleratorConfig) 
     base * dim_groups
 }
 
+/// Estimate-pruning margin for [`shortlist`]: a kind whose closed-form
+/// estimate exceeds the best estimate by more than this factor is
+/// dominated and skipped by the measured charge pass. Deliberately
+/// generous — the estimates are coarse (occupancy-blind dense sweeps vs
+/// edge-bounded streams differ by orders of magnitude, which is the
+/// case worth pruning), and `tests/dataflow_integration.rs` pins that
+/// the surviving argmin matches the full 4× charge pass on every
+/// Table-5 suite pair.
+pub const PRUNE_MARGIN: f64 = 8.0;
+
+/// The fixed kinds worth charging for one layer: every kind whose
+/// [`estimate`] is within [`PRUNE_MARGIN`] of the best estimate, in
+/// canonical `DataflowKind::fixed()` order. Never empty — the argmin of
+/// the estimates always survives its own margin.
+pub fn shortlist(f: &LayerFeatures, cfg: &AcceleratorConfig) -> Vec<DataflowKind> {
+    let estimates: Vec<f64> = DataflowKind::fixed()
+        .iter()
+        .map(|&k| estimate(k, f, cfg))
+        .collect();
+    let best = estimates.iter().copied().fold(f64::INFINITY, f64::min);
+    DataflowKind::fixed()
+        .iter()
+        .copied()
+        .zip(estimates)
+        .filter(|&(_, e)| e <= best * PRUNE_MARGIN)
+        .map(|(k, _)| k)
+        .collect()
+}
+
 /// The planner's decision for one layer, kept on the `LayerPlan` so
 /// `--explain` and the report harness can say *why*.
 #[derive(Debug, Clone)]
 pub struct Selection {
     pub kind: DataflowKind,
     pub features: LayerFeatures,
-    /// (kind, total layer cycles as charged by the executor), in
-    /// canonical `DataflowKind::fixed()` order.
+    /// (kind, total layer cycles as charged by the executor) for every
+    /// [`shortlist`] survivor, in canonical `DataflowKind::fixed()`
+    /// order (a subset when estimate pruning dropped dominated kinds).
     pub measured: Vec<(DataflowKind, f64)>,
     /// One-line human rationale.
     pub why: String,
@@ -186,6 +216,34 @@ mod tests {
             assert!(estimate(k, &f, &cfg) < dense, "{:?} not below dense", k);
         }
         assert!(estimate(DataflowKind::Adaptive, &f, &cfg).is_infinite());
+    }
+
+    #[test]
+    fn shortlist_prunes_dominated_kinds_but_keeps_the_close_race() {
+        let cfg = AcceleratorConfig::engn();
+        // Very sparse layer: the occupancy-blind dense sweep estimates
+        // orders of magnitude above the edge-bounded kinds and must be
+        // pruned; the edge-bounded kinds are within a small factor of
+        // one another and must all survive.
+        let f = features(65_536, 130_000, 1, 16, 3);
+        let s = shortlist(&f, &cfg);
+        assert!(!s.contains(&DataflowKind::DenseSystolic), "{s:?}");
+        for k in [
+            DataflowKind::RingEdgeReduce,
+            DataflowKind::SpmmSystolic,
+            DataflowKind::HashDecoupled,
+        ] {
+            assert!(s.contains(&k), "{k:?} missing from {s:?}");
+        }
+        // The shortlist is never empty, keeps canonical order, and the
+        // estimate argmin always survives its own margin.
+        assert!(!s.is_empty());
+        let canonical: Vec<_> = DataflowKind::fixed()
+            .iter()
+            .copied()
+            .filter(|k| s.contains(k))
+            .collect();
+        assert_eq!(s, canonical);
     }
 
     #[test]

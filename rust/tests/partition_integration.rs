@@ -1,10 +1,14 @@
 //! Scale-out invariants: property tests over seeded R-MAT graphs pin
 //! (1) every edge lands in exactly one chip's subgraph — cross-chip
 //! edges additionally in exactly one cut list, (2) a K = 1
-//! `MultiChipSession` is bit-identical to a plain `SimSession`, and
-//! (3) the degree-aware greedy balancer beats range partitioning on
-//! every skewed (social) Table-5 graph. CI runs this file at both
-//! test-harness widths (see .github/workflows/ci.yml).
+//! `MultiChipSession` is bit-identical to a plain `SimSession`, (3) the
+//! degree-aware greedy balancer beats range partitioning on every
+//! skewed (social) Table-5 graph, (4) `OverlapMode::None` is
+//! bit-identical to the pre-overlap model while double-buffering never
+//! loses to bulk-sync, and (5) the overlap/partitioner acceptance
+//! numbers (≥ 30% comm-stall recovery on Reddit ×8; LDG below the
+//! degree balancer's cut ratio on every social graph). CI runs this
+//! file at both test-harness widths (see .github/workflows/ci.yml).
 
 use engn::config::AcceleratorConfig;
 use engn::graph::datasets::{self, ScalePolicy};
@@ -12,7 +16,7 @@ use engn::graph::rmat::{self, RmatParams};
 use engn::graph::{Edge, Graph};
 use engn::model::{GnnKind, GnnModel};
 use engn::partition::{PartitionedGraph, PartitionerKind};
-use engn::sim::{ChipLink, MultiChipSession, PreparedGraph, SimSession};
+use engn::sim::{ChipLink, MultiChipSession, OverlapMode, PreparedGraph, SimSession};
 use engn::util::prop::prop_check;
 use std::sync::Arc;
 
@@ -95,7 +99,7 @@ fn prop_every_edge_in_exactly_one_subgraph_or_cut_list() {
         let e = rng.gen_usize(1, 5 * n);
         let k = rng.gen_usize(1, 9);
         let g = Arc::new(rmat::generate(n, e, RmatParams::default(), rng.next_u64()));
-        for kind in PartitionerKind::all() {
+        for &kind in PartitionerKind::all() {
             let p = PartitionedGraph::build(g.clone(), kind, k);
             check_partition(&g, &p).map_err(|m| format!("{} k={k}: {m}", kind.name()))?;
         }
@@ -119,7 +123,7 @@ fn counting_relabel_is_bit_identical_to_reference() {
     let af = datasets::by_code("AF").unwrap();
     graphs.push(("AF", Arc::new(af.instantiate(ScalePolicy::Capped, 3))));
     for (label, g) in &graphs {
-        for kind in PartitionerKind::all() {
+        for &kind in PartitionerKind::all() {
             for k in [1usize, 2, 4, 7] {
                 let fast = PartitionedGraph::build(g.clone(), kind, k);
                 let slow = PartitionedGraph::build_reference(g.clone(), kind, k);
@@ -171,7 +175,7 @@ fn k1_multichip_session_bit_identical_to_sim_session() {
     let cfg = AcceleratorConfig::engn();
     let prepared = PreparedGraph::from_arc(g.clone());
     let single = SimSession::new(&cfg, &prepared, &model).run("PB");
-    for kind in PartitionerKind::all() {
+    for &kind in PartitionerKind::all() {
         let parts = PartitionedGraph::build(g.clone(), kind, 1);
         for link in [ChipLink::ring(), ChipLink::all_to_all()] {
             let multi = MultiChipSession::new(&cfg, &parts, &model)
@@ -240,6 +244,132 @@ fn four_chip_scaleout_beats_single_chip_on_reddit() {
         single.total_cycles()
     );
     assert!(multi.comm_fraction() < 0.5, "comm dominates: {}", multi.comm_fraction());
+}
+
+/// Property (4a): `OverlapMode::None` — explicitly set, at any pipeline
+/// depth — is bit-identical to the default (pre-overlap) session across
+/// every partitioner, both link topologies and several chip counts: the
+/// overlap plumbing must be invisible until it is switched on.
+#[test]
+fn overlap_none_is_bit_identical_across_partitioners_topologies_and_k() {
+    let spec = datasets::by_code("PB").unwrap();
+    let g = Arc::new(spec.instantiate(ScalePolicy::Factor(8), 0xE16A));
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let cfg = AcceleratorConfig::engn();
+    for &kind in PartitionerKind::all() {
+        for k in [1usize, 2, 4] {
+            let parts = PartitionedGraph::build(g.clone(), kind, k);
+            for link in [ChipLink::ring(), ChipLink::all_to_all()] {
+                let tag = format!("{} k={k} {}", kind.name(), link.topology.name());
+                let base = MultiChipSession::new(&cfg, &parts, &model)
+                    .with_link(link)
+                    .run("PB");
+                let none = MultiChipSession::new(&cfg, &parts, &model)
+                    .with_link(link)
+                    .with_overlap(OverlapMode::None)
+                    .with_pipeline_depth(3)
+                    .run("PB");
+                assert_eq!(none.total_cycles(), base.total_cycles(), "{tag}");
+                assert_eq!(none.layer_cycles, base.layer_cycles, "{tag}");
+                assert_eq!(none.layer_comm_cycles, base.layer_comm_cycles, "{tag}");
+                assert_eq!(none.comm_bytes, base.comm_bytes, "{tag}");
+                assert_eq!(none.energy_j(), base.energy_j(), "{tag}");
+                assert_eq!(none.comm_hidden_cycles(), 0.0, "{tag}");
+                assert!(
+                    none.layer_comm_hidden_cycles.iter().all(|&h| h == 0.0),
+                    "{tag}: bulk-sync hid comm"
+                );
+                for (ra, rb) in none.per_chip.iter().zip(&base.per_chip) {
+                    assert_reports_identical(ra, rb);
+                }
+            }
+        }
+    }
+}
+
+/// Property (4b): double-buffering can only help — the overlapped total
+/// never exceeds bulk-sync for any partitioner or chip count, the two
+/// are exactly equal at K = 1 (no exchange to hide), and per-chip
+/// compute reports are untouched by the overlap mode.
+#[test]
+fn double_buffer_total_never_exceeds_bulk_sync_and_matches_at_k1() {
+    let spec = datasets::by_code("PB").unwrap();
+    let g = Arc::new(spec.instantiate(ScalePolicy::Factor(8), 0xE16A));
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+    let cfg = AcceleratorConfig::engn();
+    for &kind in PartitionerKind::all() {
+        for k in [1usize, 2, 4, 8] {
+            let parts = PartitionedGraph::build(g.clone(), kind, k);
+            let bulk = MultiChipSession::new(&cfg, &parts, &model).run("PB");
+            let db = MultiChipSession::new(&cfg, &parts, &model)
+                .with_overlap(OverlapMode::DoubleBuffer)
+                .run("PB");
+            let tag = format!("{} k={k}", kind.name());
+            assert!(
+                db.total_cycles() <= bulk.total_cycles(),
+                "{tag}: overlapped {} > bulk {}",
+                db.total_cycles(),
+                bulk.total_cycles()
+            );
+            for (l, (&c, &f)) in db.layer_comm_cycles.iter().zip(&bulk.layer_comm_cycles).enumerate()
+            {
+                assert!(c <= f, "{tag} layer {l}: charged {c} > full {f}");
+            }
+            for (ra, rb) in db.per_chip.iter().zip(&bulk.per_chip) {
+                assert_reports_identical(ra, rb);
+            }
+            if k == 1 {
+                assert_eq!(db.total_cycles(), bulk.total_cycles(), "{tag}");
+                assert_eq!(db.comm_hidden_cycles(), 0.0, "{tag}");
+            }
+        }
+    }
+}
+
+/// Acceptance pin: on the Reddit pair (GS-Pool, the paper's Table-5
+/// pairing) at K = 8, double-buffered overlap hides at least 30% of the
+/// bulk-synchronous communication stall.
+#[test]
+fn double_buffer_recovers_comm_stall_on_reddit_k8() {
+    let spec = datasets::by_code("RD").unwrap();
+    let g = Arc::new(spec.instantiate(ScalePolicy::Factor(256), 0xE16A));
+    let model = GnnModel::for_dataset(GnnKind::GsPool, &spec);
+    let cfg = AcceleratorConfig::engn();
+    let parts = PartitionedGraph::build(g, PartitionerKind::Degree, 8);
+    let r = MultiChipSession::new(&cfg, &parts, &model)
+        .with_overlap(OverlapMode::DoubleBuffer)
+        .run("RD");
+    assert!(r.comm_hidden_cycles() > 0.0);
+    assert!(
+        r.comm_recovered_fraction() >= 0.30,
+        "recovered only {:.1}% of the comm stall",
+        100.0 * r.comm_recovered_fraction()
+    );
+}
+
+/// Acceptance pin: the streaming LDG partitioner's neighbor-affinity
+/// placement cuts strictly fewer edges than the degree-aware greedy
+/// balancer on every skewed Table-5 social graph at K ∈ {4, 8} — the
+/// balancer optimizes load alone, LDG trades a bounded load slack
+/// (hard capacity ⌈n/k⌉) for locality.
+#[test]
+fn ldg_cuts_fewer_edges_than_degree_on_every_social_graph() {
+    for spec in datasets::all().iter().filter(|d| {
+        matches!(d.group, engn::graph::datasets::DatasetGroup::Social)
+    }) {
+        let g = Arc::new(spec.instantiate(ScalePolicy::Factor(512), 7));
+        for k in [4usize, 8] {
+            let degree = PartitionedGraph::build(g.clone(), PartitionerKind::Degree, k);
+            let ldg = PartitionedGraph::build(g.clone(), PartitionerKind::Ldg, k);
+            assert!(
+                ldg.cut_ratio() < degree.cut_ratio(),
+                "{} k={k}: ldg cut {:.4} !< degree cut {:.4}",
+                spec.code,
+                ldg.cut_ratio(),
+                degree.cut_ratio()
+            );
+        }
+    }
 }
 
 /// Determinism: the chip fan-out collects per-chip reports by index, so

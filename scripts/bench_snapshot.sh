@@ -14,7 +14,9 @@ BENCH_JSON="$(pwd)/BENCH_hotpath.json" \
 # The snapshot must track the scale-out, dataflow and out-of-core
 # planes: fail loudly if the partition/scaleout/dataflow/mem/csr groups
 # ever drop out of the hotpath bench.
-for group in "partition:range" "partition:hash" "partition:degree" "scaleout:4chip" \
+for group in "partition:range" "partition:hash" "partition:degree" \
+             "partition:ldg" "partition:fennel" \
+             "scaleout:4chip" "scaleout:overlap" \
              "dataflow:spmm" "dataflow:hash" "dataflow:adaptive" \
              "mem:spill" "csr:open"; do
   grep -q "\"$group\"" BENCH_hotpath.json \
