@@ -29,7 +29,11 @@
 //!   (DESIGN.md §10) — vs `sim:gcn:PB`, this is the plane's overhead;
 //! * `csr:open` — reopening a persisted 1 M-edge binary CSR file and
 //!   preparing it for simulation (`open_csr` + `from_csr`), the warm
-//!   path `engn run --csr` takes instead of re-synthesizing.
+//!   path `engn run --csr` takes instead of re-synthesizing;
+//! * `obs:trace` — the same PubMed session via `run_traced` (per-tile
+//!   span assembly + Chrome trace-event JSON render) — vs `sim:gcn:PB`
+//!   this is the whole observability-plane overhead of `--trace`, and
+//!   the untraced run must cost exactly nothing extra.
 //!
 //! Set `BENCH_JSON=/path/to/BENCH_hotpath.json` (or run
 //! `scripts/bench_snapshot.sh`) to also write every group's median
@@ -226,6 +230,21 @@ fn main() {
     spill_cfg.mem.tiers[0].capacity_bytes = 1024.0 * 1024.0;
     let r = bench("mem:spill", budget, || {
         black_box(SimSession::new(&spill_cfg, &prepared, &model).run("PB"));
+    });
+    record(&r, &mut medians);
+    println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);
+
+    section("observability: traced run + Chrome JSON render (GCN on PubMed)");
+    // Same prepared graph and model as sim:gcn:PB: the delta between
+    // the two groups is what `engn run --trace` pays — deterministic
+    // span assembly over every (layer, stage, tile) plus the trace-event
+    // JSON serialization.
+    let trace_cfg = AcceleratorConfig::engn();
+    let r = bench("obs:trace", budget, || {
+        let (report, trace) =
+            SimSession::new(&trace_cfg, &prepared, &model).run_traced("PB");
+        black_box(report);
+        black_box(trace.to_chrome_json().to_string_pretty());
     });
     record(&r, &mut medians);
     println!("    -> {:.1} M simulated edges/s", r.per_second(edges) / 1e6);

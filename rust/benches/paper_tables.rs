@@ -1,6 +1,8 @@
 //! End-to-end benches: one timed entry per paper table/figure — how long
 //! the harness takes to regenerate each experiment (at bench scaling),
 //! plus the simulator's end-to-end rate on each Table-5 workload class.
+//! `ALL_IDS` drives the loop, so new experiments (e.g. the `trace`
+//! per-stage table) are timed automatically.
 //!
 //! Run with `cargo bench --offline` (or `make bench`). The *contents* of
 //! the tables are produced by `engn bench --exp all`; this binary times

@@ -944,7 +944,7 @@ mod tests {
         for seed in 0..(graph_cache::CAP as u64 + 3) {
             let mut job = SimJob::new(GnnKind::Gcn, "CA");
             job.seed = seed;
-            be.run_job(&job).expect("sim ok");
+            be.run_job(&job, 1).expect("sim ok");
         }
         assert!(graph_cache::cached_count() <= graph_cache::CAP);
     }

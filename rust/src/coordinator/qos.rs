@@ -165,6 +165,8 @@ pub struct ScaleEvent {
 pub struct Autoscaler {
     cfg: AutoscaleConfig,
     last_change_s: Option<f64>,
+    scale_ups: u64,
+    scale_downs: u64,
 }
 
 impl Autoscaler {
@@ -175,11 +177,20 @@ impl Autoscaler {
         Self {
             cfg,
             last_change_s: None,
+            scale_ups: 0,
+            scale_downs: 0,
         }
     }
 
     pub fn config(&self) -> &AutoscaleConfig {
         &self.cfg
+    }
+
+    /// Cumulative (scale-up, scale-down) decisions this control law has
+    /// issued — the observability-plane counterpart of the per-event
+    /// [`ScaleEvent`] trail.
+    pub fn decisions(&self) -> (u64, u64) {
+        (self.scale_ups, self.scale_downs)
     }
 
     /// The new active-worker target, or `None` to hold. At most one
@@ -194,10 +205,12 @@ impl Autoscaler {
         }
         if queue_depth >= self.cfg.high_depth && active < self.cfg.max_workers {
             self.last_change_s = Some(now_s);
+            self.scale_ups += 1;
             return Some(active + 1);
         }
         if queue_depth <= self.cfg.low_depth && active > self.cfg.min_workers {
             self.last_change_s = Some(now_s);
+            self.scale_downs += 1;
             return Some(active - 1);
         }
         None
@@ -256,6 +269,8 @@ mod tests {
         assert_eq!(a.decide(0.4, 50, 3), Some(4));
         // Clamped at max_workers.
         assert_eq!(a.decide(0.6, 50, 4), None);
+        // Held/clamped calls are not decisions; three resizes were.
+        assert_eq!(a.decisions(), (3, 0));
     }
 
     #[test]
@@ -275,6 +290,7 @@ mod tests {
         assert_eq!(a.decide(0.3, 0, 2), Some(1));
         // Clamped at min_workers.
         assert_eq!(a.decide(0.5, 0, 1), None);
+        assert_eq!(a.decisions(), (0, 2));
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use super::batcher::{BatchConfig, PendingQueues};
 use super::engine::{Backends, JobOutput, JobPayload};
 use super::qos::{AutoscaleConfig, Autoscaler, Priority, QosConfig, ScaleEvent, NUM_PRIORITIES};
+use crate::obs::{self, Histogram, SpanGuard};
 use crate::runtime::HostTensor;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -278,10 +279,11 @@ impl From<BatchConfig> for ServiceConfig {
 }
 
 /// Most recent samples kept per batch key per worker. Totals
-/// (`count`/`errors`) stay exact; the sample vectors are bounded ring
-/// windows so a long-running service doesn't grow memory per request
-/// and snapshots don't sort unbounded history.
-const MAX_SAMPLES: usize = 4096;
+/// (`count`/`errors`) stay exact; the sample histograms keep a bounded
+/// ring window of this many values (`obs::metrics::MAX_SAMPLES`) so a
+/// long-running service doesn't grow memory per request and snapshots
+/// don't sort unbounded history.
+const MAX_SAMPLES: usize = crate::obs::metrics::MAX_SAMPLES;
 
 /// Per-key accumulator. Each worker owns one map privately and only
 /// the metrics snapshot ever touches another thread's copy, so job
@@ -291,18 +293,18 @@ struct KeyMetrics {
     count: u64,
     errors: u64,
     /// Per-job: execution time of the batch that served the job
-    /// (ring window of the last [`MAX_SAMPLES`]).
-    exec_s: Vec<f64>,
+    /// (ring window of the last [`MAX_SAMPLES`] inside the histogram).
+    exec_s: Histogram,
     /// Per-job: time from enqueue to batch start (same window).
-    wait_s: Vec<f64>,
+    wait_s: Histogram,
     /// Per-*batch* sizes (one entry per formed batch, NOT per job —
     /// recording per job overweights large batches).
     batch_sizes: Vec<usize>,
     /// Per-*batch* execution times (throughput denominators), aligned
     /// slot-for-slot with `batch_sizes`.
     batch_exec_s: Vec<f64>,
-    /// Ring cursors for the per-job and per-batch windows.
-    req_cursor: usize,
+    /// Ring cursor for the per-batch window (the per-job windows ride
+    /// inside the histograms).
     batch_cursor: usize,
 }
 
@@ -324,15 +326,8 @@ impl KeyMetrics {
         if is_err {
             self.errors += 1;
         }
-        if self.exec_s.len() < MAX_SAMPLES {
-            self.exec_s.push(exec_s);
-            self.wait_s.push(wait_s);
-        } else {
-            let slot = self.req_cursor % MAX_SAMPLES;
-            self.exec_s[slot] = exec_s;
-            self.wait_s[slot] = wait_s;
-        }
-        self.req_cursor += 1;
+        self.exec_s.record(exec_s);
+        self.wait_s.record(wait_s);
     }
 }
 
@@ -344,8 +339,7 @@ struct PrioMetrics {
     count: u64,
     errors: u64,
     /// Per-job total latency (ring window of the last [`MAX_SAMPLES`]).
-    latency_s: Vec<f64>,
-    cursor: usize,
+    latency_s: Histogram,
 }
 
 impl PrioMetrics {
@@ -354,12 +348,7 @@ impl PrioMetrics {
         if is_err {
             self.errors += 1;
         }
-        if self.latency_s.len() < MAX_SAMPLES {
-            self.latency_s.push(latency_s);
-        } else {
-            self.latency_s[self.cursor % MAX_SAMPLES] = latency_s;
-        }
-        self.cursor += 1;
+        self.latency_s.record(latency_s);
     }
 }
 
@@ -424,38 +413,64 @@ pub struct KeyStats {
     pub throughput_rps: f64,
 }
 
-/// Ceil nearest-rank percentile: the smallest element with at least a
-/// `p` fraction of the sample at or below it. (`.round()` here returned
-/// the max for some counts and a below-p element for others.) The
-/// round-to-nearest guard absorbs f64 noise: `0.95 * 20` lands a hair
-/// above 19 and must not ceil to 20.
-pub(crate) fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
+impl MetricsSnapshot {
+    /// Render the snapshot in Prometheus text exposition format
+    /// (`engn serve`/`loadgen --metrics-out`). Projects the snapshot
+    /// through a fresh [`obs::Registry`] so key/class series share the
+    /// exposition renderer (and its name sanitation) with every other
+    /// metrics surface; output is deterministic up to the measured
+    /// values (`BTreeMap`-sorted series).
+    pub fn to_prometheus(&self) -> String {
+        let reg = obs::Registry::new();
+        reg.add("engn_requests_total", self.total_requests as f64);
+        reg.add("engn_rejected_total", self.rejected as f64);
+        reg.add("engn_expired_total", self.expired as f64);
+        reg.add("engn_cancelled_total", self.cancelled as f64);
+        reg.add("engn_scale_events_total", self.scale_events.len() as f64);
+        reg.gauge("engn_queue_depth", self.queue_depth as f64);
+        reg.gauge("engn_workers", self.workers as f64);
+        reg.gauge("engn_active_workers", self.active_workers as f64);
+        for (key, s) in &self.per_key {
+            let series = |m: &str| format!("{m}{{key=\"{key}\"}}");
+            reg.add(&series("engn_key_requests_total"), s.count as f64);
+            reg.add(&series("engn_key_errors_total"), s.errors as f64);
+            reg.gauge(&series("engn_key_exec_seconds_mean"), s.mean_exec_s);
+            reg.gauge(&series("engn_key_exec_seconds_p95"), s.p95_exec_s);
+            reg.gauge(&series("engn_key_wait_seconds_mean"), s.mean_wait_s);
+            reg.gauge(&series("engn_key_batch_mean"), s.mean_batch);
+            reg.gauge(&series("engn_key_throughput_rps"), s.throughput_rps);
+        }
+        for p in &self.per_priority {
+            let series = |m: &str| format!("{m}{{class=\"{}\"}}", p.priority.name());
+            reg.add(&series("engn_class_requests_total"), p.count as f64);
+            reg.add(&series("engn_class_errors_total"), p.errors as f64);
+            reg.add(&series("engn_class_expired_total"), p.expired as f64);
+            reg.add(&series("engn_class_cancelled_total"), p.cancelled as f64);
+            reg.add(&series("engn_class_rejected_total"), p.rejected as f64);
+            reg.gauge(&series("engn_class_latency_seconds_p50"), p.p50_latency_s);
+            reg.gauge(&series("engn_class_latency_seconds_p99"), p.p99_latency_s);
+            reg.gauge(&series("engn_class_latency_seconds_p999"), p.p999_latency_s);
+        }
+        obs::prometheus(&reg.snapshot())
     }
-    let exact = p * sorted.len() as f64;
-    let near = exact.round();
-    let rank = if (exact - near).abs() < 1e-9 {
-        near
-    } else {
-        exact.ceil()
-    };
-    sorted[(rank as usize).clamp(1, sorted.len()) - 1]
 }
 
+/// Ceil nearest-rank percentile — now owned by the observability plane
+/// (`obs::metrics`); re-exported because this module's snapshot math
+/// historically named it through this path.
+pub use crate::obs::metrics::percentile;
+
 fn aggregate(am: &KeyMetrics) -> KeyStats {
-    let mut exec_sorted = am.exec_s.clone();
-    exec_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let batch_exec_total: f64 = am.batch_exec_s.iter().sum();
-    // Means and throughput are over the retained sample window (the
+    // Means and percentiles are over the retained sample window (the
     // full history until it exceeds MAX_SAMPLES); count/errors are
     // exact lifetime totals.
     KeyStats {
         count: am.count,
         errors: am.errors,
-        mean_exec_s: am.exec_s.iter().sum::<f64>() / am.exec_s.len().max(1) as f64,
-        p95_exec_s: percentile(&exec_sorted, 0.95),
-        mean_wait_s: am.wait_s.iter().sum::<f64>() / am.wait_s.len().max(1) as f64,
+        mean_exec_s: am.exec_s.mean(),
+        p95_exec_s: am.exec_s.quantile(0.95),
+        mean_wait_s: am.wait_s.mean(),
         mean_batch: am.batch_sizes.iter().sum::<usize>() as f64
             / am.batch_sizes.len().max(1) as f64,
         throughput_rps: if batch_exec_total > 0.0 {
@@ -467,14 +482,14 @@ fn aggregate(am: &KeyMetrics) -> KeyStats {
 }
 
 /// Merge a worker's accumulator into a snapshot-local one. The merged
-/// sample vectors may exceed [`MAX_SAMPLES`] (up to workers × window);
+/// sample windows may exceed [`MAX_SAMPLES`] (up to workers × window);
 /// that's fine — the merge target is never pushed to through the ring
 /// path, and [`aggregate`] handles any length.
 fn merge_into(dst: &mut KeyMetrics, src: &KeyMetrics) {
     dst.count += src.count;
     dst.errors += src.errors;
-    dst.exec_s.extend_from_slice(&src.exec_s);
-    dst.wait_s.extend_from_slice(&src.wait_s);
+    dst.exec_s.merge(&src.exec_s);
+    dst.wait_s.merge(&src.wait_s);
     dst.batch_sizes.extend_from_slice(&src.batch_sizes);
     dst.batch_exec_s.extend_from_slice(&src.batch_exec_s);
 }
@@ -698,6 +713,17 @@ impl InferenceService {
         priority: Priority,
         deadline: Option<Instant>,
     ) -> Result<Ticket, SubmitError> {
+        // One relaxed atomic load when wall tracing is off; the key
+        // string is only built when a span is actually recorded.
+        let _span = if obs::wall_trace_enabled() {
+            let mut s = SpanGuard::begin("submit", payload.batch_key(), "serve");
+            if let Some(s) = s.as_mut() {
+                s.arg("class", priority.name());
+            }
+            s
+        } else {
+            None
+        };
         let slot = ResponseSlot::new();
         let mut st = self.shared.state.lock().unwrap();
         if st.stop {
@@ -741,7 +767,7 @@ impl InferenceService {
             for (dst, src) in prio_merged.iter_mut().zip(m.prios.iter()) {
                 dst.count += src.count;
                 dst.errors += src.errors;
-                dst.latency_s.extend_from_slice(&src.latency_s);
+                dst.latency_s.merge(&src.latency_s);
             }
         }
         let mut per_key = HashMap::new();
@@ -754,8 +780,6 @@ impl InferenceService {
             .iter()
             .map(|&p| {
                 let pm = &prio_merged[p.rank()];
-                let mut sorted = pm.latency_s.clone();
-                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
                 PriorityStats {
                     priority: p,
                     count: pm.count,
@@ -763,11 +787,10 @@ impl InferenceService {
                     expired: self.shed.expired_by_prio[p.rank()].load(Ordering::Relaxed),
                     cancelled: self.shed.cancelled_by_prio[p.rank()].load(Ordering::Relaxed),
                     rejected: self.rejected_by_prio[p.rank()].load(Ordering::Relaxed),
-                    mean_latency_s: pm.latency_s.iter().sum::<f64>()
-                        / pm.latency_s.len().max(1) as f64,
-                    p50_latency_s: percentile(&sorted, 0.50),
-                    p99_latency_s: percentile(&sorted, 0.99),
-                    p999_latency_s: percentile(&sorted, 0.999),
+                    mean_latency_s: pm.latency_s.mean(),
+                    p50_latency_s: pm.latency_s.quantile(0.50),
+                    p99_latency_s: pm.latency_s.quantile(0.99),
+                    p999_latency_s: pm.latency_s.quantile(0.999),
                 }
             })
             .collect();
@@ -1062,7 +1085,37 @@ fn serve_batch(
         metas.push((job.id, job.enqueued, job.slot));
         payloads.push(job.payload);
     }
+    let tracing = obs::wall_trace_enabled();
+    if tracing {
+        // Queue spans are retro-dated: each job waited from its enqueue
+        // until this batch's formation scan.
+        for (id, enqueued, _) in &metas {
+            obs::wall_span(
+                "queue",
+                format!("job {id}"),
+                "serve",
+                *enqueued,
+                now,
+                vec![("key", key.clone())],
+            );
+        }
+    }
     let started = Instant::now();
+    if tracing {
+        obs::wall_span(
+            "batch-form",
+            format!("{key} x{batch_size}"),
+            "serve",
+            now,
+            started,
+            vec![("class", priority.name().to_string())],
+        );
+    }
+    let mut exec_span = if tracing {
+        SpanGuard::begin("execute", format!("{key} x{batch_size}"), "serve")
+    } else {
+        None
+    };
     let mut results: Vec<Result<JobOutput, String>> = match backends {
         Ok(b) => match b.get(kind) {
             // catch_unwind upholds the answered-once guarantee: a
@@ -1085,6 +1138,15 @@ fn serve_batch(
         Err(e) => vec![Err(format!("backends failed to load: {e}")); batch_size],
     };
     let exec_time = started.elapsed();
+    if let Some(s) = exec_span.as_mut() {
+        s.arg("batch", batch_size.to_string());
+    }
+    drop(exec_span);
+    let _reply_span = if tracing {
+        SpanGuard::begin("reply", format!("{key} x{batch_size}"), "serve")
+    } else {
+        None
+    };
     if results.len() != batch_size {
         // Contract violation: job↔result alignment can no longer be
         // trusted in either direction, so answer every member with the
@@ -1536,14 +1598,16 @@ mod tests {
     /// 1.6 — the old per-request recording reported 2.0.
     #[test]
     fn mean_batch_weighs_batches_not_requests() {
-        let am = KeyMetrics {
-            count: 8,
-            exec_s: vec![0.01; 8],
-            wait_s: vec![0.0; 8],
-            batch_sizes: vec![4, 1, 1, 1, 1],
-            batch_exec_s: vec![0.01; 5],
-            ..Default::default()
-        };
+        let mut am = KeyMetrics::default();
+        am.record_batch(4, 0.01);
+        for _ in 0..4 {
+            am.record_request(0.01, 0.0, false);
+        }
+        for _ in 0..4 {
+            am.record_batch(1, 0.01);
+            am.record_request(0.01, 0.0, false);
+        }
+        assert_eq!(am.count, 8);
         let s = aggregate(&am);
         assert!((s.mean_batch - 1.6).abs() < 1e-12, "mean_batch {}", s.mean_batch);
         // Throughput uses batch execution time: 8 requests / 0.05 s.
@@ -1571,8 +1635,9 @@ mod tests {
         assert_eq!(percentile(&[7.0], 0.95), 7.0);
     }
 
-    /// The sample vectors are ring windows: totals keep counting, memory
-    /// stops growing at MAX_SAMPLES, oldest samples are overwritten.
+    /// The sample windows are rings: totals keep counting, memory
+    /// stops growing at MAX_SAMPLES, oldest samples are overwritten —
+    /// the histogram migration must preserve the exact ring rule.
     #[test]
     fn sample_windows_are_bounded() {
         let mut am = KeyMetrics::default();
@@ -1580,41 +1645,52 @@ mod tests {
             am.record_batch(1, i as f64);
             am.record_request(i as f64, 0.0, false);
         }
-        assert_eq!(am.exec_s.len(), MAX_SAMPLES);
-        assert_eq!(am.wait_s.len(), MAX_SAMPLES);
+        assert_eq!(am.exec_s.window().len(), MAX_SAMPLES);
+        assert_eq!(am.wait_s.window().len(), MAX_SAMPLES);
         assert_eq!(am.batch_exec_s.len(), MAX_SAMPLES);
         assert_eq!(am.count, (MAX_SAMPLES + 10) as u64);
+        // Exact observation count survives the window wrap.
+        assert_eq!(am.exec_s.count(), (MAX_SAMPLES + 10) as u64);
         // Slots 0..10 hold the newest samples (wrapped), 10.. the rest.
-        assert_eq!(am.exec_s[0], MAX_SAMPLES as f64);
-        assert_eq!(am.exec_s[9], (MAX_SAMPLES + 9) as f64);
-        assert_eq!(am.exec_s[10], 10.0);
+        assert_eq!(am.exec_s.window()[0], MAX_SAMPLES as f64);
+        assert_eq!(am.exec_s.window()[9], (MAX_SAMPLES + 9) as f64);
+        assert_eq!(am.exec_s.window()[10], 10.0);
     }
 
     #[test]
     fn merge_combines_worker_accumulators() {
-        let mut a = KeyMetrics {
-            count: 3,
-            errors: 1,
-            exec_s: vec![0.1, 0.2, 0.3],
-            wait_s: vec![0.0; 3],
-            batch_sizes: vec![3],
-            batch_exec_s: vec![0.3],
-            ..Default::default()
-        };
-        let b = KeyMetrics {
-            count: 2,
-            exec_s: vec![0.4, 0.5],
-            wait_s: vec![0.0; 2],
-            batch_sizes: vec![2],
-            batch_exec_s: vec![0.5],
-            ..Default::default()
-        };
+        let mut a = KeyMetrics::default();
+        a.record_batch(3, 0.3);
+        a.record_request(0.1, 0.0, true);
+        a.record_request(0.2, 0.0, false);
+        a.record_request(0.3, 0.0, false);
+        let mut b = KeyMetrics::default();
+        b.record_batch(2, 0.5);
+        b.record_request(0.4, 0.0, false);
+        b.record_request(0.5, 0.0, false);
         merge_into(&mut a, &b);
         assert_eq!(a.count, 5);
         assert_eq!(a.errors, 1);
-        assert_eq!(a.exec_s.len(), 5);
+        assert_eq!(a.exec_s.window(), &[0.1, 0.2, 0.3, 0.4, 0.5]);
         assert_eq!(a.batch_sizes, vec![3, 2]);
         let s = aggregate(&a);
         assert!((s.mean_batch - 2.5).abs() < 1e-12);
+        assert_eq!(s.p95_exec_s, 0.5);
+    }
+
+    /// The Prometheus exposition of a live snapshot carries the
+    /// headline series the CI smoke greps for.
+    #[test]
+    fn snapshot_exposition_has_headline_series() {
+        let svc = service(0, None);
+        for _ in 0..5 {
+            let _ = svc.infer("gcn", vec![]).expect("accepted");
+        }
+        let text = svc.metrics().to_prometheus();
+        assert!(text.contains("# TYPE engn_requests_total counter\n"), "{text}");
+        assert!(text.contains("engn_requests_total 5\n"), "{text}");
+        assert!(text.contains("engn_key_requests_total{key=\"tensor:gcn\"} 5\n"), "{text}");
+        assert!(text.contains("engn_class_requests_total{class=\"batch\"} 5\n"), "{text}");
+        svc.shutdown();
     }
 }

@@ -32,6 +32,10 @@
 //!   traffic, per-priority latency reports and saturation sweeps;
 //! * [`xla`] — offline stub of the PJRT bindings the runtime codes
 //!   against (swap in the real `xla` crate to execute artifacts);
+//! * [`obs`] — the observability plane (DESIGN.md §13): deterministic
+//!   span tracing on sim-cycle and wall clocks, a thread-sharded
+//!   metrics registry with log-bucketed histograms, and Chrome-trace /
+//!   Prometheus export surfaces;
 //! * [`partition`] — scale-out graph partitioning: [`partition::Partitioner`]
 //!   strategies (range / hash / degree-aware) producing the per-chip
 //!   [`partition::PartitionedGraph`] the multi-chip simulator
@@ -46,6 +50,7 @@ pub mod graph;
 pub mod loadgen;
 pub mod mem;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod report;
 pub mod runtime;

@@ -35,12 +35,12 @@ pub mod arrivals;
 pub use arrivals::ArrivalProcess;
 
 use crate::baselines::PlatformId;
-use crate::coordinator::service::percentile;
 use crate::coordinator::{
     CostJob, InferenceService, JobError, JobPayload, Priority, SimJob, SubmitError, Ticket,
     NUM_PRIORITIES,
 };
 use crate::model::GnnKind;
+use crate::obs::{self, Histogram};
 use crate::util::json::Json;
 use crate::util::rng::{SplitMix64, Xoshiro256StarStar};
 use std::sync::Mutex;
@@ -203,7 +203,10 @@ fn pick_weighted(rng: &mut Xoshiro256StarStar, weights: &[u32]) -> usize {
     weights.len() - 1
 }
 
-/// Per-class outcome tally plus raw latencies (service-side seconds).
+/// Per-class outcome tally plus the latency distribution
+/// (service-side seconds), accumulated into an
+/// [`obs::Histogram`](Histogram) so quantiles, buckets and the
+/// Prometheus exposition all come from one implementation.
 #[derive(Debug, Clone, Default)]
 struct PrioAccum {
     busy: u64,
@@ -211,7 +214,7 @@ struct PrioAccum {
     failed: u64,
     expired: u64,
     cancelled: u64,
-    latencies: Vec<f64>,
+    latencies: Histogram,
 }
 
 impl PrioAccum {
@@ -221,7 +224,7 @@ impl PrioAccum {
         self.failed += other.failed;
         self.expired += other.expired;
         self.cancelled += other.cancelled;
-        self.latencies.extend_from_slice(&other.latencies);
+        self.latencies.merge(&other.latencies);
     }
 
     fn attempts(&self) -> u64 {
@@ -247,6 +250,9 @@ pub struct PriorityLoadStats {
     pub p99_latency_s: f64,
     pub p999_latency_s: f64,
     pub max_latency_s: f64,
+    /// The full latency distribution the quantiles above were read
+    /// from; the Prometheus exposition renders its log₂ buckets.
+    pub latency: Histogram,
 }
 
 /// What a loadgen run measured. The *counts* here are deterministic in
@@ -271,6 +277,12 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
+    /// Quantiles are nearest-rank reads of the per-class
+    /// [`Histogram`] windows at 0.50 / 0.99 / 0.999 on the fraction
+    /// scale. (Before the histogram migration this function passed the
+    /// *percent*-scale values 50.0/99.0/99.9 into the fraction-scale
+    /// percentile, whose rank clamp silently collapsed every reported
+    /// quantile to the class maximum.)
     fn from_accums(plan: &LoadPlan, accums: &[PrioAccum; NUM_PRIORITIES], wall_s: f64) -> Self {
         let mut per_priority = Vec::with_capacity(NUM_PRIORITIES);
         let mut offered_total = 0u64;
@@ -278,13 +290,7 @@ impl LoadReport {
         let mut completed_total = 0u64;
         for (i, &priority) in Priority::all().iter().enumerate() {
             let a = &accums[i];
-            let mut lat = a.latencies.clone();
-            lat.sort_by(|x, y| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal));
-            let mean = if lat.is_empty() {
-                0.0
-            } else {
-                lat.iter().sum::<f64>() / lat.len() as f64
-            };
+            let h = &a.latencies;
             offered_total += a.attempts();
             shed_total += a.busy + a.expired;
             completed_total += a.completed;
@@ -296,11 +302,12 @@ impl LoadReport {
                 busy: a.busy,
                 expired: a.expired,
                 cancelled: a.cancelled,
-                mean_latency_s: mean,
-                p50_latency_s: percentile(&lat, 50.0),
-                p99_latency_s: percentile(&lat, 99.0),
-                p999_latency_s: percentile(&lat, 99.9),
-                max_latency_s: lat.last().copied().unwrap_or(0.0),
+                mean_latency_s: h.mean(),
+                p50_latency_s: h.quantile(0.50),
+                p99_latency_s: h.quantile(0.99),
+                p999_latency_s: h.quantile(0.999),
+                max_latency_s: h.max(),
+                latency: h.clone(),
             });
         }
         LoadReport {
@@ -392,6 +399,44 @@ impl LoadReport {
             ("per_priority", Json::obj(prio_pairs)),
         ])
     }
+
+    /// Prometheus text exposition for `engn loadgen --metrics-out`:
+    /// run-level gauges, per-class outcome counters, and the full
+    /// `engn_loadgen_latency_seconds{class="..."}` histograms.
+    pub fn to_prometheus(&self) -> String {
+        let reg = obs::Registry::new();
+        reg.add("engn_loadgen_requests_total", self.requests as f64);
+        reg.gauge("engn_loadgen_offered_rps", self.offered_rps);
+        reg.gauge("engn_loadgen_achieved_rps", self.achieved_rps);
+        reg.gauge("engn_loadgen_shed_rate", self.shed_rate);
+        reg.gauge("engn_loadgen_wall_seconds", self.wall_s);
+        let shard = reg.shard();
+        shard.with(|s| {
+            for p in &self.per_priority {
+                let class = p.priority.name();
+                for (outcome, n) in [
+                    ("offered", p.offered),
+                    ("completed", p.completed),
+                    ("busy", p.busy),
+                    ("expired", p.expired),
+                    ("failed", p.failed),
+                    ("cancelled", p.cancelled),
+                ] {
+                    s.add(
+                        &format!("engn_loadgen_{outcome}_total{{class=\"{class}\"}}"),
+                        n as f64,
+                    );
+                }
+                if !p.latency.is_empty() {
+                    s.histograms.insert(
+                        format!("engn_loadgen_latency_seconds{{class=\"{class}\"}}"),
+                        p.latency.clone(),
+                    );
+                }
+            }
+        });
+        obs::prometheus(&reg.snapshot())
+    }
 }
 
 /// Drive the plan against a live service (dispatches on
@@ -409,7 +454,7 @@ fn record_response(acc: &mut PrioAccum, ticket: &Ticket) {
     match resp.result {
         Ok(_) => {
             acc.completed += 1;
-            acc.latencies.push(latency);
+            acc.latencies.record(latency);
         }
         Err(JobError::Expired) => acc.expired += 1,
         Err(JobError::Cancelled) => acc.cancelled += 1,
@@ -635,6 +680,38 @@ mod tests {
         let text = plan.render_schedule();
         assert_eq!(text.lines().count(), 50);
         assert!(text.lines().all(|l| l.split_whitespace().count() >= 4));
+    }
+
+    #[test]
+    fn report_quantiles_come_from_the_histogram() {
+        let plan = LoadPlan::build(&cfg(10));
+        let mut accums: [PrioAccum; NUM_PRIORITIES] = Default::default();
+        // Class 0 (interactive): latencies 1ms..=100ms.
+        for i in 1..=100u32 {
+            accums[0].completed += 1;
+            accums[0].latencies.record(i as f64 / 1000.0);
+        }
+        accums[1].busy += 4;
+        let report = LoadReport::from_accums(&plan, &accums, 1.0);
+        let s = &report.per_priority[0];
+        // Nearest-rank on the fraction scale: three *distinct* values,
+        // not three copies of the max (the pre-histogram bug).
+        assert_eq!(s.p50_latency_s, 0.050);
+        assert_eq!(s.p99_latency_s, 0.099);
+        assert_eq!(s.p999_latency_s, 0.100);
+        assert_eq!(s.max_latency_s, 0.100);
+        assert!((s.mean_latency_s - 0.0505).abs() < 1e-12);
+        // Empty classes read as zeros, exactly as before.
+        assert_eq!(report.per_priority[2].p99_latency_s, 0.0);
+
+        let expo = report.to_prometheus();
+        assert!(expo.contains("# TYPE engn_loadgen_latency_seconds histogram\n"));
+        assert!(expo.contains("engn_loadgen_latency_seconds_count{class=\"interactive\"} 100\n"));
+        assert!(expo.contains("engn_loadgen_completed_total{class=\"interactive\"} 100\n"));
+        assert!(expo.contains("engn_loadgen_busy_total{class=\"batch\"} 4\n"));
+        assert!(expo.contains("engn_loadgen_requests_total 10\n"));
+        // Busy-only classes carry no latency series.
+        assert!(!expo.contains("engn_loadgen_latency_seconds_count{class=\"batch\"}"));
     }
 
     #[test]

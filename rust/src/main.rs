@@ -4,13 +4,17 @@
 //!   datasets                         list the Table-5 dataset suite
 //!   run    --model M --dataset D [--dataflow rer|dense|spmm|hash|adaptive]
 //!          [--mem hbm4|hbm16|edge1|unbounded] [--csr FILE]
-//!          [--explain]              simulate one inference pass;
+//!          [--explain] [--trace FILE]
+//!                                      simulate one inference pass;
 //!                                      --explain prints the per-layer
 //!                                      plan with working-set / spill
 //!                                      columns (and, under adaptive,
 //!                                      why each dataflow was chosen);
 //!                                      --csr opens a binary CSR file
-//!                                      written by `engn synth`
+//!                                      written by `engn synth`;
+//!                                      --trace writes the run's
+//!                                      deterministic cycle trace as
+//!                                      Chrome trace-event JSON
 //!   synth  [--dataset D [--full] | --vertices V --edges E]
 //!          [--seed S] [--chunk C] [--out FILE]
 //!                                      chunked pool-parallel R-MAT
@@ -19,12 +23,15 @@
 //!   bench  --exp <id|all> [--out D]  regenerate paper tables/figures
 //!   infer  --artifacts DIR [--name N]  functional inference via PJRT
 //!   serve  --artifacts DIR [--requests N] [--workers W] [--queue C]
-//!          [--deadline-ms D]           serving demo (bounded intake,
+//!          [--deadline-ms D] [--metrics-out FILE]
+//!                                      serving demo (bounded intake,
 //!                                      multi-worker batched execution,
-//!                                      deadline-aware shedding)
+//!                                      deadline-aware shedding);
+//!                                      --metrics-out writes the
+//!                                      Prometheus text exposition
 //!   whatif --model M --dataset D [--platforms P,..] [--workers W]
 //!          [--dataflow rer|dense|spmm|hash|adaptive] [--mem PRESET]
-//!          [--explain]
+//!          [--explain] [--trace FILE]
 //!                                      capacity planning through the
 //!                                      serving coordinator: sim + cost
 //!                                      jobs on the analytic backends;
@@ -35,7 +42,7 @@
 //!            [--topology ring|all2all] [--link-gbps G]
 //!            [--overlap none|double-buffer] [--pipeline-depth D]
 //!            [--dataflow rer|dense|spmm|hash|adaptive] [--mem PRESET]
-//!            [--explain]
+//!            [--explain] [--trace FILE]
 //!                                      multi-chip EnGN×K simulation
 //!                                      over a partitioned graph;
 //!                                      --overlap double-buffer hides
@@ -48,6 +55,7 @@
 //!           [--autoscale] [--autoscale-max N] [--print-plan]
 //!           [--sweep] [--sweep-threshold T] [--sweep-steps N]
 //!           [--sweep-factor F] [--out FILE]
+//!           [--metrics-out FILE] [--trace FILE]
 //!                                      deterministic open/closed-loop
 //!                                      load generator over the
 //!                                      analytic serving planes, with
@@ -55,7 +63,11 @@
 //!                                      --sweep steps the offered rate
 //!                                      until the shed rate crosses the
 //!                                      threshold and writes the
-//!                                      BENCH_serving.json snapshot
+//!                                      BENCH_serving.json snapshot;
+//!                                      --metrics-out writes the
+//!                                      Prometheus exposition,
+//!                                      --trace the wall-clock serving
+//!                                      span trace
 
 use engn::config::{AcceleratorConfig, DataflowKind, Fidelity};
 use engn::coordinator::{
@@ -64,13 +76,13 @@ use engn::coordinator::{
 };
 use engn::baselines::PlatformId;
 use engn::graph::datasets::{self, ScalePolicy};
-use engn::model::ops::ExecOrder;
 use engn::model::{GnnKind, GnnModel};
+use engn::obs::{print_layer_plans, MemExplain};
 use engn::partition::{PartitionedGraph, PartitionerKind};
 use engn::report::experiments::{self, Eval};
 use engn::runtime::{HostTensor, Runtime};
 use engn::sim::{
-    ChipLink, ChipTopology, LayerPlan, MultiChipSession, OverlapMode, PreparedGraph, SimSession,
+    ChipLink, ChipTopology, MultiChipSession, OverlapMode, PreparedGraph, SimSession,
 };
 use engn::util::rng::Xoshiro256StarStar;
 use engn::util::{fmt_bytes, fmt_time, si};
@@ -121,7 +133,9 @@ fn main() {
                  \u{20}  engn serve --artifacts artifacts --requests 32 --workers 4 --queue 256\n\
                  \u{20}  engn whatif --model gcn --dataset CA --platforms cpu-dgl,gpu-dgl,hygcn\n\
                  \u{20}  engn scaleout --model gcn --dataset RD --chips 4 --partitioner ldg --overlap double-buffer\n\
+                 \u{20}  engn run --model gcn --dataset CA --trace trace.json\n\
                  \u{20}  engn loadgen --rate 200 --requests 400 --workers 2 --inflight 2\n\
+                 \u{20}  engn loadgen --requests 50 --metrics-out metrics.txt\n\
                  \u{20}  engn loadgen --sweep --arrivals bursty --autoscale --out BENCH_serving.json"
             );
             2
@@ -288,7 +302,14 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         };
         let model = GnnModel::for_dataset(kind, &spec);
         let prepared = PreparedGraph::from_csr(csr);
-        let r = SimSession::new(&cfg, &prepared, &model).run("CSR");
+        let session = SimSession::new(&cfg, &prepared, &model);
+        let (r, trace) = match flags.get("trace") {
+            Some(_) => {
+                let (r, t) = session.run_traced("CSR");
+                (r, Some(t))
+            }
+            None => (session.run("CSR"), None),
+        };
         println!(
             "{} on {} ({} vertices, {} edges): {} | {} GOP/s | {:.2e} J | spill {}",
             kind.name(),
@@ -300,6 +321,9 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             r.energy_j(),
             fmt_bytes(r.spilled_bytes())
         );
+        if let (Some(path), Some(trace)) = (flags.get("trace"), &trace) {
+            return write_trace(path, trace);
+        }
         return 0;
     }
     // Real edge-list input: `--edges FILE [--feature-dim F] [--labels L]`.
@@ -376,7 +400,13 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         );
         println!();
     }
-    let r = session.run(spec.code);
+    let (r, trace) = match flags.get("trace") {
+        Some(_) => {
+            let (r, t) = session.run_traced(spec.code);
+            (r, Some(t))
+        }
+        None => (session.run(spec.code), None),
+    };
     println!(
         "\n{} on {} under {} ({:?} fidelity, {} dataflow)",
         kind.name(),
@@ -431,6 +461,9 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             l.ring_utilization,
             si(l.total_cycles)
         );
+    }
+    if let (Some(path), Some(trace)) = (flags.get("trace"), &trace) {
+        return write_trace(path, trace);
     }
     0
 }
@@ -612,6 +645,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             s.throughput_rps
         );
     }
+    if let Some(path) = flags.get("metrics-out") {
+        if let Err(e) = std::fs::write(path, m.to_prometheus()) {
+            eprintln!("writing {path}: {e}");
+            svc.shutdown();
+            return 1;
+        }
+        println!("wrote {path}");
+    }
     svc.shutdown();
     if ok == n_requests {
         0
@@ -697,6 +738,12 @@ fn cmd_loadgen(flags: &HashMap<String, String>) -> i32 {
         return 0;
     }
 
+    // --trace FILE: collect wall-clock serving spans (submit → queue →
+    // batch-form → execute → reply) while the plan is driven.
+    if flags.contains_key("trace") {
+        engn::obs::wall_trace_enable();
+    }
+
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
     let queue_capacity: usize = flags.get("queue").and_then(|s| s.parse().ok()).unwrap_or(256);
     let qos = QosConfig {
@@ -753,6 +800,10 @@ fn cmd_loadgen(flags: &HashMap<String, String>) -> i32 {
             return 1;
         }
         println!("wrote {out}");
+        if let Some(path) = flags.get("trace") {
+            let trace = engn::obs::wall_trace_take();
+            return write_trace(path, &trace);
+        }
         return 0;
     }
 
@@ -790,6 +841,22 @@ fn cmd_loadgen(flags: &HashMap<String, String>) -> i32 {
             return 1;
         }
         println!("wrote {out}");
+    }
+    if let Some(path) = flags.get("metrics-out") {
+        // Service snapshot (engn_requests_total, per-key/class series)
+        // followed by the loadgen report (engn_loadgen_*): the metric
+        // families are disjoint, so the concatenation is one valid
+        // exposition.
+        let text = metrics.to_prometheus() + &report.to_prometheus();
+        if let Err(e) = std::fs::write(path, text) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    if let Some(path) = flags.get("trace") {
+        let trace = engn::obs::wall_trace_take();
+        return write_trace(path, &trace);
     }
     0
 }
@@ -856,6 +923,19 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
             Some(MemExplain::new(&sim_job.config, prepared.graph())),
         );
         println!();
+    }
+    // --trace FILE: run the sim job's session once up front (the graph
+    // cache keeps this cheap — the sim backend below reuses the same
+    // prepared graph) and write its deterministic cycle trace.
+    if let Some(path) = flags.get("trace") {
+        let prepared = engn::sim::graph_cache::prepared_for(&spec, sim_job.policy, sim_job.seed);
+        let model = GnnModel::for_dataset(kind, &spec);
+        let session = SimSession::new(&sim_job.config, &prepared, &model);
+        let (_, trace) = session.run_traced(spec.code);
+        let code = write_trace(path, &trace);
+        if code != 0 {
+            return code;
+        }
     }
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(2);
     let svc = InferenceService::start(
@@ -925,84 +1005,22 @@ fn cmd_whatif(flags: &HashMap<String, String>) -> i32 {
     }
 }
 
-/// Graph-level context for the `--explain` spill columns: enough to
-/// derive each plan's analytic working set and place it on the
-/// configured hierarchy.
-struct MemExplain<'a> {
-    cfg: &'a AcceleratorConfig,
-    v: usize,
-    e: usize,
-    has_relations: bool,
-}
-
-impl<'a> MemExplain<'a> {
-    fn new(cfg: &'a AcceleratorConfig, g: &engn::graph::Graph) -> Self {
-        Self {
-            cfg,
-            v: g.num_vertices,
-            e: g.num_edges(),
-            has_relations: !g.relations.is_empty(),
+/// Write a trace as Chrome trace-event JSON (`--trace FILE`; open in
+/// `chrome://tracing` or Perfetto).
+fn write_trace(path: &str, trace: &engn::obs::Trace) -> i32 {
+    match std::fs::write(path, trace.to_chrome_json().to_string_pretty()) {
+        Ok(()) => {
+            println!(
+                "wrote {path} ({} spans on {} tracks, {} clock)",
+                trace.spans().len(),
+                trace.tracks().len(),
+                trace.clock().name()
+            );
+            0
         }
-    }
-}
-
-/// Print a session's per-layer [`LayerPlan`]s — dataflow, stage order,
-/// grid Q, tile-schedule choice, tile count, and (when graph context is
-/// supplied) the analytic working set plus the bytes that land off-HBM
-/// under the configured `--mem` hierarchy — so scheduling and
-/// partitioning decisions are inspectable (`run --explain`,
-/// `whatif --explain`, `scaleout --explain`). Under the adaptive
-/// planner each layer also prints its [`engn::sim::Selection`]
-/// rationale.
-fn print_layer_plans(
-    label: &str,
-    configured: DataflowKind,
-    plans: &[LayerPlan],
-    mem: Option<MemExplain<'_>>,
-) {
-    println!("{label} (dataflow {})", configured.name());
-    println!(
-        "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9} {:>9} {:>9}",
-        "layer", "F", "H", "order", "Q", "span", "sched", "tiles", "dataflow", "workset", "spill"
-    );
-    for p in plans {
-        let order = match p.order {
-            ExecOrder::FeatureFirst => "FAU",
-            ExecOrder::AggregateFirst => "AFU",
-        };
-        let (ws_col, spill_col) = match &mem {
-            Some(m) => {
-                let ws = engn::mem::approx_layer_working_set(
-                    m.v,
-                    m.e,
-                    m.has_relations,
-                    p.dims.f_in,
-                    p.dims.f_out,
-                    p.agg_dim,
-                    p.q,
-                    m.cfg.word_bytes,
-                );
-                let spill = m.cfg.mem.analyze(&ws, m.cfg.freq_ghz);
-                (fmt_bytes(ws.total_bytes()), fmt_bytes(spill.spilled_bytes()))
-            }
-            None => ("-".to_string(), "-".to_string()),
-        };
-        println!(
-            "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9} {:>9} {:>9}",
-            p.layer_idx,
-            p.dims.f_in,
-            p.dims.f_out,
-            order,
-            p.q,
-            p.span,
-            format!("{:?}", p.choice).to_lowercase(),
-            p.tiling.num_tiles(),
-            p.dataflow.name(),
-            ws_col,
-            spill_col
-        );
-        if let Some(sel) = &p.selection {
-            println!("        layer {}: {}", p.layer_idx, sel.why);
+        Err(e) => {
+            eprintln!("writing {path}: {e}");
+            1
         }
     }
 }
@@ -1111,7 +1129,13 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
         .with_link(link)
         .with_overlap(overlap)
         .with_pipeline_depth(pipeline_depth);
-    let r = session.run(spec.code);
+    let (r, trace) = match flags.get("trace") {
+        Some(_) => {
+            let (r, t) = session.run_traced(spec.code);
+            (r, Some(t))
+        }
+        None => (session.run(spec.code), None),
+    };
 
     println!(
         "\nEnGN x{} — {} on {} ({} partition, {} link @ {} GB/s, overlap {}, partitioned in {})",
@@ -1223,6 +1247,9 @@ fn cmd_scaleout(flags: &HashMap<String, String>) -> i32 {
                 Some(MemExplain::new(&cfg, chip.prepared.graph())),
             );
         }
+    }
+    if let (Some(path), Some(trace)) = (flags.get("trace"), &trace) {
+        return write_trace(path, trace);
     }
     0
 }

@@ -97,6 +97,19 @@ impl SpillStats {
         self.tiers.iter().skip(1).map(|t| t.traffic_bytes).sum()
     }
 
+    /// Spill traffic below HBM itemized per tier name, skipping tiers
+    /// that moved nothing — the per-tier view behind the
+    /// `engn_sim_spill_bytes_total{tier=...}` counters
+    /// (`crate::obs::record_sim`) and the trace `mem` spans.
+    pub fn spilled_by_tier(&self) -> Vec<(&'static str, f64)> {
+        self.tiers
+            .iter()
+            .skip(1)
+            .filter(|t| t.traffic_bytes > 0.0)
+            .map(|t| (t.tier, t.traffic_bytes))
+            .collect()
+    }
+
     /// True iff the whole working set is HBM-resident.
     pub fn fits(&self) -> bool {
         self.spilled_bytes() == 0.0
@@ -371,6 +384,7 @@ mod tests {
         assert_eq!(stats.tiers[0].resident_bytes, 4e9);
         assert_eq!(stats.tiers[1].resident_bytes, 3e9);
         assert_eq!(stats.spilled_bytes(), 3e9);
+        assert_eq!(stats.spilled_by_tier(), vec![("dram", 3e9)]);
         // 3 GB over a 32 GB/s link at 1 GHz + one 200 ns latency hit.
         assert_eq!(stats.stall_cycles, 3e9 / 32.0 + 200.0);
         assert!((stats.energy_j - 3e9 * 62.4e-12).abs() < 1e-9);

@@ -1,0 +1,107 @@
+//! The one `--explain` plan formatter.
+//!
+//! `engn run/whatif/scaleout --explain` (and report tooling) all print
+//! per-layer [`LayerPlan`] tables through [`render_layer_plans`], so
+//! the column set cannot drift between subcommands. The text layout is
+//! exactly the historic `main.rs` output.
+
+use crate::config::{AcceleratorConfig, DataflowKind};
+use crate::graph::Graph;
+use crate::model::ops::ExecOrder;
+use crate::sim::LayerPlan;
+use crate::util::fmt_bytes;
+
+/// Graph-level context for the `--explain` spill columns: enough to
+/// derive each plan's analytic working set and place it on the
+/// configured hierarchy.
+pub struct MemExplain<'a> {
+    cfg: &'a AcceleratorConfig,
+    v: usize,
+    e: usize,
+    has_relations: bool,
+}
+
+impl<'a> MemExplain<'a> {
+    pub fn new(cfg: &'a AcceleratorConfig, g: &Graph) -> Self {
+        Self {
+            cfg,
+            v: g.num_vertices,
+            e: g.num_edges(),
+            has_relations: !g.relations.is_empty(),
+        }
+    }
+}
+
+/// Render a session's per-layer [`LayerPlan`]s — dataflow, stage order,
+/// grid Q, tile-schedule choice, tile count, and (when graph context is
+/// supplied) the analytic working set plus the bytes that land off-HBM
+/// under the configured `--mem` hierarchy — so scheduling and
+/// partitioning decisions are inspectable (`run --explain`,
+/// `whatif --explain`, `scaleout --explain`). Under the adaptive
+/// planner each layer also prints its [`crate::sim::Selection`]
+/// rationale.
+pub fn render_layer_plans(
+    label: &str,
+    configured: DataflowKind,
+    plans: &[LayerPlan],
+    mem: Option<MemExplain<'_>>,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{label} (dataflow {})\n", configured.name()));
+    out.push_str(&format!(
+        "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9} {:>9} {:>9}\n",
+        "layer", "F", "H", "order", "Q", "span", "sched", "tiles", "dataflow", "workset", "spill"
+    ));
+    for p in plans {
+        let order = match p.order {
+            ExecOrder::FeatureFirst => "FAU",
+            ExecOrder::AggregateFirst => "AFU",
+        };
+        let (ws_col, spill_col) = match &mem {
+            Some(m) => {
+                let ws = crate::mem::approx_layer_working_set(
+                    m.v,
+                    m.e,
+                    m.has_relations,
+                    p.dims.f_in,
+                    p.dims.f_out,
+                    p.agg_dim,
+                    p.q,
+                    m.cfg.word_bytes,
+                );
+                let spill = m.cfg.mem.analyze(&ws, m.cfg.freq_ghz);
+                (fmt_bytes(ws.total_bytes()), fmt_bytes(spill.spilled_bytes()))
+            }
+            None => ("-".to_string(), "-".to_string()),
+        };
+        out.push_str(&format!(
+            "  {:<5} {:>6} {:>6} {:<5} {:>5} {:>9} {:<6} {:>7} {:<9} {:>9} {:>9}\n",
+            p.layer_idx,
+            p.dims.f_in,
+            p.dims.f_out,
+            order,
+            p.q,
+            p.span,
+            format!("{:?}", p.choice).to_lowercase(),
+            p.tiling.num_tiles(),
+            p.dataflow.name(),
+            ws_col,
+            spill_col
+        ));
+        if let Some(sel) = &p.selection {
+            out.push_str(&format!("        layer {}: {}\n", p.layer_idx, sel.why));
+        }
+    }
+    out
+}
+
+/// Convenience wrapper: render and print (every CLI `--explain` call
+/// site uses this).
+pub fn print_layer_plans(
+    label: &str,
+    configured: DataflowKind,
+    plans: &[LayerPlan],
+    mem: Option<MemExplain<'_>>,
+) {
+    print!("{}", render_layer_plans(label, configured, plans, mem));
+}

@@ -1,0 +1,221 @@
+//! Export formats: Chrome trace-event JSON (loadable in
+//! `chrome://tracing` / Perfetto) and Prometheus-style text exposition.
+//!
+//! Both are deterministic: the trace emits spans in push order with
+//! metadata events in track order, `util::json::Json` serializes
+//! objects with sorted keys, and [`MetricsDump`] iterates `BTreeMap`s.
+
+use super::metrics::MetricsDump;
+use super::trace::{Clock, Trace};
+use crate::util::json::Json;
+
+/// Render a [`Trace`] as Chrome trace-event JSON.
+///
+/// Layout: one process (pid 0); each trace track becomes a thread
+/// (tid = track index), named via `"M"` metadata events emitted first;
+/// every span becomes an `"X"` complete event. Sim-cycle timestamps
+/// are written directly on the microsecond timeline — 1 µs in the
+/// viewer reads as 1 simulated cycle (`displayTimeUnit` and
+/// `otherData.clock` say which domain applies).
+pub fn chrome_trace(trace: &Trace) -> Json {
+    let mut events = Vec::with_capacity(trace.tracks().len() + trace.spans().len());
+    for (tid, name) in trace.tracks().iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(0)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(name.as_str()))])),
+        ]));
+    }
+    for span in trace.spans() {
+        let mut args = vec![("id", Json::num(span.id as f64))];
+        for (k, v) in &span.args {
+            args.push((*k, Json::str(v.as_str())));
+        }
+        events.push(Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("name", Json::str(span.name.as_str())),
+            ("cat", Json::str(span.cat)),
+            ("pid", Json::num(0)),
+            ("tid", Json::num(span.track as f64)),
+            ("ts", Json::num(span.start)),
+            ("dur", Json::num(span.dur)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("clock", Json::str(trace.clock().name())),
+                ("label", Json::str(trace.label())),
+                (
+                    "unit",
+                    Json::str(match trace.clock() {
+                        Clock::SimCycles => "1us = 1 simulated cycle",
+                        Clock::WallMicros => "1us = 1us wall clock",
+                    }),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Sanitize a metric *base* name: Prometheus allows `[a-zA-Z0-9_:]`;
+/// anything else becomes `_`. Label blocks (`{...}`) pass through.
+pub fn sanitize_metric_name(name: &str) -> String {
+    let (base, labels) = split_labels(name);
+    let mut out: String = base
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    match labels {
+        Some(l) => format!("{out}{{{l}}}"),
+        None => out,
+    }
+}
+
+/// Split `name{label="v"}` into `("name", Some("label=\"v\""))`.
+fn split_labels(key: &str) -> (&str, Option<&str>) {
+    match (key.find('{'), key.ends_with('}')) {
+        (Some(i), true) => (&key[..i], Some(&key[i + 1..key.len() - 1])),
+        _ => (key, None),
+    }
+}
+
+/// Format a sample value: integral values print without a fraction
+/// (the same rule `util::json` uses), everything else as shortest f64.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn type_line(out: &mut String, seen: &mut Vec<String>, base: &str, kind: &str) {
+    if seen.iter().any(|s| s == base) {
+        return;
+    }
+    seen.push(base.to_string());
+    out.push_str("# TYPE ");
+    out.push_str(base);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// Render a merged [`MetricsDump`] in Prometheus text exposition
+/// format: counters and gauges as single samples, histograms as
+/// cumulative `_bucket{le=...}` series plus `_sum`/`_count`.
+pub fn prometheus(dump: &MetricsDump) -> String {
+    let mut out = String::new();
+    let mut seen = Vec::new();
+    for (key, v) in &dump.counters {
+        let key = sanitize_metric_name(key);
+        let (base, _) = split_labels(&key);
+        type_line(&mut out, &mut seen, base, "counter");
+        out.push_str(&format!("{key} {}\n", fmt_value(*v)));
+    }
+    for (key, v) in &dump.gauges {
+        let key = sanitize_metric_name(key);
+        let (base, _) = split_labels(&key);
+        type_line(&mut out, &mut seen, base, "gauge");
+        out.push_str(&format!("{key} {}\n", fmt_value(*v)));
+    }
+    for (key, h) in &dump.histograms {
+        let key = sanitize_metric_name(key);
+        let (base, labels) = split_labels(&key);
+        type_line(&mut out, &mut seen, base, "histogram");
+        let series = |le: &str| match labels {
+            Some(l) => format!("{base}_bucket{{{l},le=\"{le}\"}}"),
+            None => format!("{base}_bucket{{le=\"{le}\"}}"),
+        };
+        for (le, cum) in h.bucket_counts() {
+            out.push_str(&format!("{} {}\n", series(&fmt_value(le)), cum));
+        }
+        out.push_str(&format!("{} {}\n", series("+Inf"), h.count()));
+        let plain = |suffix: &str| match labels {
+            Some(l) => format!("{base}{suffix}{{{l}}}"),
+            None => format!("{base}{suffix}"),
+        };
+        out.push_str(&format!("{} {}\n", plain("_sum"), fmt_value(h.sum())));
+        out.push_str(&format!("{} {}\n", plain("_count"), h.count()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+    use crate::util::json;
+
+    #[test]
+    fn chrome_trace_round_trips_through_json_parser() {
+        let mut t = Trace::new(Clock::SimCycles, "unit");
+        t.push("layers", "layer 0", "layer", 0.0, 128.0, vec![("q", "32".into())]);
+        t.push("tiles", "tile 0,0", "tile", 0.0, 16.0, vec![]);
+        let rendered = chrome_trace(&t).to_string_pretty();
+        let parsed = json::Json::parse(&rendered).expect("valid json");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 tracks -> 2 metadata events, then 2 span events.
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(events[2].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(events[2].get("name").unwrap().as_str().unwrap(), "layer 0");
+        assert_eq!(events[2].get("dur").unwrap().as_f64().unwrap(), 128.0);
+        assert_eq!(
+            parsed.get("otherData").unwrap().get("clock").unwrap().as_str().unwrap(),
+            "sim-cycles"
+        );
+    }
+
+    #[test]
+    fn chrome_trace_bytes_are_stable_across_rebuilds() {
+        let build = || {
+            let mut t = Trace::new(Clock::SimCycles, "unit");
+            t.push("a", "s1", "c", 1.0, 2.0, vec![]);
+            t.push("b", "s2", "c", 3.0, 4.0, vec![("k", "v".into())]);
+            chrome_trace(&t).to_string_pretty()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn prometheus_renders_all_three_kinds() {
+        let reg = Registry::new();
+        reg.add("engn_requests_total", 42.0);
+        reg.add("engn_sim_spill_bytes_total{tier=\"dram\"}", 1024.0);
+        reg.gauge("engn_queue_depth", 3.0);
+        reg.observe("engn_latency_seconds", 0.5);
+        reg.observe("engn_latency_seconds", 1.5);
+        let text = prometheus(&reg.snapshot());
+        assert!(text.contains("# TYPE engn_requests_total counter\n"));
+        assert!(text.contains("engn_requests_total 42\n"));
+        assert!(text.contains("engn_sim_spill_bytes_total{tier=\"dram\"} 1024\n"));
+        assert!(text.contains("# TYPE engn_queue_depth gauge\n"));
+        assert!(text.contains("# TYPE engn_latency_seconds histogram\n"));
+        assert!(text.contains("engn_latency_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("engn_latency_seconds_sum 2\n"));
+        assert!(text.contains("engn_latency_seconds_count 2\n"));
+        // One TYPE line per base name even with labeled series.
+        assert_eq!(text.matches("# TYPE engn_sim_spill_bytes_total").count(), 1);
+    }
+
+    #[test]
+    fn sanitize_fixes_bad_chars_but_keeps_labels() {
+        assert_eq!(sanitize_metric_name("serving:int p99"), "serving_int_p99");
+        assert_eq!(
+            sanitize_metric_name("halo bytes{link=\"0->1\"}"),
+            "halo_bytes{link=\"0->1\"}"
+        );
+        assert_eq!(sanitize_metric_name("9lives"), "_9lives");
+    }
+}

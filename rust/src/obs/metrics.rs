@@ -1,0 +1,464 @@
+//! Metrics registry: named counters, gauges and log-bucketed
+//! histograms, thread-sharded with merge-on-snapshot (the same pattern
+//! as the coordinator's per-worker metrics — hot paths write a private
+//! shard; [`Registry::snapshot`] merges).
+//!
+//! The [`Histogram`] here is the crate's *one* latency-statistic
+//! implementation: it owns both the log₂ bucket array (cheap,
+//! mergeable, Prometheus-exportable) and a bounded ring window of raw
+//! samples whose exact nearest-rank quantiles reproduce the values the
+//! coordinator and loadgen reported before this module existed —
+//! `coordinator::MetricsSnapshot` and `loadgen::LoadReport` are both
+//! backed by it (DESIGN.md §13).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Ring-window capacity of a [`Histogram`] (and, historically, of the
+/// coordinator's per-key sample windows): long-running services keep
+/// the freshest `MAX_SAMPLES` observations per series.
+pub const MAX_SAMPLES: usize = 4096;
+
+/// Number of log₂ buckets. Bucket `i` covers `[2^(i-BIAS), 2^(i-BIAS+1))`
+/// so the span reaches from sub-nanosecond latencies (2⁻³⁰ s ≈ 1 ns)
+/// to ~2³³ (cycle counts, byte totals).
+pub const BUCKETS: usize = 64;
+const BUCKET_BIAS: i64 = 30;
+
+/// Log₂ bucket index for a sample. Derived from the f64 exponent bits —
+/// no `log2()` call, so the mapping is exact and platform-independent.
+/// Non-positive and subnormal samples land in bucket 0.
+pub fn bucket_index(v: f64) -> usize {
+    if !(v > 0.0) || !v.is_finite() {
+        return 0;
+    }
+    let exp = ((v.to_bits() >> 52) & 0x7ff) as i64 - 1023; // floor(log2 v)
+    (exp + BUCKET_BIAS).clamp(0, BUCKETS as i64 - 1) as usize
+}
+
+/// Inclusive upper bound of bucket `i` (the Prometheus `le` label).
+pub fn bucket_upper_bound(i: usize) -> f64 {
+    (2.0f64).powi((i as i64 - BUCKET_BIAS + 1) as i32)
+}
+
+/// Nearest-rank percentile with a round-to-nearest guard on the exact
+/// rank, over an ascending-sorted slice. `p` is on the 0..=1 fraction
+/// scale (0.5 = median). Empty input yields 0.0.
+///
+/// This is the exact function the coordinator has always used for
+/// `MetricsSnapshot` percentiles (moved here verbatim; the coordinator
+/// re-exports it), so snapshot values are unchanged by the migration.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let exact = p * sorted.len() as f64;
+    let near = exact.round();
+    let rank = if (exact - near).abs() < 1e-9 { near } else { exact.ceil() };
+    sorted[(rank as usize).clamp(1, sorted.len()) - 1]
+}
+
+/// Log-bucketed histogram + bounded raw-sample ring window.
+///
+/// Two read paths, two fidelities:
+/// * [`quantile`](Self::quantile) sorts the ring window and applies the
+///   exact nearest-rank [`percentile`] — bit-identical to the historic
+///   per-worker sample-vector code as long as the window has not
+///   wrapped (≤ [`MAX_SAMPLES`] observations);
+/// * the bucket array ([`bucket_counts`](Self::bucket_counts)) is what
+///   the Prometheus exposition renders, and merges in O(BUCKETS).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    buckets: [u64; BUCKETS],
+    window: Vec<f64>,
+    cursor: usize,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; BUCKETS],
+            window: Vec::new(),
+            cursor: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation: totals, buckets, and the ring window
+    /// (push until full, then overwrite the oldest slot — the same
+    /// bounded-window rule the coordinator's sample vectors used).
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[bucket_index(v)] += 1;
+        if self.window.len() < MAX_SAMPLES {
+            self.window.push(v);
+        } else {
+            self.window[self.cursor % MAX_SAMPLES] = v;
+        }
+        self.cursor += 1;
+    }
+
+    /// Fold another histogram in (shard merge on snapshot). Totals and
+    /// buckets add; the raw windows concatenate, so a merged snapshot
+    /// quantile sees every shard's window exactly as the historic
+    /// `extend_from_slice` merge did.
+    pub fn merge(&mut self, other: &Histogram) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (dst, src) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *dst += src;
+        }
+        self.window.extend_from_slice(&other.window);
+        self.cursor = self.window.len();
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Sum over *all* observations (Prometheus `_sum`).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Mean over the ring *window* — deliberately windowed, because the
+    /// pre-migration per-worker vectors were windowed too, and the two
+    /// must agree bit-for-bit on un-wrapped series.
+    pub fn mean(&self) -> f64 {
+        if self.window.is_empty() {
+            0.0
+        } else {
+            self.window.iter().sum::<f64>() / self.window.len() as f64
+        }
+    }
+
+    /// The raw ring window (insertion order until the window wraps).
+    pub fn window(&self) -> &[f64] {
+        &self.window
+    }
+
+    /// Window samples sorted ascending (NaN-tolerant total order, the
+    /// same comparator the historic call sites used).
+    pub fn sorted_window(&self) -> Vec<f64> {
+        let mut w = self.window.clone();
+        w.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        w
+    }
+
+    /// Exact nearest-rank quantile over the ring window; `q` on the
+    /// 0..=1 fraction scale.
+    pub fn quantile(&self, q: f64) -> f64 {
+        percentile(&self.sorted_window(), q)
+    }
+
+    /// Cumulative bucket counts as `(upper_bound, cumulative)` pairs,
+    /// skipping leading/trailing all-zero buckets (the exposition adds
+    /// the `+Inf` bucket itself).
+    pub fn bucket_counts(&self) -> Vec<(f64, u64)> {
+        let first = self.buckets.iter().position(|&c| c > 0);
+        let last = self.buckets.iter().rposition(|&c| c > 0);
+        let (Some(first), Some(last)) = (first, last) else {
+            return Vec::new();
+        };
+        let mut cum = self.buckets[..first].iter().sum::<u64>();
+        (first..=last)
+            .map(|i| {
+                cum += self.buckets[i];
+                (bucket_upper_bound(i), cum)
+            })
+            .collect()
+    }
+}
+
+/// One thread's private slice of a [`Registry`]: counters (monotone
+/// f64 — byte totals are not integers), gauges (last write wins on
+/// merge order), histograms.
+#[derive(Debug, Default)]
+pub struct Shard {
+    pub counters: BTreeMap<String, f64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl Shard {
+    pub fn add(&mut self, name: &str, delta: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += delta;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+}
+
+/// A cheap-to-clone handle on one registered shard. Hot paths lock
+/// *their own* shard only — never a registry-wide mutex.
+#[derive(Debug, Clone)]
+pub struct ShardHandle(Arc<Mutex<Shard>>);
+
+impl ShardHandle {
+    pub fn add(&self, name: &str, delta: f64) {
+        self.0.lock().unwrap().add(name, delta);
+    }
+
+    pub fn gauge(&self, name: &str, v: f64) {
+        self.0.lock().unwrap().gauge(name, v);
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        self.0.lock().unwrap().observe(name, v);
+    }
+
+    /// Batch access under one lock.
+    pub fn with<R>(&self, f: impl FnOnce(&mut Shard) -> R) -> R {
+        f(&mut self.0.lock().unwrap())
+    }
+}
+
+/// Merged view of every shard at one instant. `BTreeMap` keys give a
+/// deterministic, sorted exposition.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsDump {
+    pub counters: BTreeMap<String, f64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsDump {
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+}
+
+/// Thread-sharded metrics registry. Writers either use the built-in
+/// base shard (convenience methods below — one mutex, fine for cold
+/// paths and tests) or register a private shard via
+/// [`Registry::shard`] and write lock-free-of-contention; readers call
+/// [`Registry::snapshot`] which merges every shard in registration
+/// order.
+#[derive(Debug, Default)]
+pub struct Registry {
+    base: Arc<Mutex<Shard>>,
+    shards: Mutex<Vec<Arc<Mutex<Shard>>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register and return a new private shard handle.
+    pub fn shard(&self) -> ShardHandle {
+        let arc: Arc<Mutex<Shard>> = Arc::default();
+        self.shards.lock().unwrap().push(arc.clone());
+        ShardHandle(arc)
+    }
+
+    /// Add `delta` to a counter on the base shard.
+    pub fn add(&self, name: &str, delta: f64) {
+        self.base.lock().unwrap().add(name, delta);
+    }
+
+    /// Set a gauge on the base shard.
+    pub fn gauge(&self, name: &str, v: f64) {
+        self.base.lock().unwrap().gauge(name, v);
+    }
+
+    /// Record a histogram observation on the base shard.
+    pub fn observe(&self, name: &str, v: f64) {
+        self.base.lock().unwrap().observe(name, v);
+    }
+
+    /// Merge base + every registered shard into one sorted dump.
+    pub fn snapshot(&self) -> MetricsDump {
+        let mut dump = MetricsDump::default();
+        let mut merge = |shard: &Shard| {
+            for (k, v) in &shard.counters {
+                *dump.counters.entry(k.clone()).or_insert(0.0) += v;
+            }
+            for (k, v) in &shard.gauges {
+                dump.gauges.insert(k.clone(), *v);
+            }
+            for (k, h) in &shard.histograms {
+                dump.histograms.entry(k.clone()).or_default().merge(h);
+            }
+        };
+        merge(&self.base.lock().unwrap());
+        for shard in self.shards.lock().unwrap().iter() {
+            merge(&shard.lock().unwrap());
+        }
+        dump
+    }
+}
+
+/// The process-wide registry (`obs::registry()`): long-lived services
+/// record here; short-lived analyses usually prefer a local
+/// [`Registry`] so concurrent runs (e.g. the test harness) cannot mix
+/// totals.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_matches_nearest_rank_reference() {
+        let v10: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v10, 0.95), 10.0);
+        let v20: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v20, 0.95), 19.0);
+        let v21: Vec<f64> = (1..=21).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v21, 0.95), 20.0);
+        let v4 = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v4, 0.50), 2.0);
+        assert_eq!(percentile(&v4, 0.0), 1.0);
+        assert_eq!(percentile(&v4, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn bucket_index_is_exact_powers_of_two() {
+        assert_eq!(bucket_index(1.0), BUCKET_BIAS as usize);
+        assert_eq!(bucket_index(2.0), BUCKET_BIAS as usize + 1);
+        assert_eq!(bucket_index(1.999), BUCKET_BIAS as usize);
+        assert_eq!(bucket_index(0.5), BUCKET_BIAS as usize - 1);
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(f64::INFINITY), 0);
+        // Every sample lands under its bucket's upper bound.
+        for v in [1e-12, 3.7e-4, 0.25, 1.0, 17.3, 9.9e9] {
+            let i = bucket_index(v);
+            assert!(v < bucket_upper_bound(i), "{v} !< le[{i}]");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_match_raw_percentile() {
+        let mut h = Histogram::new();
+        let samples: Vec<f64> = (1..=100).map(|i| (i * 7 % 100) as f64 + 0.5).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(h.quantile(q), percentile(&sorted, q), "q={q}");
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max(), 99.5);
+        assert_eq!(h.min(), 0.5);
+        let mean = samples.iter().sum::<f64>() / 100.0;
+        assert!((h.mean() - mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_window_is_bounded_and_wraps() {
+        let mut h = Histogram::new();
+        for i in 0..(MAX_SAMPLES + 10) {
+            h.record(i as f64);
+        }
+        assert_eq!(h.window().len(), MAX_SAMPLES);
+        assert_eq!(h.count(), (MAX_SAMPLES + 10) as u64);
+        // Oldest slots were overwritten in ring order.
+        assert_eq!(h.window()[0], MAX_SAMPLES as f64);
+        assert_eq!(h.window()[9], (MAX_SAMPLES + 9) as f64);
+        assert_eq!(h.window()[10], 10.0);
+        // max() still remembers the true maximum.
+        assert_eq!(h.max(), (MAX_SAMPLES + 9) as f64);
+    }
+
+    #[test]
+    fn merge_concatenates_windows_and_adds_buckets() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in [1.0, 2.0, 3.0] {
+            a.record(v);
+        }
+        for v in [10.0, 20.0] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.window(), &[1.0, 2.0, 3.0, 10.0, 20.0]);
+        assert_eq!(a.max(), 20.0);
+        assert_eq!(a.quantile(0.5), 3.0);
+        let total: u64 = a.bucket_counts().last().map(|&(_, c)| c).unwrap();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn bucket_counts_are_cumulative() {
+        let mut h = Histogram::new();
+        for v in [0.5, 0.6, 1.5, 3.0] {
+            h.record(v);
+        }
+        let counts = h.bucket_counts();
+        assert!(counts.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(counts.last().unwrap().1, 4);
+        assert!(counts.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn registry_merges_shards_on_snapshot() {
+        let reg = Registry::new();
+        reg.add("jobs_total", 2.0);
+        let s1 = reg.shard();
+        let s2 = reg.shard();
+        s1.add("jobs_total", 3.0);
+        s2.add("jobs_total", 5.0);
+        s1.observe("latency_seconds", 0.25);
+        s2.observe("latency_seconds", 0.75);
+        reg.gauge("queue_depth", 7.0);
+        let dump = reg.snapshot();
+        assert_eq!(dump.counter("jobs_total"), 10.0);
+        assert_eq!(dump.gauges["queue_depth"], 7.0);
+        let h = dump.histogram("latency_seconds").unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.window(), &[0.25, 0.75]);
+        // Snapshot is a copy: further writes need a new snapshot.
+        s1.add("jobs_total", 1.0);
+        assert_eq!(dump.counter("jobs_total"), 10.0);
+        assert_eq!(reg.snapshot().counter("jobs_total"), 11.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Observability plane: deterministic tracing, a metrics registry, and
+//! export surfaces (DESIGN.md §13).
+//!
+//! Three layers, each usable alone:
+//!
+//! * [`trace`] — hierarchical spans on two clock domains. Sim traces
+//!   (cycles) are assembled serially from per-layer reports so their
+//!   bytes are identical at any pool width; serving traces (wall-clock
+//!   microseconds) come from RAII [`SpanGuard`]s that cost one relaxed
+//!   atomic load when disabled.
+//! * [`metrics`] — named counters, gauges and log₂-bucketed
+//!   [`Histogram`]s behind a thread-sharded [`Registry`] merged on
+//!   snapshot. The histogram owns the bounded sample window and the
+//!   nearest-rank [`percentile`] that `coordinator` and `loadgen`
+//!   previously each reimplemented.
+//! * [`export`] — Chrome trace-event JSON (open in `chrome://tracing`
+//!   or Perfetto) and Prometheus text exposition, both byte-
+//!   deterministic for a given input.
+//!
+//! The sim side stays pull-based: simulators produce the same reports
+//! they always did, and the [`record_sim`] / [`record_scaleout`] /
+//! [`record_selections`] recorders project finished reports into
+//! counters after the fact. Nothing in the hot loop touches the
+//! registry, which is how disabled-instrumentation runs stay
+//! bit-identical to the pre-observability simulator (pinned by
+//! `tests/obs_integration.rs`).
+
+pub mod explain;
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use explain::{print_layer_plans, render_layer_plans, MemExplain};
+pub use export::{chrome_trace, prometheus, sanitize_metric_name};
+pub use metrics::{
+    percentile, registry, Histogram, MetricsDump, Registry, ShardHandle, MAX_SAMPLES,
+};
+pub use trace::{
+    wall_span, wall_trace_enable, wall_trace_enabled, wall_trace_take, Clock, Span, SpanGuard,
+    Trace,
+};
+
+use crate::sim::{LayerPlan, ScaleOutReport, SimReport};
+
+/// Project a finished single-chip [`SimReport`] (plus the plans that
+/// produced it) into the simulation counter families:
+///
+/// * `engn_sim_cycles_total`, `engn_sim_tiles_total`
+/// * `engn_sim_davc_{accesses,hits,replays}_total` — replays are the
+///   conflict misses the degree-aware vertex cache re-fetched
+/// * `engn_sim_endpoint_touches_total` — distinct source + destination
+///   interval entries the tilings touched
+/// * `engn_sim_spill_bytes_total{tier="..."}` — off-HBM spill traffic
+///   per memory tier
+/// * `engn_sim_stage_cycles_total{stage="..."}` — per-stage cycle
+///   totals across layers
+pub fn record_sim(reg: &Registry, report: &SimReport, plans: &[LayerPlan]) {
+    reg.add("engn_sim_cycles_total", report.total_cycles());
+    let tiles: usize = plans.iter().map(|p| p.tiling.num_tiles()).sum();
+    reg.add("engn_sim_tiles_total", tiles as f64);
+    let davc = report.davc();
+    reg.add("engn_sim_davc_accesses_total", davc.accesses as f64);
+    reg.add("engn_sim_davc_hits_total", davc.hits as f64);
+    reg.add(
+        "engn_sim_davc_replays_total",
+        (davc.accesses - davc.hits) as f64,
+    );
+    let touches: f64 = plans
+        .iter()
+        .map(|p| p.tiling.src_touched() + p.tiling.dst_touched())
+        .sum();
+    reg.add("engn_sim_endpoint_touches_total", touches);
+    for (tier, bytes) in report.spill().spilled_by_tier() {
+        reg.add(&format!("engn_sim_spill_bytes_total{{tier=\"{tier}\"}}"), bytes);
+    }
+    for (stage, share) in ["feature_extraction", "aggregate", "update"]
+        .iter()
+        .zip(stage_cycle_totals(report))
+    {
+        reg.add(
+            &format!("engn_sim_stage_cycles_total{{stage=\"{stage}\"}}"),
+            share,
+        );
+    }
+}
+
+/// Per-stage cycle totals summed across a report's layers, in
+/// `[feature_extraction, aggregate, update]` order (the absolute
+/// version of [`SimReport::stage_breakdown`]).
+pub fn stage_cycle_totals(report: &SimReport) -> [f64; 3] {
+    let mut out = [0.0; 3];
+    for l in &report.layers {
+        out[0] += l.feature_extraction.cycles;
+        out[1] += l.aggregate.cycles;
+        out[2] += l.update.cycles;
+    }
+    out
+}
+
+/// Project a finished [`ScaleOutReport`] into the scale-out counter
+/// families: halo traffic, the charged/hidden exchange split, and per
+/// directed-link byte loads (`links` comes from
+/// `MultiChipSession::per_link_bytes`).
+pub fn record_scaleout(reg: &Registry, report: &ScaleOutReport, links: &[(String, f64)]) {
+    reg.add("engn_scaleout_halo_bytes_total", report.comm_bytes);
+    reg.add(
+        "engn_scaleout_halo_vertices_total",
+        report.halo_vertices as f64,
+    );
+    reg.add("engn_scaleout_comm_charged_cycles_total", report.comm_cycles());
+    reg.add(
+        "engn_scaleout_comm_hidden_cycles_total",
+        report.layer_comm_hidden_cycles.iter().sum::<f64>(),
+    );
+    for (link, bytes) in links {
+        if *bytes > 0.0 {
+            reg.add(
+                &format!("engn_scaleout_link_bytes_total{{link=\"{link}\"}}"),
+                *bytes,
+            );
+        }
+    }
+}
+
+/// Project the adaptive planner's decisions into shortlist counters:
+/// how many fixed candidates the measured charge pass actually ran
+/// (`charged`) vs how many the closed-form estimates pruned
+/// (`pruned`). Layers planned under a fixed dataflow carry no
+/// [`crate::sim::Selection`] and contribute to neither.
+pub fn record_selections(reg: &Registry, plans: &[LayerPlan]) {
+    let mut charged = 0usize;
+    let mut pruned = 0usize;
+    for p in plans {
+        if let Some(sel) = &p.selection {
+            charged += sel.charged();
+            pruned += sel.pruned();
+        }
+    }
+    if charged + pruned > 0 {
+        reg.add("engn_adaptive_shortlist_charged_total", charged as f64);
+        reg.add("engn_adaptive_shortlist_pruned_total", pruned as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::graph::datasets::{self, ScalePolicy};
+    use crate::model::{GnnKind, GnnModel};
+    use crate::sim::{PreparedGraph, SimSession};
+
+    fn small_report() -> (SimReport, Vec<LayerPlan>) {
+        let cfg = AcceleratorConfig::engn();
+        let spec = datasets::by_code("CA").unwrap();
+        let g = spec.instantiate(ScalePolicy::Capped, 1);
+        let model = GnnModel::for_dataset(GnnKind::Gcn, &spec);
+        let prepared = PreparedGraph::new(&g);
+        let session = SimSession::new(&cfg, &prepared, &model);
+        let plans = session.plan();
+        (session.run(spec.code), plans)
+    }
+
+    #[test]
+    fn record_sim_totals_match_report() {
+        let (report, plans) = small_report();
+        let reg = Registry::new();
+        record_sim(&reg, &report, &plans);
+        let dump = reg.snapshot();
+        assert!((dump.counter("engn_sim_cycles_total") - report.total_cycles()).abs() < 1e-6);
+        let tiles: usize = plans.iter().map(|p| p.tiling.num_tiles()).sum();
+        assert_eq!(dump.counter("engn_sim_tiles_total"), tiles as f64);
+        let davc = report.davc();
+        assert_eq!(dump.counter("engn_sim_davc_accesses_total"), davc.accesses as f64);
+        let stages = stage_cycle_totals(&report);
+        assert!(
+            (dump.counter("engn_sim_stage_cycles_total{stage=\"aggregate\"}") - stages[1]).abs()
+                < 1e-9
+        );
+        // HBM-resident run: no spill counters appear.
+        assert!(dump
+            .counters
+            .keys()
+            .all(|k| !k.starts_with("engn_sim_spill_bytes_total")));
+    }
+
+    #[test]
+    fn record_selections_counts_only_adaptive_layers() {
+        let (_, plans) = small_report();
+        let reg = Registry::new();
+        record_selections(&reg, &plans);
+        // Fixed-dataflow plans carry no Selection: nothing recorded.
+        assert_eq!(reg.snapshot().counter("engn_adaptive_shortlist_charged_total"), 0.0);
+    }
+}

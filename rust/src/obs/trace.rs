@@ -1,0 +1,257 @@
+//! Hierarchical span tracing on two clock domains (DESIGN.md §13).
+//!
+//! * **Sim clock** ([`Clock::SimCycles`]): timestamps are simulated
+//!   cycles. Sim traces are *assembled*, not sampled — after a run
+//!   completes, the per-layer reports are walked serially in index
+//!   order and spans get sequential ids, so the emitted bytes are
+//!   identical at any pool width and across repeated runs.
+//! * **Wall clock** ([`Clock::WallMicros`]): timestamps are monotonic
+//!   microseconds since the trace epoch. Serving-side spans
+//!   (submit → queue → batch-form → execute → reply) come from
+//!   [`SpanGuard`]s recorded into the process-wide wall trace, which
+//!   is off by default and costs one relaxed atomic load when off.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Which clock a trace's `start`/`dur` values are measured on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// Simulated accelerator cycles (deterministic).
+    SimCycles,
+    /// Monotonic wall-clock microseconds since the trace epoch.
+    WallMicros,
+}
+
+impl Clock {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Clock::SimCycles => "sim-cycles",
+            Clock::WallMicros => "wall-micros",
+        }
+    }
+}
+
+/// One complete span. `track` groups spans onto a named horizontal row
+/// in the Chrome trace view; `args` are free-form key/value detail.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Sequential id in emission order (deterministic for sim traces).
+    pub id: u64,
+    /// Track index into [`Trace::tracks`].
+    pub track: usize,
+    pub name: String,
+    /// Category string (Chrome trace `cat`), used for filtering.
+    pub cat: &'static str,
+    pub start: f64,
+    pub dur: f64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// An ordered collection of spans plus the track table.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    clock: Clock,
+    label: String,
+    tracks: Vec<String>,
+    spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn new(clock: Clock, label: impl Into<String>) -> Self {
+        Trace { clock, label: label.into(), tracks: Vec::new(), spans: Vec::new() }
+    }
+
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Track names in first-seen order; a span's `track` indexes here.
+    pub fn tracks(&self) -> &[String] {
+        &self.tracks
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Resolve (or register) a track by name.
+    pub fn track(&mut self, name: &str) -> usize {
+        match self.tracks.iter().position(|t| t == name) {
+            Some(i) => i,
+            None => {
+                self.tracks.push(name.to_string());
+                self.tracks.len() - 1
+            }
+        }
+    }
+
+    /// Append a complete span; ids are sequential in push order.
+    pub fn push(
+        &mut self,
+        track: &str,
+        name: impl Into<String>,
+        cat: &'static str,
+        start: f64,
+        dur: f64,
+        args: Vec<(&'static str, String)>,
+    ) {
+        let track = self.track(track);
+        let id = self.spans.len() as u64;
+        self.spans.push(Span { id, track, name: name.into(), cat, start, dur, args });
+    }
+
+    /// Total sum of span durations on one track (0.0 if absent).
+    pub fn track_total(&self, name: &str) -> f64 {
+        match self.tracks.iter().position(|t| t == name) {
+            Some(i) => self.spans.iter().filter(|s| s.track == i).map(|s| s.dur).sum(),
+            None => 0.0,
+        }
+    }
+
+    /// Render as Chrome trace-event JSON (see [`crate::obs::export`]).
+    pub fn to_chrome_json(&self) -> crate::util::json::Json {
+        super::export::chrome_trace(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide wall-clock trace (serving side).
+// ---------------------------------------------------------------------------
+
+struct WallTrace {
+    epoch: Instant,
+    trace: Trace,
+}
+
+static WALL_ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn wall() -> &'static Mutex<WallTrace> {
+    static WALL: OnceLock<Mutex<WallTrace>> = OnceLock::new();
+    WALL.get_or_init(|| {
+        Mutex::new(WallTrace {
+            epoch: Instant::now(),
+            trace: Trace::new(Clock::WallMicros, "serving"),
+        })
+    })
+}
+
+/// Turn on wall-clock span collection (serving/loadgen `--trace`).
+pub fn wall_trace_enable() {
+    wall(); // pin the epoch before the first span
+    WALL_ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Whether wall-clock spans are being collected. This is the *entire*
+/// disabled-path cost of serving instrumentation: one relaxed load.
+pub fn wall_trace_enabled() -> bool {
+    WALL_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Take the collected wall-clock spans, leaving an empty trace behind
+/// (collection stays enabled if it was).
+pub fn wall_trace_take() -> Trace {
+    let mut w = wall().lock().unwrap();
+    std::mem::replace(&mut w.trace, Trace::new(Clock::WallMicros, "serving"))
+}
+
+/// Record a completed wall-clock span from explicit instants — for
+/// intervals whose start predates the recording call (queue waits,
+/// batch-formation windows). No-op when tracing is off;
+/// `duration_since` saturates to zero for instants before the epoch.
+pub fn wall_span(
+    track: &'static str,
+    name: impl Into<String>,
+    cat: &'static str,
+    begin: Instant,
+    end: Instant,
+    args: Vec<(&'static str, String)>,
+) {
+    if !wall_trace_enabled() {
+        return;
+    }
+    let mut w = wall().lock().unwrap();
+    let start = begin.duration_since(w.epoch).as_secs_f64() * 1e6;
+    let dur = end.duration_since(begin).as_secs_f64() * 1e6;
+    w.trace.push(track, name, cat, start, dur, args);
+}
+
+/// RAII wall-clock span: created at the start of a serving stage,
+/// records `[begin, drop)` into the global wall trace on drop. When
+/// tracing is disabled, [`SpanGuard::begin`] returns `None` and no
+/// clock is read.
+#[derive(Debug)]
+pub struct SpanGuard {
+    begin: Instant,
+    track: &'static str,
+    name: String,
+    cat: &'static str,
+    args: Vec<(&'static str, String)>,
+}
+
+impl SpanGuard {
+    /// Start a span if wall tracing is on.
+    pub fn begin(
+        track: &'static str,
+        name: impl Into<String>,
+        cat: &'static str,
+    ) -> Option<SpanGuard> {
+        if !wall_trace_enabled() {
+            return None;
+        }
+        Some(SpanGuard { begin: Instant::now(), track, name: name.into(), cat, args: Vec::new() })
+    }
+
+    /// Attach a key/value detail to the span.
+    pub fn arg(&mut self, key: &'static str, value: impl Into<String>) {
+        self.args.push((key, value.into()));
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end = Instant::now();
+        let mut w = wall().lock().unwrap();
+        let start = self.begin.duration_since(w.epoch).as_secs_f64() * 1e6;
+        let dur = end.duration_since(self.begin).as_secs_f64() * 1e6;
+        let args = std::mem::take(&mut self.args);
+        let name = std::mem::take(&mut self.name);
+        w.trace.push(self.track, name, self.cat, start, dur, args);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_get_sequential_ids_and_first_seen_tracks() {
+        let mut t = Trace::new(Clock::SimCycles, "test");
+        t.push("layers", "layer 0", "layer", 0.0, 10.0, vec![]);
+        t.push("tiles", "tile 0,0", "tile", 0.0, 4.0, vec![("edges", "7".into())]);
+        t.push("layers", "layer 1", "layer", 10.0, 5.0, vec![]);
+        assert_eq!(t.tracks(), &["layers".to_string(), "tiles".to_string()]);
+        let ids: Vec<u64> = t.spans().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(t.spans()[2].track, 0);
+        assert_eq!(t.track_total("layers"), 15.0);
+        assert_eq!(t.track_total("absent"), 0.0);
+    }
+
+    #[test]
+    fn span_guard_is_none_when_disabled() {
+        // The global flag defaults to off; a guard must cost nothing.
+        if !wall_trace_enabled() {
+            assert!(SpanGuard::begin("queue", "job 1", "serve").is_none());
+        }
+    }
+}

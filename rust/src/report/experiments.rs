@@ -1065,6 +1065,53 @@ pub fn memory(eval: &Eval) -> Table {
 }
 
 // ---------------------------------------------------------------------------
+// trace — per-stage cycle shares (observability plane)
+// ---------------------------------------------------------------------------
+
+/// Where the cycles go, per (model, dataset) pair of the Table-5
+/// suite: the per-stage cycle totals the observability recorders
+/// export as `engn_sim_stage_cycles_total{stage="..."}`, rendered as
+/// shares of each pair's total compute. This is the tabular view of
+/// the same breakdown `engn run --trace` draws as layer/stage/tile
+/// spans.
+pub fn trace(eval: &Eval) -> Table {
+    let mut t = Table::new(
+        "trace",
+        "Per-stage cycle shares across the Table-5 suite (the engn run --trace span sums)",
+        &[
+            "model", "dataset", "cycles", "feature-extract", "aggregate", "update",
+            "dominant",
+        ],
+    );
+    eval.warm_suite();
+    let names = ["feature-extract", "aggregate", "update"];
+    for (kind, spec) in eval.suite() {
+        let p = eval.pair(kind, &spec);
+        let stages = crate::obs::stage_cycle_totals(&p.engn);
+        let sum: f64 = stages.iter().sum::<f64>().max(1e-12);
+        let dominant = (0..3)
+            .max_by(|&a, &b| stages[a].total_cmp(&stages[b]))
+            .unwrap();
+        t.row(vec![
+            kind.name().into(),
+            spec.code.into(),
+            format!("{:.3e}", p.engn.total_cycles()),
+            pct(stages[0] / sum),
+            pct(stages[1] / sum),
+            pct(stages[2] / sum),
+            names[dominant].into(),
+        ]);
+    }
+    t.note(
+        "shares come from obs::stage_cycle_totals — the same sums the metrics recorders \
+         export as engn_sim_stage_cycles_total{stage=...} and the trace spans draw per \
+         layer; aggregation leads on high-average-degree graphs, dense feature \
+         extraction on the feature-heavy ones",
+    );
+    t
+}
+
+// ---------------------------------------------------------------------------
 
 /// Every experiment in paper order.
 pub fn all(eval: &Eval) -> Vec<Table> {
@@ -1086,6 +1133,7 @@ pub fn all(eval: &Eval) -> Vec<Table> {
         scaleout(eval),
         adaptive(eval),
         memory(eval),
+        trace(eval),
     ]
 }
 
@@ -1109,14 +1157,15 @@ pub fn by_id(eval: &Eval, id: &str) -> Option<Table> {
         "scaleout" => Some(scaleout(eval)),
         "adaptive" => Some(adaptive(eval)),
         "memory" => Some(memory(eval)),
+        "trace" => Some(trace(eval)),
         _ => None,
     }
 }
 
-pub const ALL_IDS: [&str; 17] = [
+pub const ALL_IDS: [&str; 18] = [
     "fig2", "table2", "fig3", "table3", "table4", "fig9", "fig10", "fig11",
     "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "scaleout", "adaptive",
-    "memory",
+    "memory", "trace",
 ];
 
 #[cfg(test)]
@@ -1168,6 +1217,26 @@ mod tests {
             }
         }
         assert!(by_id(&eval, "fig99").is_none());
+    }
+
+    #[test]
+    fn trace_stage_shares_sum_to_one() {
+        let eval = tiny_eval();
+        let t = trace(&eval);
+        assert_eq!(t.rows.len(), eval.suite().len());
+        for row in &t.rows {
+            let shares: Vec<f64> = (3..6)
+                .map(|i| row[i].trim_end_matches('%').parse::<f64>().unwrap())
+                .collect();
+            let sum: f64 = shares.iter().sum();
+            assert!((sum - 100.0).abs() < 0.5, "shares must sum to 100%: {row:?}");
+            // The dominant column names a stage whose displayed share
+            // is (up to rounding) the largest.
+            let max = shares.iter().cloned().fold(0.0f64, f64::max);
+            let names = ["feature-extract", "aggregate", "update"];
+            let idx = names.iter().position(|&n| n == row[6]).unwrap();
+            assert!(shares[idx] >= max - 0.11, "{row:?}");
+        }
     }
 
     #[test]

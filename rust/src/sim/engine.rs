@@ -22,6 +22,7 @@ use crate::graph::Graph;
 use crate::mem;
 use crate::model::ops::{self, ExecOrder, StageWork, Work};
 use crate::model::{GnnModel, LayerDims};
+use crate::obs::trace::{Clock, Trace};
 use crate::sim::dataflow::{self, TileOutcome, TileView};
 use crate::sim::davc::Davc;
 use crate::sim::energy::{self, EnergyBreakdown};
@@ -139,6 +140,18 @@ pub struct LayerPlan {
     /// Present only when the planner made the choice (`Adaptive`):
     /// the features, measured candidate costs, and rationale.
     pub selection: Option<select::Selection>,
+}
+
+/// One aggregation tile's executed cost, captured by the optional
+/// trace sink of [`SimSession::run_traced`]. `row`/`col` are grid
+/// coordinates in the layer's Q×Q tiling; `cycles` is the executor
+/// charge before the dimension-group multiplier.
+#[derive(Debug, Clone, Copy)]
+pub struct TileTrace {
+    pub row: u32,
+    pub col: u32,
+    pub edges: usize,
+    pub cycles: f64,
 }
 
 /// One simulation pass of a model over a prepared graph under one
@@ -342,6 +355,64 @@ impl<'a> SimSession<'a> {
     pub fn run(&self, dataset_code: &str) -> SimReport {
         let plans = self.plan();
         let outcomes = pool::parallel_map_ref(&plans, |_, plan| self.execute_layer(plan));
+        self.fold_outcomes(dataset_code, outcomes)
+    }
+
+    /// [`Self::run`] with span tracing: identical planning, execution
+    /// and fold (the returned [`SimReport`] is bit-identical to
+    /// `run()`'s — pinned by `tests/obs_integration.rs`), plus a
+    /// sim-cycle [`Trace`] assembled serially in layer order after the
+    /// fold, so the trace bytes are the same at any pool width.
+    pub fn run_traced(&self, dataset_code: &str) -> (SimReport, Trace) {
+        let (report, plans, tile_logs) = self.run_with_tiles(dataset_code);
+        let mut trace = Trace::new(
+            Clock::SimCycles,
+            format!("{} on {}", self.model.kind.name(), dataset_code),
+        );
+        trace_layers(
+            &mut trace,
+            "",
+            &layer_starts(&report),
+            &report,
+            &plans,
+            &tile_logs,
+            self.cfg,
+        );
+        (report, trace)
+    }
+
+    /// The traced execution primitive: the folded report plus, per
+    /// layer, the plan and the tile log the trace assembly walks. The
+    /// multichip session uses this directly so it can rebase each
+    /// chip's spans onto the fleet's layer offsets.
+    pub(crate) fn run_with_tiles(
+        &self,
+        dataset_code: &str,
+    ) -> (SimReport, Vec<LayerPlan>, Vec<Vec<TileTrace>>) {
+        let plans = self.plan();
+        let outcomes = pool::parallel_map_ref(&plans, |_, plan| {
+            let mut tiles = Vec::new();
+            let (report, energy) = self.execute_layer_sink(plan, Some(&mut tiles));
+            (report, energy, tiles)
+        });
+        let mut pairs = Vec::with_capacity(outcomes.len());
+        let mut tile_logs = Vec::with_capacity(outcomes.len());
+        for (report, energy, tiles) in outcomes {
+            pairs.push((report, energy));
+            tile_logs.push(tiles);
+        }
+        let report = self.fold_outcomes(dataset_code, pairs);
+        (report, plans, tile_logs)
+    }
+
+    /// Fold per-layer outcomes (already in layer-index order) into the
+    /// final report. Shared by [`Self::run`] and [`Self::run_traced`]
+    /// so the two cannot drift.
+    fn fold_outcomes(
+        &self,
+        dataset_code: &str,
+        outcomes: Vec<(LayerReport, EnergyBreakdown)>,
+    ) -> SimReport {
         let mut layers = Vec::with_capacity(self.model.layers.len());
         let mut energy_total = EnergyBreakdown::default();
         for (report, energy) in outcomes {
@@ -376,6 +447,18 @@ impl<'a> SimSession<'a> {
     /// aggregation tile loop through the plan's dataflow, then traffic
     /// and energy accounting.
     fn execute_layer(&self, plan: &LayerPlan) -> (LayerReport, EnergyBreakdown) {
+        self.execute_layer_sink(plan, None)
+    }
+
+    /// [`Self::execute_layer`] with an optional per-tile trace sink.
+    /// With `sink: None` this is exactly the untraced path — the sink
+    /// check is one `Option` test per tile and no report value depends
+    /// on it.
+    fn execute_layer_sink(
+        &self,
+        plan: &LayerPlan,
+        sink: Option<&mut Vec<TileTrace>>,
+    ) -> (LayerReport, EnergyBreakdown) {
         let cfg = self.cfg;
         let n = self.prepared.graph().num_vertices;
         let e = self.prepared.graph().num_edges();
@@ -410,7 +493,7 @@ impl<'a> SimSession<'a> {
             PHASE_SAMPLE_BUDGET as f64 / e as f64
         };
         let use_davc = df.uses_davc();
-        let run_tiles = |davc: Option<&mut Davc>| {
+        let run_tiles = |davc: Option<&mut Davc>, mut sink: Option<&mut Vec<TileTrace>>| {
             let mut agg_total = TileOutcome::default();
             let mut agg_cycles_scaled = 0.0f64;
             let mut davc_scaled = CacheStats::default();
@@ -443,6 +526,14 @@ impl<'a> SimSession<'a> {
                 // extrapolate.
                 let cycle_scale = if df.cycles_scale_with_edges() { scale } else { 1.0 };
                 agg_cycles_scaled += outcome.cycles as f64 * cycle_scale;
+                if let Some(sink) = sink.as_deref_mut() {
+                    sink.push(TileTrace {
+                        row: tile.row,
+                        col: tile.col,
+                        edges: tile.edges.len(),
+                        cycles: outcome.cycles as f64 * cycle_scale,
+                    });
+                }
                 match davc.as_deref_mut() {
                     Some(davc) => davc.replay_scaled(
                         view.edges.iter().map(|edge| edge.dst),
@@ -463,10 +554,10 @@ impl<'a> SimSession<'a> {
                     Some(d) => d.reset(davc_entries, cfg.davc_reserved_frac, ranked),
                     None => *slot = Some(Davc::new(davc_entries, cfg.davc_reserved_frac, ranked)),
                 }
-                run_tiles(slot.as_mut())
+                run_tiles(slot.as_mut(), sink)
             })
         } else {
-            run_tiles(None)
+            run_tiles(None, sink)
         };
         let dim_groups = ceil_div(agg_dim, cfg.pe_cols) as f64;
         let davc_misses = (davc_scaled.accesses - davc_scaled.hits) as f64;
@@ -615,6 +706,98 @@ impl<'a> SimSession<'a> {
         };
         WORK_SCRATCH.with(|cell| cell.replace(work));
         (report, energy)
+    }
+}
+
+/// Cumulative start cycle of each layer in a report's serial timeline.
+pub(crate) fn layer_starts(report: &SimReport) -> Vec<f64> {
+    let mut starts = Vec::with_capacity(report.layers.len());
+    let mut t = 0.0;
+    for l in &report.layers {
+        starts.push(t);
+        t += l.total_cycles;
+    }
+    starts
+}
+
+/// Append one session's span hierarchy to a sim-cycle trace: a span
+/// per layer, overlapped feature-extract/aggregate stage spans, the
+/// sequential tile batches under the aggregate stage, the update stage
+/// after `max(fe, agg)`, and a spill span covering the layer's stall
+/// tail when the working set went off-HBM. `starts[l]` is the global
+/// start cycle of layer `l` (a chip in a multi-chip timeline starts
+/// each layer at the *fleet's* layer offset, not its own); `prefix`
+/// namespaces the tracks (`"chip0"` → `"chip0/layers"`).
+///
+/// Everything here is a pure walk of already-folded results in index
+/// order, which is what makes trace bytes pool-width-invariant.
+pub(crate) fn trace_layers(
+    trace: &mut Trace,
+    prefix: &str,
+    starts: &[f64],
+    report: &SimReport,
+    plans: &[LayerPlan],
+    tiles: &[Vec<TileTrace>],
+    cfg: &AcceleratorConfig,
+) {
+    let track = |name: &str| {
+        if prefix.is_empty() {
+            name.to_string()
+        } else {
+            format!("{prefix}/{name}")
+        }
+    };
+    for (i, l) in report.layers.iter().enumerate() {
+        let ls = starts[i];
+        let plan = &plans[i];
+        trace.push(
+            &track("layers"),
+            format!("layer {} ({}x{})", l.layer_idx, l.f_in, l.f_out),
+            "layer",
+            ls,
+            l.total_cycles,
+            vec![
+                ("dataflow", plan.dataflow.name().to_string()),
+                ("q", l.q.to_string()),
+                ("tiles", plan.tiling.num_tiles().to_string()),
+            ],
+        );
+        let fe = l.feature_extraction.cycles;
+        let agg = l.aggregate.cycles;
+        trace.push(&track("feature-extract"), format!("fe {}", l.layer_idx), "stage", ls, fe, vec![]);
+        trace.push(&track("aggregate"), format!("agg {}", l.layer_idx), "stage", ls, agg, vec![]);
+        let dim_groups = ceil_div(plan.agg_dim, cfg.pe_cols) as f64;
+        let mut t = ls;
+        for tile in &tiles[i] {
+            let dur = tile.cycles * dim_groups;
+            trace.push(
+                &track("tiles"),
+                format!("tile {},{}", tile.row, tile.col),
+                "tile",
+                t,
+                dur,
+                vec![("edges", tile.edges.to_string())],
+            );
+            t += dur;
+        }
+        trace.push(
+            &track("update"),
+            format!("upd {}", l.layer_idx),
+            "stage",
+            ls + fe.max(agg),
+            l.update.cycles,
+            vec![],
+        );
+        if l.spill.stall_cycles > 0.0 {
+            trace.push(
+                &track("spill"),
+                format!("spill {}", l.layer_idx),
+                "mem",
+                ls + l.total_cycles - l.spill.stall_cycles,
+                l.spill.stall_cycles,
+                vec![("bytes", format!("{:.0}", l.spill.spilled_bytes()))],
+            );
+        }
     }
 }
 

@@ -17,7 +17,9 @@
 //! * [`select`] — per-layer dataflow selection under
 //!   `DataflowKind::Adaptive` (DESIGN.md §9);
 //! * [`engine`] — [`SimSession`] planning/executing [`LayerPlan`]s into
-//!   a [`stats::SimReport`], with [`Simulator`] as the one-shot wrapper;
+//!   a [`stats::SimReport`], with [`Simulator`] as the one-shot wrapper
+//!   and `run_traced` assembling a deterministic [`crate::obs::Trace`]
+//!   of the same run (per-tile costs via [`TileTrace`]);
 //! * [`graph_cache`] — the process-wide (dataset, policy, seed) →
 //!   [`PreparedGraph`] cache serving backends share;
 //! * [`multichip`] — the scale-out plane (DESIGN.md §8):
@@ -39,7 +41,7 @@ pub mod stats;
 pub mod tiles;
 
 pub use dataflow::{Dataflow, DenseSystolic, HashDecoupled, SpmmSystolic, TileOutcome, TileView};
-pub use engine::{grid_q, sweep, sweep_with, LayerPlan, SimSession, Simulator};
+pub use engine::{grid_q, sweep, sweep_with, LayerPlan, SimSession, Simulator, TileTrace};
 pub use multichip::{ChipLink, ChipTopology, MultiChipSession, OverlapMode, ScaleOutReport};
 pub use prepared::{EdgeTiling, PreparedGraph, TileEdges};
 pub use ring::RingEdgeReduce;

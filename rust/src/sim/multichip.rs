@@ -28,8 +28,9 @@
 
 use crate::config::AcceleratorConfig;
 use crate::model::GnnModel;
+use crate::obs::trace::{Clock, Trace};
 use crate::partition::PartitionedGraph;
-use crate::sim::engine::{LayerPlan, SimSession};
+use crate::sim::engine::{self, LayerPlan, SimSession};
 use crate::sim::stats::SimReport;
 use crate::util::pool;
 
@@ -492,7 +493,142 @@ impl<'a> MultiChipSession<'a> {
         let per_chip: Vec<SimReport> = pool::parallel_map_ref(&self.parts.chips, |_, chip| {
             SimSession::new(self.cfg, &chip.prepared, self.model).run(dataset_code)
         });
+        self.fold_chips(dataset_code, per_chip)
+    }
 
+    /// [`Self::run`] with span tracing: the same per-chip execution
+    /// and fold (the returned [`ScaleOutReport`] is bit-identical to
+    /// `run()`'s), plus a sim-cycle [`Trace`] — each chip's layer→
+    /// stage→tile hierarchy on `chipN/…` tracks, rebased onto the
+    /// fleet's bulk-synchronous layer offsets, and one halo-exchange
+    /// span per layer with traffic (ending at the layer boundary; the
+    /// hidden share reaches back under the compute window).
+    pub fn run_traced(&self, dataset_code: &str) -> (ScaleOutReport, Trace) {
+        let chip_runs = pool::parallel_map_ref(&self.parts.chips, |_, chip| {
+            SimSession::new(self.cfg, &chip.prepared, self.model).run_with_tiles(dataset_code)
+        });
+        let mut per_chip = Vec::with_capacity(chip_runs.len());
+        let mut plans_tiles = Vec::with_capacity(chip_runs.len());
+        for (report, plans, tiles) in chip_runs {
+            per_chip.push(report);
+            plans_tiles.push((plans, tiles));
+        }
+        let report = self.fold_chips(dataset_code, per_chip);
+
+        // Fleet layer offsets: layers are bulk-synchronous, so every
+        // chip's layer l starts when layer l-1's compute + charged
+        // comm finished.
+        let mut offsets = Vec::with_capacity(report.layer_cycles.len());
+        let mut t = 0.0;
+        for &c in &report.layer_cycles {
+            offsets.push(t);
+            t += c;
+        }
+        let mut trace = Trace::new(
+            Clock::SimCycles,
+            format!("{} on {} x{}", self.model.kind.name(), dataset_code, self.parts.k),
+        );
+        for (c, (plans, tiles)) in plans_tiles.iter().enumerate() {
+            engine::trace_layers(
+                &mut trace,
+                &format!("chip{c}"),
+                &offsets,
+                &report.per_chip[c],
+                plans,
+                tiles,
+                self.cfg,
+            );
+        }
+        // Halo-exchange spans (chips exchange in lockstep, so one span
+        // per layer): duration is the full bulk-synchronous exchange
+        // cost, placed to end at the layer boundary — the hidden share
+        // therefore overlaps the compute window it was hidden under.
+        let agg_dims: Vec<usize> = plans_tiles
+            .first()
+            .map(|(plans, _)| plans.iter().map(|p| p.agg_dim).collect())
+            .unwrap_or_default();
+        let pair_counts: Vec<Vec<usize>> =
+            (0..self.parts.k).map(|c| self.parts.halo_counts(c)).collect();
+        for l in 0..report.layer_cycles.len() {
+            let charged = report.layer_comm_cycles[l];
+            let hidden = report.layer_comm_hidden_cycles[l];
+            let full = charged + hidden;
+            if full <= 0.0 {
+                continue;
+            }
+            let dw = (agg_dims[l] * self.cfg.word_bytes) as f64;
+            let bytes: f64 = pair_counts
+                .iter()
+                .flat_map(|row| row.iter())
+                .map(|&n| n as f64 * dw)
+                .sum();
+            let end = offsets[l] + report.layer_cycles[l];
+            trace.push(
+                "halo",
+                format!("halo {l}"),
+                "comm",
+                end - full,
+                full,
+                vec![
+                    ("bytes", format!("{bytes:.0}")),
+                    ("charged", format!("{charged:.0}")),
+                    ("hidden", format!("{hidden:.0}")),
+                ],
+            );
+        }
+        (report, trace)
+    }
+
+    /// Per-directed-link halo bytes for the whole pass, labeled
+    /// `"src->dst"` (ring: the k clockwise links then the k
+    /// counter-clockwise ones; all-to-all: one per (receiver, sender)
+    /// pair). `agg_dims` is the per-layer exchanged property dimension
+    /// (`plan_chip(0)` yields it). Multi-hop ring routes charge every
+    /// link they traverse, so the sum can exceed
+    /// [`ScaleOutReport::comm_bytes`].
+    pub fn per_link_bytes(&self, agg_dims: &[usize]) -> Vec<(String, f64)> {
+        let k = self.parts.k;
+        if k <= 1 {
+            return Vec::new();
+        }
+        let labels: Vec<String> = match self.link.topology {
+            ChipTopology::Ring => {
+                let mut v: Vec<String> =
+                    (0..k).map(|i| format!("{}->{}", i, (i + 1) % k)).collect();
+                v.extend((0..k).map(|i| format!("{}->{}", i, (i + k - 1) % k)));
+                v
+            }
+            ChipTopology::AllToAll => {
+                let mut v = Vec::with_capacity(k * k);
+                for c in 0..k {
+                    for p in 0..k {
+                        v.push(format!("{p}->{c}"));
+                    }
+                }
+                v
+            }
+        };
+        let pair_counts: Vec<Vec<usize>> =
+            (0..k).map(|c| self.parts.halo_counts(c)).collect();
+        let mut totals = vec![0.0f64; labels.len()];
+        for &agg_dim in agg_dims {
+            let dw = (agg_dim * self.cfg.word_bytes) as f64;
+            let pair_bytes: Vec<Vec<f64>> = pair_counts
+                .iter()
+                .map(|row| row.iter().map(|&n| n as f64 * dw).collect())
+                .collect();
+            let (loads, _, _) = self.link.link_loads(&pair_bytes);
+            for (t, b) in totals.iter_mut().zip(loads) {
+                *t += b;
+            }
+        }
+        labels.into_iter().zip(totals).collect()
+    }
+
+    /// Fold per-chip reports (already in chip-index order) with the
+    /// halo-exchange stalls into the final report. Shared by
+    /// [`Self::run`] and [`Self::run_traced`] so the two cannot drift.
+    fn fold_chips(&self, dataset_code: &str, per_chip: Vec<SimReport>) -> ScaleOutReport {
         // The property dimension exchanged per layer is the dimension
         // the aggregate stage reduces — take it from a chip-0 plan
         // (agg_dim is dimension-only, identical on every chip; the

@@ -139,6 +139,22 @@ pub struct Selection {
     pub why: String,
 }
 
+impl Selection {
+    /// Fixed kinds the measured charge pass actually ran for this
+    /// layer (the [`shortlist`] survivors).
+    pub fn charged(&self) -> usize {
+        self.measured.len()
+    }
+
+    /// Fixed kinds the closed-form estimates pruned before charging —
+    /// the work [`PRUNE_MARGIN`] saved. Feeds the
+    /// `engn_adaptive_shortlist_*` counters
+    /// (`crate::obs::record_selections`).
+    pub fn pruned(&self) -> usize {
+        DataflowKind::fixed().len() - self.measured.len()
+    }
+}
+
 /// Pick the measured argmin (first in canonical order wins ties) and
 /// render the rationale from the features.
 pub fn choose(features: LayerFeatures, measured: &[(DataflowKind, f64)]) -> Selection {

@@ -1,0 +1,282 @@
+//! Observability-plane integration: (1) the traced run is invisible in
+//! the report — `run()` and `run_traced().0` are bit-identical for both
+//! the single-chip and the scale-out session, (2) the rendered Chrome
+//! trace is byte-identical at pool width 1 and the default width and
+//! across repeats (spans are assembled serially from by-index results),
+//! (3) the Chrome JSON parses with the crate's own parser and carries
+//! the full layer → stage → tile hierarchy (plus `chipN/…`, `halo`, and
+//! `mem` tracks where they apply), and (4) the registry counters the
+//! CLI records agree with the report fields they were projected from.
+//! CI runs this file at both test-harness widths (see
+//! .github/workflows/ci.yml).
+
+use engn::config::AcceleratorConfig;
+use engn::graph::datasets::{DatasetGroup, DatasetSpec};
+use engn::graph::rmat::{self, RmatParams};
+use engn::model::{GnnKind, GnnModel};
+use engn::obs;
+use engn::partition::{PartitionedGraph, PartitionerKind};
+use engn::sim::{MultiChipSession, PreparedGraph, SimReport, SimSession};
+use engn::util::{json, pool};
+use std::sync::Arc;
+
+/// Seeded synthetic workload shared by every test: big enough that the
+/// session's layer fan-out actually goes wide, small enough to stay
+/// fast.
+fn spec() -> DatasetSpec {
+    DatasetSpec {
+        code: "OBS",
+        name: "obs-integration",
+        vertices: 3_000,
+        edges: 40_000,
+        feature_dim: 128,
+        labels: 16,
+        num_relations: 1,
+        group: DatasetGroup::Synthetic,
+    }
+}
+
+fn workload() -> (Arc<engn::graph::Graph>, GnnModel) {
+    let s = spec();
+    let g = Arc::new(rmat::generate(s.vertices, s.edges, RmatParams::default(), 0x0B5E));
+    let model = GnnModel::for_dataset(GnnKind::Gcn, &s);
+    (g, model)
+}
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport) {
+    assert_eq!(a.config_name, b.config_name);
+    assert_eq!(a.total_cycles(), b.total_cycles());
+    assert_eq!(a.total_ops(), b.total_ops());
+    assert_eq!(a.chip_energy_j, b.chip_energy_j);
+    assert_eq!(a.hbm_energy_j, b.hbm_energy_j);
+    assert_eq!(a.power_w, b.power_w);
+    assert_eq!(a.traffic().hbm_read_bytes, b.traffic().hbm_read_bytes);
+    assert_eq!(a.traffic().hbm_write_bytes, b.traffic().hbm_write_bytes);
+    assert_eq!(a.davc().accesses, b.davc().accesses);
+    assert_eq!(a.davc().hits, b.davc().hits);
+    assert_eq!(a.spilled_bytes(), b.spilled_bytes());
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+        assert_eq!(la.layer_idx, lb.layer_idx);
+        assert_eq!(la.q, lb.q);
+        assert_eq!(la.feature_extraction.cycles, lb.feature_extraction.cycles);
+        assert_eq!(la.aggregate.cycles, lb.aggregate.cycles);
+        assert_eq!(la.update.cycles, lb.update.cycles);
+        assert_eq!(la.total_cycles, lb.total_cycles);
+    }
+}
+
+/// Zero-cost pin, single chip: the traced run returns the same report
+/// the plain run does, bit for bit.
+#[test]
+fn traced_sim_report_bit_identical_to_untraced() {
+    let (g, model) = workload();
+    let cfg = AcceleratorConfig::engn();
+    let prepared = PreparedGraph::from_arc(g);
+    let session = SimSession::new(&cfg, &prepared, &model);
+    let plain = session.run("OBS");
+    let (traced, trace) = session.run_traced("OBS");
+    assert_reports_identical(&plain, &traced);
+    assert!(!trace.is_empty());
+}
+
+/// Zero-cost pin, scale-out: `run_traced().0` matches `run()` at K = 4
+/// and at the K = 1 degenerate point (where the trace still carries the
+/// chip-0 hierarchy but no halo spans).
+#[test]
+fn traced_scaleout_report_bit_identical_to_untraced() {
+    let (g, model) = workload();
+    let cfg = AcceleratorConfig::engn();
+    for k in [1usize, 4] {
+        let parts = PartitionedGraph::build(g.clone(), PartitionerKind::Degree, k);
+        let session = MultiChipSession::new(&cfg, &parts, &model);
+        let plain = session.run("OBS");
+        let (traced, trace) = session.run_traced("OBS");
+        assert_eq!(plain.total_cycles(), traced.total_cycles(), "k={k}");
+        assert_eq!(plain.comm_bytes, traced.comm_bytes, "k={k}");
+        assert_eq!(plain.layer_cycles, traced.layer_cycles, "k={k}");
+        assert_eq!(plain.layer_comm_cycles, traced.layer_comm_cycles, "k={k}");
+        assert_eq!(plain.halo_vertices, traced.halo_vertices, "k={k}");
+        assert_eq!(plain.per_chip.len(), traced.per_chip.len(), "k={k}");
+        for (a, b) in plain.per_chip.iter().zip(&traced.per_chip) {
+            assert_reports_identical(a, b);
+        }
+        let has_halo = trace.tracks().iter().any(|t| t == "halo");
+        assert_eq!(has_halo, k > 1, "k={k}: halo track presence");
+    }
+}
+
+/// Determinism: the rendered Chrome JSON is byte-identical across
+/// repeats at the harness's default pool width, and byte-identical to a
+/// run forced to width 1 (a spawned thread with a huge width share
+/// floors every parallel map at one worker without touching the global
+/// pool override).
+#[test]
+fn trace_bytes_identical_at_width_one_and_wide() {
+    let (g, model) = workload();
+    let cfg = AcceleratorConfig::engn();
+    let prepared = PreparedGraph::from_arc(g.clone());
+    let wide_a = SimSession::new(&cfg, &prepared, &model)
+        .run_traced("OBS")
+        .1
+        .to_chrome_json()
+        .to_string_pretty();
+    let wide_b = SimSession::new(&cfg, &prepared, &model)
+        .run_traced("OBS")
+        .1
+        .to_chrome_json()
+        .to_string_pretty();
+    assert_eq!(wide_a, wide_b, "repeat runs rendered different traces");
+
+    let narrow = {
+        let g = g.clone();
+        let model = model.clone();
+        std::thread::spawn(move || {
+            pool::set_thread_width_share(usize::MAX);
+            let cfg = AcceleratorConfig::engn();
+            let prepared = PreparedGraph::from_arc(g);
+            SimSession::new(&cfg, &prepared, &model)
+                .run_traced("OBS")
+                .1
+                .to_chrome_json()
+                .to_string_pretty()
+        })
+        .join()
+        .expect("width-1 run")
+    };
+    assert_eq!(wide_a, narrow, "width-1 trace differs from the wide one");
+
+    // Same pin through the scale-out path (chips fan out too).
+    let parts = PartitionedGraph::build(g.clone(), PartitionerKind::Degree, 4);
+    let wide = MultiChipSession::new(&cfg, &parts, &model)
+        .run_traced("OBS")
+        .1
+        .to_chrome_json()
+        .to_string_pretty();
+    let narrow = {
+        let g = g.clone();
+        let model = model.clone();
+        std::thread::spawn(move || {
+            pool::set_thread_width_share(usize::MAX);
+            let cfg = AcceleratorConfig::engn();
+            let parts = PartitionedGraph::build(g, PartitionerKind::Degree, 4);
+            MultiChipSession::new(&cfg, &parts, &model)
+                .run_traced("OBS")
+                .1
+                .to_chrome_json()
+                .to_string_pretty()
+        })
+        .join()
+        .expect("width-1 scale-out run")
+    };
+    assert_eq!(wide, narrow, "width-1 scale-out trace differs from the wide one");
+}
+
+/// The Chrome export parses with the crate's own JSON parser and holds
+/// the full hierarchy: thread-name metadata first, then complete events
+/// in `layer`/`stage`/`tile` categories; a spilling config adds `mem`
+/// spans; the K = 4 trace adds `chipN/…` tracks and `comm` halo spans.
+#[test]
+fn chrome_json_is_valid_and_carries_the_span_hierarchy() {
+    let (g, model) = workload();
+    let mut cfg = AcceleratorConfig::engn();
+    // Cap tier 0 below the working set so the trace gets `mem` spans.
+    cfg.mem.name = "tiny";
+    cfg.mem.tiers[0].capacity_bytes = 256.0 * 1024.0;
+    let prepared = PreparedGraph::from_arc(g.clone());
+    let (report, trace) = SimSession::new(&cfg, &prepared, &model).run_traced("OBS");
+    assert!(report.spilled_bytes() > 0.0, "tiny tier 0 must spill");
+
+    let rendered = trace.to_chrome_json().to_string_pretty();
+    let doc = json::parse(&rendered).expect("chrome trace must parse");
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    assert!(!events.is_empty());
+    let phase = |e: &json::Json| e.get("ph").and_then(|p| p.as_str()).unwrap_or("").to_string();
+    let cat = |e: &json::Json| e.get("cat").and_then(|c| c.as_str()).unwrap_or("").to_string();
+    // Metadata events lead (one per track), then only complete events.
+    let metas = events.iter().take_while(|e| phase(e) == "M").count();
+    assert_eq!(metas, trace.tracks().len());
+    assert!(events.iter().skip(metas).all(|e| phase(e) == "X"));
+    for want in ["layer", "stage", "tile", "mem"] {
+        assert!(
+            events.iter().any(|e| cat(e) == want),
+            "no {want:?} span in the single-chip trace"
+        );
+    }
+    let clock = doc
+        .get("otherData")
+        .and_then(|o| o.get("clock"))
+        .and_then(|c| c.as_str())
+        .expect("otherData.clock");
+    assert_eq!(clock, "sim-cycles");
+
+    // Scale-out: per-chip tracks plus the halo-exchange comm spans.
+    let cfg = AcceleratorConfig::engn();
+    let parts = PartitionedGraph::build(g, PartitionerKind::Degree, 4);
+    let (_, trace) = MultiChipSession::new(&cfg, &parts, &model).run_traced("OBS");
+    for c in 0..4 {
+        let prefix = format!("chip{c}/");
+        assert!(
+            trace.tracks().iter().any(|t| t.starts_with(&prefix)),
+            "no {prefix}* track in the K=4 trace"
+        );
+    }
+    assert!(trace.spans().iter().any(|s| s.cat == "comm"), "no halo span in the K=4 trace");
+    json::parse(&trace.to_chrome_json().to_string_pretty()).expect("K=4 trace must parse");
+}
+
+/// Counter/report consistency: the projections `engn run` makes into
+/// the registry agree with the report fields they came from — spill
+/// bytes per tier sum to `spilled_bytes()`, the halo-bytes counter is
+/// exactly `comm_bytes`, and per-link bytes cover the ring.
+#[test]
+fn recorded_counters_agree_with_report_fields() {
+    let (g, model) = workload();
+    let mut cfg = AcceleratorConfig::engn();
+    cfg.mem.name = "tiny";
+    cfg.mem.tiers[0].capacity_bytes = 256.0 * 1024.0;
+    let prepared = PreparedGraph::from_arc(g.clone());
+    let session = SimSession::new(&cfg, &prepared, &model);
+    let plans = session.plan();
+    let report = session.run("OBS");
+    assert!(report.spilled_bytes() > 0.0);
+
+    let reg = obs::Registry::new();
+    obs::record_sim(&reg, &report, &plans);
+    let dump = reg.snapshot();
+    let spill_sum: f64 = dump
+        .counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("engn_sim_spill_bytes_total"))
+        .map(|(_, v)| v)
+        .sum();
+    let rel = (spill_sum - report.spilled_bytes()).abs() / report.spilled_bytes();
+    assert!(rel < 1e-9, "spill counters {spill_sum} vs report {}", report.spilled_bytes());
+    assert!((dump.counter("engn_sim_cycles_total") - report.total_cycles()).abs() < 1e-6);
+    let stages = obs::stage_cycle_totals(&report);
+    for (stage, want) in ["feature-extract", "aggregate", "update"].iter().zip(stages) {
+        let got = dump.counter(&format!("engn_sim_stage_cycles_total{{stage=\"{stage}\"}}"));
+        assert!((got - want).abs() < 1e-6, "{stage}: {got} vs {want}");
+    }
+
+    let cfg = AcceleratorConfig::engn();
+    let parts = PartitionedGraph::build(g, PartitionerKind::Degree, 4);
+    let session = MultiChipSession::new(&cfg, &parts, &model);
+    let report = session.run("OBS");
+    assert!(report.comm_bytes > 0.0);
+    let agg_dims: Vec<usize> = session.plan_chip(0).iter().map(|p| p.agg_dim).collect();
+    let links = session.per_link_bytes(&agg_dims);
+    assert!(!links.is_empty());
+
+    let reg = obs::Registry::new();
+    obs::record_scaleout(&reg, &report, &links);
+    let dump = reg.snapshot();
+    assert_eq!(dump.counter("engn_scaleout_halo_bytes_total"), report.comm_bytes);
+    assert_eq!(dump.counter("engn_scaleout_halo_vertices_total"), report.halo_vertices as f64);
+    assert_eq!(dump.counter("engn_scaleout_comm_charged_cycles_total"), report.comm_cycles());
+    // Every recorded link counter comes from the per-link table.
+    for (link, bytes) in links.iter().filter(|(_, b)| *b > 0.0) {
+        let got = dump.counter(&format!("engn_scaleout_link_bytes_total{{link=\"{link}\"}}"));
+        assert_eq!(got, *bytes, "link {link}");
+    }
+}

@@ -7,35 +7,115 @@
 #
 # The JSON is written by the bench binary itself (BENCH_JSON env var),
 # so the numbers are exactly the medians it printed — no log scraping.
+# Each run is validated in a temp file and only then moved over the
+# committed snapshot: a broken toolchain or a bench that dropped a
+# group can never clobber real numbers with a placeholder. Validated
+# snapshots are stamped with host metadata (cores, git sha, UTC
+# timestamp) so a trajectory across machines stays interpretable.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-BENCH_JSON="$(pwd)/BENCH_hotpath.json" \
+
+if ! command -v cargo >/dev/null 2>&1; then
+  cat >&2 <<'EOF'
+!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!
+!! bench_snapshot.sh: no Rust toolchain on this host (cargo not   !!
+!! found). Refusing to run: the committed BENCH_*.json snapshots  !!
+!! are left untouched. Run this script on a quiet multicore host  !!
+!! with the rust toolchain installed.                             !!
+!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!!
+EOF
+  exit 1
+fi
+
+# True iff the file holds measured groups (the seed placeholder carries
+# only a "_note" asking to be populated).
+is_real_snapshot() {
+  [ -f "$1" ] && grep -q '":' "$1" && ! grep -q '"_note".*populate' "$1"
+}
+
+# Validate a candidate snapshot: parseable JSON carrying every required
+# group. Aborts (leaving the committed file untouched) on any miss.
+check_groups() {
+  local file=$1
+  shift
+  python3 -m json.tool "$file" >/dev/null \
+    || { echo "bench_snapshot.sh: $file is not valid JSON" >&2; exit 1; }
+  for group in "$@"; do
+    grep -q "\"$group\"" "$file" \
+      || { echo "missing bench group $group in $file" >&2; exit 1; }
+  done
+}
+
+# Stamp host metadata into a validated snapshot (top-level "_host" key)
+# and move it over the committed file.
+install_snapshot() {
+  local tmp=$1 dest=$2
+  python3 - "$tmp" <<'EOF'
+import json, os, subprocess, sys, time
+path = sys.argv[1]
+with open(path) as f:
+    doc = json.load(f)
+sha = "unknown"
+try:
+    sha = subprocess.run(
+        ["git", "rev-parse", "--short", "HEAD"],
+        capture_output=True, text=True, check=True,
+    ).stdout.strip()
+except Exception:
+    pass
+doc["_host"] = {
+    "cores": os.cpu_count(),
+    "git_sha": sha,
+    "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+}
+with open(path, "w") as f:
+    json.dump(doc, f, indent=2, sort_keys=True)
+    f.write("\n")
+EOF
+  mv "$tmp" "$dest"
+  echo "snapshot: $(pwd)/$dest"
+}
+
+# The snapshot must track the scale-out, dataflow, out-of-core and
+# observability planes: fail loudly if the partition/scaleout/dataflow/
+# mem/csr/obs groups ever drop out of the hotpath bench.
+HOTPATH_GROUPS=(
+  "partition:range" "partition:hash" "partition:degree"
+  "partition:ldg" "partition:fennel"
+  "scaleout:4chip" "scaleout:overlap"
+  "dataflow:spmm" "dataflow:hash" "dataflow:adaptive"
+  "mem:spill" "csr:open" "obs:trace"
+)
+tmp=BENCH_hotpath.json.tmp
+trap 'rm -f BENCH_hotpath.json.tmp BENCH_serving.json.tmp' EXIT
+BENCH_JSON="$(pwd)/$tmp" \
   cargo bench --manifest-path rust/Cargo.toml --bench hotpath "$@"
-# The snapshot must track the scale-out, dataflow and out-of-core
-# planes: fail loudly if the partition/scaleout/dataflow/mem/csr groups
-# ever drop out of the hotpath bench.
-for group in "partition:range" "partition:hash" "partition:degree" \
-             "partition:ldg" "partition:fennel" \
-             "scaleout:4chip" "scaleout:overlap" \
-             "dataflow:spmm" "dataflow:hash" "dataflow:adaptive" \
-             "mem:spill" "csr:open"; do
-  grep -q "\"$group\"" BENCH_hotpath.json \
-    || { echo "missing bench group $group in BENCH_hotpath.json" >&2; exit 1; }
-done
-echo "snapshot: $(pwd)/BENCH_hotpath.json"
+if ! is_real_snapshot "$tmp"; then
+  echo "bench_snapshot.sh: bench run produced no measured groups;" \
+       "refusing to overwrite BENCH_hotpath.json" >&2
+  exit 1
+fi
+check_groups "$tmp" "${HOTPATH_GROUPS[@]}"
+install_snapshot "$tmp" BENCH_hotpath.json
 
 # Serving saturation sweep: `engn loadgen --sweep` steps the offered
 # rate over fresh services until the shed rate crosses the threshold
 # and writes BENCH_serving.json itself (per-priority p99s at the knee
 # plus every rung's full report). Gate the per-class groups the same
 # way as the hotpath groups above.
+SERVING_GROUPS=(
+  "serving:saturation_rps" "serving:interactive:p99_s"
+  "serving:batch:p99_s" "serving:best_effort:p99_s"
+)
+tmp=BENCH_serving.json.tmp
 cargo run --release --manifest-path rust/Cargo.toml -- \
   loadgen --sweep --rate 100 --requests 120 --workers 2 \
   --sweep-steps 4 --sweep-factor 3 --sweep-threshold 0.3 \
-  --out "$(pwd)/BENCH_serving.json"
-for group in "serving:saturation_rps" "serving:interactive:p99_s" \
-             "serving:batch:p99_s" "serving:best_effort:p99_s"; do
-  grep -q "\"$group\"" BENCH_serving.json \
-    || { echo "missing serving group $group in BENCH_serving.json" >&2; exit 1; }
-done
-echo "snapshot: $(pwd)/BENCH_serving.json"
+  --out "$(pwd)/$tmp"
+if ! is_real_snapshot "$tmp"; then
+  echo "bench_snapshot.sh: sweep produced no measured groups;" \
+       "refusing to overwrite BENCH_serving.json" >&2
+  exit 1
+fi
+check_groups "$tmp" "${SERVING_GROUPS[@]}"
+install_snapshot "$tmp" BENCH_serving.json
